@@ -1,0 +1,21 @@
+use agft::config::*;
+use agft::experiment::harness::run_experiment;
+fn main() {
+    let cfg = ExperimentConfig {
+        duration_s: 1800.0, arrival_rps: 1.2,
+        workload: WorkloadKind::AzureLike { year: 2024 },
+        ..ExperimentConfig::default()
+    };
+    let r = run_experiment(&cfg).unwrap();
+    let t = r.tuner.unwrap();
+    println!("converged={:?} alarms={} rounds={}", t.converged_round, t.ph_alarms, t.freq_log.len());
+    let rws: Vec<f64> = t.reward_log.iter().map(|&(_,x)| x).collect();
+    for c in 0..rws.len()/150 {
+        let s = &rws[c*150..(c+1)*150];
+        let m: f64 = s.iter().sum::<f64>()/s.len() as f64;
+        let v: f64 = s.iter().map(|x|(x-m)*(x-m)).sum::<f64>()/s.len() as f64;
+        let fr: Vec<u32> = t.freq_log[c*150..((c+1)*150).min(t.freq_log.len())].iter().map(|&(_,f)|f).collect();
+        let fm: f64 = fr.iter().map(|&f| f as f64).sum::<f64>()/fr.len() as f64;
+        println!("r {:4}..{:4}: mean {:6.2} std {:5.2} std/|m| {:4.2} fmean {:.0}", c*150,(c+1)*150,m,v.sqrt(),v.sqrt()/m.abs(),fm);
+    }
+}

@@ -1,0 +1,115 @@
+//! Replay a production-like trace: one virtual hour of the Azure-2024
+//! synthetic workload, AGFT vs the default governor, with a drill-down
+//! into what the tuner actually did (clock histogram, pruning, phase).
+//!
+//! Also demonstrates trace file round-tripping: the generated trace is
+//! written to `results/azure_replay_trace.csv` and re-read before the
+//! run, so you can substitute your own trace in the same format
+//! (`arrival_s,prompt_tokens,output_tokens,template_id,shared_prefix`).
+//!
+//! ```sh
+//! cargo run --release --example azure_replay
+//! ```
+
+use agft::config::{ExperimentConfig, GovernorKind, WorkloadKind};
+use agft::experiment::harness::run_with_requests;
+use agft::workload::{self, trace};
+
+fn main() {
+    // 1. Synthesise + persist the trace.
+    let cfg = ExperimentConfig {
+        duration_s: 3600.0,
+        arrival_rps: 1.5,
+        workload: WorkloadKind::AzureLike { year: 2024 },
+        ..ExperimentConfig::default()
+    };
+    let requests = workload::realize(
+        &cfg.workload, cfg.arrival_rps, cfg.duration_s, cfg.seed,
+    )
+    .unwrap();
+    std::fs::create_dir_all("results").unwrap();
+    let trace_path = "results/azure_replay_trace.csv";
+    trace::write_trace(trace_path, &trace::from_requests(&requests)).unwrap();
+    println!("trace: {} requests -> {trace_path}", requests.len());
+
+    // 2. Re-read it (the path any external trace would take).
+    let records = trace::read_trace(trace_path).unwrap();
+    let replayed = trace::to_requests(&records);
+    assert_eq!(replayed.len(), requests.len());
+
+    // 3. AGFT vs default over the identical stream.
+    let mut agft_cfg = ExperimentConfig {
+        governor: GovernorKind::Agft,
+        ..cfg.clone()
+    };
+    // Production-trace noise: relax the convergence detector (see
+    // DESIGN.md §5).
+    agft_cfg.tuner.ph_delta = 0.15;
+    agft_cfg.tuner.ph_lambda = 8.0;
+    agft_cfg.tuner.converge_std_frac = 0.6;
+    let base_cfg = ExperimentConfig {
+        governor: GovernorKind::Default,
+        ..cfg.clone()
+    };
+    let agft = run_with_requests(&agft_cfg, replayed.clone()).unwrap();
+    let base = run_with_requests(&base_cfg, replayed).unwrap();
+
+    println!("\n== one virtual hour, Azure-2024-like trace ==");
+    println!(
+        "              {:>12} {:>12}",
+        "AGFT", "default"
+    );
+    println!(
+        "energy (kJ)   {:>12.1} {:>12.1}   ({:+.1} %)",
+        agft.total_energy_j / 1e3,
+        base.total_energy_j / 1e3,
+        (agft.total_energy_j / base.total_energy_j - 1.0) * 100.0
+    );
+    println!(
+        "finished      {:>12} {:>12}",
+        agft.finished.len(),
+        base.finished.len()
+    );
+    println!(
+        "mean TTFT (s) {:>12.3} {:>12.3}   ({:+.1} %)",
+        agft.mean_ttft(),
+        base.mean_ttft(),
+        (agft.mean_ttft() / base.mean_ttft() - 1.0) * 100.0
+    );
+    println!(
+        "mean TPOT (s) {:>12.4} {:>12.4}   ({:+.1} %)",
+        agft.mean_tpot(),
+        base.mean_tpot(),
+        (agft.mean_tpot() / base.mean_tpot() - 1.0) * 100.0
+    );
+    println!(
+        "throughput    {:>9.2} r/s {:>9.2} r/s",
+        agft.throughput_rps(),
+        base.throughput_rps()
+    );
+
+    // 4. Tuner drill-down.
+    let t = agft.tuner.expect("tuner telemetry");
+    println!("\n== what AGFT did ==");
+    println!(
+        "rounds {} | converged {:?} | PH alarms {} | refinements {}",
+        t.freq_log.len(), t.converged_round, t.ph_alarms, t.refinements
+    );
+    println!(
+        "pruned: {} extreme, {} historical, {} cascade",
+        t.pruned_extreme, t.pruned_historical, t.pruned_cascade
+    );
+    // Clock histogram in 150 MHz buckets.
+    let mut hist = [0u32; 12];
+    for &(_, f) in &t.freq_log {
+        hist[((f.saturating_sub(210)) / 150).min(11) as usize] += 1;
+    }
+    let max = *hist.iter().max().unwrap() as f64;
+    println!("clock histogram (decisions):");
+    for (i, &n) in hist.iter().enumerate() {
+        if n > 0 {
+            let bar = "#".repeat((n as f64 / max * 40.0).ceil() as usize);
+            println!("  {:>4}-{:<4} MHz {:>5}  {bar}", 210 + i * 150, 210 + (i + 1) * 150, n);
+        }
+    }
+}

@@ -1,0 +1,50 @@
+//! Quickstart: tune a vLLM-like serving node with AGFT in ~20 lines.
+//!
+//! Runs 10 virtual minutes of the "normal" workload prototype twice —
+//! once under the default boost-everything governor, once under AGFT —
+//! and prints the paper's headline metrics (energy, EDP, TTFT, TPOT).
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use agft::config::{ExperimentConfig, WorkloadKind};
+use agft::experiment::harness::run_pair;
+use agft::experiment::phases::learning_and_stable;
+use agft::experiment::report::render_comparison;
+
+fn main() {
+    // Everything is driven by one config struct; see config/schema.rs
+    // for every knob (GPU model, server, tuner, workload).
+    let cfg = ExperimentConfig {
+        duration_s: 600.0,                                   // 10 virtual min
+        arrival_rps: 2.0,
+        workload: WorkloadKind::Prototype("normal".into()),
+        ..ExperimentConfig::default()
+    };
+
+    // Identical request stream through AGFT and the default governor.
+    let (agft, base) = run_pair(&cfg).expect("run");
+
+    println!(
+        "AGFT:    {:7.0} J total, {:4} finished, mean TTFT {:.3} s, {} clock changes",
+        agft.total_energy_j,
+        agft.finished.len(),
+        agft.mean_ttft(),
+        agft.clock_changes,
+    );
+    println!(
+        "default: {:7.0} J total, {:4} finished, mean TTFT {:.3} s",
+        base.total_energy_j,
+        base.finished.len(),
+        base.mean_ttft(),
+    );
+    println!(
+        "energy saving: {:.1} %  |  converged at round {:?}",
+        (1.0 - agft.total_energy_j / base.total_energy_j) * 100.0,
+        agft.tuner.as_ref().and_then(|t| t.converged_round),
+    );
+
+    let (_, stable) = learning_and_stable(&agft, &base);
+    println!("{}", render_comparison("post-convergence window metrics", &stable));
+}

@@ -1,0 +1,124 @@
+"""AOT pipeline: lower the L2 JAX functions (which call the L1 Pallas
+kernels) to HLO **text** artifacts for the rust PJRT runtime.
+
+HLO text — not ``.serialize()`` — is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1
+(the version the published ``xla`` 0.1.6 crate links) rejects
+(``proto.id() <= INT_MAX``). The text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+
+Outputs (under --out-dir, default ../artifacts):
+  prefill.hlo.txt   (tokens[P] i32, prompt_len[] i32) -> (logits[V], kv)
+  decode.hlo.txt    (token[1] i32, pos[] i32, kv)     -> (logits[V], kv)
+  linucb.hlo.txt    (theta[K,d], ainv[K,d,d], x[d], alpha[1], mask[K])
+                    -> (scores[K],)
+  meta.json         shapes + model config for the rust loader
+
+Model weights are baked into the HLO as constants (deterministic seed), so
+the rust side passes only runtime state. Python runs ONCE at build time and
+never on the request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    # print_large_constants=True: the baked model weights must survive the
+    # text round-trip (the default print elides them as `constant({...})`,
+    # which the rust-side text parser cannot reconstruct).
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def lower_artifacts(cfg: M.ModelConfig, seed: int = 42):
+    """Return {name: hlo_text} for all three entry points."""
+    params = M.init_params(cfg, seed)
+
+    def prefill_fn(tokens, prompt_len):
+        return M.prefill(params, cfg, tokens, prompt_len)
+
+    def decode_fn(token, pos, kv):
+        return M.decode_step(params, cfg, token, pos, kv)
+
+    def linucb_fn(theta, ainv, x, alpha, mask):
+        return (M.linucb_step(theta, ainv, x, alpha, mask),)
+
+    i32 = jnp.int32
+    f32 = jnp.float32
+    tok_spec = jax.ShapeDtypeStruct((cfg.prompt_max,), i32)
+    len_spec = jax.ShapeDtypeStruct((), i32)
+    one_tok = jax.ShapeDtypeStruct((1,), i32)
+    kv_spec = jax.ShapeDtypeStruct(
+        (cfg.n_layers, 2, cfg.n_heads, cfg.seq_max, cfg.d_head), f32)
+    k, d = M.LINUCB_K, M.LINUCB_D
+
+    lowered = {
+        "prefill": jax.jit(prefill_fn).lower(tok_spec, len_spec),
+        "decode": jax.jit(decode_fn).lower(one_tok, len_spec, kv_spec),
+        "linucb": jax.jit(linucb_fn).lower(
+            jax.ShapeDtypeStruct((k, d), f32),
+            jax.ShapeDtypeStruct((k, d, d), f32),
+            jax.ShapeDtypeStruct((d,), f32),
+            jax.ShapeDtypeStruct((1,), f32),
+            jax.ShapeDtypeStruct((k,), f32)),
+    }
+    return {name: to_hlo_text(low) for name, low in lowered.items()}
+
+
+def write_meta(cfg: M.ModelConfig, out_dir: str, seed: int) -> None:
+    meta = {
+        "model": {
+            "vocab": cfg.vocab, "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers, "n_heads": cfg.n_heads,
+            "d_head": cfg.d_head, "d_ff": cfg.d_ff,
+            "prompt_max": cfg.prompt_max, "seq_max": cfg.seq_max,
+            "rope_theta": cfg.rope_theta,
+            "param_count": cfg.param_count, "seed": seed,
+        },
+        "linucb": {"k_max": M.LINUCB_K, "dim": M.LINUCB_D},
+        "artifacts": {
+            "prefill": "prefill.hlo.txt",
+            "decode": "decode.hlo.txt",
+            "linucb": "linucb.hlo.txt",
+        },
+        "interchange": "hlo-text",
+    }
+    with open(os.path.join(out_dir, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=2)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=os.path.join(
+        os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--seed", type=int, default=42)
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    cfg = M.ModelConfig()
+    texts = lower_artifacts(cfg, args.seed)
+    for name, text in texts.items():
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {len(text):>9} chars  {path}")
+    write_meta(cfg, args.out_dir, args.seed)
+    print(f"wrote meta.json (model params={cfg.param_count:,})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,197 @@
+"""L1 Pallas kernel: blocked (flash-style) multi-head attention.
+
+TPU-oriented structure, run under ``interpret=True`` so the lowered HLO is
+plain ops executable by the CPU PJRT client (see DESIGN.md
+§Hardware-Adaptation).
+
+The kernel streams K/V HBM->VMEM block by block with an online-softmax
+accumulator (running max ``m``, running normaliser ``l``), i.e. the same
+schedule a CUDA flash-attention expresses with threadblocks, expressed here
+with a Pallas grid + BlockSpec:
+
+  grid = (batch*heads, q_blocks)   -- one program per (bh, q-tile)
+  inner fori_loop over k-blocks    -- the HBM->VMEM stream
+
+Block sizes default to MXU-friendly multiples (last dim is the head dim,
+kept whole; the sequence tiles are >=16 lanes). VMEM footprint per program:
+(2*block_q + 2*block_k) * head_dim * 4 bytes + O(block_q*block_k) scores.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_Q = 16
+DEFAULT_BLOCK_K = 16
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, block_k: int, seq_k: int,
+                 causal: bool, q_offset_blocks: int, sm_scale: float):
+    """One (batch*head, q-tile) program: online-softmax over k-tiles."""
+    block_q, head_dim = q_ref.shape
+    q = q_ref[...].astype(jnp.float32) * sm_scale
+
+    num_k_blocks = pl.cdiv(seq_k, block_k)
+    q_block_idx = pl.program_id(1)
+
+    def body(kb, carry):
+        acc, m_prev, l_prev = carry
+        k = k_ref[pl.dslice(kb * block_k, block_k), :].astype(jnp.float32)
+        v = v_ref[pl.dslice(kb * block_k, block_k), :].astype(jnp.float32)
+        # [block_q, block_k] scores on the MXU.
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        if causal:
+            q_pos = (q_block_idx + q_offset_blocks) * block_q + \
+                jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+            k_pos = kb * block_k + \
+                jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+            s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+        m_cur = jnp.max(s, axis=1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_new = l_prev * alpha + jnp.sum(p, axis=1)
+        acc = acc * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        return acc, m_new, l_new
+
+    acc0 = jnp.zeros((block_q, head_dim), jnp.float32)
+    m0 = jnp.full((block_q,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+    acc, _, l = jax.lax.fori_loop(0, num_k_blocks, body, (acc0, m0, l0))
+    # Guard fully-masked rows (e.g. padding tiles): l == 0 -> output 0.
+    safe_l = jnp.where(l > 0.0, l, 1.0)
+    o_ref[...] = (acc / safe_l[:, None]).astype(o_ref.dtype)
+
+
+def _decode_attn_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, *,
+                        block_k: int, seq_k: int, sm_scale: float):
+    """Single-query attention over a KV cache prefix of dynamic length.
+
+    ``len_ref`` is a scalar-prefetch style input: positions >= kv_len are
+    masked. One program per (batch*head); block_q == 1.
+    """
+    head_dim = q_ref.shape[-1]
+    kv_len = len_ref[0]
+    q = q_ref[...].astype(jnp.float32) * sm_scale     # [1, head_dim]
+    num_k_blocks = pl.cdiv(seq_k, block_k)
+
+    def body(kb, carry):
+        acc, m_prev, l_prev = carry
+        k = k_ref[pl.dslice(kb * block_k, block_k), :].astype(jnp.float32)
+        v = v_ref[pl.dslice(kb * block_k, block_k), :].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)        # [1, block_k]
+        k_pos = kb * block_k + \
+            jax.lax.broadcasted_iota(jnp.int32, (1, block_k), 1)
+        s = jnp.where(k_pos < kv_len, s, NEG_INF)
+        m_cur = jnp.max(s, axis=1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_new = l_prev * alpha + jnp.sum(p, axis=1)
+        acc = acc * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        return acc, m_new, l_new
+
+    acc0 = jnp.zeros((1, head_dim), jnp.float32)
+    m0 = jnp.full((1,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((1,), jnp.float32)
+    acc, _, l = jax.lax.fori_loop(0, num_k_blocks, body, (acc0, m0, l0))
+    safe_l = jnp.where(l > 0.0, l, 1.0)
+    o_ref[...] = (acc / safe_l[:, None]).astype(o_ref.dtype)
+
+
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     kv_len: jax.Array, *,
+                     block_k: int = DEFAULT_BLOCK_K,
+                     interpret: bool = True) -> jax.Array:
+    """Decode-step attention: q is ``[batch, heads, 1, head_dim]``, k/v are
+    the full cache ``[batch, heads, seq_k, head_dim]``; only positions
+    ``< kv_len`` (a traced scalar) participate."""
+    batch, heads, seq_q, head_dim = q.shape
+    if seq_q != 1:
+        raise ValueError(f"decode_attention expects seq_q==1, got {seq_q}")
+    _, _, seq_k, _ = k.shape
+    if seq_k % block_k != 0:
+        raise ValueError(f"seq_k={seq_k} not a multiple of block_k={block_k}")
+    sm_scale = 1.0 / math.sqrt(head_dim)
+    bh = batch * heads
+    qr = q.reshape(bh, 1, head_dim)
+    kr = k.reshape(bh, seq_k, head_dim)
+    vr = v.reshape(bh, seq_k, head_dim)
+    kernel = functools.partial(
+        _decode_attn_kernel, block_k=block_k, seq_k=seq_k, sm_scale=sm_scale)
+    out = pl.pallas_call(
+        kernel,
+        grid=(bh,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b: (0,)),
+            pl.BlockSpec((None, 1, head_dim), lambda b: (b, 0, 0)),
+            pl.BlockSpec((None, seq_k, head_dim), lambda b: (b, 0, 0)),
+            pl.BlockSpec((None, seq_k, head_dim), lambda b: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, 1, head_dim), lambda b: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, 1, head_dim), q.dtype),
+        interpret=interpret,
+    )(kv_len.reshape(1).astype(jnp.int32), qr, kr, vr)
+    return out.reshape(batch, heads, 1, head_dim)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True,
+                    block_q: int = DEFAULT_BLOCK_Q,
+                    block_k: int = DEFAULT_BLOCK_K,
+                    q_offset: int = 0,
+                    interpret: bool = True) -> jax.Array:
+    """Blocked attention over ``[batch, heads, seq, head_dim]`` arrays.
+
+    ``q_offset`` shifts the causal mask for decode steps (queries live at
+    absolute positions ``q_offset + i``); it must be a multiple of
+    ``block_q``.
+    """
+    batch, heads, seq_q, head_dim = q.shape
+    _, _, seq_k, _ = k.shape
+    if seq_q % block_q != 0:
+        raise ValueError(f"seq_q={seq_q} not a multiple of block_q={block_q}")
+    if seq_k % block_k != 0:
+        raise ValueError(f"seq_k={seq_k} not a multiple of block_k={block_k}")
+    if q_offset % block_q != 0:
+        raise ValueError(f"q_offset={q_offset} not a multiple of block_q")
+
+    sm_scale = 1.0 / math.sqrt(head_dim)
+    bh = batch * heads
+    qr = q.reshape(bh, seq_q, head_dim)
+    kr = k.reshape(bh, seq_k, head_dim)
+    vr = v.reshape(bh, seq_k, head_dim)
+
+    kernel = functools.partial(
+        _attn_kernel, block_k=block_k, seq_k=seq_k, causal=causal,
+        q_offset_blocks=q_offset // block_q, sm_scale=sm_scale)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(bh, seq_q // block_q),
+        in_specs=[
+            pl.BlockSpec((None, block_q, head_dim), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((None, seq_k, head_dim), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((None, seq_k, head_dim), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, head_dim),
+                               lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, seq_q, head_dim), q.dtype),
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(batch, heads, seq_q, head_dim)

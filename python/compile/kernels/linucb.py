@@ -1,0 +1,75 @@
+"""L1 Pallas kernel: batched LinUCB scoring over the frequency action space.
+
+This is the per-window decision hot-spot of AGFT (paper Eq. 1):
+
+    score_f = theta_f^T x + alpha * sqrt(x^T A_f^{-1} x)        for f in F
+
+All K arms are scored in one program: ``theta`` is a [K, d] matrix,
+``ainv`` a [K, d, d] stack, and the context ``x`` a [d] vector. On TPU the
+[K, d] x [d] matvec and the K batched quadratic forms map onto the MXU as
+one fused contraction each; K and d are tiny (K <= 32, d = 7 padded to 8),
+so the whole problem fits in a single VMEM tile — the grid is (1,).
+
+A mask input (1.0 = arm available, 0.0 = pruned) folds the action-space
+pruning into the kernel: masked arms score -inf so a plain argmax on the
+rust side picks only live arms.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _linucb_kernel(theta_ref, ainv_ref, x_ref, alpha_ref, mask_ref,
+                   score_ref):
+    theta = theta_ref[...].astype(jnp.float32)          # [K, d]
+    ainv = ainv_ref[...].astype(jnp.float32)            # [K, d, d]
+    x = x_ref[...].astype(jnp.float32)                  # [d]
+    alpha = alpha_ref[0]
+    mask = mask_ref[...].astype(jnp.float32)            # [K]
+
+    # Exploit term: theta @ x  -> [K]
+    exploit = jax.lax.dot_general(
+        theta, x, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    # Explore term: sqrt(x^T Ainv_k x) for each k.
+    # Ainv @ x over the last axis -> [K, d]; then dot with x -> [K].
+    ax = jax.lax.dot_general(
+        ainv, x, (((2,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    quad = jax.lax.dot_general(
+        ax, x, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    quad = jnp.maximum(quad, 0.0)  # numeric floor: Ainv is SPD in exact math
+    explore = alpha * jnp.sqrt(quad)
+
+    score = exploit + explore
+    score_ref[...] = jnp.where(mask > 0.5, score, NEG_INF)
+
+
+def linucb_scores(theta: jax.Array, ainv: jax.Array, x: jax.Array,
+                  alpha: jax.Array, mask: jax.Array, *,
+                  interpret: bool = True) -> jax.Array:
+    """UCB scores for K arms; pruned arms (mask==0) score ``-1e30``.
+
+    Shapes: theta [K, d], ainv [K, d, d], x [d], alpha [1], mask [K].
+    """
+    k, d = theta.shape
+    if ainv.shape != (k, d, d):
+        raise ValueError(f"ainv shape {ainv.shape} != {(k, d, d)}")
+    if x.shape != (d,):
+        raise ValueError(f"x shape {x.shape} != {(d,)}")
+    if mask.shape != (k,):
+        raise ValueError(f"mask shape {mask.shape} != {(k,)}")
+    return pl.pallas_call(
+        _linucb_kernel,
+        out_shape=jax.ShapeDtypeStruct((k,), jnp.float32),
+        interpret=interpret,
+    )(theta.astype(jnp.float32), ainv.astype(jnp.float32),
+      x.astype(jnp.float32), alpha.reshape(1).astype(jnp.float32),
+      mask.astype(jnp.float32))

@@ -1,0 +1,67 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the ground truth the pytest suite checks ``attention.py`` and
+``linucb.py`` against (assert_allclose), and the semantics the rust-side
+native implementations replicate.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, q_offset: int = 0) -> jax.Array:
+    """Naive softmax attention over [batch, heads, seq, head_dim]."""
+    head_dim = q.shape[-1]
+    scale = 1.0 / math.sqrt(head_dim)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        seq_q, seq_k = s.shape[-2], s.shape[-1]
+        q_pos = q_offset + jnp.arange(seq_q)[:, None]
+        k_pos = jnp.arange(seq_k)[None, :]
+        s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+    # Numerically-stable softmax that sends fully-masked rows to zero
+    # output (matching the kernel's l==0 guard).
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    p = jnp.where(l > 0.0, p / jnp.where(l > 0.0, l, 1.0), 0.0)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                         kv_len: jax.Array) -> jax.Array:
+    """Single-query attention over a cache prefix of length ``kv_len``."""
+    head_dim = q.shape[-1]
+    scale = 1.0 / math.sqrt(head_dim)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    seq_k = s.shape[-1]
+    k_pos = jnp.arange(seq_k)[None, :]
+    s = jnp.where(k_pos < kv_len.reshape(()), s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    p = jnp.where(l > 0.0, p / jnp.where(l > 0.0, l, 1.0), 0.0)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def linucb_scores_ref(theta: jax.Array, ainv: jax.Array, x: jax.Array,
+                      alpha: jax.Array, mask: jax.Array) -> jax.Array:
+    """Eq. 1 of the paper, vectorised over arms."""
+    theta = theta.astype(jnp.float32)
+    ainv = ainv.astype(jnp.float32)
+    x = x.astype(jnp.float32)
+    exploit = theta @ x
+    quad = jnp.maximum(jnp.einsum("d,kde,e->k", x, ainv, x), 0.0)
+    score = exploit + alpha.reshape(()) * jnp.sqrt(quad)
+    return jnp.where(mask > 0.5, score, NEG_INF)

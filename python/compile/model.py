@@ -1,0 +1,214 @@
+"""L2: JAX model — a tiny Llama-style decoder served end-to-end by the rust
+coordinator, plus the LinUCB decision step.
+
+The paper serves Llama-3-3B on an A6000; timing/energy at 3B scale comes
+from the rust-side analytical model (``rust/src/model``). *Numerics* are
+proven on this real tiny transformer: prefill + decode-step functions call
+the L1 Pallas kernels (``kernels/attention.py``) so that the lowered HLO
+artifacts exercise kernel code on the live path.
+
+All entry points have static shapes (AOT requirement):
+
+  prefill(tokens[P_MAX] i32, prompt_len[] i32) -> (logits[V], kv[L,2,H,S,D])
+  decode (token[1] i32, pos[] i32, kv[L,2,H,S,D]) -> (logits[V], kv')
+  linucb (theta[K,d], ainv[K,d,d], x[d], alpha[1], mask[K]) -> scores[K]
+
+KV-cache convention: after prefill, positions [0, prompt_len) are valid.
+A decode step *first* writes k/v at index ``pos`` then attends over
+[0, pos], so stale prefill padding beyond ``prompt_len`` is overwritten
+before it can ever be attended.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.attention import decode_attention, flash_attention
+from .kernels.linucb import linucb_scores
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Tiny-llama preset; must stay in sync with artifacts/meta.json."""
+    vocab: int = 256          # byte-level
+    d_model: int = 128
+    n_layers: int = 2
+    n_heads: int = 4
+    d_head: int = 32
+    d_ff: int = 256           # SwiGLU hidden width
+    prompt_max: int = 64      # static prefill length (P_MAX)
+    seq_max: int = 128        # static KV capacity (S)
+    rope_theta: float = 10_000.0
+
+    @property
+    def param_count(self) -> int:
+        c = self
+        per_layer = (4 * c.d_model * c.d_model          # q,k,v,o
+                     + 3 * c.d_model * c.d_ff            # gate,up,down
+                     + 2 * c.d_model)                    # 2 rmsnorms
+        return (c.vocab * c.d_model                      # embedding (tied head)
+                + c.n_layers * per_layer
+                + c.d_model)                             # final norm
+
+
+# LinUCB artifact dimensions: K_MAX arms (bootstrap grid 27 <= 32,
+# refinement window 21 <= 32), context dim 7 padded to 8 lanes.
+LINUCB_K = 32
+LINUCB_D = 8
+
+
+def init_params(cfg: ModelConfig, seed: int = 42) -> Dict[str, Any]:
+    """Deterministic random init — the rust side and tests regenerate the
+    exact same weights from the same seed."""
+    key = jax.random.PRNGKey(seed)
+    keys = jax.random.split(key, 1 + cfg.n_layers)
+
+    def dense(k, shape, fan_in):
+        return (jax.random.normal(k, shape, jnp.float32)
+                / math.sqrt(fan_in)).astype(jnp.float32)
+
+    params: Dict[str, Any] = {
+        "embed": dense(keys[0], (cfg.vocab, cfg.d_model), cfg.d_model),
+        "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+        "layers": [],
+    }
+    for li in range(cfg.n_layers):
+        ks = jax.random.split(keys[1 + li], 7)
+        params["layers"].append({
+            "attn_norm": jnp.ones((cfg.d_model,), jnp.float32),
+            "wq": dense(ks[0], (cfg.d_model, cfg.d_model), cfg.d_model),
+            "wk": dense(ks[1], (cfg.d_model, cfg.d_model), cfg.d_model),
+            "wv": dense(ks[2], (cfg.d_model, cfg.d_model), cfg.d_model),
+            "wo": dense(ks[3], (cfg.d_model, cfg.d_model), cfg.d_model),
+            "mlp_norm": jnp.ones((cfg.d_model,), jnp.float32),
+            "w_gate": dense(ks[4], (cfg.d_model, cfg.d_ff), cfg.d_model),
+            "w_up": dense(ks[5], (cfg.d_model, cfg.d_ff), cfg.d_model),
+            "w_down": dense(ks[6], (cfg.d_ff, cfg.d_model), cfg.d_ff),
+        })
+    return params
+
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding over ``[..., seq, d_head]`` at ``positions [seq]``."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions.astype(jnp.float32)[:, None] * freqs[None, :]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin,
+                            x1 * sin + x2 * cos], axis=-1).astype(x.dtype)
+
+
+def _project_qkv(layer, x, positions, cfg):
+    """x: [S, d_model] -> q,k,v each [1, H, S, D] with RoPE applied."""
+    s = x.shape[0]
+
+    def split(h):
+        return h.reshape(s, cfg.n_heads, cfg.d_head).transpose(1, 0, 2)
+
+    q = split(x @ layer["wq"])
+    k = split(x @ layer["wk"])
+    v = split(x @ layer["wv"])
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    return q[None], k[None], v[None]
+
+
+def _mlp(layer, x):
+    return (jax.nn.silu(x @ layer["w_gate"]) * (x @ layer["w_up"])) \
+        @ layer["w_down"]
+
+
+def prefill(params: Dict[str, Any], cfg: ModelConfig, tokens: jax.Array,
+            prompt_len: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Run the prompt through the model.
+
+    tokens: [prompt_max] i32 (padded); prompt_len: scalar i32.
+    Returns (logits [vocab] at position prompt_len-1,
+             kv [L, 2, H, seq_max, D] valid on [0, prompt_len)).
+    """
+    p = cfg.prompt_max
+    positions = jnp.arange(p, dtype=jnp.int32)
+    x = params["embed"][tokens]                       # [P, d_model]
+    kv = jnp.zeros((cfg.n_layers, 2, cfg.n_heads, cfg.seq_max, cfg.d_head),
+                   jnp.float32)
+    for li, layer in enumerate(params["layers"]):
+        h = rmsnorm(x, layer["attn_norm"])
+        q, k, v = _project_qkv(layer, h, positions, cfg)
+        kv = kv.at[li, 0, :, :p, :].set(k[0])
+        kv = kv.at[li, 1, :, :p, :].set(v[0])
+        attn = flash_attention(q, k, v, causal=True)   # [1, H, P, D]
+        attn = attn[0].transpose(1, 0, 2).reshape(p, cfg.d_model)
+        x = x + attn @ layer["wo"]
+        x = x + _mlp(layer, rmsnorm(x, layer["mlp_norm"]))
+    x = rmsnorm(x, params["final_norm"])
+    last = jax.lax.dynamic_slice_in_dim(x, prompt_len - 1, 1, axis=0)[0]
+    logits = last @ params["embed"].T
+    return logits, kv
+
+
+def decode_step(params: Dict[str, Any], cfg: ModelConfig, token: jax.Array,
+                pos: jax.Array, kv: jax.Array
+                ) -> Tuple[jax.Array, jax.Array]:
+    """One decode iteration.
+
+    token: [1] i32; pos: scalar i32 (index this token is written at);
+    kv: [L, 2, H, seq_max, D]. Returns (logits [vocab], updated kv).
+    """
+    positions = pos.reshape(1).astype(jnp.int32)
+    x = params["embed"][token]                        # [1, d_model]
+    for li, layer in enumerate(params["layers"]):
+        h = rmsnorm(x, layer["attn_norm"])
+        q, k, v = _project_qkv(layer, h, positions, cfg)  # [1,H,1,D]
+        # Write this step's k/v at `pos` *before* attending (see module doc).
+        kv = jax.lax.dynamic_update_slice(
+            kv, k[0][None, None, :, :, :], (li, 0, 0, pos, 0))
+        kv = jax.lax.dynamic_update_slice(
+            kv, v[0][None, None, :, :, :], (li, 1, 0, pos, 0))
+        k_cache = kv[li, 0][None]                      # [1, H, S, D]
+        v_cache = kv[li, 1][None]
+        attn = decode_attention(q, k_cache, v_cache, pos + 1)  # [1,H,1,D]
+        attn = attn[0].transpose(1, 0, 2).reshape(1, cfg.d_model)
+        x = x + attn @ layer["wo"]
+        x = x + _mlp(layer, rmsnorm(x, layer["mlp_norm"]))
+    x = rmsnorm(x, params["final_norm"])
+    logits = (x @ params["embed"].T)[0]
+    return logits, kv
+
+
+def linucb_step(theta: jax.Array, ainv: jax.Array, x: jax.Array,
+                alpha: jax.Array, mask: jax.Array) -> jax.Array:
+    """The AGFT per-window decision computation (paper Eq. 1) via the L1
+    Pallas kernel. Shapes: theta [K,d], ainv [K,d,d], x [d], alpha [1],
+    mask [K] -> scores [K] (pruned arms = -1e30)."""
+    return linucb_scores(theta, ainv, x, alpha, mask)
+
+
+def full_forward_ref(params: Dict[str, Any], cfg: ModelConfig,
+                     tokens: jax.Array) -> jax.Array:
+    """Oracle: unpadded full causal forward over ``tokens [S]``; returns
+    logits [S, vocab]. Used by tests to validate prefill/decode parity."""
+    s = tokens.shape[0]
+    positions = jnp.arange(s, dtype=jnp.int32)
+    x = params["embed"][tokens]
+    from .kernels.ref import attention_ref
+    for layer in params["layers"]:
+        h = rmsnorm(x, layer["attn_norm"])
+        q, k, v = _project_qkv(layer, h, positions, cfg)
+        attn = attention_ref(q, k, v, causal=True)
+        attn = attn[0].transpose(1, 0, 2).reshape(s, cfg.d_model)
+        x = x + attn @ layer["wo"]
+        x = x + _mlp(layer, rmsnorm(x, layer["mlp_norm"]))
+    x = rmsnorm(x, params["final_norm"])
+    return x @ params["embed"].T

@@ -1,0 +1,85 @@
+"""AOT pipeline: lowering produces parseable HLO text with the right
+entry-point signatures, and the meta manifest is consistent."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot
+from compile import model as M
+
+
+@pytest.fixture(scope="module")
+def hlo_texts():
+    # Small config keeps the lowering fast; the shipped artifacts use the
+    # default config (built by `make artifacts`).
+    cfg = M.ModelConfig(n_layers=1, prompt_max=16, seq_max=32)
+    return cfg, aot.lower_artifacts(cfg, seed=7)
+
+
+class TestLowering:
+    def test_all_artifacts_present(self, hlo_texts):
+        _, texts = hlo_texts
+        assert set(texts) == {"prefill", "decode", "linucb"}
+
+    def test_hlo_text_shape_signatures(self, hlo_texts):
+        cfg, texts = hlo_texts
+        # prefill: tokens s32[prompt_max], len s32[] -> (f32[vocab], kv)
+        assert f"s32[{cfg.prompt_max}]" in texts["prefill"]
+        assert f"f32[{cfg.vocab}]" in texts["prefill"]
+        kv_shape = (f"f32[{cfg.n_layers},2,{cfg.n_heads},{cfg.seq_max},"
+                    f"{cfg.d_head}]")
+        assert kv_shape in texts["prefill"]
+        assert kv_shape in texts["decode"]
+        k, d = M.LINUCB_K, M.LINUCB_D
+        assert f"f32[{k},{d}]" in texts["linucb"]
+        assert f"f32[{k},{d},{d}]" in texts["linucb"]
+
+    def test_hlo_is_text_not_proto(self, hlo_texts):
+        _, texts = hlo_texts
+        for name, text in texts.items():
+            assert text.lstrip().startswith("HloModule"), name
+            assert "ENTRY" in text, name
+
+    def test_weights_baked_as_constants(self, hlo_texts):
+        """The model entry points take only runtime state (no weight
+        params): prefill has exactly 2 parameters."""
+        _, texts = hlo_texts
+        entry = texts["prefill"].split("ENTRY")[1]
+        n_params = entry.count("parameter(")
+        assert n_params == 2, f"prefill ENTRY has {n_params} params"
+        entry = texts["decode"].split("ENTRY")[1]
+        assert entry.count("parameter(") == 3
+
+    def test_deterministic_lowering(self, hlo_texts):
+        cfg, texts = hlo_texts
+        again = aot.lower_artifacts(cfg, seed=7)
+        assert texts["linucb"] == again["linucb"]
+
+
+class TestMeta:
+    def test_meta_roundtrip(self, tmp_path):
+        cfg = M.ModelConfig()
+        aot.write_meta(cfg, str(tmp_path), seed=42)
+        meta = json.loads((tmp_path / "meta.json").read_text())
+        assert meta["model"]["param_count"] == cfg.param_count
+        assert meta["linucb"] == {"k_max": M.LINUCB_K, "dim": M.LINUCB_D}
+        assert meta["interchange"] == "hlo-text"
+        assert set(meta["artifacts"]) == {"prefill", "decode", "linucb"}
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(os.path.dirname(__file__), "..", "..",
+                                    "artifacts", "meta.json")),
+    reason="shipped artifacts not built (run `make artifacts`)")
+class TestShippedArtifacts:
+    def test_shipped_artifacts_consistent(self):
+        root = os.path.join(os.path.dirname(__file__), "..", "..",
+                            "artifacts")
+        meta = json.loads(open(os.path.join(root, "meta.json")).read())
+        for name, fname in meta["artifacts"].items():
+            path = os.path.join(root, fname)
+            assert os.path.exists(path), path
+            head = open(path).read(200)
+            assert head.lstrip().startswith("HloModule"), name

@@ -1,0 +1,126 @@
+"""L1 attention kernel vs pure-jnp oracle (hypothesis shape/dtype sweep)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.attention import decode_attention, flash_attention
+from compile.kernels.ref import attention_ref, decode_attention_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+def make_qkv(seed, batch, heads, seq_q, seq_k, head_dim, dtype=jnp.float32):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = rand(ks[0], (batch, heads, seq_q, head_dim), dtype)
+    k = rand(ks[1], (batch, heads, seq_k, head_dim), dtype)
+    v = rand(ks[2], (batch, heads, seq_k, head_dim), dtype)
+    return q, k, v
+
+
+class TestFlashAttention:
+    def test_basic_causal(self):
+        q, k, v = make_qkv(0, 2, 4, 32, 32, 16)
+        out = flash_attention(q, k, v, causal=True)
+        ref = attention_ref(q, k, v, causal=True)
+        np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+
+    def test_non_causal(self):
+        q, k, v = make_qkv(1, 1, 2, 16, 48, 32)
+        out = flash_attention(q, k, v, causal=False)
+        ref = attention_ref(q, k, v, causal=False)
+        np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+
+    def test_q_offset_matches_suffix_of_full(self):
+        """Queries at offset P over a longer KV == the suffix rows of the
+        full causal result (the decode-chunk identity)."""
+        q, k, v = make_qkv(2, 1, 2, 64, 64, 16)
+        full = flash_attention(q, k, v, causal=True)
+        tail = flash_attention(q[:, :, 48:, :], k, v, causal=True,
+                               q_offset=48)
+        np.testing.assert_allclose(tail, full[:, :, 48:, :],
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_rejects_misaligned_shapes(self):
+        q, k, v = make_qkv(3, 1, 1, 16, 16, 8)
+        with pytest.raises(ValueError):
+            flash_attention(q[:, :, :10], k, v)
+        with pytest.raises(ValueError):
+            flash_attention(q, k[:, :, :10], v[:, :, :10])
+        with pytest.raises(ValueError):
+            flash_attention(q, k, v, q_offset=7)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        batch=st.integers(1, 3),
+        heads=st.integers(1, 4),
+        q_blocks=st.integers(1, 4),
+        k_blocks=st.integers(1, 4),
+        head_dim=st.sampled_from([8, 16, 32]),
+        causal=st.booleans(),
+        seed=st.integers(0, 2**16),
+    )
+    def test_matches_ref_sweep(self, batch, heads, q_blocks, k_blocks,
+                               head_dim, causal, seed):
+        seq_q, seq_k = 16 * q_blocks, 16 * k_blocks
+        q, k, v = make_qkv(seed, batch, heads, seq_q, seq_k, head_dim)
+        out = flash_attention(q, k, v, causal=causal)
+        ref = attention_ref(q, k, v, causal=causal)
+        np.testing.assert_allclose(out, ref, rtol=3e-5, atol=3e-5)
+
+    @settings(max_examples=8, deadline=None)
+    @given(seed=st.integers(0, 2**16))
+    def test_bfloat16(self, seed):
+        q, k, v = make_qkv(seed, 1, 2, 16, 32, 16, dtype=jnp.bfloat16)
+        out = flash_attention(q, k, v, causal=True)
+        ref = attention_ref(q, k, v, causal=True)
+        assert out.dtype == jnp.bfloat16
+        np.testing.assert_allclose(out.astype(jnp.float32),
+                                   ref.astype(jnp.float32),
+                                   rtol=3e-2, atol=3e-2)
+
+
+class TestDecodeAttention:
+    def test_matches_masked_ref(self):
+        q, k, v = make_qkv(5, 2, 4, 1, 64, 32)
+        for kv_len in [1, 7, 33, 64]:
+            out = decode_attention(q, k, v, jnp.int32(kv_len))
+            ref = decode_attention_ref(q, k, v, jnp.int32(kv_len))
+            np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5,
+                                       err_msg=f"kv_len={kv_len}")
+
+    def test_equals_causal_last_row(self):
+        """decode over a cache of length S == last row of full causal."""
+        q, k, v = make_qkv(6, 1, 2, 64, 64, 16)
+        full = attention_ref(q, k, v, causal=True)
+        out = decode_attention(q[:, :, -1:, :], k, v, jnp.int32(64))
+        np.testing.assert_allclose(out, full[:, :, -1:, :],
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_rejects_multi_query(self):
+        q, k, v = make_qkv(7, 1, 1, 16, 16, 8)
+        with pytest.raises(ValueError):
+            decode_attention(q, k, v, jnp.int32(4))
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        batch=st.integers(1, 2),
+        heads=st.integers(1, 4),
+        k_blocks=st.integers(1, 5),
+        head_dim=st.sampled_from([8, 16, 32]),
+        seed=st.integers(0, 2**16),
+        data=st.data(),
+    )
+    def test_sweep(self, batch, heads, k_blocks, head_dim, seed, data):
+        seq_k = 16 * k_blocks
+        kv_len = data.draw(st.integers(1, seq_k))
+        q, k, v = make_qkv(seed, batch, heads, 1, seq_k, head_dim)
+        out = decode_attention(q, k, v, jnp.int32(kv_len))
+        ref = decode_attention_ref(q, k, v, jnp.int32(kv_len))
+        np.testing.assert_allclose(out, ref, rtol=3e-5, atol=3e-5)

@@ -1,0 +1,112 @@
+"""L1 LinUCB scoring kernel vs jnp/numpy oracle + bandit-math properties."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.linucb import NEG_INF, linucb_scores
+from compile.kernels.ref import linucb_scores_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def make_problem(seed, k, d, spd=True):
+    rng = np.random.default_rng(seed)
+    theta = rng.normal(size=(k, d)).astype(np.float32)
+    if spd:
+        # SPD A (ridge-regularised gram matrices), then invert — matches
+        # what a real LinUCB state looks like.
+        ainv = np.empty((k, d, d), np.float32)
+        for i in range(k):
+            g = rng.normal(size=(d, d)).astype(np.float32)
+            a = g @ g.T + np.eye(d, dtype=np.float32)
+            ainv[i] = np.linalg.inv(a)
+    else:
+        ainv = rng.normal(size=(k, d, d)).astype(np.float32)
+    x = rng.normal(size=(d,)).astype(np.float32)
+    return theta, ainv, x
+
+
+class TestLinUCBKernel:
+    def test_matches_ref(self):
+        theta, ainv, x = make_problem(0, 8, 8)
+        alpha = jnp.asarray([0.7])
+        mask = jnp.ones(8)
+        out = linucb_scores(jnp.asarray(theta), jnp.asarray(ainv),
+                            jnp.asarray(x), alpha, mask)
+        ref = linucb_scores_ref(jnp.asarray(theta), jnp.asarray(ainv),
+                                jnp.asarray(x), alpha, mask)
+        np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
+
+    def test_alpha_zero_is_greedy(self):
+        """With alpha=0 the score is exactly theta^T x (Eq. 2, greedy)."""
+        theta, ainv, x = make_problem(1, 16, 8)
+        out = linucb_scores(jnp.asarray(theta), jnp.asarray(ainv),
+                            jnp.asarray(x), jnp.asarray([0.0]),
+                            jnp.ones(16))
+        np.testing.assert_allclose(out, theta @ x, rtol=1e-5, atol=1e-5)
+
+    def test_exploration_bonus_nonnegative(self):
+        """SPD Ainv => UCB score >= greedy score for every arm."""
+        theta, ainv, x = make_problem(2, 12, 8)
+        greedy = linucb_scores(jnp.asarray(theta), jnp.asarray(ainv),
+                               jnp.asarray(x), jnp.asarray([0.0]),
+                               jnp.ones(12))
+        ucb = linucb_scores(jnp.asarray(theta), jnp.asarray(ainv),
+                            jnp.asarray(x), jnp.asarray([1.5]),
+                            jnp.ones(12))
+        assert np.all(np.asarray(ucb) >= np.asarray(greedy) - 1e-6)
+
+    def test_mask_suppresses_pruned_arms(self):
+        theta, ainv, x = make_problem(3, 8, 8)
+        mask = jnp.asarray([1, 0, 1, 0, 0, 1, 1, 0], jnp.float32)
+        out = np.asarray(linucb_scores(
+            jnp.asarray(theta), jnp.asarray(ainv), jnp.asarray(x),
+            jnp.asarray([0.5]), mask))
+        assert np.all(out[np.asarray(mask) == 0] == NEG_INF)
+        assert np.all(out[np.asarray(mask) == 1] > NEG_INF / 2)
+
+    def test_all_masked_never_selected_value(self):
+        theta, ainv, x = make_problem(4, 4, 8)
+        out = np.asarray(linucb_scores(
+            jnp.asarray(theta), jnp.asarray(ainv), jnp.asarray(x),
+            jnp.asarray([1.0]), jnp.zeros(4)))
+        assert np.all(out == NEG_INF)
+
+    def test_shape_validation(self):
+        theta, ainv, x = make_problem(5, 4, 8)
+        with pytest.raises(ValueError):
+            linucb_scores(jnp.asarray(theta), jnp.asarray(ainv[:3]),
+                          jnp.asarray(x), jnp.asarray([1.0]), jnp.ones(4))
+        with pytest.raises(ValueError):
+            linucb_scores(jnp.asarray(theta), jnp.asarray(ainv),
+                          jnp.asarray(x[:4]), jnp.asarray([1.0]),
+                          jnp.ones(4))
+
+    @settings(max_examples=30, deadline=None)
+    @given(k=st.integers(1, 32), d=st.sampled_from([4, 7, 8, 12]),
+           alpha=st.floats(0.0, 5.0), seed=st.integers(0, 2**16))
+    def test_sweep_matches_ref(self, k, d, alpha, seed):
+        theta, ainv, x = make_problem(seed, k, d)
+        rng = np.random.default_rng(seed + 1)
+        mask = (rng.random(k) > 0.3).astype(np.float32)
+        a = jnp.asarray([alpha], jnp.float32)
+        out = linucb_scores(jnp.asarray(theta), jnp.asarray(ainv),
+                            jnp.asarray(x), a, jnp.asarray(mask))
+        ref = linucb_scores_ref(jnp.asarray(theta), jnp.asarray(ainv),
+                                jnp.asarray(x), a, jnp.asarray(mask))
+        np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+
+    def test_argmax_agrees_with_dense_solve(self):
+        """End-to-end sanity: kernel argmax == numpy full-precision argmax
+        on a realistic bandit state."""
+        theta, ainv, x = make_problem(6, 27, 8)
+        alpha = 1.2
+        scores = theta @ x + alpha * np.sqrt(
+            np.maximum(np.einsum("d,kde,e->k", x, ainv, x), 0.0))
+        out = np.asarray(linucb_scores(
+            jnp.asarray(theta), jnp.asarray(ainv), jnp.asarray(x),
+            jnp.asarray([alpha], jnp.float32), jnp.ones(27)))
+        assert int(out.argmax()) == int(scores.argmax())

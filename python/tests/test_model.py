@@ -1,0 +1,106 @@
+"""L2 model: shape contracts and prefill/decode vs full-forward parity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = M.ModelConfig()
+PARAMS = M.init_params(CFG)
+
+
+def sample_tokens(rng, n):
+    return jnp.asarray(rng.integers(0, CFG.vocab, size=n), jnp.int32)
+
+
+class TestShapes:
+    def test_param_count_matches_spec(self):
+        total = 0
+        total += PARAMS["embed"].size + PARAMS["final_norm"].size
+        for layer in PARAMS["layers"]:
+            total += sum(int(np.prod(w.shape)) for w in layer.values())
+        assert total == CFG.param_count
+
+    def test_prefill_shapes(self):
+        rng = np.random.default_rng(0)
+        tokens = sample_tokens(rng, CFG.prompt_max)
+        logits, kv = M.prefill(PARAMS, CFG, tokens, jnp.int32(10))
+        assert logits.shape == (CFG.vocab,)
+        assert kv.shape == (CFG.n_layers, 2, CFG.n_heads, CFG.seq_max,
+                            CFG.d_head)
+
+    def test_decode_shapes(self):
+        rng = np.random.default_rng(1)
+        tokens = sample_tokens(rng, CFG.prompt_max)
+        _, kv = M.prefill(PARAMS, CFG, tokens, jnp.int32(8))
+        logits, kv2 = M.decode_step(PARAMS, CFG, tokens[:1], jnp.int32(8),
+                                    kv)
+        assert logits.shape == (CFG.vocab,)
+        assert kv2.shape == kv.shape
+
+    def test_init_deterministic(self):
+        p2 = M.init_params(CFG, seed=42)
+        np.testing.assert_array_equal(PARAMS["embed"], p2["embed"])
+        np.testing.assert_array_equal(PARAMS["layers"][0]["wq"],
+                                      p2["layers"][0]["wq"])
+        p3 = M.init_params(CFG, seed=43)
+        assert not np.array_equal(PARAMS["embed"], p3["embed"])
+
+
+class TestParity:
+    """prefill(prompt) + decode steps must equal the unpadded full forward
+    (the fundamental KV-cache correctness invariant)."""
+
+    @pytest.mark.parametrize("prompt_len", [1, 5, 16, 63])
+    def test_prefill_logits_match_full_forward(self, prompt_len):
+        rng = np.random.default_rng(prompt_len)
+        prompt = sample_tokens(rng, prompt_len)
+        padded = jnp.zeros(CFG.prompt_max, jnp.int32).at[:prompt_len].set(
+            prompt)
+        logits, _ = M.prefill(PARAMS, CFG, padded, jnp.int32(prompt_len))
+        ref = M.full_forward_ref(PARAMS, CFG, prompt)[-1]
+        np.testing.assert_allclose(logits, ref, rtol=2e-4, atol=2e-4)
+
+    def test_decode_chain_matches_full_forward(self):
+        rng = np.random.default_rng(7)
+        prompt_len, steps = 12, 6
+        seq = sample_tokens(rng, prompt_len + steps)
+        padded = jnp.zeros(CFG.prompt_max, jnp.int32).at[:prompt_len].set(
+            seq[:prompt_len])
+        logits, kv = M.prefill(PARAMS, CFG, padded, jnp.int32(prompt_len))
+        ref_all = M.full_forward_ref(PARAMS, CFG, seq)
+        np.testing.assert_allclose(logits, ref_all[prompt_len - 1],
+                                   rtol=2e-4, atol=2e-4)
+        for t in range(steps):
+            pos = prompt_len + t
+            logits, kv = M.decode_step(PARAMS, CFG, seq[pos:pos + 1],
+                                       jnp.int32(pos), kv)
+            np.testing.assert_allclose(
+                logits, ref_all[pos], rtol=5e-4, atol=5e-4,
+                err_msg=f"decode step {t} (pos {pos})")
+
+    def test_greedy_generation_deterministic(self):
+        rng = np.random.default_rng(9)
+        prompt_len = 8
+        prompt = sample_tokens(rng, prompt_len)
+        padded = jnp.zeros(CFG.prompt_max, jnp.int32).at[:prompt_len].set(
+            prompt)
+
+        def generate():
+            logits, kv = M.prefill(PARAMS, CFG, padded,
+                                   jnp.int32(prompt_len))
+            out = []
+            pos = prompt_len
+            for _ in range(5):
+                tok = jnp.argmax(logits).astype(jnp.int32)
+                out.append(int(tok))
+                logits, kv = M.decode_step(PARAMS, CFG, tok.reshape(1),
+                                           jnp.int32(pos), kv)
+                pos += 1
+            return out
+
+        assert generate() == generate()

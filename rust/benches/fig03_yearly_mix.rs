@@ -1,0 +1,48 @@
+//! Fig 3 — yearly evolution of workload types (Azure traces, 2023 vs
+//! 2024): Balanced / Context-Heavy / Generation-Heavy shares.
+//!
+//! Paper values: 2023 = 52.7 / 45.8 / 1.5 %; 2024 = 8.3 / 91.6 / 0.1 %.
+
+use agft::experiment::report;
+use agft::workload::azure::{classify, synthesize_azure, AzureParams};
+
+fn main() {
+    let mut rows = Vec::new();
+    let mut csv = Vec::new();
+    for year in [2023u32, 2024] {
+        let params = AzureParams::for_year(year).unwrap();
+        let reqs = synthesize_azure(&params, 5.0, 24.0 * 3600.0, 7);
+        let (mut bal, mut ctx, mut gen) = (0u64, 0u64, 0u64);
+        for r in &reqs {
+            match classify(r.prompt_tokens, r.target_output) {
+                "balanced" => bal += 1,
+                "context-heavy" => ctx += 1,
+                _ => gen += 1,
+            }
+        }
+        let n = reqs.len() as f64;
+        let (b, c, g) =
+            (bal as f64 / n * 100.0, ctx as f64 / n * 100.0, gen as f64 / n * 100.0);
+        let (pb, pc, pg) = params.mix();
+        rows.push(vec![
+            year.to_string(),
+            format!("{b:.1} % (paper {:.1} %)", pb * 100.0),
+            format!("{c:.1} % (paper {:.1} %)", pc * 100.0),
+            format!("{g:.1} % (paper {:.1} %)", pg * 100.0),
+            format!("{}", reqs.len()),
+        ]);
+        csv.push(vec![year as f64, b, c, g]);
+    }
+    println!("{}", report::render_table(
+        "Fig 3 — workload type mix by year (synthesised vs paper)",
+        &["year", "balanced", "context-heavy", "generation-heavy", "requests"],
+        &rows,
+    ));
+    report::write_csv(
+        "fig03_yearly_mix",
+        &["year", "balanced_pct", "context_heavy_pct", "generation_heavy_pct"],
+        &csv,
+    )
+    .unwrap();
+    println!("wrote results/fig03_yearly_mix.csv");
+}

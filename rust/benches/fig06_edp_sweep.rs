@@ -1,0 +1,81 @@
+//! Fig 6 — EDP versus GPU frequency for the five workload prototypes,
+//! with the minimum-EDP point highlighted (paper §3.2: 210→1800 MHz at
+//! 15 MHz; each point completes the full task round).
+//!
+//! Paper optima: Normal 1230, Long Context 1395, Long Generation 1260,
+//! High Concurrency 1365, High Cache Hit 1200 MHz.
+//!
+//! `AGFT_SWEEP_STEP` (MHz, default 45) and `AGFT_SWEEP_DURATION`
+//! (virtual s, default 240) trade fidelity for wall-clock.
+
+use agft::config::{ExperimentConfig, WorkloadKind};
+use agft::experiment::report;
+use agft::experiment::sweep::edp_sweep;
+use agft::gpu::FreqTable;
+use agft::workload::WorkloadSpec;
+
+fn env_f64(key: &str, default: f64) -> f64 {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let step = env_f64("AGFT_SWEEP_STEP", 45.0) as u32;
+    let duration = env_f64("AGFT_SWEEP_DURATION", 240.0);
+    let paper = [
+        ("normal", 1230u32),
+        ("long_context", 1395),
+        ("long_generation", 1260),
+        ("high_concurrency", 1365),
+        ("high_cache_hit", 1200),
+    ];
+    let mut rows = Vec::new();
+    let mut csv = Vec::new();
+    for (idx, spec) in WorkloadSpec::all().into_iter().enumerate() {
+        let cfg = ExperimentConfig {
+            duration_s: duration,
+            arrival_rps: 2.0,
+            workload: WorkloadKind::Prototype(spec.name.to_string()),
+            ..ExperimentConfig::default()
+        };
+        let table = FreqTable::from_config(&cfg.gpu);
+        let freqs: Vec<u32> = table
+            .all()
+            .into_iter()
+            .filter(|f| (f - table.min_mhz()) % step == 0 || *f == table.max_mhz())
+            .collect();
+        let sweep = edp_sweep(&cfg, &freqs).unwrap();
+        let paper_opt = paper[idx].1;
+        rows.push(vec![
+            spec.name.to_string(),
+            format!("{}", sweep.optimum.freq_mhz),
+            format!("{paper_opt}"),
+            format!(
+                "{:+.1} %",
+                (sweep.optimum.freq_mhz as f64 / paper_opt as f64 - 1.0) * 100.0
+            ),
+            format!("{}", sweep.is_u_shaped()),
+        ]);
+        for p in &sweep.points {
+            csv.push(vec![
+                idx as f64,
+                p.freq_mhz as f64,
+                p.energy_j,
+                p.delay_s,
+                p.edp,
+            ]);
+        }
+        eprintln!("swept {} ({} points)", spec.name, sweep.points.len());
+    }
+    println!("{}", report::render_table(
+        "Fig 6 — EDP(f) sweep optima vs paper",
+        &["workload", "optimum MHz", "paper MHz", "deviation", "U-shaped"],
+        &rows,
+    ));
+    report::write_csv(
+        "fig06_edp_sweep",
+        &["workload_idx", "freq_mhz", "energy_j", "delay_s", "edp"],
+        &csv,
+    )
+    .unwrap();
+    println!("wrote results/fig06_edp_sweep.csv");
+}

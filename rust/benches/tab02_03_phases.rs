@@ -1,0 +1,62 @@
+//! Tables 2 & 3 — performance metrics during the learning phase
+//! (pre-convergence) and the stable phase (post-convergence), AGFT vs
+//! the default baseline over the identical request stream.
+//!
+//! Paper (Table 2, learning): energy −43.2 %, EDP −22.4 %, TTFT +57.4 %,
+//! TPOT +40.9 %, E2E +53.1 %.
+//! Paper (Table 3, stable):  energy −44.3 %, EDP −40.3 %, TTFT +9.3 %,
+//! TPOT +7.1 %, E2E +6.9 %.
+
+use agft::config::{ExperimentConfig, WorkloadKind};
+use agft::experiment::harness::run_pair;
+use agft::experiment::phases::learning_and_stable;
+use agft::experiment::report;
+
+fn main() {
+    let mut cfg = ExperimentConfig {
+        duration_s: 1800.0,
+        arrival_rps: 1.2,
+        workload: WorkloadKind::AzureLike { year: 2024 },
+        ..ExperimentConfig::default()
+    };
+    // Production-trace noise (heavy-tail prompts, hourly drift) needs a
+    // less trigger-happy convergence detector than the clean prototypes.
+    cfg.tuner.ph_delta = 0.15;
+    cfg.tuner.ph_lambda = 8.0;
+    cfg.tuner.converge_std_frac = 0.6;
+    // Deployment-realistic SLOs for a 2k-token-context conversational
+    // service (the 150 ms default suits the short "normal" prototype; an
+    // unachievable SLO would dominate the reward at every clock and the
+    // tuner would maximise clock instead of minimising EDP).
+    cfg.tuner.ttft_slo_s = 0.6;
+    cfg.tuner.tpot_slo_s = 0.03;
+    let (agft, base) = run_pair(&cfg).unwrap();
+    println!(
+        "convergence round: {:?} (paper: 231); windows: {}",
+        agft.tuner.as_ref().and_then(|t| t.converged_round),
+        agft.windows.len()
+    );
+    let (learning, stable) = learning_and_stable(&agft, &base);
+    println!("{}", report::render_comparison(
+        "Table 2 — learning phase (paper: energy −43.2 %, EDP −22.4 %, TTFT +57.4 %)",
+        &learning,
+    ));
+    println!("{}", report::render_comparison(
+        "Table 3 — stable phase (paper: energy −44.3 %, EDP −40.3 %, TTFT +9.3 %)",
+        &stable,
+    ));
+
+    let mut rows = Vec::new();
+    for (phase, c) in [(0.0, &learning), (1.0, &stable)] {
+        for (i, r) in c.rows.iter().enumerate() {
+            rows.push(vec![phase, i as f64, r.agft_mean, r.base_mean, r.diff_pct]);
+        }
+    }
+    report::write_csv(
+        "tab02_03_phases",
+        &["phase", "metric_idx", "agft_mean", "base_mean", "diff_pct"],
+        &rows,
+    )
+    .unwrap();
+    println!("wrote results/tab02_03_phases.csv");
+}

@@ -1,0 +1,76 @@
+//! Table 5 — ablation: disabling intelligent action-space pruning
+//! ("No pruning"). The paper reports the stability impact via the
+//! Coefficient of Variation: CV(EDP) and CV(TPOT) rise substantially
+//! without pruning (the printed table's Diff column is sign-flipped in
+//! the paper; the text states CVs are *higher* without pruning).
+
+use agft::config::{ExperimentConfig, WorkloadKind};
+use agft::experiment::harness::{run_experiment, RunResult};
+use agft::experiment::phases::{phase_metrics, split_at, PhaseComparison};
+use agft::experiment::report;
+
+fn stable_windows(r: &RunResult) -> &[agft::experiment::harness::WindowRecord] {
+    let converged = r
+        .tuner
+        .as_ref()
+        .and_then(|t| t.converged_round)
+        .unwrap_or(r.windows.len() as u64 / 2);
+    split_at(&r.windows, converged).1
+}
+
+fn main() {
+    let mut base_cfg = ExperimentConfig {
+        duration_s: 1800.0,
+        arrival_rps: 1.2,
+        workload: WorkloadKind::AzureLike { year: 2024 },
+        ..ExperimentConfig::default()
+    };
+    // Production-trace noise: see tab02_03_phases.rs.
+    base_cfg.tuner.ph_delta = 0.15;
+    base_cfg.tuner.ph_lambda = 8.0;
+    base_cfg.tuner.converge_std_frac = 0.6;
+    // Deployment-realistic SLOs (see tab02_03_phases.rs).
+    base_cfg.tuner.ttft_slo_s = 0.6;
+    base_cfg.tuner.tpot_slo_s = 0.03;
+    let mut noprune_cfg = base_cfg.clone();
+    noprune_cfg.tuner.pruning.enabled = false;
+
+    let full = run_experiment(&base_cfg).unwrap();
+    let noprune = run_experiment(&noprune_cfg).unwrap();
+    println!(
+        "pruning events: full={} / no-pruning={}",
+        full.tuner
+            .as_ref()
+            .map(|t| t.pruned_extreme + t.pruned_historical + t.pruned_cascade)
+            .unwrap_or(0),
+        noprune
+            .tuner
+            .as_ref()
+            .map(|t| t.pruned_extreme + t.pruned_historical + t.pruned_cascade)
+            .unwrap_or(0),
+    );
+
+    let m_full = phase_metrics(stable_windows(&full));
+    let m_np = phase_metrics(stable_windows(&noprune));
+    let cmp = PhaseComparison::build(&m_np, &m_full);
+    println!("{}", report::render_cv_comparison(
+        "Table 5 — disabling action-space pruning \
+         (paper text: CV(EDP) and CV(TPOT) substantially higher without pruning)",
+        "No pruning",
+        &cmp,
+    ));
+
+    let rows: Vec<Vec<f64>> = cmp
+        .rows
+        .iter()
+        .enumerate()
+        .map(|(i, r)| vec![i as f64, r.agft_cv, r.base_cv, r.cv_diff_pct])
+        .collect();
+    report::write_csv(
+        "tab05_ablation_pruning",
+        &["metric_idx", "noprune_cv", "full_cv", "cv_diff_pct"],
+        &rows,
+    )
+    .unwrap();
+    println!("wrote results/tab05_ablation_pruning.csv");
+}

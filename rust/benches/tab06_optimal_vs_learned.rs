@@ -1,0 +1,117 @@
+//! Table 6 — theoretically optimal frequencies (offline sweep) versus
+//! the frequencies AGFT learns online, per workload prototype.
+//!
+//! Paper: Normal 1230/1230 (0 %), Long Context 1395/1410 (+1.1 %),
+//! Long Generation 1260/1200 (−4.8 %), High Concurrency 1365/1320
+//! (−3.3 %), High Cache Hit 1200/1290 (+7.5 %).
+
+use agft::config::{ExperimentConfig, WorkloadKind};
+use agft::experiment::harness::run_experiment;
+use agft::experiment::report;
+use agft::experiment::sweep::edp_sweep;
+use agft::gpu::FreqTable;
+use agft::workload::WorkloadSpec;
+
+/// Modal frequency over the exploitation-phase decisions; when a noisy
+/// run never formally converges, the modal decision over the final third
+/// of the horizon is the learned operating point.
+fn learned_frequency(r: &agft::experiment::harness::RunResult) -> Option<u32> {
+    let t = r.tuner.as_ref()?;
+    let cutoff = t
+        .converged_round
+        .unwrap_or(t.freq_log.len() as u64 * 2 / 3);
+    let mut counts: Vec<(u32, u32)> = Vec::new();
+    for &(round, f) in &t.freq_log {
+        if round >= cutoff {
+            match counts.iter_mut().find(|(cf, _)| *cf == f) {
+                Some((_, c)) => *c += 1,
+                None => counts.push((f, 1)),
+            }
+        }
+    }
+    counts.into_iter().max_by_key(|&(_, c)| c).map(|(f, _)| f)
+}
+
+fn main() {
+    let paper: [(&str, u32, u32); 5] = [
+        ("normal", 1230, 1230),
+        ("long_context", 1395, 1410),
+        ("long_generation", 1260, 1200),
+        ("high_concurrency", 1365, 1320),
+        ("high_cache_hit", 1200, 1290),
+    ];
+    let mut rows = Vec::new();
+    let mut csv = Vec::new();
+    for (idx, spec) in WorkloadSpec::all().into_iter().enumerate() {
+        let cfg = ExperimentConfig {
+            duration_s: 300.0,
+            arrival_rps: 2.0,
+            workload: WorkloadKind::Prototype(spec.name.to_string()),
+            ..ExperimentConfig::default()
+        };
+        // Offline: fine sweep around the operating band.
+        let table = FreqTable::from_config(&cfg.gpu);
+        let freqs = table.in_range(900, table.max_mhz());
+        let sweep = edp_sweep(&cfg, &freqs).unwrap();
+        let offline = sweep.optimum.freq_mhz;
+
+        // Online: long AGFT run to convergence, then the modal
+        // exploitation frequency ("the learned frequency"). Decode-heavy
+        // prototypes have nearly flat EDP(f) around the optimum (Fig 6),
+        // so resolving it against window noise needs the paper's full
+        // 5000-request horizon and a longer exploration phase.
+        let mut online_cfg = ExperimentConfig {
+            duration_s: 3000.0,
+            ..cfg.clone()
+        };
+        online_cfg.tuner.converge_stable_rounds = 300;
+        online_cfg.tuner.alpha_tau = 120.0;
+        // Per-workload SLOs, set relative to what the EDP-optimal clock
+        // can deliver (a deployment serving 8k-token contexts does not
+        // run a 150 ms TTFT SLO): 1.5x the offline optimum's latency.
+        online_cfg.tuner.ttft_slo_s =
+            (sweep.optimum.mean_ttft * 1.5).max(0.15);
+        online_cfg.tuner.tpot_slo_s =
+            (sweep.optimum.mean_tpot * 1.5).max(0.02);
+        let run = run_experiment(&online_cfg).unwrap();
+        let online = learned_frequency(&run);
+        eprintln!(
+            "{}: offline {} / online {:?} (converged {:?})",
+            spec.name,
+            offline,
+            online,
+            run.tuner.as_ref().and_then(|t| t.converged_round)
+        );
+
+        let online_v = online.unwrap_or(0);
+        let dev = if online_v > 0 {
+            (online_v as f64 / offline as f64 - 1.0) * 100.0
+        } else {
+            f64::NAN
+        };
+        let (_, p_off, p_on) = paper[idx];
+        rows.push(vec![
+            spec.name.to_string(),
+            format!("{offline}"),
+            online
+                .map(|f| f.to_string())
+                .unwrap_or_else(|| "n/a".to_string()),
+            format!("{dev:+.1} %"),
+            format!("{p_off}/{p_on} ({:+.1} %)",
+                    (p_on as f64 / p_off as f64 - 1.0) * 100.0),
+        ]);
+        csv.push(vec![idx as f64, offline as f64, online_v as f64, dev]);
+    }
+    println!("{}", report::render_table(
+        "Table 6 — offline-optimal vs online-learned frequency",
+        &["workload", "offline MHz", "online MHz", "deviation", "paper off/on"],
+        &rows,
+    ));
+    report::write_csv(
+        "tab06_optimal_vs_learned",
+        &["workload_idx", "offline_mhz", "online_mhz", "deviation_pct"],
+        &csv,
+    )
+    .unwrap();
+    println!("wrote results/tab06_optimal_vs_learned.csv");
+}

@@ -1,0 +1,174 @@
+//! Workload fingerprints (paper §3.3, Fig 7): run a workload under the
+//! default governor, collect the 7-dim context vector every sampling
+//! window, and average — then normalise each dimension across workloads
+//! so the radar chart's shapes are comparable.
+
+use crate::config::ExperimentConfig;
+use crate::server::Engine;
+use crate::tuner::features::{FeatureExtractor, FEATURE_DIM};
+use crate::workload;
+
+/// Human-readable names of the 7 dimensions, radar order.
+pub const FEATURE_NAMES: [&str; FEATURE_DIM] = [
+    "Queue Status",
+    "Prefill Throughput",
+    "Decode Throughput",
+    "Packing Efficiency",
+    "Concurrency",
+    "GPU Cache Usage",
+    "Cache Hit Rate",
+];
+
+/// A workload's mean feature vector.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Fingerprint {
+    pub workload: String,
+    pub mean: [f64; FEATURE_DIM],
+    pub windows: u64,
+}
+
+/// Run `cfg`'s workload (default governor, unlocked clock — the paper's
+/// measurement setup) and average the per-window context vectors.
+pub fn run_fingerprint(cfg: &ExperimentConfig) -> Result<Fingerprint, String> {
+    let requests = workload::realize(
+        &cfg.workload,
+        cfg.arrival_rps,
+        cfg.duration_s,
+        cfg.seed,
+    )?;
+    let mut engine = Engine::new(cfg, requests);
+    let mut fx = FeatureExtractor::new();
+    let mut sum = [0.0; FEATURE_DIM];
+    let mut n = 0u64;
+    let window_s = cfg.tuner.window_s;
+    let mut t_next = window_s;
+    loop {
+        let alive = engine.run_until(t_next);
+        let snap = engine.snapshot();
+        if let Some(x) = fx.observe(&snap) {
+            // Skip fully idle windows — the paper samples during the
+            // 5000-task rounds, i.e. under load.
+            let d = snap;
+            if d.requests_running > 0 || x[1] > 0.0 || x[2] > 0.0 {
+                for i in 0..FEATURE_DIM {
+                    sum[i] += x[i];
+                }
+                n += 1;
+            }
+        }
+        if !alive || snap.time_s >= cfg.duration_s {
+            break;
+        }
+        t_next += window_s;
+    }
+    if n == 0 {
+        return Err("no busy windows observed".to_string());
+    }
+    let mut mean = [0.0; FEATURE_DIM];
+    for i in 0..FEATURE_DIM {
+        mean[i] = sum[i] / n as f64;
+    }
+    let name = match &cfg.workload {
+        crate::config::WorkloadKind::Prototype(p) => p.clone(),
+        other => format!("{other:?}"),
+    };
+    Ok(Fingerprint {
+        workload: name,
+        mean,
+        windows: n,
+    })
+}
+
+/// Normalise each dimension to [0, 1] across a set of fingerprints (the
+/// paper normalises "to facilitate comparison on the same scale").
+/// Dimensions that are constant across all workloads map to 0.5.
+pub fn normalize_fingerprints(prints: &[Fingerprint]) -> Vec<Fingerprint> {
+    let mut lo = [f64::MAX; FEATURE_DIM];
+    let mut hi = [f64::MIN; FEATURE_DIM];
+    for p in prints {
+        for i in 0..FEATURE_DIM {
+            lo[i] = lo[i].min(p.mean[i]);
+            hi[i] = hi[i].max(p.mean[i]);
+        }
+    }
+    prints
+        .iter()
+        .map(|p| {
+            let mut mean = [0.0; FEATURE_DIM];
+            for i in 0..FEATURE_DIM {
+                mean[i] = if hi[i] - lo[i] > 1e-12 {
+                    (p.mean[i] - lo[i]) / (hi[i] - lo[i])
+                } else {
+                    0.5
+                };
+            }
+            Fingerprint {
+                workload: p.workload.clone(),
+                mean,
+                windows: p.windows,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{GovernorKind, WorkloadKind};
+
+    fn cfg(workload: &str) -> ExperimentConfig {
+        ExperimentConfig {
+            duration_s: 90.0,
+            arrival_rps: 2.0,
+            governor: GovernorKind::Default,
+            workload: WorkloadKind::Prototype(workload.to_string()),
+            ..ExperimentConfig::default()
+        }
+    }
+
+    #[test]
+    fn prototypes_have_distinguishable_fingerprints() {
+        let hc = run_fingerprint(&cfg("high_concurrency")).unwrap();
+        let lg = run_fingerprint(&cfg("long_generation")).unwrap();
+        let hch = run_fingerprint(&cfg("high_cache_hit")).unwrap();
+        // §3.3: high-concurrency peaks on concurrency (x5) and queue (x1).
+        assert!(hc.mean[4] > lg.mean[4], "concurrency dim");
+        assert!(hc.mean[0] > lg.mean[0], "queue dim");
+        // Long generation dominates decode throughput share vs cache-hit.
+        assert!(lg.mean[2] > 0.0);
+        // High cache hit saturates the hit-rate dim.
+        assert!(
+            hch.mean[6] > hc.mean[6] && hch.mean[6] > 0.5,
+            "hit rate: hch {} hc {}",
+            hch.mean[6],
+            hc.mean[6]
+        );
+    }
+
+    #[test]
+    fn normalisation_bounds_and_spread() {
+        let prints = vec![
+            Fingerprint {
+                workload: "a".into(),
+                mean: [0.0, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0],
+                windows: 1,
+            },
+            Fingerprint {
+                workload: "b".into(),
+                mean: [1.0, 1.0, 4.0, 6.0, 8.0, 10.0, 12.0],
+                windows: 1,
+            },
+        ];
+        let n = normalize_fingerprints(&prints);
+        for p in &n {
+            for v in p.mean {
+                assert!((0.0..=1.0).contains(&v));
+            }
+        }
+        assert_eq!(n[0].mean[0], 0.0);
+        assert_eq!(n[1].mean[0], 1.0);
+        // Constant dimension → 0.5.
+        assert_eq!(n[0].mean[1], 0.5);
+        assert_eq!(n[1].mean[1], 0.5);
+    }
+}

@@ -1,0 +1,12 @@
+//! Post-run analysis: time-series transforms behind the paper's figures.
+//!
+//! * [`series`] — cumulative curves (Figs 11/12), rolling reward
+//!   statistics (Fig 14), uniform re-binning (Fig 4 hourly stats).
+//! * [`fingerprint`] — per-workload mean 7-dim feature vectors and their
+//!   cross-workload normalisation (Fig 7 radar data).
+
+pub mod fingerprint;
+pub mod series;
+
+pub use fingerprint::{normalize_fingerprints, run_fingerprint, Fingerprint};
+pub use series::{bin_mean_std, cumulative, rolling_mean_std};

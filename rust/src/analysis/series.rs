@@ -1,0 +1,97 @@
+//! Time-series transforms for the long-run figures.
+
+use crate::util::RollingStats;
+
+/// Cumulative sum of `(t, v)` samples → `(t, Σv)` (Figs 11/12 solid
+/// lines).
+pub fn cumulative(samples: &[(f64, f64)]) -> Vec<(f64, f64)> {
+    let mut acc = 0.0;
+    samples
+        .iter()
+        .map(|&(t, v)| {
+            acc += v;
+            (t, acc)
+        })
+        .collect()
+}
+
+/// Rolling mean/std with window `w` over a value sequence (Fig 14's
+/// orange/red curves). Output i covers samples `[i+1-w, i]` (growing
+/// prefix until full).
+pub fn rolling_mean_std(values: &[f64], w: usize) -> Vec<(f64, f64)> {
+    assert!(w > 0);
+    let mut roll = RollingStats::new(w);
+    values
+        .iter()
+        .map(|&v| {
+            roll.push(v);
+            (roll.mean(), roll.std())
+        })
+        .collect()
+}
+
+/// Bin `(t, v)` samples into uniform bins of width `bin_s` starting at 0;
+/// returns per-bin `(bin_center_t, mean, std, count)` (Fig 4's hourly
+/// mean ± std). Empty bins are skipped.
+pub fn bin_mean_std(
+    samples: &[(f64, f64)],
+    bin_s: f64,
+) -> Vec<(f64, f64, f64, u64)> {
+    assert!(bin_s > 0.0);
+    let mut bins: Vec<(u64, crate::util::RunningStats)> = Vec::new();
+    for &(t, v) in samples {
+        let idx = (t / bin_s).floor() as u64;
+        match bins.iter_mut().find(|(i, _)| *i == idx) {
+            Some((_, s)) => s.push(v),
+            None => {
+                let mut s = crate::util::RunningStats::new();
+                s.push(v);
+                bins.push((idx, s));
+            }
+        }
+    }
+    bins.sort_by_key(|(i, _)| *i);
+    bins.into_iter()
+        .map(|(i, s)| {
+            ((i as f64 + 0.5) * bin_s, s.mean(), s.std(), s.count())
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cumulative_accumulates() {
+        let c = cumulative(&[(1.0, 2.0), (2.0, 3.0), (3.0, -1.0)]);
+        assert_eq!(c, vec![(1.0, 2.0), (2.0, 5.0), (3.0, 4.0)]);
+    }
+
+    #[test]
+    fn rolling_converges_to_window_stats() {
+        let vals: Vec<f64> = (0..100)
+            .map(|i| if i < 50 { 1.0 } else { 3.0 })
+            .collect();
+        let r = rolling_mean_std(&vals, 10);
+        assert_eq!(r.len(), 100);
+        // Early: all-1 window → mean 1, std 0.
+        assert!((r[20].0 - 1.0).abs() < 1e-12);
+        assert!(r[20].1 < 1e-12);
+        // Late: all-3 window.
+        assert!((r[99].0 - 3.0).abs() < 1e-12);
+        // Transition region shows elevated std.
+        assert!(r[52].1 > 0.5);
+    }
+
+    #[test]
+    fn binning_groups_by_time() {
+        let samples = vec![(0.1, 1.0), (0.2, 3.0), (1.5, 10.0)];
+        let bins = bin_mean_std(&samples, 1.0);
+        assert_eq!(bins.len(), 2);
+        assert!((bins[0].0 - 0.5).abs() < 1e-12);
+        assert!((bins[0].1 - 2.0).abs() < 1e-12);
+        assert_eq!(bins[0].3, 2);
+        assert!((bins[1].1 - 10.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,59 @@
+//! Configuration system: a hand-rolled TOML-subset parser ([`toml`]), the
+//! typed schema every subsystem is constructed from ([`schema`]), and
+//! named presets matching the paper's testbed ([`presets`]).
+//!
+//! Every experiment in `benches/` and `examples/` is driven by an
+//! [`schema::ExperimentConfig`], loadable from a TOML file via
+//! [`load_experiment`] or built from presets.
+
+pub mod presets;
+pub mod schema;
+pub mod toml;
+
+pub use schema::{
+    EngineKind, ExperimentConfig, GovernorKind, GpuConfig, ModelSpecConfig,
+    PruningConfig, RefinementConfig, ServerConfig, TunerConfig,
+    WorkloadKind,
+};
+
+use std::path::Path;
+
+/// Load an [`ExperimentConfig`] from a TOML file.
+pub fn load_experiment(path: impl AsRef<Path>) -> Result<ExperimentConfig, String> {
+    let text = std::fs::read_to_string(path.as_ref())
+        .map_err(|e| format!("{}: {e}", path.as_ref().display()))?;
+    let doc = toml::parse(&text)?;
+    ExperimentConfig::from_toml(&doc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_roundtrip(){
+        let dir = std::env::temp_dir().join("agft_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("exp.toml");
+        std::fs::write(&path, r#"
+[experiment]
+seed = 9
+duration_s = 120.0
+
+[gpu]
+f_min_mhz = 210
+f_max_mhz = 1800
+
+[tuner]
+window_s = 0.4
+alpha0 = 2.0
+"#).unwrap();
+        let cfg = load_experiment(&path).unwrap();
+        assert_eq!(cfg.seed, 9);
+        assert_eq!(cfg.duration_s, 120.0);
+        assert_eq!(cfg.gpu.f_min_mhz, 210);
+        assert_eq!(cfg.tuner.window_s, 0.4);
+        // unspecified keys keep defaults
+        assert_eq!(cfg.gpu.f_step_mhz, 15);
+    }
+}

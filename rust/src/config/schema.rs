@@ -1,0 +1,700 @@
+//! Typed configuration schema for every subsystem, with defaults matching
+//! the paper's testbed (NVIDIA A6000 + Llama-3-3B class model + vLLM-like
+//! server + AGFT tuner parameters from §4).
+//!
+//! All `from_toml` constructors start from `Default` and override only
+//! the keys present, so config files stay minimal.
+
+use super::toml::Value;
+
+/// GPU DVFS device model parameters (defaults: NVIDIA A6000 class).
+#[derive(Debug, Clone, PartialEq)]
+pub struct GpuConfig {
+    /// Lowest lockable core clock (paper sweeps from 210 MHz).
+    pub f_min_mhz: u32,
+    /// Highest lockable core clock.
+    pub f_max_mhz: u32,
+    /// Clock-lock granularity (nvidia-smi exposes 15 MHz steps).
+    pub f_step_mhz: u32,
+    /// Clock the *default* governor runs at under load (boost behaviour).
+    pub boost_mhz: u32,
+    /// Idle board power (W).
+    pub idle_w: f64,
+    /// Max dynamic power of the compute path at f_max, full utilisation.
+    pub compute_w: f64,
+    /// Max dynamic power of the memory path at full utilisation.
+    pub mem_w: f64,
+    /// Voltage floor as a fraction of f_max: `P_dyn = u_c * compute_w *
+    /// fr * max(v_floor, fr)^2`. Below `v_floor * f_max` the regulator
+    /// pins the voltage, so dynamic power scales linearly with f; above
+    /// it, cubically. The knee positions the EDP(f) optima (Fig 6).
+    pub v_floor: f64,
+    /// Fraction of the compute-path dynamic power burned whenever the
+    /// SMs are clocked up during a busy iteration, regardless of pipeline
+    /// stalls (clock tree, uncore, imperfect clock gating). This is why a
+    /// boosted clock is expensive even through memory-bound decode — the
+    /// energy-saving opportunity the paper exploits. Effective compute
+    /// utilisation: `γ + (1−γ)·u_c` while busy.
+    pub gate_leak_frac: f64,
+    /// Effective peak compute throughput at f_max (TFLOP/s, fp16 with
+    /// realistic efficiency already folded in).
+    pub peak_tflops: f64,
+    /// Exponent of compute-throughput scaling with the core clock:
+    /// `perf(f) ∝ (f/f_max)^compute_exp`. LLM kernels are not pure-ALU —
+    /// issue latency, caches and DRAM hide behind the clock, so measured
+    /// throughput scales *sublinearly* (DVFS studies on transformer
+    /// inference report ≈0.5–0.7). This is why locking the A6000 to
+    /// ~1230 MHz costs the paper only ≈9% TTFT while saving 44% energy.
+    pub compute_exp: f64,
+    /// Peak HBM bandwidth (GB/s).
+    pub mem_bw_gbs: f64,
+    /// Fraction of peak bandwidth still available at very low core clocks
+    /// (memory clock is not scaled, but low core clocks throttle issue
+    /// rate). `bw(f) = bw * (floor + (1-floor) * min(1, f/knee))`.
+    pub bw_floor: f64,
+    /// Core clock at which full bandwidth is reachable (MHz).
+    pub bw_knee_mhz: u32,
+    /// Latency of applying a clock change (nvidia-smi -lgc round-trip).
+    pub set_clock_latency_s: f64,
+    /// Fixed per-iteration launch/scheduling overhead (s).
+    pub iter_overhead_s: f64,
+}
+
+impl Default for GpuConfig {
+    fn default() -> Self {
+        GpuConfig {
+            f_min_mhz: 210,
+            f_max_mhz: 1800,
+            f_step_mhz: 15,
+            boost_mhz: 1800,
+            idle_w: 25.0,
+            compute_w: 240.0,
+            mem_w: 60.0,
+            v_floor: 0.74,
+            gate_leak_frac: 0.4,
+            peak_tflops: 42.0,
+            compute_exp: 0.62,
+            mem_bw_gbs: 768.0,
+            bw_floor: 0.52,
+            bw_knee_mhz: 1230,
+            set_clock_latency_s: 0.010,
+            iter_overhead_s: 0.000_25,
+        }
+    }
+}
+
+/// Analytical transformer spec used for timing/energy (paper: Llama-3-3B).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelSpecConfig {
+    pub name: String,
+    /// Total parameter count (drives FLOPs and weight-read bytes).
+    pub n_params: f64,
+    pub n_layers: u32,
+    pub d_model: u32,
+    pub n_heads: u32,
+    pub n_kv_heads: u32,
+    pub d_head: u32,
+    /// Bytes per parameter (2 = fp16/bf16).
+    pub bytes_per_param: f64,
+    /// Max context length the server admits.
+    pub max_context: u32,
+}
+
+impl Default for ModelSpecConfig {
+    fn default() -> Self {
+        // Llama-3.2-3B-class geometry.
+        ModelSpecConfig {
+            name: "llama3-3b".to_string(),
+            n_params: 3.2e9,
+            n_layers: 28,
+            d_model: 3072,
+            n_heads: 24,
+            n_kv_heads: 8,
+            d_head: 128,
+            bytes_per_param: 2.0,
+            max_context: 8192,
+        }
+    }
+}
+
+impl ModelSpecConfig {
+    /// KV-cache bytes per token (K and V, all layers, kv heads).
+    pub fn kv_bytes_per_token(&self) -> f64 {
+        2.0 * self.n_layers as f64
+            * self.n_kv_heads as f64
+            * self.d_head as f64
+            * self.bytes_per_param
+    }
+
+    /// Total weight bytes (read once per decode iteration).
+    pub fn weight_bytes(&self) -> f64 {
+        self.n_params * self.bytes_per_param
+    }
+}
+
+/// vLLM-like serving engine parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServerConfig {
+    /// Max sequences running concurrently (continuous batch width).
+    pub max_num_seqs: usize,
+    /// Per-iteration token budget (decode tokens + prefill-chunk tokens;
+    /// vLLM's `max_num_batched_tokens` with chunked prefill).
+    pub max_batch_tokens: usize,
+    /// KV cache capacity in blocks.
+    pub kv_blocks: usize,
+    /// Tokens per KV block (vLLM default 16).
+    pub block_size: usize,
+    /// Enable the prefix (template) cache.
+    pub prefix_cache: bool,
+    /// Prefix cache capacity in blocks (LRU beyond this).
+    pub prefix_cache_blocks: usize,
+    /// Static batching batch size (Fig-1 baseline mode only).
+    pub static_batch_size: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            max_num_seqs: 16,
+            max_batch_tokens: 2048,
+            // A6000 48 GB − ~6.4 GB weights ⇒ ~40 GB KV ⇒ at ~115 KB/token
+            // ≈ 350 k tokens ≈ 21.8 k blocks of 16.
+            kv_blocks: 21_800,
+            block_size: 16,
+            prefix_cache: true,
+            prefix_cache_blocks: 4_096,
+            static_batch_size: 16,
+        }
+    }
+}
+
+/// Action-space pruning parameters (paper §4.3).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PruningConfig {
+    pub enabled: bool,
+    /// Extreme pruning active only during the first N rounds.
+    pub extreme_max_round: u64,
+    /// Samples required before a frequency can be extreme-pruned.
+    pub extreme_min_samples: u64,
+    /// Hard average-reward threshold ("pathological" cut-off).
+    pub extreme_reward_threshold: f64,
+    /// Historical pruning activates after this round.
+    pub hist_min_round: u64,
+    /// Samples required before historical pruning may fire.
+    pub hist_min_samples: u64,
+    /// Gap tolerance in units of the cross-action EDP standard deviation.
+    pub hist_tolerance_sigma: f64,
+    /// Cascade applies below `cascade_frac * f_max`.
+    pub cascade_frac: f64,
+    /// Never prune the action space below this many arms.
+    pub min_actions: usize,
+}
+
+impl Default for PruningConfig {
+    fn default() -> Self {
+        PruningConfig {
+            enabled: true,
+            extreme_max_round: 60,
+            extreme_min_samples: 3,
+            extreme_reward_threshold: -1.2,
+            hist_min_round: 30,
+            hist_min_samples: 6,
+            hist_tolerance_sigma: 1.5,
+            cascade_frac: 0.5,
+            min_actions: 3,
+        }
+    }
+}
+
+/// Mixed maturity-based refinement parameters (paper §4.4).
+#[derive(Debug, Clone, PartialEq)]
+pub struct RefinementConfig {
+    pub enabled: bool,
+    /// Half-width of the refined action space around the anchor (MHz).
+    pub radius_mhz: u32,
+    /// Step inside the refined window (fine-grained control; the
+    /// "No-grain" ablation raises this).
+    pub step_mhz: u32,
+    /// Step of the initial bootstrap grid over the full range.
+    pub bootstrap_step_mhz: u32,
+    /// Re-centre the action space every N decision rounds.
+    pub refine_period: u64,
+    /// Minimum samples on the anchor candidate (statistical phase).
+    pub min_anchor_samples: u64,
+}
+
+impl Default for RefinementConfig {
+    fn default() -> Self {
+        RefinementConfig {
+            enabled: true,
+            radius_mhz: 150,
+            step_mhz: 15,
+            bootstrap_step_mhz: 60,
+            refine_period: 25,
+            min_anchor_samples: 4,
+        }
+    }
+}
+
+/// AGFT tuner parameters (paper §4.1–4.4).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TunerConfig {
+    /// Metric sampling / decision window (paper: 0.8 s).
+    pub window_s: f64,
+    /// Initial UCB exploration weight; decays as
+    /// `alpha_t = alpha0 / sqrt(1 + t / alpha_tau)`.
+    pub alpha0: f64,
+    pub alpha_tau: f64,
+    /// LinUCB ridge prior (A initialised to `ridge * I`).
+    pub ridge: f64,
+    /// Learner maturity threshold (rounds) for predictive refinement.
+    pub maturity_rounds: u64,
+    /// Page–Hinkley: magnitude tolerance and detection threshold.
+    pub ph_delta: f64,
+    pub ph_lambda: f64,
+    /// Rounds with no PH alarm + low reward dispersion ⇒ converged.
+    pub converge_stable_rounds: u64,
+    /// Rolling reward std must fall below this fraction of |mean|.
+    pub converge_std_frac: f64,
+    /// Reward clipping range (keeps the extreme-pruning threshold
+    /// meaningful).
+    pub reward_clip_lo: f64,
+    pub reward_clip_hi: f64,
+    /// Windows used to auto-calibrate the EDP normaliser.
+    pub edp_ref_windows: u64,
+    /// EMA rate at which the EDP reference tracks workload drift
+    /// (0 = frozen reference; ~0.02 => ~50-window adaptation horizon).
+    pub edp_ref_beta: f64,
+    /// EMA rate smoothing the raw window EDP before pricing (1 = no
+    /// smoothing). Damps heavy-tail per-window delay noise.
+    pub edp_smooth_beta: f64,
+    /// SLO targets; violations add a reward penalty (paper: "while
+    /// adhering to SLOs").
+    pub ttft_slo_s: f64,
+    pub tpot_slo_s: f64,
+    pub slo_penalty: f64,
+    pub pruning: PruningConfig,
+    pub refinement: RefinementConfig,
+}
+
+impl Default for TunerConfig {
+    fn default() -> Self {
+        TunerConfig {
+            window_s: 0.8,
+            alpha0: 1.5,
+            alpha_tau: 40.0,
+            ridge: 1.0,
+            maturity_rounds: 100,
+            ph_delta: 0.05,
+            ph_lambda: 4.0,
+            converge_stable_rounds: 100,
+            converge_std_frac: 0.45,
+            reward_clip_lo: -3.0,
+            reward_clip_hi: 1.0,
+            edp_ref_windows: 8,
+            edp_ref_beta: 0.02,
+            edp_smooth_beta: 0.5,
+            ttft_slo_s: 0.15,
+            tpot_slo_s: 0.02,
+            slo_penalty: 2.0,
+            pruning: PruningConfig::default(),
+            refinement: RefinementConfig::default(),
+        }
+    }
+}
+
+/// Which governor drives the GPU clock.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GovernorKind {
+    /// Native driver behaviour: boost clock when active (the paper's
+    /// baseline "default system configuration").
+    Default,
+    /// Clock locked at a fixed frequency (offline sweep points).
+    Locked(u32),
+    /// AGFT controls the clock.
+    Agft,
+}
+
+/// Token-computation engine for the serving loop.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum EngineKind {
+    /// Timing/energy from the analytical roofline model only (benchmarks).
+    Analytical,
+    /// Real token generation through the PJRT-loaded HLO artifacts
+    /// (end-to-end example); timing/energy still from the virtual clock.
+    Hlo,
+}
+
+/// Workload selection.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WorkloadKind {
+    /// One of the Table-1 prototypes, by name.
+    Prototype(String),
+    /// Synthetic Azure-trace-like stream for the given year (2023/2024).
+    AzureLike { year: u32 },
+    /// Pre-generated trace CSV.
+    TraceFile(String),
+}
+
+/// Top-level experiment description.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExperimentConfig {
+    pub seed: u64,
+    /// Virtual duration of the run (seconds).
+    pub duration_s: f64,
+    pub gpu: GpuConfig,
+    pub model: ModelSpecConfig,
+    pub server: ServerConfig,
+    pub tuner: TunerConfig,
+    pub workload: WorkloadKind,
+    pub governor: GovernorKind,
+    pub engine: EngineKind,
+    /// Mean request arrival rate (req/s) before workload multipliers.
+    pub arrival_rps: f64,
+    pub results_dir: String,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            seed: 42,
+            duration_s: 1200.0,
+            gpu: GpuConfig::default(),
+            model: ModelSpecConfig::default(),
+            server: ServerConfig::default(),
+            tuner: TunerConfig::default(),
+            workload: WorkloadKind::Prototype("normal".to_string()),
+            governor: GovernorKind::Agft,
+            engine: EngineKind::Analytical,
+            arrival_rps: 2.0,
+            results_dir: "results".to_string(),
+        }
+    }
+}
+
+macro_rules! override_field {
+    ($table:expr, $key:literal, $field:expr, $conv:ident) => {
+        if let Some(v) = $table.get($key) {
+            $field = v
+                .$conv()
+                .ok_or_else(|| format!("bad type for {}", $key))?;
+        }
+    };
+}
+
+macro_rules! override_string {
+    ($table:expr, $key:literal, $field:expr) => {
+        if let Some(v) = $table.get($key) {
+            $field = v
+                .as_str()
+                .ok_or_else(|| format!("bad type for {}", $key))?
+                .to_string();
+        }
+    };
+}
+
+impl GpuConfig {
+    pub fn from_toml(v: &Value) -> Result<GpuConfig, String> {
+        let mut c = GpuConfig::default();
+        override_field!(v, "f_min_mhz", c.f_min_mhz, as_u32);
+        override_field!(v, "f_max_mhz", c.f_max_mhz, as_u32);
+        override_field!(v, "f_step_mhz", c.f_step_mhz, as_u32);
+        override_field!(v, "boost_mhz", c.boost_mhz, as_u32);
+        override_field!(v, "idle_w", c.idle_w, as_f64);
+        override_field!(v, "compute_w", c.compute_w, as_f64);
+        override_field!(v, "mem_w", c.mem_w, as_f64);
+        override_field!(v, "v_floor", c.v_floor, as_f64);
+        override_field!(v, "gate_leak_frac", c.gate_leak_frac, as_f64);
+        override_field!(v, "peak_tflops", c.peak_tflops, as_f64);
+        override_field!(v, "compute_exp", c.compute_exp, as_f64);
+        override_field!(v, "mem_bw_gbs", c.mem_bw_gbs, as_f64);
+        override_field!(v, "bw_floor", c.bw_floor, as_f64);
+        override_field!(v, "bw_knee_mhz", c.bw_knee_mhz, as_u32);
+        override_field!(v, "set_clock_latency_s", c.set_clock_latency_s, as_f64);
+        override_field!(v, "iter_overhead_s", c.iter_overhead_s, as_f64);
+        c.validate()?;
+        Ok(c)
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.f_min_mhz >= self.f_max_mhz {
+            return Err("f_min_mhz >= f_max_mhz".to_string());
+        }
+        if self.f_step_mhz == 0 {
+            return Err("f_step_mhz == 0".to_string());
+        }
+        if !(0.0..=1.0).contains(&self.v_floor) {
+            return Err("v_floor outside [0,1]".to_string());
+        }
+        if !(0.0..=1.0).contains(&self.gate_leak_frac) {
+            return Err("gate_leak_frac outside [0,1]".to_string());
+        }
+        if !(0.0..=1.0).contains(&self.bw_floor) {
+            return Err("bw_floor outside [0,1]".to_string());
+        }
+        if self.idle_w < 0.0 || self.compute_w < 0.0 || self.mem_w < 0.0 {
+            return Err("negative power".to_string());
+        }
+        Ok(())
+    }
+}
+
+impl ModelSpecConfig {
+    pub fn from_toml(v: &Value) -> Result<ModelSpecConfig, String> {
+        let mut c = ModelSpecConfig::default();
+        override_string!(v, "name", c.name);
+        override_field!(v, "n_params", c.n_params, as_f64);
+        override_field!(v, "n_layers", c.n_layers, as_u32);
+        override_field!(v, "d_model", c.d_model, as_u32);
+        override_field!(v, "n_heads", c.n_heads, as_u32);
+        override_field!(v, "n_kv_heads", c.n_kv_heads, as_u32);
+        override_field!(v, "d_head", c.d_head, as_u32);
+        override_field!(v, "bytes_per_param", c.bytes_per_param, as_f64);
+        override_field!(v, "max_context", c.max_context, as_u32);
+        Ok(c)
+    }
+}
+
+impl ServerConfig {
+    pub fn from_toml(v: &Value) -> Result<ServerConfig, String> {
+        let mut c = ServerConfig::default();
+        override_field!(v, "max_num_seqs", c.max_num_seqs, as_usize);
+        override_field!(v, "max_batch_tokens", c.max_batch_tokens, as_usize);
+        override_field!(v, "kv_blocks", c.kv_blocks, as_usize);
+        override_field!(v, "block_size", c.block_size, as_usize);
+        override_field!(v, "prefix_cache", c.prefix_cache, as_bool);
+        override_field!(v, "prefix_cache_blocks", c.prefix_cache_blocks, as_usize);
+        override_field!(v, "static_batch_size", c.static_batch_size, as_usize);
+        if c.block_size == 0 || c.kv_blocks == 0 {
+            return Err("kv geometry must be positive".to_string());
+        }
+        Ok(c)
+    }
+}
+
+impl PruningConfig {
+    pub fn from_toml(v: &Value) -> Result<PruningConfig, String> {
+        let mut c = PruningConfig::default();
+        override_field!(v, "enabled", c.enabled, as_bool);
+        if let Some(x) = v.get("extreme_max_round") {
+            c.extreme_max_round = x.as_i64().ok_or("bad extreme_max_round")? as u64;
+        }
+        if let Some(x) = v.get("extreme_min_samples") {
+            c.extreme_min_samples = x.as_i64().ok_or("bad extreme_min_samples")? as u64;
+        }
+        override_field!(v, "extreme_reward_threshold", c.extreme_reward_threshold, as_f64);
+        if let Some(x) = v.get("hist_min_round") {
+            c.hist_min_round = x.as_i64().ok_or("bad hist_min_round")? as u64;
+        }
+        if let Some(x) = v.get("hist_min_samples") {
+            c.hist_min_samples = x.as_i64().ok_or("bad hist_min_samples")? as u64;
+        }
+        override_field!(v, "hist_tolerance_sigma", c.hist_tolerance_sigma, as_f64);
+        override_field!(v, "cascade_frac", c.cascade_frac, as_f64);
+        override_field!(v, "min_actions", c.min_actions, as_usize);
+        Ok(c)
+    }
+}
+
+impl RefinementConfig {
+    pub fn from_toml(v: &Value) -> Result<RefinementConfig, String> {
+        let mut c = RefinementConfig::default();
+        override_field!(v, "enabled", c.enabled, as_bool);
+        override_field!(v, "radius_mhz", c.radius_mhz, as_u32);
+        override_field!(v, "step_mhz", c.step_mhz, as_u32);
+        override_field!(v, "bootstrap_step_mhz", c.bootstrap_step_mhz, as_u32);
+        if let Some(x) = v.get("refine_period") {
+            c.refine_period = x.as_i64().ok_or("bad refine_period")? as u64;
+        }
+        if let Some(x) = v.get("min_anchor_samples") {
+            c.min_anchor_samples = x.as_i64().ok_or("bad min_anchor_samples")? as u64;
+        }
+        Ok(c)
+    }
+}
+
+impl TunerConfig {
+    pub fn from_toml(v: &Value) -> Result<TunerConfig, String> {
+        let mut c = TunerConfig::default();
+        override_field!(v, "window_s", c.window_s, as_f64);
+        override_field!(v, "alpha0", c.alpha0, as_f64);
+        override_field!(v, "alpha_tau", c.alpha_tau, as_f64);
+        override_field!(v, "ridge", c.ridge, as_f64);
+        if let Some(x) = v.get("maturity_rounds") {
+            c.maturity_rounds = x.as_i64().ok_or("bad maturity_rounds")? as u64;
+        }
+        override_field!(v, "ph_delta", c.ph_delta, as_f64);
+        override_field!(v, "ph_lambda", c.ph_lambda, as_f64);
+        if let Some(x) = v.get("converge_stable_rounds") {
+            c.converge_stable_rounds =
+                x.as_i64().ok_or("bad converge_stable_rounds")? as u64;
+        }
+        override_field!(v, "converge_std_frac", c.converge_std_frac, as_f64);
+        override_field!(v, "reward_clip_lo", c.reward_clip_lo, as_f64);
+        override_field!(v, "reward_clip_hi", c.reward_clip_hi, as_f64);
+        if let Some(x) = v.get("edp_ref_windows") {
+            c.edp_ref_windows = x.as_i64().ok_or("bad edp_ref_windows")? as u64;
+        }
+        override_field!(v, "edp_ref_beta", c.edp_ref_beta, as_f64);
+        override_field!(v, "edp_smooth_beta", c.edp_smooth_beta, as_f64);
+        override_field!(v, "ttft_slo_s", c.ttft_slo_s, as_f64);
+        override_field!(v, "tpot_slo_s", c.tpot_slo_s, as_f64);
+        override_field!(v, "slo_penalty", c.slo_penalty, as_f64);
+        if let Some(p) = v.get("pruning") {
+            c.pruning = PruningConfig::from_toml(p)?;
+        }
+        if let Some(r) = v.get("refinement") {
+            c.refinement = RefinementConfig::from_toml(r)?;
+        }
+        if c.window_s <= 0.0 {
+            return Err("window_s must be positive".to_string());
+        }
+        Ok(c)
+    }
+}
+
+impl ExperimentConfig {
+    pub fn from_toml(doc: &Value) -> Result<ExperimentConfig, String> {
+        let mut c = ExperimentConfig::default();
+        if let Some(e) = doc.get("experiment") {
+            if let Some(x) = e.get("seed") {
+                c.seed = x.as_i64().ok_or("bad seed")? as u64;
+            }
+            override_field!(e, "duration_s", c.duration_s, as_f64);
+            override_field!(e, "arrival_rps", c.arrival_rps, as_f64);
+            override_string!(e, "results_dir", c.results_dir);
+            if let Some(w) = e.get("workload") {
+                let name = w.as_str().ok_or("bad workload")?;
+                c.workload = parse_workload(name)?;
+            }
+            if let Some(g) = e.get("governor") {
+                let name = g.as_str().ok_or("bad governor")?;
+                c.governor = parse_governor(name)?;
+            }
+            if let Some(k) = e.get("engine") {
+                c.engine = match k.as_str().ok_or("bad engine")? {
+                    "analytical" => EngineKind::Analytical,
+                    "hlo" => EngineKind::Hlo,
+                    other => return Err(format!("unknown engine {other:?}")),
+                };
+            }
+        }
+        if let Some(g) = doc.get("gpu") {
+            c.gpu = GpuConfig::from_toml(g)?;
+        }
+        if let Some(m) = doc.get("model") {
+            c.model = ModelSpecConfig::from_toml(m)?;
+        }
+        if let Some(s) = doc.get("server") {
+            c.server = ServerConfig::from_toml(s)?;
+        }
+        if let Some(t) = doc.get("tuner") {
+            c.tuner = TunerConfig::from_toml(t)?;
+        }
+        Ok(c)
+    }
+}
+
+/// Parse a workload name: prototype names, `azure2023`/`azure2024`, or
+/// `trace:<path>`.
+pub fn parse_workload(name: &str) -> Result<WorkloadKind, String> {
+    match name {
+        "normal" | "long_context" | "long_generation" | "high_concurrency"
+        | "high_cache_hit" => Ok(WorkloadKind::Prototype(name.to_string())),
+        "azure2023" => Ok(WorkloadKind::AzureLike { year: 2023 }),
+        "azure2024" => Ok(WorkloadKind::AzureLike { year: 2024 }),
+        other => {
+            if let Some(path) = other.strip_prefix("trace:") {
+                Ok(WorkloadKind::TraceFile(path.to_string()))
+            } else {
+                Err(format!("unknown workload {other:?}"))
+            }
+        }
+    }
+}
+
+/// Parse a governor name: `default`, `agft`, or `locked:<mhz>`.
+pub fn parse_governor(name: &str) -> Result<GovernorKind, String> {
+    match name {
+        "default" => Ok(GovernorKind::Default),
+        "agft" => Ok(GovernorKind::Agft),
+        other => {
+            if let Some(mhz) = other.strip_prefix("locked:") {
+                let mhz = mhz
+                    .parse::<u32>()
+                    .map_err(|e| format!("locked:<mhz>: {e}"))?;
+                Ok(GovernorKind::Locked(mhz))
+            } else {
+                Err(format!("unknown governor {other:?}"))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::toml;
+
+    #[test]
+    fn defaults_are_valid() {
+        GpuConfig::default().validate().unwrap();
+        let m = ModelSpecConfig::default();
+        // Llama-3-3B-class KV footprint: 2*28*8*128*2 = 114,688 B/token.
+        assert_eq!(m.kv_bytes_per_token(), 114_688.0);
+        assert_eq!(m.weight_bytes(), 6.4e9);
+    }
+
+    #[test]
+    fn experiment_from_toml_overrides() {
+        let doc = toml::parse(
+            r#"
+[experiment]
+seed = 7
+workload = "high_concurrency"
+governor = "locked:1230"
+engine = "analytical"
+
+[tuner.pruning]
+enabled = false
+
+[tuner.refinement]
+step_mhz = 60
+"#,
+        )
+        .unwrap();
+        let c = ExperimentConfig::from_toml(&doc).unwrap();
+        assert_eq!(c.seed, 7);
+        assert_eq!(c.workload,
+                   WorkloadKind::Prototype("high_concurrency".into()));
+        assert_eq!(c.governor, GovernorKind::Locked(1230));
+        assert!(!c.tuner.pruning.enabled);
+        assert_eq!(c.tuner.refinement.step_mhz, 60);
+        // untouched defaults survive
+        assert_eq!(c.tuner.window_s, 0.8);
+        assert_eq!(c.tuner.pruning.extreme_reward_threshold, -1.2);
+    }
+
+    #[test]
+    fn workload_parsing() {
+        assert!(matches!(parse_workload("azure2024"),
+                         Ok(WorkloadKind::AzureLike { year: 2024 })));
+        assert!(matches!(parse_workload("trace:/tmp/x.csv"),
+                         Ok(WorkloadKind::TraceFile(_))));
+        assert!(parse_workload("bogus").is_err());
+    }
+
+    #[test]
+    fn governor_parsing() {
+        assert_eq!(parse_governor("locked:1395").unwrap(),
+                   GovernorKind::Locked(1395));
+        assert!(parse_governor("locked:abc").is_err());
+        assert_eq!(parse_governor("default").unwrap(), GovernorKind::Default);
+    }
+
+    #[test]
+    fn invalid_gpu_rejected() {
+        let doc = toml::parse("f_min_mhz = 2000").unwrap();
+        assert!(GpuConfig::from_toml(&doc).is_err());
+    }
+}

@@ -1,0 +1,317 @@
+//! TOML-subset parser (offline `toml` crate substitute).
+//!
+//! Supported grammar — everything the project's config files use:
+//! `[table]` / `[table.subtable]` headers, `key = value` with string,
+//! integer, float, boolean and flat-array values, `#` comments, and
+//! bare/quoted keys. Not supported (rejected, not silently mangled):
+//! inline tables, array-of-tables, multi-line strings, datetimes.
+
+use std::collections::BTreeMap;
+
+/// A parsed TOML value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<Value>),
+    Table(BTreeMap<String, Value>),
+}
+
+impl Value {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(x) => Some(*x),
+            Value::Int(x) => Some(*x as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    pub fn as_u32(&self) -> Option<u32> {
+        self.as_i64().and_then(|x| u32::try_from(x).ok())
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_i64().and_then(|x| usize::try_from(x).ok())
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        match self {
+            Value::Table(map) => map.get(key),
+            _ => None,
+        }
+    }
+
+    /// Dotted-path lookup: `doc.lookup("gpu.f_min_mhz")`.
+    pub fn lookup(&self, path: &str) -> Option<&Value> {
+        let mut cur = self;
+        for part in path.split('.') {
+            cur = cur.get(part)?;
+        }
+        Some(cur)
+    }
+}
+
+/// Parse a TOML document into a root [`Value::Table`].
+pub fn parse(text: &str) -> Result<Value, String> {
+    let mut root: BTreeMap<String, Value> = BTreeMap::new();
+    let mut current_path: Vec<String> = Vec::new();
+
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim().to_string();
+        if line.is_empty() {
+            continue;
+        }
+        if line.starts_with("[[") {
+            return Err(format!(
+                "line {}: array-of-tables not supported",
+                lineno + 1
+            ));
+        }
+        if let Some(inner) = line
+            .strip_prefix('[')
+            .and_then(|s| s.strip_suffix(']'))
+        {
+            current_path = inner
+                .split('.')
+                .map(|s| s.trim().trim_matches('"').to_string())
+                .collect();
+            if current_path.iter().any(|p| p.is_empty()) {
+                return Err(format!("line {}: empty table name", lineno + 1));
+            }
+            // Materialise the table path.
+            table_at(&mut root, &current_path, lineno + 1)?;
+            continue;
+        }
+        let (key, val_text) = line.split_once('=').ok_or_else(|| {
+            format!("line {}: expected `key = value`", lineno + 1)
+        })?;
+        let key = key.trim().trim_matches('"').to_string();
+        if key.is_empty() {
+            return Err(format!("line {}: empty key", lineno + 1));
+        }
+        let value = parse_value(val_text.trim())
+            .map_err(|e| format!("line {}: {e}", lineno + 1))?;
+        let table = table_at(&mut root, &current_path, lineno + 1)?;
+        if table.insert(key.clone(), value).is_some() {
+            return Err(format!(
+                "line {}: duplicate key {key:?}",
+                lineno + 1
+            ));
+        }
+    }
+    Ok(Value::Table(root))
+}
+
+fn table_at<'a>(
+    root: &'a mut BTreeMap<String, Value>,
+    path: &[String],
+    lineno: usize,
+) -> Result<&'a mut BTreeMap<String, Value>, String> {
+    let mut cur = root;
+    for part in path {
+        let entry = cur
+            .entry(part.clone())
+            .or_insert_with(|| Value::Table(BTreeMap::new()));
+        match entry {
+            Value::Table(map) => cur = map,
+            _ => {
+                return Err(format!(
+                    "line {lineno}: {part:?} is not a table"
+                ))
+            }
+        }
+    }
+    Ok(cur)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // `#` starts a comment unless inside a quoted string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(text: &str) -> Result<Value, String> {
+    if text.is_empty() {
+        return Err("empty value".to_string());
+    }
+    if let Some(inner) = text.strip_prefix('"') {
+        let inner = inner
+            .strip_suffix('"')
+            .ok_or_else(|| format!("unterminated string: {text:?}"))?;
+        return Ok(Value::Str(unescape(inner)));
+    }
+    if text == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if text == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(inner) = text.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| format!("unterminated array: {text:?}"))?;
+        let mut items = Vec::new();
+        for part in split_array(inner) {
+            let part = part.trim();
+            if !part.is_empty() {
+                items.push(parse_value(part)?);
+            }
+        }
+        return Ok(Value::Arr(items));
+    }
+    let clean = text.replace('_', "");
+    if clean.contains('.') || clean.contains('e') || clean.contains('E') {
+        if let Ok(x) = clean.parse::<f64>() {
+            return Ok(Value::Float(x));
+        }
+    }
+    if let Ok(x) = clean.parse::<i64>() {
+        return Ok(Value::Int(x));
+    }
+    Err(format!("cannot parse value: {text:?}"))
+}
+
+fn split_array(inner: &str) -> Vec<String> {
+    // Flat arrays only: split on commas outside quotes.
+    let mut parts = Vec::new();
+    let mut cur = String::new();
+    let mut in_str = false;
+    for c in inner.chars() {
+        match c {
+            '"' => {
+                in_str = !in_str;
+                cur.push(c);
+            }
+            ',' if !in_str => parts.push(std::mem::take(&mut cur)),
+            c => cur.push(c),
+        }
+    }
+    parts.push(cur);
+    parts
+}
+
+fn unescape(s: &str) -> String {
+    let mut out = String::new();
+    let mut chars = s.chars();
+    while let Some(c) = chars.next() {
+        if c == '\\' {
+            match chars.next() {
+                Some('n') => out.push('\n'),
+                Some('t') => out.push('\t'),
+                Some('"') => out.push('"'),
+                Some('\\') => out.push('\\'),
+                Some(other) => {
+                    out.push('\\');
+                    out.push(other);
+                }
+                None => out.push('\\'),
+            }
+        } else {
+            out.push(c);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalars_and_tables() {
+        let doc = parse(
+            r#"
+# top comment
+title = "agft"   # trailing comment
+count = 42
+ratio = 0.75
+big = 1_000_000
+on = true
+
+[gpu]
+f_min_mhz = 210
+
+[tuner.pruning]
+hard_threshold = -1.2
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.lookup("title").unwrap().as_str(), Some("agft"));
+        assert_eq!(doc.lookup("count").unwrap().as_i64(), Some(42));
+        assert_eq!(doc.lookup("ratio").unwrap().as_f64(), Some(0.75));
+        assert_eq!(doc.lookup("big").unwrap().as_i64(), Some(1_000_000));
+        assert_eq!(doc.lookup("on").unwrap().as_bool(), Some(true));
+        assert_eq!(doc.lookup("gpu.f_min_mhz").unwrap().as_i64(), Some(210));
+        assert_eq!(
+            doc.lookup("tuner.pruning.hard_threshold").unwrap().as_f64(),
+            Some(-1.2)
+        );
+    }
+
+    #[test]
+    fn arrays() {
+        let doc = parse("xs = [1, 2, 3]\nnames = [\"a\", \"b,c\"]").unwrap();
+        match doc.lookup("xs").unwrap() {
+            Value::Arr(items) => assert_eq!(items.len(), 3),
+            _ => panic!(),
+        }
+        match doc.lookup("names").unwrap() {
+            Value::Arr(items) => {
+                assert_eq!(items[1].as_str(), Some("b,c"));
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn hash_inside_string_not_comment() {
+        let doc = parse("s = \"a#b\"").unwrap();
+        assert_eq!(doc.lookup("s").unwrap().as_str(), Some("a#b"));
+    }
+
+    #[test]
+    fn rejects_unsupported() {
+        assert!(parse("[[points]]\nx = 1").is_err());
+        assert!(parse("key").is_err());
+        assert!(parse("a = 1\na = 2").is_err());
+        assert!(parse("x = \"unterminated").is_err());
+    }
+
+    #[test]
+    fn negative_and_exponent_numbers() {
+        let doc = parse("a = -5\nb = -2.5\nc = 1e3").unwrap();
+        assert_eq!(doc.lookup("a").unwrap().as_i64(), Some(-5));
+        assert_eq!(doc.lookup("b").unwrap().as_f64(), Some(-2.5));
+        assert_eq!(doc.lookup("c").unwrap().as_f64(), Some(1000.0));
+    }
+}

@@ -1,0 +1,21 @@
+//! Experiment harness: everything needed to regenerate the paper's
+//! tables and figures from the simulator stack.
+//!
+//! * [`harness`] — run one [`crate::config::ExperimentConfig`] to a
+//!   window-level log ([`harness::RunResult`]); run AGFT-vs-baseline
+//!   pairs over the identical request stream.
+//! * [`sweep`] — offline frequency sweeps: EDP(f) U-curves and their
+//!   optima (Fig 6, Table 6's "Offline" column).
+//! * [`phases`] — learning vs post-convergence splits and the Table-2/3
+//!   metric comparisons.
+//! * [`report`] — plain-text table rendering + CSV emission shared by
+//!   all bench binaries.
+
+pub mod harness;
+pub mod phases;
+pub mod report;
+pub mod sweep;
+
+pub use harness::{run_experiment, run_pair, RunResult, WindowRecord};
+pub use phases::{phase_metrics, split_at, PhaseComparison};
+pub use sweep::{edp_sweep, SweepPoint};

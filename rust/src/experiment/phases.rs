@@ -1,0 +1,202 @@
+//! Learning vs post-convergence phase analysis (paper §5.3, Tables 2–3).
+//!
+//! A run is split at the tuner's convergence round; both phases are then
+//! compared window-by-window against a baseline run over the identical
+//! request stream, reproducing the paper's `AGFT mean / Normal mean /
+//! Diff` rows for Energy, EDP, TTFT, TPOT and E2E.
+
+use crate::util::stats::pct_diff;
+use crate::util::RunningStats;
+
+use super::harness::{RunResult, WindowRecord};
+
+/// Aggregates of one metric over a phase.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct MetricAgg {
+    pub mean: f64,
+    pub cv: f64,
+    pub n: u64,
+}
+
+fn agg(xs: impl Iterator<Item = f64>) -> MetricAgg {
+    let mut s = RunningStats::new();
+    for x in xs {
+        s.push(x);
+    }
+    MetricAgg {
+        mean: s.mean(),
+        cv: s.cv(),
+        n: s.count(),
+    }
+}
+
+/// The five paper metrics for one system over one phase.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PhaseMetrics {
+    pub energy_j: MetricAgg,
+    pub edp: MetricAgg,
+    pub ttft: MetricAgg,
+    pub tpot: MetricAgg,
+    pub e2e: MetricAgg,
+}
+
+/// Compute the Table-2/3 metrics over a window slice. Energy/EDP are
+/// per-window aggregates; TTFT/TPOT/E2E aggregate the per-window means of
+/// finishing requests (idle windows are skipped — no service rendered).
+pub fn phase_metrics(windows: &[WindowRecord]) -> PhaseMetrics {
+    let busy = || windows.iter().filter(|w| w.tokens > 0);
+    PhaseMetrics {
+        energy_j: agg(busy().map(|w| w.energy_j)),
+        edp: agg(busy().map(|w| w.edp)),
+        ttft: agg(windows.iter().filter_map(|w| w.ttft_mean)),
+        tpot: agg(windows.iter().filter_map(|w| w.tpot_mean)),
+        e2e: agg(windows.iter().filter_map(|w| w.e2e_mean)),
+    }
+}
+
+/// Split a window log at a round index (window index ≈ decision round +
+/// the initial no-decision window).
+pub fn split_at(windows: &[WindowRecord], round: u64) -> (&[WindowRecord], &[WindowRecord]) {
+    let idx = (round as usize + 1).min(windows.len());
+    windows.split_at(idx)
+}
+
+/// One `AGFT vs Normal` comparison row.
+#[derive(Debug, Clone)]
+pub struct ComparisonRow {
+    pub metric: &'static str,
+    pub agft_mean: f64,
+    pub base_mean: f64,
+    pub diff_pct: f64,
+    pub agft_cv: f64,
+    pub base_cv: f64,
+    pub cv_diff_pct: f64,
+}
+
+/// A full phase comparison (one of Tables 2/3, or an ablation pair).
+#[derive(Debug, Clone)]
+pub struct PhaseComparison {
+    pub rows: Vec<ComparisonRow>,
+}
+
+impl PhaseComparison {
+    /// Compare AGFT window metrics against a baseline's over the same
+    /// phase slice.
+    pub fn build(agft: &PhaseMetrics, base: &PhaseMetrics) -> PhaseComparison {
+        let row = |metric: &'static str, a: MetricAgg, b: MetricAgg| {
+            ComparisonRow {
+                metric,
+                agft_mean: a.mean,
+                base_mean: b.mean,
+                diff_pct: pct_diff(a.mean, b.mean),
+                agft_cv: a.cv,
+                base_cv: b.cv,
+                cv_diff_pct: pct_diff(a.cv, b.cv),
+            }
+        };
+        PhaseComparison {
+            rows: vec![
+                row("Energy (J)", agft.energy_j, base.energy_j),
+                row("EDP", agft.edp, base.edp),
+                row("TTFT", agft.ttft, base.ttft),
+                row("TPOT", agft.tpot, base.tpot),
+                row("E2E", agft.e2e, base.e2e),
+            ],
+        }
+    }
+
+    pub fn get(&self, metric: &str) -> Option<&ComparisonRow> {
+        self.rows.iter().find(|r| r.metric == metric)
+    }
+}
+
+/// Split an AGFT run + aligned baseline at convergence and produce the
+/// (learning, stable) comparisons — Tables 2 and 3 in one call.
+pub fn learning_and_stable(
+    agft: &RunResult,
+    base: &RunResult,
+) -> (PhaseComparison, PhaseComparison) {
+    let converged = agft
+        .tuner
+        .as_ref()
+        .and_then(|t| t.converged_round)
+        .unwrap_or(agft.windows.len() as u64 / 2);
+    let (a_learn, a_stable) = split_at(&agft.windows, converged);
+    // The baseline has no rounds; align by window count.
+    let idx = (converged as usize + 1).min(base.windows.len());
+    let (b_learn, b_stable) = base.windows.split_at(idx);
+    (
+        PhaseComparison::build(&phase_metrics(a_learn), &phase_metrics(b_learn)),
+        PhaseComparison::build(&phase_metrics(a_stable), &phase_metrics(b_stable)),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn window(energy: f64, edp: f64, ttft: f64) -> WindowRecord {
+        WindowRecord {
+            t_s: 0.0,
+            clock_mhz: 1230,
+            energy_j: energy,
+            tokens: 100,
+            edp,
+            ttft_mean: Some(ttft),
+            tpot_mean: Some(ttft / 2.0),
+            e2e_mean: Some(ttft * 10.0),
+            reward: None,
+            exploiting: false,
+            requests_waiting: 0,
+            requests_running: 1,
+            kv_usage: 0.1,
+            power_w: 150.0,
+        }
+    }
+
+    #[test]
+    fn metrics_aggregate_means() {
+        let ws = vec![window(100.0, 2.0, 0.03), window(140.0, 3.0, 0.05)];
+        let m = phase_metrics(&ws);
+        assert!((m.energy_j.mean - 120.0).abs() < 1e-9);
+        assert!((m.edp.mean - 2.5).abs() < 1e-9);
+        assert!((m.ttft.mean - 0.04).abs() < 1e-9);
+        assert_eq!(m.energy_j.n, 2);
+    }
+
+    #[test]
+    fn idle_windows_excluded_from_energy_edp() {
+        let mut idle = window(20.0, 0.0, 0.0);
+        idle.tokens = 0;
+        idle.ttft_mean = None;
+        idle.tpot_mean = None;
+        idle.e2e_mean = None;
+        let ws = vec![window(100.0, 2.0, 0.03), idle];
+        let m = phase_metrics(&ws);
+        assert_eq!(m.energy_j.n, 1);
+        assert!((m.energy_j.mean - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn comparison_diff_signs() {
+        let agft = phase_metrics(&[window(100.0, 2.0, 0.05)]);
+        let base = phase_metrics(&[window(200.0, 4.0, 0.04)]);
+        let c = PhaseComparison::build(&agft, &base);
+        let energy = c.get("Energy (J)").unwrap();
+        assert!((energy.diff_pct - (-50.0)).abs() < 1e-9);
+        let ttft = c.get("TTFT").unwrap();
+        assert!(ttft.diff_pct > 0.0, "AGFT slower → positive diff");
+    }
+
+    #[test]
+    fn split_respects_bounds() {
+        let ws: Vec<WindowRecord> =
+            (0..10).map(|_| window(1.0, 1.0, 0.01)).collect();
+        let (a, b) = split_at(&ws, 3);
+        assert_eq!(a.len(), 4);
+        assert_eq!(b.len(), 6);
+        let (a, b) = split_at(&ws, 100);
+        assert_eq!(a.len(), 10);
+        assert!(b.is_empty());
+    }
+}

@@ -1,0 +1,194 @@
+//! Plain-text table rendering and CSV emission shared by the bench
+//! binaries — every bench prints the paper's rows/series and mirrors
+//! them into `results/*.csv`.
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use crate::util::csv::CsvWriter;
+
+use super::phases::PhaseComparison;
+
+/// Render a fixed-width text table.
+pub fn render_table(title: &str, header: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let sep: String = widths
+        .iter()
+        .map(|w| "-".repeat(w + 2))
+        .collect::<Vec<_>>()
+        .join("+");
+    let fmt_row = |cells: &[String]| -> String {
+        cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!(" {:<w$} ", c, w = widths[i]))
+            .collect::<Vec<_>>()
+            .join("|")
+    };
+    let mut out = format!("\n== {title} ==\n");
+    let hdr: Vec<String> = header.iter().map(|s| s.to_string()).collect();
+    out.push_str(&fmt_row(&hdr));
+    out.push('\n');
+    out.push_str(&sep);
+    out.push('\n');
+    for row in rows {
+        out.push_str(&fmt_row(row));
+        out.push('\n');
+    }
+    out
+}
+
+/// Render a Table-2/3 style comparison (`Metric | AGFT mean | Normal
+/// mean | Diff`).
+pub fn render_comparison(title: &str, c: &PhaseComparison) -> String {
+    let rows: Vec<Vec<String>> = c
+        .rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.metric.to_string(),
+                format!("{:.3}", r.agft_mean),
+                format!("{:.3}", r.base_mean),
+                format!("{:+.1} %", r.diff_pct),
+            ]
+        })
+        .collect();
+    render_table(title, &["Metric", "AGFT mean", "Normal mean", "Diff"], &rows)
+}
+
+/// Render the CV columns of an ablation table (Tables 4/5).
+pub fn render_cv_comparison(title: &str, label: &str, c: &PhaseComparison) -> String {
+    let rows: Vec<Vec<String>> = c
+        .rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.metric.to_string(),
+                format!("{:.3}", r.agft_mean),
+                format!("{:.3}", r.base_mean),
+                format!("{:+.2} %", r.diff_pct),
+                format!("{:.3}", r.agft_cv),
+                format!("{:.3}", r.base_cv),
+                format!("{:+.0} %", r.cv_diff_pct),
+            ]
+        })
+        .collect();
+    render_table(
+        title,
+        &[
+            "Metric",
+            &format!("{label} mean"),
+            "Normal mean",
+            "Diff",
+            &format!("CV {label}"),
+            "CV normal",
+            "CV diff",
+        ],
+        &rows,
+    )
+}
+
+/// Ensure `results/` exists and return the CSV path for a bench.
+pub fn results_path(name: &str) -> PathBuf {
+    let dir = Path::new("results");
+    let _ = std::fs::create_dir_all(dir);
+    dir.join(format!("{name}.csv"))
+}
+
+/// Write rows of f64 series to `results/<name>.csv`.
+pub fn write_csv(name: &str, header: &[&str], rows: &[Vec<f64>]) -> std::io::Result<PathBuf> {
+    let path = results_path(name);
+    let mut w = CsvWriter::create(&path, header)?;
+    for row in rows {
+        w.row_f64(row)?;
+    }
+    w.flush()?;
+    Ok(path)
+}
+
+/// Append a free-form note file next to the CSVs (sweep optima etc.).
+pub fn write_note(name: &str, text: &str) -> std::io::Result<PathBuf> {
+    let dir = Path::new("results");
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(format!("{name}.txt"));
+    let mut f = std::fs::File::create(&path)?;
+    f.write_all(text.as_bytes())?;
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiment::phases::{phase_metrics, PhaseComparison};
+    use crate::experiment::harness::WindowRecord;
+
+    fn window(e: f64) -> WindowRecord {
+        WindowRecord {
+            t_s: 0.0,
+            clock_mhz: 1230,
+            energy_j: e,
+            tokens: 10,
+            edp: e / 10.0,
+            ttft_mean: Some(0.04),
+            tpot_mean: Some(0.02),
+            e2e_mean: Some(1.0),
+            reward: None,
+            exploiting: false,
+            requests_waiting: 0,
+            requests_running: 1,
+            kv_usage: 0.1,
+            power_w: 150.0,
+        }
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let t = render_table(
+            "Demo",
+            &["a", "long-header"],
+            &[
+                vec!["1".into(), "2".into()],
+                vec!["333333".into(), "4".into()],
+            ],
+        );
+        assert!(t.contains("== Demo =="));
+        let lines: Vec<&str> = t.lines().filter(|l| l.contains('|')).collect();
+        assert_eq!(lines.len(), 3);
+        let w = lines[0].len();
+        assert!(lines.iter().all(|l| l.len() == w), "{t}");
+    }
+
+    #[test]
+    fn comparison_renders_all_metrics() {
+        let m = phase_metrics(&[window(100.0), window(120.0)]);
+        let c = PhaseComparison::build(&m, &m);
+        let text = render_comparison("Table 3", &c);
+        for metric in ["Energy (J)", "EDP", "TTFT", "TPOT", "E2E"] {
+            assert!(text.contains(metric), "missing {metric} in {text}");
+        }
+        assert!(text.contains("+0.0 %"));
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let p = write_csv(
+            "test_report_roundtrip",
+            &["x", "y"],
+            &[vec![1.0, 2.0], vec![3.0, 4.5]],
+        )
+        .unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        let (hdr, rows) = crate::util::csv::parse(&text).unwrap();
+        assert_eq!(hdr, vec!["x", "y"]);
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[1][1].parse::<f64>().unwrap(), 4.5);
+        let _ = std::fs::remove_file(p);
+    }
+}

@@ -1,0 +1,129 @@
+//! Offline frequency sweeps (paper §3.2): lock the clock at each table
+//! point, replay the workload, and chart EDP(f). The minima are the
+//! "theoretical optimum" column of Table 6 and the highlighted points of
+//! Fig 6.
+
+use crate::config::{ExperimentConfig, GovernorKind};
+use crate::gpu::FreqTable;
+
+use super::harness::run_with_requests;
+
+/// One sweep sample.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SweepPoint {
+    pub freq_mhz: u32,
+    pub energy_j: f64,
+    /// Total delay: Σ request E2E (the paper's `Delay` term).
+    pub delay_s: f64,
+    pub edp: f64,
+    pub mean_ttft: f64,
+    pub mean_tpot: f64,
+}
+
+/// Sweep result with the located optimum.
+#[derive(Debug, Clone)]
+pub struct SweepResult {
+    pub points: Vec<SweepPoint>,
+    pub optimum: SweepPoint,
+}
+
+impl SweepResult {
+    /// The EDP curve must be U-ish: strictly worse at both edges than at
+    /// the optimum. Used by calibration tests.
+    pub fn is_u_shaped(&self) -> bool {
+        let first = self.points.first().unwrap();
+        let last = self.points.last().unwrap();
+        first.edp > self.optimum.edp && last.edp > self.optimum.edp
+    }
+}
+
+/// Sweep EDP over `freqs` (defaults to the whole table at `step_mhz`
+/// granularity when `freqs` is empty). Each point replays the identical
+/// request stream under a locked clock.
+pub fn edp_sweep(
+    cfg: &ExperimentConfig,
+    freqs: &[u32],
+) -> Result<SweepResult, String> {
+    let table = FreqTable::from_config(&cfg.gpu);
+    let freqs: Vec<u32> = if freqs.is_empty() {
+        table.all()
+    } else {
+        freqs.to_vec()
+    };
+    let requests = crate::workload::realize(
+        &cfg.workload,
+        cfg.arrival_rps,
+        cfg.duration_s,
+        cfg.seed,
+    )?;
+    let mut points = Vec::with_capacity(freqs.len());
+    for &f in &freqs {
+        // Sweep points run to *drain* — the paper measures the energy
+        // and delay to complete the full task round at each clock, so a
+        // slow clock must pay its full latency bill rather than having
+        // queued work truncated at the horizon.
+        let run_cfg = ExperimentConfig {
+            governor: GovernorKind::Locked(f),
+            duration_s: cfg.duration_s * 1e3,
+            ..cfg.clone()
+        };
+        let r = run_with_requests(&run_cfg, requests.clone())?;
+        let delay: f64 = r.finished.iter().map(|rec| rec.e2e).sum();
+        points.push(SweepPoint {
+            freq_mhz: f,
+            energy_j: r.total_energy_j,
+            delay_s: delay,
+            edp: r.total_energy_j * delay,
+            mean_ttft: r.mean_ttft(),
+            mean_tpot: r.mean_tpot(),
+        });
+    }
+    let optimum = *points
+        .iter()
+        .min_by(|a, b| a.edp.partial_cmp(&b.edp).unwrap())
+        .ok_or("empty sweep")?;
+    Ok(SweepResult { points, optimum })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::WorkloadKind;
+
+    fn cfg(workload: &str) -> ExperimentConfig {
+        ExperimentConfig {
+            duration_s: 60.0,
+            arrival_rps: 2.0,
+            workload: WorkloadKind::Prototype(workload.to_string()),
+            ..ExperimentConfig::default()
+        }
+    }
+
+    #[test]
+    fn sweep_is_u_shaped_for_normal_load() {
+        let freqs = [300, 600, 900, 1230, 1500, 1800];
+        let r = edp_sweep(&cfg("normal"), &freqs).unwrap();
+        assert_eq!(r.points.len(), 6);
+        assert!(r.is_u_shaped(), "points: {:?}", r.points);
+        assert!(
+            (600..=1800).contains(&r.optimum.freq_mhz),
+            "optimum {}",
+            r.optimum.freq_mhz
+        );
+    }
+
+    #[test]
+    fn compute_heavy_optimum_is_higher_than_cache_hit() {
+        // Paper §3.2: High Concurrency pushes the optimum up, High Cache
+        // Hit pulls it down.
+        let freqs: Vec<u32> = (0..=10).map(|i| 600 + i * 120).collect();
+        let hc = edp_sweep(&cfg("high_concurrency"), &freqs).unwrap();
+        let hch = edp_sweep(&cfg("high_cache_hit"), &freqs).unwrap();
+        assert!(
+            hc.optimum.freq_mhz >= hch.optimum.freq_mhz,
+            "HC {} < HCH {}",
+            hc.optimum.freq_mhz,
+            hch.optimum.freq_mhz
+        );
+    }
+}

@@ -1,0 +1,224 @@
+//! The stateful simulated GPU: clock locking (nvidia-smi equivalent),
+//! per-iteration energy integration (NVML equivalent) and telemetry.
+
+use crate::config::{GpuConfig, GovernorKind};
+use crate::gpu::freq::FreqTable;
+use crate::gpu::perf::IterationCost;
+use crate::gpu::power::PowerModel;
+
+/// Simulated DVFS-capable GPU device.
+#[derive(Debug, Clone)]
+pub struct SimGpu {
+    table: FreqTable,
+    power: PowerModel,
+    governor: GovernorKind,
+    boost_mhz: u32,
+    locked_mhz: Option<u32>,
+    set_clock_latency_s: f64,
+    /// Pending latency still to be charged for the last clock change.
+    pending_lock_latency_s: f64,
+    energy_j: f64,
+    busy_time_s: f64,
+    total_time_s: f64,
+    clock_changes: u64,
+    last_power_w: f64,
+}
+
+impl SimGpu {
+    pub fn new(cfg: &GpuConfig, governor: GovernorKind) -> SimGpu {
+        let table = FreqTable::from_config(cfg);
+        let locked = match governor {
+            GovernorKind::Locked(mhz) => Some(table.quantize(mhz)),
+            _ => None,
+        };
+        SimGpu {
+            table,
+            power: PowerModel::new(cfg),
+            governor,
+            boost_mhz: cfg.boost_mhz,
+            locked_mhz: locked,
+            set_clock_latency_s: cfg.set_clock_latency_s,
+            pending_lock_latency_s: 0.0,
+            energy_j: 0.0,
+            busy_time_s: 0.0,
+            total_time_s: 0.0,
+            clock_changes: 0,
+            last_power_w: cfg.idle_w,
+        }
+    }
+
+    pub fn table(&self) -> &FreqTable {
+        &self.table
+    }
+
+    pub fn governor(&self) -> GovernorKind {
+        self.governor
+    }
+
+    /// The clock the next iteration will run at. Under the `Default`
+    /// governor this is the boost clock whenever there is work (native
+    /// driver behaviour — the paper's baseline).
+    pub fn effective_mhz(&self, has_work: bool) -> u32 {
+        match self.governor {
+            GovernorKind::Default => {
+                if has_work {
+                    self.boost_mhz
+                } else {
+                    self.table.min_mhz()
+                }
+            }
+            GovernorKind::Locked(_) | GovernorKind::Agft => self
+                .locked_mhz
+                .unwrap_or(self.boost_mhz),
+        }
+    }
+
+    /// Lock the core clock (AGFT's actuation path). Quantises to the
+    /// table; charges the nvidia-smi round-trip latency to the next
+    /// iteration. No-op (and free) if the clock is already there.
+    pub fn set_clock(&mut self, mhz: u32) -> u32 {
+        let snapped = self.table.quantize(mhz);
+        if self.locked_mhz != Some(snapped) {
+            self.locked_mhz = Some(snapped);
+            self.clock_changes += 1;
+            self.pending_lock_latency_s += self.set_clock_latency_s;
+        }
+        snapped
+    }
+
+    /// Account one iteration: integrates energy over the iteration time
+    /// (plus any pending clock-change latency at near-idle power) and
+    /// returns the total time charged.
+    pub fn account_iteration(
+        &mut self,
+        f_mhz: u32,
+        cost: &IterationCost,
+        idle: bool,
+    ) -> f64 {
+        let mut dt = cost.time_s;
+        let p = if idle {
+            self.power.idle_w()
+        } else {
+            self.power.iteration_power_w(f_mhz, cost)
+        };
+        self.energy_j += p * cost.time_s;
+        self.last_power_w = p;
+        if !idle {
+            self.busy_time_s += cost.time_s;
+        }
+        if self.pending_lock_latency_s > 0.0 {
+            let lat = self.pending_lock_latency_s;
+            self.energy_j += self.power.idle_w() * lat;
+            dt += lat;
+            self.pending_lock_latency_s = 0.0;
+        }
+        self.total_time_s += dt;
+        dt
+    }
+
+    /// NVML-style instantaneous power sample (W).
+    pub fn power_w(&self) -> f64 {
+        self.last_power_w
+    }
+
+    /// Total energy consumed so far (J).
+    pub fn energy_j(&self) -> f64 {
+        self.energy_j
+    }
+
+    pub fn busy_time_s(&self) -> f64 {
+        self.busy_time_s
+    }
+
+    pub fn total_time_s(&self) -> f64 {
+        self.total_time_s
+    }
+
+    pub fn clock_changes(&self) -> u64 {
+        self.clock_changes
+    }
+
+    pub fn power_model(&self) -> &PowerModel {
+        &self.power
+    }
+
+    pub fn current_lock(&self) -> Option<u32> {
+        self.locked_mhz
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GpuConfig;
+
+    fn busy_cost(t: f64) -> IterationCost {
+        IterationCost {
+            time_s: t,
+            util_compute: 0.8,
+            util_mem: 0.4,
+        }
+    }
+
+    #[test]
+    fn default_governor_boosts_under_load() {
+        let g = SimGpu::new(&GpuConfig::default(), GovernorKind::Default);
+        assert_eq!(g.effective_mhz(true), 1800);
+        assert_eq!(g.effective_mhz(false), 210);
+    }
+
+    #[test]
+    fn locked_governor_pins_clock() {
+        let g = SimGpu::new(&GpuConfig::default(), GovernorKind::Locked(1233));
+        assert_eq!(g.effective_mhz(true), 1230); // quantised
+        assert_eq!(g.effective_mhz(false), 1230);
+    }
+
+    #[test]
+    fn agft_set_clock_quantizes_and_counts() {
+        let mut g = SimGpu::new(&GpuConfig::default(), GovernorKind::Agft);
+        assert_eq!(g.set_clock(1398), 1395);
+        assert_eq!(g.clock_changes(), 1);
+        // Same clock again: no change recorded.
+        assert_eq!(g.set_clock(1395), 1395);
+        assert_eq!(g.clock_changes(), 1);
+        assert_eq!(g.effective_mhz(true), 1395);
+    }
+
+    #[test]
+    fn energy_integrates_power_times_time() {
+        let mut g = SimGpu::new(&GpuConfig::default(), GovernorKind::Default);
+        let c = busy_cost(0.01);
+        let expected_p = g.power_model().power_w(1800, 0.8, 0.4);
+        g.account_iteration(1800, &c, false);
+        assert!((g.energy_j() - expected_p * 0.01).abs() < 1e-9);
+        assert!((g.busy_time_s() - 0.01).abs() < 1e-12);
+    }
+
+    #[test]
+    fn idle_iterations_draw_idle_power() {
+        let mut g = SimGpu::new(&GpuConfig::default(), GovernorKind::Default);
+        let c = IterationCost {
+            time_s: 1.0,
+            util_compute: 0.0,
+            util_mem: 0.0,
+        };
+        g.account_iteration(210, &c, true);
+        assert!((g.energy_j() - GpuConfig::default().idle_w).abs() < 1e-9);
+        assert_eq!(g.busy_time_s(), 0.0);
+    }
+
+    #[test]
+    fn clock_change_charges_latency_once() {
+        let mut g = SimGpu::new(&GpuConfig::default(), GovernorKind::Agft);
+        g.set_clock(900);
+        let dt = g.account_iteration(900, &busy_cost(0.01), false);
+        assert!(
+            (dt - (0.01 + GpuConfig::default().set_clock_latency_s)).abs()
+                < 1e-12
+        );
+        // Next iteration has no pending latency.
+        let dt2 = g.account_iteration(900, &busy_cost(0.01), false);
+        assert!((dt2 - 0.01).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,161 @@
+//! The lockable core-clock table (nvidia-smi `-lgc` equivalent).
+
+use crate::config::GpuConfig;
+
+/// Discrete frequency table: `f_min..=f_max` in `f_step` increments.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FreqTable {
+    min_mhz: u32,
+    max_mhz: u32,
+    step_mhz: u32,
+}
+
+impl FreqTable {
+    pub fn from_config(cfg: &GpuConfig) -> FreqTable {
+        FreqTable {
+            min_mhz: cfg.f_min_mhz,
+            max_mhz: cfg.f_max_mhz,
+            step_mhz: cfg.f_step_mhz,
+        }
+    }
+
+    pub fn min_mhz(&self) -> u32 {
+        self.min_mhz
+    }
+
+    pub fn max_mhz(&self) -> u32 {
+        self.max_mhz
+    }
+
+    pub fn step_mhz(&self) -> u32 {
+        self.step_mhz
+    }
+
+    /// Number of lockable points (A6000 default: 107).
+    pub fn len(&self) -> usize {
+        ((self.max_mhz - self.min_mhz) / self.step_mhz + 1) as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false
+    }
+
+    /// All lockable frequencies, ascending.
+    pub fn all(&self) -> Vec<u32> {
+        (0..self.len() as u32)
+            .map(|i| self.min_mhz + i * self.step_mhz)
+            .collect()
+    }
+
+    /// Frequencies in `[lo, hi]` (inclusive), snapped to the grid.
+    pub fn in_range(&self, lo: u32, hi: u32) -> Vec<u32> {
+        self.all()
+            .into_iter()
+            .filter(|&f| f >= lo && f <= hi)
+            .collect()
+    }
+
+    /// Frequencies over the whole table at a coarser multiple of the
+    /// base step (bootstrap grids). `coarse_step` is snapped up to a
+    /// multiple of the base step.
+    pub fn coarse_grid(&self, coarse_step_mhz: u32) -> Vec<u32> {
+        let step = coarse_step_mhz.max(self.step_mhz);
+        let step = step - step % self.step_mhz; // snap to base grid
+        let step = step.max(self.step_mhz);
+        let mut out = Vec::new();
+        let mut f = self.min_mhz;
+        while f <= self.max_mhz {
+            out.push(f);
+            f += step;
+        }
+        // Always include the top clock so the bootstrap grid spans the
+        // whole range.
+        if *out.last().unwrap() != self.max_mhz {
+            out.push(self.max_mhz);
+        }
+        out
+    }
+
+    /// Snap an arbitrary frequency onto the nearest lockable point.
+    pub fn quantize(&self, mhz: u32) -> u32 {
+        let clamped = mhz.clamp(self.min_mhz, self.max_mhz);
+        let offset = clamped - self.min_mhz;
+        let down = offset / self.step_mhz * self.step_mhz;
+        let up = down + self.step_mhz;
+        let snapped = if offset - down <= up.saturating_sub(offset)
+            || self.min_mhz + up > self.max_mhz
+        {
+            down
+        } else {
+            up
+        };
+        self.min_mhz + snapped
+    }
+
+    /// True if `mhz` is exactly a lockable point.
+    pub fn contains(&self, mhz: u32) -> bool {
+        mhz >= self.min_mhz
+            && mhz <= self.max_mhz
+            && (mhz - self.min_mhz) % self.step_mhz == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GpuConfig;
+
+    fn table() -> FreqTable {
+        FreqTable::from_config(&GpuConfig::default())
+    }
+
+    #[test]
+    fn a6000_has_107_points() {
+        let t = table();
+        assert_eq!(t.len(), 107);
+        let all = t.all();
+        assert_eq!(all[0], 210);
+        assert_eq!(*all.last().unwrap(), 1800);
+        assert!(all.windows(2).all(|w| w[1] - w[0] == 15));
+    }
+
+    #[test]
+    fn quantize_snaps_to_grid() {
+        let t = table();
+        assert_eq!(t.quantize(1234), 1230);
+        assert_eq!(t.quantize(1238), 1245);
+        assert_eq!(t.quantize(100), 210);
+        assert_eq!(t.quantize(5000), 1800);
+        assert_eq!(t.quantize(1230), 1230);
+    }
+
+    #[test]
+    fn in_range_inclusive() {
+        let t = table();
+        let window = t.in_range(1080, 1380); // anchor 1230 ± 150
+        assert_eq!(window.len(), 21);
+        assert_eq!(window[0], 1080);
+        assert_eq!(*window.last().unwrap(), 1380);
+    }
+
+    #[test]
+    fn coarse_grid_spans_range() {
+        let t = table();
+        let grid = t.coarse_grid(60);
+        assert_eq!(grid[0], 210);
+        assert_eq!(*grid.last().unwrap(), 1800);
+        assert!(grid.len() >= 27);
+        for f in &grid {
+            assert!(t.contains(*f), "{f} off grid");
+        }
+    }
+
+    #[test]
+    fn contains_checks_grid() {
+        let t = table();
+        assert!(t.contains(210));
+        assert!(t.contains(1395));
+        assert!(!t.contains(1396));
+        assert!(!t.contains(195));
+    }
+}

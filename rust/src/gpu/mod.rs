@@ -1,0 +1,19 @@
+//! GPU DVFS device simulator — the substitute for the paper's NVIDIA
+//! A6000 + nvidia-smi + NVML stack (DESIGN.md §1).
+//!
+//! * [`freq`] — the lockable frequency table (210–1800 MHz, 15 MHz steps).
+//! * [`perf`] — roofline iteration-time model: compute-bound prefill
+//!   scales ~1/f, memory-bound decode is mostly flat in f.
+//! * [`power`] — idle + linear/cubic dynamic power, utilisation-weighted.
+//! * [`device`] — the stateful device: clock locking (with latency),
+//!   per-step energy integration, power/energy telemetry.
+
+pub mod device;
+pub mod freq;
+pub mod perf;
+pub mod power;
+
+pub use device::SimGpu;
+pub use freq::FreqTable;
+pub use perf::{IterationCost, IterationWork, PerfModel};
+pub use power::PowerModel;

@@ -1,0 +1,248 @@
+//! Roofline iteration-time model.
+//!
+//! A continuous-batching iteration mixes prefill-chunk tokens
+//! (compute-bound: FLOPs ∝ model size × tokens, time ∝ 1/f) and decode
+//! tokens (memory-bound: bytes ∝ weights + KV reads, time mostly flat in
+//! f above the bandwidth knee). The iteration takes
+//! `max(t_compute, t_memory) + overhead` — the same two-phase structure
+//! that makes continuous batching hard for DVFS (paper §2.1) emerges
+//! directly: interleaved iterations have neither a clean compute nor a
+//! clean memory signature.
+
+use crate::config::{GpuConfig, ModelSpecConfig};
+
+/// The work contained in one engine iteration (built by the scheduler).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct IterationWork {
+    /// Prompt tokens prefilled this iteration (over all chunks).
+    pub prefill_tokens: u64,
+    /// Σ over prefill chunks of (chunk tokens × context length already
+    /// behind them) — drives the quadratic attention FLOPs.
+    pub prefill_ctx_weighted: u64,
+    /// Sequences producing one decode token each this iteration.
+    pub decode_seqs: u64,
+    /// Total KV tokens attended by those decode tokens.
+    pub decode_kv_tokens: u64,
+}
+
+impl IterationWork {
+    pub fn is_idle(&self) -> bool {
+        self.prefill_tokens == 0 && self.decode_seqs == 0
+    }
+
+    pub fn total_tokens(&self) -> u64 {
+        self.prefill_tokens + self.decode_seqs
+    }
+}
+
+/// The cost of one iteration at a given clock.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct IterationCost {
+    /// Wall time of the iteration (s, virtual).
+    pub time_s: f64,
+    /// Fraction of the iteration the compute pipeline is busy.
+    pub util_compute: f64,
+    /// Fraction of the iteration the memory pipeline is busy.
+    pub util_mem: f64,
+}
+
+/// Roofline model parameterised by GPU + model specs.
+#[derive(Debug, Clone)]
+pub struct PerfModel {
+    peak_flops_at_fmax: f64, // FLOP/s
+    compute_exp: f64,
+    f_max_mhz: f64,
+    mem_bw_bs: f64, // bytes/s
+    bw_floor: f64,
+    bw_knee_mhz: f64,
+    iter_overhead_s: f64,
+    // model-derived constants
+    flops_per_token: f64,       // 2 * n_params
+    attn_flops_per_ctx_tok: f64, // per (token × context-token) pair
+    weight_bytes: f64,
+    kv_bytes_per_token: f64,
+}
+
+impl PerfModel {
+    pub fn new(gpu: &GpuConfig, model: &ModelSpecConfig) -> PerfModel {
+        PerfModel {
+            peak_flops_at_fmax: gpu.peak_tflops * 1e12,
+            compute_exp: gpu.compute_exp,
+            f_max_mhz: gpu.f_max_mhz as f64,
+            mem_bw_bs: gpu.mem_bw_gbs * 1e9,
+            bw_floor: gpu.bw_floor,
+            bw_knee_mhz: gpu.bw_knee_mhz as f64,
+            iter_overhead_s: gpu.iter_overhead_s,
+            flops_per_token: 2.0 * model.n_params,
+            // Per layer: QK^T and AV are each 2*d_head*n_heads MACs per
+            // (query token, context token) pair ⇒ 4*d_model FLOPs·layers.
+            attn_flops_per_ctx_tok: 4.0
+                * model.d_model as f64
+                * model.n_layers as f64,
+            weight_bytes: model.weight_bytes(),
+            kv_bytes_per_token: model.kv_bytes_per_token(),
+        }
+    }
+
+    /// Effective compute throughput at clock `f` (FLOP/s): sublinear in
+    /// f (`fr^compute_exp`) — LLM kernels hide latency behind the clock,
+    /// so down-clocking costs less throughput than the clock ratio.
+    pub fn peak_flops(&self, f_mhz: u32) -> f64 {
+        let fr = (f_mhz as f64 / self.f_max_mhz).clamp(0.0, 1.0);
+        self.peak_flops_at_fmax * fr.powf(self.compute_exp)
+    }
+
+    /// Achievable memory bandwidth at clock `f` (bytes/s): memory clocks
+    /// don't scale with the core clock, but very low core clocks throttle
+    /// the load/store issue rate.
+    pub fn mem_bw(&self, f_mhz: u32) -> f64 {
+        let scale = self.bw_floor
+            + (1.0 - self.bw_floor)
+                * (f_mhz as f64 / self.bw_knee_mhz).min(1.0);
+        self.mem_bw_bs * scale
+    }
+
+    /// Total FLOPs in an iteration.
+    pub fn flops(&self, w: &IterationWork) -> f64 {
+        let linear = self.flops_per_token
+            * (w.prefill_tokens + w.decode_seqs) as f64;
+        let attn = self.attn_flops_per_ctx_tok
+            * (w.prefill_ctx_weighted + w.decode_kv_tokens) as f64;
+        linear + attn
+    }
+
+    /// Total HBM bytes moved in an iteration.
+    pub fn bytes(&self, w: &IterationWork) -> f64 {
+        if w.is_idle() {
+            return 0.0;
+        }
+        // Weights stream through once per iteration regardless of batch
+        // width — this is what makes decode memory-bound and batching
+        // profitable.
+        let weights = self.weight_bytes;
+        let kv_read = self.kv_bytes_per_token
+            * (w.decode_kv_tokens + w.prefill_ctx_weighted / 8) as f64;
+        let kv_write = self.kv_bytes_per_token
+            * (w.prefill_tokens + w.decode_seqs) as f64;
+        weights + kv_read + kv_write
+    }
+
+    /// Iteration cost at clock `f`.
+    pub fn cost(&self, w: &IterationWork, f_mhz: u32) -> IterationCost {
+        if w.is_idle() {
+            return IterationCost {
+                time_s: self.iter_overhead_s,
+                util_compute: 0.0,
+                util_mem: 0.0,
+            };
+        }
+        let t_c = self.flops(w) / self.peak_flops(f_mhz);
+        let t_m = self.bytes(w) / self.mem_bw(f_mhz);
+        let busy = t_c.max(t_m);
+        let time_s = busy + self.iter_overhead_s;
+        IterationCost {
+            time_s,
+            util_compute: (t_c / time_s).min(1.0),
+            util_mem: (t_m / time_s).min(1.0),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{GpuConfig, ModelSpecConfig};
+
+    fn model() -> PerfModel {
+        PerfModel::new(&GpuConfig::default(), &ModelSpecConfig::default())
+    }
+
+    fn prefill_work(tokens: u64, ctx: u64) -> IterationWork {
+        IterationWork {
+            prefill_tokens: tokens,
+            prefill_ctx_weighted: tokens * ctx / 2,
+            decode_seqs: 0,
+            decode_kv_tokens: 0,
+        }
+    }
+
+    fn decode_work(seqs: u64, kv_each: u64) -> IterationWork {
+        IterationWork {
+            prefill_tokens: 0,
+            prefill_ctx_weighted: 0,
+            decode_seqs: seqs,
+            decode_kv_tokens: seqs * kv_each,
+        }
+    }
+
+    #[test]
+    fn prefill_is_compute_bound_and_scales_with_f() {
+        let m = model();
+        let w = prefill_work(2048, 1024);
+        let hi = m.cost(&w, 1800);
+        let lo = m.cost(&w, 900);
+        assert!(hi.util_compute > hi.util_mem, "{hi:?}");
+        // Halving the clock slows compute-bound work by 2^compute_exp
+        // (sublinear clock scaling).
+        let want = 2.0f64.powf(GpuConfig::default().compute_exp);
+        let ratio = lo.time_s / hi.time_s;
+        assert!(
+            (ratio - want).abs() < 0.15,
+            "ratio={ratio}, want≈{want}"
+        );
+    }
+
+    #[test]
+    fn decode_is_memory_bound_and_flat_above_knee() {
+        let m = model();
+        let w = decode_work(16, 512);
+        let hi = m.cost(&w, 1800);
+        let knee = m.cost(&w, 1100);
+        assert!(hi.util_mem > hi.util_compute, "{hi:?}");
+        let ratio = knee.time_s / hi.time_s;
+        assert!(ratio < 1.1, "decode should be ~flat above knee: {ratio}");
+        // ... but slows below the knee
+        let lo = m.cost(&w, 300);
+        assert!(lo.time_s > hi.time_s * 1.3);
+    }
+
+    #[test]
+    fn decode_iteration_time_plausible() {
+        // 3B fp16 weights (6.4 GB) over ~768 GB/s ⇒ ≥ 8.3 ms per decode
+        // iteration at full clock — the physical floor for TPOT.
+        let m = model();
+        let c = m.cost(&decode_work(8, 256), 1800);
+        assert!(c.time_s > 0.008, "{}", c.time_s);
+        assert!(c.time_s < 0.020, "{}", c.time_s);
+    }
+
+    #[test]
+    fn batching_amortizes_weights() {
+        // 32 seqs decode in much less than 32x the time of 1 seq.
+        let m = model();
+        let one = m.cost(&decode_work(1, 256), 1800).time_s;
+        let many = m.cost(&decode_work(32, 256), 1800).time_s;
+        assert!(many < one * 2.0, "one={one} many={many}");
+    }
+
+    #[test]
+    fn idle_iteration_costs_overhead_only() {
+        let m = model();
+        let c = m.cost(&IterationWork::default(), 1800);
+        assert_eq!(c.time_s, GpuConfig::default().iter_overhead_s);
+        assert_eq!(c.util_compute, 0.0);
+    }
+
+    #[test]
+    fn utilizations_bounded() {
+        let m = model();
+        for f in [210, 600, 1200, 1800] {
+            for w in [prefill_work(512, 4096), decode_work(64, 2048)] {
+                let c = m.cost(&w, f);
+                assert!(c.util_compute >= 0.0 && c.util_compute <= 1.0);
+                assert!(c.util_mem >= 0.0 && c.util_mem <= 1.0);
+                assert!(c.time_s.is_finite() && c.time_s > 0.0);
+            }
+        }
+    }
+}

@@ -1,0 +1,33 @@
+//! # AGFT — Adaptive GPU Frequency Tuner for Real-Time LLM Inference
+//!
+//! A full-system reproduction of *"AGFT: An Adaptive GPU Frequency Tuner
+//! for Real-Time LLM Inference Optimization"* (Ye, Zhang & Tang, 2025) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the paper's contribution: a closed-loop online
+//!   contextual-bandit frequency tuner ([`tuner`]) wrapped around a
+//!   vLLM-style continuous-batching inference server ([`server`]) and a
+//!   DVFS-capable GPU device model ([`gpu`]), all driven on a virtual
+//!   clock ([`sim`]).
+//! * **L2/L1 (python/compile)** — a real tiny Llama-style transformer and
+//!   the Pallas attention / LinUCB kernels, AOT-lowered to HLO text and
+//!   executed through the PJRT CPU client by [`runtime`].
+//!
+//! The paper's testbed (A6000 + nvidia-smi + NVML + vLLM + Azure traces)
+//! is hardware we do not have; every piece is substituted with a
+//! behaviour-preserving simulator per DESIGN.md §1.
+
+pub mod analysis;
+pub mod config;
+pub mod experiment;
+pub mod gpu;
+pub mod model;
+pub mod runtime;
+pub mod server;
+pub mod sim;
+pub mod tuner;
+pub mod util;
+pub mod workload;
+
+/// Crate version string (mirrors Cargo.toml).
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

@@ -1,0 +1,219 @@
+//! AGFT command-line launcher.
+//!
+//! ```text
+//! agft serve       --workload normal --governor agft --duration 600
+//! agft sweep       --workload normal --step 45 --duration 240
+//! agft longrun     --hours 12 --rps 2.0
+//! agft fingerprint --duration 400
+//! agft ablation    --which grain|pruning
+//! agft trace-gen   --year 2024 --duration 3600 --out trace.csv
+//! agft metrics     --workload normal --duration 30      (Prometheus dump)
+//! agft bench-all   (points at the cargo bench targets)
+//! ```
+//!
+//! Every sub-command also accepts `--config <file.toml>` to start from a
+//! TOML experiment file instead of the defaults, plus `--seed N`.
+
+use agft::config::{
+    self, ExperimentConfig, GovernorKind, WorkloadKind,
+};
+use agft::experiment::harness::{run_experiment, run_pair};
+use agft::experiment::phases::learning_and_stable;
+use agft::experiment::report::{self, render_comparison};
+use agft::experiment::sweep::edp_sweep;
+use agft::gpu::FreqTable;
+use agft::util::cli::Args;
+use agft::workload::{self, trace};
+
+fn base_config(args: &Args) -> Result<ExperimentConfig, String> {
+    let mut cfg = match args.get("config") {
+        Some(path) => config::load_experiment(path)?,
+        None => ExperimentConfig::default(),
+    };
+    cfg.seed = args.get_u64("seed", cfg.seed)?;
+    cfg.duration_s = args.get_f64("duration", cfg.duration_s)?;
+    cfg.arrival_rps = args.get_f64("rps", cfg.arrival_rps)?;
+    if let Some(w) = args.get("workload") {
+        cfg.workload = config::schema::parse_workload(w)?;
+    }
+    if let Some(g) = args.get("governor") {
+        cfg.governor = config::schema::parse_governor(g)?;
+    }
+    Ok(cfg)
+}
+
+fn cmd_serve(args: &Args) -> Result<(), String> {
+    let cfg = base_config(args)?;
+    let r = run_experiment(&cfg)?;
+    println!(
+        "served {} requests over {:.1} virtual s | energy {:.0} J | \
+         mean TTFT {:.3} s | mean TPOT {:.4} s | {} clock changes",
+        r.finished.len(),
+        r.duration_s,
+        r.total_energy_j,
+        r.mean_ttft(),
+        r.mean_tpot(),
+        r.clock_changes,
+    );
+    if let Some(t) = &r.tuner {
+        println!(
+            "tuner: {} rounds, converged {:?}, pruned {}+{}+{}, {} refinements",
+            t.freq_log.len(),
+            t.converged_round,
+            t.pruned_extreme,
+            t.pruned_historical,
+            t.pruned_cascade,
+            t.refinements,
+        );
+    }
+    Ok(())
+}
+
+fn cmd_compare(args: &Args) -> Result<(), String> {
+    let cfg = base_config(args)?;
+    let (agft, base) = run_pair(&cfg)?;
+    println!(
+        "energy: AGFT {:.0} J vs default {:.0} J ({:+.1} %)",
+        agft.total_energy_j,
+        base.total_energy_j,
+        (agft.total_energy_j / base.total_energy_j - 1.0) * 100.0
+    );
+    let (learning, stable) = learning_and_stable(&agft, &base);
+    println!("{}", render_comparison("learning phase", &learning));
+    println!("{}", render_comparison("stable phase", &stable));
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<(), String> {
+    let cfg = base_config(args)?;
+    let step = args.get_u64("step", 45)? as u32;
+    let table = FreqTable::from_config(&cfg.gpu);
+    let freqs: Vec<u32> = table
+        .all()
+        .into_iter()
+        .filter(|f| (f - table.min_mhz()) % step == 0)
+        .collect();
+    let sweep = edp_sweep(&cfg, &freqs)?;
+    let rows: Vec<Vec<String>> = sweep
+        .points
+        .iter()
+        .map(|p| {
+            vec![
+                p.freq_mhz.to_string(),
+                format!("{:.0}", p.energy_j),
+                format!("{:.1}", p.delay_s),
+                format!("{:.3e}", p.edp),
+                format!("{:.3}", p.mean_ttft),
+            ]
+        })
+        .collect();
+    println!("{}", report::render_table(
+        "EDP(f) sweep",
+        &["MHz", "energy J", "delay s", "EDP", "TTFT s"],
+        &rows,
+    ));
+    println!("optimum: {} MHz (EDP {:.3e})", sweep.optimum.freq_mhz, sweep.optimum.edp);
+    Ok(())
+}
+
+fn cmd_fingerprint(args: &Args) -> Result<(), String> {
+    use agft::analysis::fingerprint::{
+        normalize_fingerprints, run_fingerprint, FEATURE_NAMES,
+    };
+    let mut prints = Vec::new();
+    for spec in agft::workload::WorkloadSpec::all() {
+        let mut cfg = base_config(args)?;
+        cfg.governor = GovernorKind::Default;
+        cfg.workload = WorkloadKind::Prototype(spec.name.to_string());
+        prints.push(run_fingerprint(&cfg)?);
+    }
+    let norm = normalize_fingerprints(&prints);
+    for p in &norm {
+        print!("{:18}", p.workload);
+        for v in p.mean {
+            print!(" {v:5.2}");
+        }
+        println!();
+    }
+    println!(
+        "dims: {}",
+        FEATURE_NAMES.join(" | ")
+    );
+    Ok(())
+}
+
+fn cmd_trace_gen(args: &Args) -> Result<(), String> {
+    let year = args.get_u64("year", 2024)? as u32;
+    let duration = args.get_f64("duration", 3600.0)?;
+    let rps = args.get_f64("rps", 1.5)?;
+    let seed = args.get_u64("seed", 42)?;
+    let out = args.get_str("out", "trace.csv");
+    let requests = workload::realize(
+        &WorkloadKind::AzureLike { year },
+        rps,
+        duration,
+        seed,
+    )?;
+    trace::write_trace(&out, &trace::from_requests(&requests))
+        .map_err(|e| e.to_string())?;
+    println!("wrote {} requests to {out}", requests.len());
+    Ok(())
+}
+
+fn cmd_metrics(args: &Args) -> Result<(), String> {
+    let cfg = base_config(args)?;
+    let requests = workload::realize(
+        &cfg.workload, cfg.arrival_rps, cfg.duration_s, cfg.seed,
+    )?;
+    let mut engine = agft::server::Engine::new(&cfg, requests);
+    engine.run_until(cfg.duration_s);
+    print!("{}", agft::server::metrics::prometheus_text(&engine.snapshot()));
+    Ok(())
+}
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: agft <serve|compare|sweep|fingerprint|trace-gen|metrics|bench-all> [options]\n\
+         common options: --config <toml> --workload <name> --governor \
+         <default|agft|locked:MHZ> --duration S --rps R --seed N\n\
+         workloads: normal long_context long_generation high_concurrency \
+         high_cache_hit azure2023 azure2024 trace:<path>"
+    );
+    std::process::exit(2)
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some((cmd, rest)) = argv.split_first() else {
+        usage();
+    };
+    let args = match Args::parse(rest.iter().cloned()) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            usage();
+        }
+    };
+    let result = match cmd.as_str() {
+        "serve" => cmd_serve(&args),
+        "compare" | "longrun" => cmd_compare(&args),
+        "sweep" => cmd_sweep(&args),
+        "fingerprint" => cmd_fingerprint(&args),
+        "trace-gen" => cmd_trace_gen(&args),
+        "metrics" => cmd_metrics(&args),
+        "bench-all" => {
+            println!(
+                "every table/figure is a cargo bench target:\n  \
+                 cargo bench --bench fig01_power_trace\n  \
+                 cargo bench --bench fig03_yearly_mix ... (see Cargo.toml)\n\
+                 or: make bench"
+            );
+            Ok(())
+        }
+        _ => usage(),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,51 @@
+//! Model-side helpers: the byte-level tokenizer used by the end-to-end
+//! HLO serving example, and arithmetic-intensity summaries used in
+//! DESIGN.md §Perf.
+//!
+//! The *analytical* model spec (parameter counts, FLOPs, KV bytes) lives
+//! in [`crate::config::ModelSpecConfig`]; the roofline that consumes it
+//! in [`crate::gpu::perf`].
+
+pub mod tokenizer;
+
+use crate::config::ModelSpecConfig;
+
+/// Arithmetic intensity (FLOPs/byte) of a pure-decode iteration at the
+/// given batch width — the quantity that decides where an iteration sits
+/// on the roofline.
+pub fn decode_arithmetic_intensity(
+    spec: &ModelSpecConfig,
+    batch: u64,
+    kv_tokens_each: u64,
+) -> f64 {
+    let flops = 2.0 * spec.n_params * batch as f64
+        + 4.0 * spec.d_model as f64
+            * spec.n_layers as f64
+            * (batch * kv_tokens_each) as f64;
+    let bytes = spec.weight_bytes()
+        + spec.kv_bytes_per_token() * (batch * kv_tokens_each) as f64
+        + spec.kv_bytes_per_token() * batch as f64;
+    flops / bytes
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelSpecConfig;
+
+    #[test]
+    fn batching_raises_intensity() {
+        let spec = ModelSpecConfig::default();
+        let one = decode_arithmetic_intensity(&spec, 1, 512);
+        let many = decode_arithmetic_intensity(&spec, 32, 512);
+        assert!(many > one * 4.0, "one={one} many={many}");
+    }
+
+    #[test]
+    fn decode_is_deep_in_memory_bound_regime() {
+        // A6000-class machine balance is ~55 FLOP/byte; single-seq decode
+        // sits orders of magnitude below it.
+        let spec = ModelSpecConfig::default();
+        assert!(decode_arithmetic_intensity(&spec, 1, 256) < 2.0);
+    }
+}

@@ -1,0 +1,51 @@
+//! Byte-level tokenizer for the tiny end-to-end model (vocab = 256).
+//!
+//! The AOT-compiled transformer is byte-level, so tokenisation is
+//! trivially privacy-preserving and reversible; this mirrors what the
+//! paper's non-intrusive stance requires of the *serving layer* (no
+//! semantic inspection of prompts — here there is literally nothing to
+//! inspect but bytes).
+
+/// Encode text to token ids (one byte = one token).
+pub fn encode(text: &str) -> Vec<i32> {
+    text.bytes().map(|b| b as i32).collect()
+}
+
+/// Decode token ids back to text (lossy on invalid UTF-8).
+pub fn decode(tokens: &[i32]) -> String {
+    let bytes: Vec<u8> = tokens
+        .iter()
+        .map(|&t| (t.clamp(0, 255)) as u8)
+        .collect();
+    String::from_utf8_lossy(&bytes).to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let text = "hello, AGFT!";
+        assert_eq!(decode(&encode(text)), text);
+    }
+
+    #[test]
+    fn roundtrip_utf8() {
+        let text = "héllo ∑";
+        assert_eq!(decode(&encode(text)), text);
+    }
+
+    #[test]
+    fn ids_in_vocab() {
+        for t in encode("any text Ω") {
+            assert!((0..256).contains(&t));
+        }
+    }
+
+    #[test]
+    fn decode_clamps_out_of_range() {
+        let s = decode(&[72, 105, 999, -5]);
+        assert!(s.starts_with("Hi"));
+    }
+}

@@ -1,0 +1,129 @@
+//! Artifact discovery and `meta.json` parsing.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::{self, Json};
+
+/// Parsed `artifacts/meta.json` (written by `python/compile/aot.py`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactMeta {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_head: usize,
+    pub prompt_max: usize,
+    pub seq_max: usize,
+    pub param_count: usize,
+    pub seed: u64,
+    /// LinUCB artifact: padded arm count.
+    pub linucb_k: usize,
+    /// LinUCB artifact: padded context dimension.
+    pub linucb_d: usize,
+}
+
+impl ArtifactMeta {
+    pub fn from_json(doc: &Json) -> Result<ArtifactMeta, String> {
+        let need = |path: &[&str]| -> Result<usize, String> {
+            doc.get_path(path)
+                .and_then(|v| v.as_usize())
+                .ok_or_else(|| format!("meta.json missing {}", path.join(".")))
+        };
+        if doc.get_path(&["interchange"]).and_then(|v| v.as_str())
+            != Some("hlo-text")
+        {
+            return Err("meta.json: interchange is not hlo-text".to_string());
+        }
+        Ok(ArtifactMeta {
+            vocab: need(&["model", "vocab"])?,
+            d_model: need(&["model", "d_model"])?,
+            n_layers: need(&["model", "n_layers"])?,
+            n_heads: need(&["model", "n_heads"])?,
+            d_head: need(&["model", "d_head"])?,
+            prompt_max: need(&["model", "prompt_max"])?,
+            seq_max: need(&["model", "seq_max"])?,
+            param_count: need(&["model", "param_count"])?,
+            seed: need(&["model", "seed"])? as u64,
+            linucb_k: need(&["linucb", "k_max"])?,
+            linucb_d: need(&["linucb", "dim"])?,
+        })
+    }
+
+    /// KV-cache element count: `[L, 2, H, S, D]` of f32.
+    pub fn kv_elems(&self) -> usize {
+        self.n_layers * 2 * self.n_heads * self.seq_max * self.d_head
+    }
+}
+
+/// An artifact directory with parsed metadata.
+#[derive(Debug, Clone)]
+pub struct Artifacts {
+    pub dir: PathBuf,
+    pub meta: ArtifactMeta,
+}
+
+impl Artifacts {
+    /// Open a directory containing `meta.json` + the `*.hlo.txt` files.
+    pub fn open(dir: impl AsRef<Path>) -> Result<Artifacts, String> {
+        let dir = dir.as_ref().to_path_buf();
+        let meta_path = dir.join("meta.json");
+        let text = std::fs::read_to_string(&meta_path)
+            .map_err(|e| format!("{}: {e}", meta_path.display()))?;
+        let doc = json::parse(&text)?;
+        let meta = ArtifactMeta::from_json(&doc)?;
+        for name in ["prefill.hlo.txt", "decode.hlo.txt", "linucb.hlo.txt"] {
+            let p = dir.join(name);
+            if !p.exists() {
+                return Err(format!("missing artifact {}", p.display()));
+            }
+        }
+        Ok(Artifacts { dir, meta })
+    }
+
+    pub fn path(&self, name: &str) -> PathBuf {
+        self.dir.join(name)
+    }
+}
+
+/// Locate the artifacts directory: `$AGFT_ARTIFACTS`, then `artifacts/`
+/// relative to the working directory, then relative to the crate root
+/// (tests run from anywhere under the workspace).
+pub fn find_artifacts_dir() -> Option<PathBuf> {
+    if let Ok(p) = std::env::var("AGFT_ARTIFACTS") {
+        let p = PathBuf::from(p);
+        if p.join("meta.json").exists() {
+            return Some(p);
+        }
+    }
+    let candidates = [
+        PathBuf::from("artifacts"),
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"),
+    ];
+    candidates.into_iter().find(|p| p.join("meta.json").exists())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_real_meta_when_built() {
+        let Some(dir) = find_artifacts_dir() else {
+            eprintln!("skipped: run `make artifacts` first");
+            return;
+        };
+        let a = Artifacts::open(&dir).unwrap();
+        assert_eq!(a.meta.linucb_d, 8);
+        assert!(a.meta.linucb_k >= 28, "bootstrap grid must fit");
+        assert!(a.meta.kv_elems() > 0);
+        assert!(a.path("linucb.hlo.txt").exists());
+    }
+
+    #[test]
+    fn rejects_missing_fields() {
+        let doc = json::parse(r#"{"interchange": "hlo-text"}"#).unwrap();
+        assert!(ArtifactMeta::from_json(&doc).is_err());
+        let doc = json::parse(r#"{"interchange": "proto"}"#).unwrap();
+        assert!(ArtifactMeta::from_json(&doc).is_err());
+    }
+}

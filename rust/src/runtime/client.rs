@@ -1,0 +1,90 @@
+//! PJRT CPU client wrapper: HLO text in, compiled executable out.
+//!
+//! The interchange format is HLO **text** (see DESIGN.md §2 and
+//! python/compile/aot.py): `HloModuleProto::from_text_file` reassigns
+//! instruction ids, sidestepping the 64-bit-id protos that
+//! xla_extension 0.5.1 rejects.
+
+use std::path::Path;
+
+use xla::{HloModuleProto, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use super::artifacts::Artifacts;
+
+/// A PJRT client plus the compiled AGFT executables.
+pub struct Runtime {
+    client: PjRtClient,
+}
+
+impl Runtime {
+    /// Spin up the CPU PJRT client (the only backend in this image; on a
+    /// real deployment this would be the TPU/GPU plugin).
+    pub fn cpu() -> Result<Runtime, String> {
+        let client = PjRtClient::cpu().map_err(|e| e.to_string())?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn client(&self) -> &PjRtClient {
+        &self.client
+    }
+
+    /// Load one HLO-text artifact and compile it for this client.
+    pub fn load_hlo(
+        &self,
+        path: impl AsRef<Path>,
+    ) -> Result<PjRtLoadedExecutable, String> {
+        let path = path.as_ref();
+        let proto = HloModuleProto::from_text_file(
+            path.to_str().ok_or("non-utf8 artifact path")?,
+        )
+        .map_err(|e| format!("{}: {e}", path.display()))?;
+        let comp = XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .map_err(|e| format!("compile {}: {e}", path.display()))
+    }
+
+    /// Load a named artifact from an [`Artifacts`] directory.
+    pub fn load_artifact(
+        &self,
+        artifacts: &Artifacts,
+        name: &str,
+    ) -> Result<PjRtLoadedExecutable, String> {
+        self.load_hlo(artifacts.path(name))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::find_artifacts_dir;
+
+    #[test]
+    fn cpu_client_comes_up() {
+        let rt = Runtime::cpu().unwrap();
+        assert!(
+            rt.platform_name().to_lowercase().contains("cpu")
+                || rt.platform_name().to_lowercase().contains("host"),
+            "platform = {}",
+            rt.platform_name()
+        );
+    }
+
+    #[test]
+    fn compiles_all_artifacts() {
+        let Some(dir) = find_artifacts_dir() else {
+            eprintln!("skipped: run `make artifacts` first");
+            return;
+        };
+        let arts = Artifacts::open(&dir).unwrap();
+        let rt = Runtime::cpu().unwrap();
+        for name in ["prefill.hlo.txt", "decode.hlo.txt", "linucb.hlo.txt"] {
+            rt.load_artifact(&arts, name)
+                .unwrap_or_else(|e| panic!("{name}: {e}"));
+        }
+    }
+}

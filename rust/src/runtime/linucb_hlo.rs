@@ -1,0 +1,201 @@
+//! The Pallas LinUCB scoring kernel on the live decision path.
+//!
+//! `linucb.hlo.txt` lowers `python/compile/kernels/linucb.py` — Eq. 1 of
+//! the paper batched over all K arms — through the same HLO-text AOT
+//! pipeline as the model. This wrapper feeds it the padded arm stacks the
+//! tuner exports and returns the scores, implementing
+//! [`crate::tuner::tuner::UcbScorer`] so `AgftTuner::with_scorer` can
+//! route every per-window decision through the three-layer stack.
+
+use xla::{Literal, PjRtLoadedExecutable};
+
+use crate::tuner::tuner::UcbScorer;
+
+use super::artifacts::Artifacts;
+use super::client::Runtime;
+
+/// HLO-backed Eq.-1 scorer.
+pub struct HloLinUcbScorer {
+    exe: PjRtLoadedExecutable,
+    k: usize,
+    d: usize,
+    /// Executions so far (telemetry for the e2e example).
+    pub calls: u64,
+}
+
+impl HloLinUcbScorer {
+    /// Compile the `linucb.hlo.txt` artifact.
+    pub fn load(rt: &Runtime, arts: &Artifacts) -> Result<HloLinUcbScorer, String> {
+        let exe = rt.load_artifact(arts, "linucb.hlo.txt")?;
+        Ok(HloLinUcbScorer {
+            exe,
+            k: arts.meta.linucb_k,
+            d: arts.meta.linucb_d,
+            calls: 0,
+        })
+    }
+
+    /// Raw scoring call with explicit shapes (used by tests).
+    pub fn score_raw(
+        &mut self,
+        theta: &[f32],
+        ainv: &[f32],
+        x: &[f32],
+        alpha: f32,
+        mask: &[f32],
+    ) -> Result<Vec<f32>, String> {
+        let (k, d) = (self.k, self.d);
+        if theta.len() != k * d || ainv.len() != k * d * d {
+            return Err(format!(
+                "bad arm stack: theta {} ainv {} for k={k} d={d}",
+                theta.len(),
+                ainv.len()
+            ));
+        }
+        if x.len() != d || mask.len() != k {
+            return Err(format!(
+                "bad vector: x {} mask {} for k={k} d={d}",
+                x.len(),
+                mask.len()
+            ));
+        }
+        let err = |e: xla::Error| e.to_string();
+        let theta_l = Literal::vec1(theta)
+            .reshape(&[k as i64, d as i64])
+            .map_err(err)?;
+        let ainv_l = Literal::vec1(ainv)
+            .reshape(&[k as i64, d as i64, d as i64])
+            .map_err(err)?;
+        let x_l = Literal::vec1(x);
+        let alpha_l = Literal::vec1(&[alpha]);
+        let mask_l = Literal::vec1(mask);
+        let out = self
+            .exe
+            .execute::<Literal>(&[theta_l, ainv_l, x_l, alpha_l, mask_l])
+            .map_err(err)?[0][0]
+            .to_literal_sync()
+            .map_err(err)?;
+        self.calls += 1;
+        // aot.py lowers with return_tuple=True → 1-tuple of scores[K].
+        out.to_tuple1()
+            .map_err(err)?
+            .to_vec::<f32>()
+            .map_err(err)
+    }
+}
+
+impl UcbScorer for HloLinUcbScorer {
+    fn score(
+        &mut self,
+        theta: &[f32],
+        ainv: &[f32],
+        x: &[f32],
+        alpha: f32,
+        mask: &[f32],
+        k: usize,
+        d: usize,
+    ) -> Result<Vec<f32>, String> {
+        if k != self.k || d != self.d {
+            return Err(format!(
+                "scorer built for k={} d={}, got k={k} d={d}",
+                self.k, self.d
+            ));
+        }
+        self.score_raw(theta, ainv, x, alpha, mask)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::find_artifacts_dir;
+
+    fn scorer() -> Option<HloLinUcbScorer> {
+        let dir = find_artifacts_dir()?;
+        let arts = Artifacts::open(&dir).ok()?;
+        let rt = Runtime::cpu().ok()?;
+        HloLinUcbScorer::load(&rt, &arts).ok()
+    }
+
+    #[test]
+    fn scores_match_the_closed_form() {
+        let Some(mut s) = scorer() else {
+            eprintln!("skipped: run `make artifacts` first");
+            return;
+        };
+        let (k, d) = (32usize, 8usize);
+        // Arm 0: theta = e0, A⁻¹ = I → score = x0 + α·|x|.
+        let mut theta = vec![0f32; k * d];
+        theta[0] = 1.0;
+        let mut ainv = vec![0f32; k * d * d];
+        for i in 0..d {
+            ainv[i * d + i] = 1.0; // arm 0 = identity
+        }
+        let mut x = vec![0f32; d];
+        x[0] = 0.6;
+        x[1] = 0.8; // |x| = 1
+        let mut mask = vec![0f32; k];
+        mask[0] = 1.0;
+        mask[1] = 1.0; // arm 1: zero model → score 0
+        let scores = s.score_raw(&theta, &ainv, &x, 0.5, &mask).unwrap();
+        assert_eq!(scores.len(), k);
+        assert!((scores[0] - (0.6 + 0.5)).abs() < 1e-5, "{}", scores[0]);
+        assert!((scores[1] - 0.0).abs() < 1e-5, "{}", scores[1]);
+        // Masked arms score -inf-ish.
+        assert!(scores[2] < -1e29);
+    }
+
+    #[test]
+    fn matches_native_linucb_bit_for_bit_f32() {
+        let Some(mut s) = scorer() else {
+            eprintln!("skipped: run `make artifacts` first");
+            return;
+        };
+        use crate::tuner::linucb::LinUcb;
+        use crate::util::Pcg64;
+        let mut rng = Pcg64::new(11);
+        let mut native = LinUcb::new(1.0);
+        let freqs = [900u32, 1230, 1395, 1800];
+        // Train some arms on random data.
+        for _ in 0..50 {
+            let mut x = [0.0f64; 7];
+            for v in x.iter_mut() {
+                *v = rng.f64();
+            }
+            let f = freqs[rng.index(freqs.len())];
+            native.update(f, &x, rng.f64() * 2.0 - 1.0);
+        }
+        let mut x = [0.0f64; 7];
+        for v in x.iter_mut() {
+            *v = rng.f64();
+        }
+        let alpha = 0.7f64;
+        // Export and score through HLO.
+        let (k, d) = (32usize, 8usize);
+        let mut theta = vec![0f32; k * d];
+        let mut ainv = vec![0f32; k * d * d];
+        let mut mask = vec![0f32; k];
+        for (i, &f) in freqs.iter().enumerate() {
+            let arm = native.arm(f).unwrap();
+            let (t, a) = arm.export_padded(d);
+            theta[i * d..(i + 1) * d].copy_from_slice(&t);
+            ainv[i * d * d..(i + 1) * d * d].copy_from_slice(&a);
+            mask[i] = 1.0;
+        }
+        let mut xp = [0f32; 8];
+        for i in 0..7 {
+            xp[i] = x[i] as f32;
+        }
+        let scores = s
+            .score_raw(&theta, &ainv, &xp, alpha as f32, &mask)
+            .unwrap();
+        for (i, &f) in freqs.iter().enumerate() {
+            let want = native.arm(f).unwrap().ucb(&x, alpha);
+            assert!(
+                (scores[i] as f64 - want).abs() < 1e-4,
+                "arm {f}: hlo {} native {want}",
+                scores[i]
+            );
+        }
+    }
+}

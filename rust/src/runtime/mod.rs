@@ -1,0 +1,23 @@
+//! PJRT runtime: loads the AOT-compiled HLO artifacts (`artifacts/*.hlo.txt`,
+//! produced once by `make artifacts` from the L2 JAX model and L1 Pallas
+//! kernels) and executes them from the rust request path.
+//!
+//! * [`artifacts`] — locate + parse `meta.json`, resolve artifact paths.
+//! * [`client`] — PJRT CPU client wrapper: HLO text → compile → executable.
+//! * [`linucb_hlo`] — the Pallas LinUCB scoring kernel as a live
+//!   [`crate::tuner::tuner::UcbScorer`] (the `--decision-engine hlo` path).
+//! * [`token_engine`] — prefill/decode execution of the tiny-llama
+//!   artifacts: real token generation for the end-to-end example.
+//!
+//! Python never runs here — the HLO text is self-contained (weights are
+//! baked in as constants).
+
+pub mod artifacts;
+pub mod client;
+pub mod linucb_hlo;
+pub mod token_engine;
+
+pub use artifacts::{find_artifacts_dir, ArtifactMeta, Artifacts};
+pub use client::Runtime;
+pub use linucb_hlo::HloLinUcbScorer;
+pub use token_engine::HloTokenEngine;

@@ -1,0 +1,395 @@
+//! The serving engine step loop: pulls arrivals, plans a
+//! continuous-batching iteration, prices it on the GPU roofline at the
+//! current clock, integrates energy, advances the virtual clock and
+//! commits token emission.
+//!
+//! The engine is governor-agnostic: the `Default` baseline, locked-clock
+//! sweep points and the AGFT tuner all drive the same loop (AGFT calls
+//! [`crate::gpu::SimGpu::set_clock`] between sampling windows).
+
+use std::collections::VecDeque;
+
+use crate::config::{ExperimentConfig, GovernorKind};
+use crate::gpu::perf::{IterationWork, PerfModel};
+use crate::gpu::SimGpu;
+use crate::sim::Clock;
+
+use super::metrics::MetricsSnapshot;
+use super::request::Request;
+use super::scheduler::Scheduler;
+
+/// Cumulative engine counters (see [`MetricsSnapshot`] for the scrape
+/// view).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EngineCounters {
+    pub iterations: u64,
+    pub busy_iterations: u64,
+    pub prefill_tokens: u64,
+    pub decode_tokens: u64,
+    pub batch_token_sum: u64,
+    pub finished: u64,
+    pub idle_time_s: f64,
+    pub busy_time_s: f64,
+    /// Virtual time spent with a non-empty wait queue (integrated, so
+    /// sub-window queueing bursts register in the x1 feature even when
+    /// the queue is empty again at scrape time).
+    pub queue_time_s: f64,
+}
+
+/// Latency record of a completed request (drives Tables 2/3 and Fig 13).
+#[derive(Debug, Clone, Copy)]
+pub struct FinishedRecord {
+    pub arrival_s: f64,
+    pub first_token_s: f64,
+    pub finish_s: f64,
+    pub prompt_tokens: u32,
+    pub output_tokens: u32,
+    pub ttft: f64,
+    pub tpot: f64,
+    pub e2e: f64,
+}
+
+/// Outcome of one [`Engine::step`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum StepOutcome {
+    /// A busy iteration ran (`dt` seconds of work).
+    Busy { dt: f64, work: IterationWork },
+    /// No runnable work; idled for `dt` (bounded by the idle tick or the
+    /// next arrival).
+    Idle { dt: f64 },
+    /// Nothing left: no work, no future arrivals.
+    Drained,
+}
+
+/// The serving engine.
+pub struct Engine {
+    pub clock: Clock,
+    pub gpu: SimGpu,
+    pub sched: Scheduler,
+    perf: PerfModel,
+    arrivals: VecDeque<Request>,
+    pub counters: EngineCounters,
+    /// Completed-request latency log.
+    pub finished_log: Vec<FinishedRecord>,
+    /// Optional (t, W) power trace for Fig-1 style plots.
+    power_trace: Option<Vec<(f64, f64)>>,
+    trace_every_s: f64,
+    last_trace_s: f64,
+    /// Idle advance quantum (keeps sampling windows responsive).
+    idle_tick_s: f64,
+}
+
+impl Engine {
+    /// Build an engine from an experiment config and a pre-generated,
+    /// arrival-sorted request stream.
+    pub fn new(cfg: &ExperimentConfig, mut requests: Vec<Request>) -> Engine {
+        requests.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
+        let max_tokens = cfg.server.kv_blocks * cfg.server.block_size;
+        for r in &requests {
+            assert!(
+                ((r.prompt_tokens + r.target_output) as usize) < max_tokens,
+                "request {} cannot ever fit in the KV pool",
+                r.id
+            );
+        }
+        Engine {
+            clock: Clock::new(),
+            gpu: SimGpu::new(&cfg.gpu, cfg.governor),
+            sched: Scheduler::new(&cfg.server),
+            perf: PerfModel::new(&cfg.gpu, &cfg.model),
+            arrivals: requests.into(),
+            counters: EngineCounters::default(),
+            finished_log: Vec::new(),
+            power_trace: None,
+            trace_every_s: 0.1,
+            last_trace_s: f64::NEG_INFINITY,
+            idle_tick_s: 0.05,
+        }
+    }
+
+    /// Record an instantaneous power sample every `every_s` of virtual
+    /// time into an in-memory trace (Fig 1).
+    pub fn enable_power_trace(&mut self, every_s: f64) {
+        self.power_trace = Some(Vec::new());
+        self.trace_every_s = every_s;
+    }
+
+    pub fn power_trace(&self) -> Option<&[(f64, f64)]> {
+        self.power_trace.as_deref()
+    }
+
+    pub fn pending_arrivals(&self) -> usize {
+        self.arrivals.len()
+    }
+
+    fn pull_arrivals(&mut self) {
+        let now = self.clock.now();
+        while let Some(front) = self.arrivals.front() {
+            if front.arrival_s <= now {
+                let req = self.arrivals.pop_front().unwrap();
+                self.sched.submit(req);
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn record_power(&mut self) {
+        let now = self.clock.now();
+        let w = self.gpu.power_w();
+        if let Some(trace) = self.power_trace.as_mut() {
+            if now - self.last_trace_s >= self.trace_every_s {
+                trace.push((now, w));
+                self.last_trace_s = now;
+            }
+        }
+    }
+
+    /// Run one engine iteration (busy or idle).
+    pub fn step(&mut self) -> StepOutcome {
+        self.pull_arrivals();
+
+        if !self.sched.has_work() {
+            return match self.arrivals.front() {
+                None => StepOutcome::Drained,
+                Some(next) => {
+                    let dt = (next.arrival_s - self.clock.now())
+                        .clamp(0.0, self.idle_tick_s)
+                        .max(1e-6);
+                    self.idle_advance(dt);
+                    StepOutcome::Idle { dt }
+                }
+            };
+        }
+
+        let plan = self.sched.plan();
+        if plan.work.is_idle() {
+            // Work exists but nothing is runnable (KV-blocked admission);
+            // idle briefly — running requests will free blocks, or the
+            // next arrival shifts the picture.
+            let dt = self.idle_tick_s;
+            self.idle_advance(dt);
+            return StepOutcome::Idle { dt };
+        }
+
+        let f_mhz = self.gpu.effective_mhz(true);
+        let cost = self.perf.cost(&plan.work, f_mhz);
+        let dt = self.gpu.account_iteration(f_mhz, &cost, false);
+        if self.sched.queue_depth() > 0 {
+            self.counters.queue_time_s += dt;
+        }
+        self.clock.advance(dt);
+        self.sched.commit(&plan, self.clock.now());
+        self.harvest_finished();
+
+        self.counters.iterations += 1;
+        self.counters.busy_iterations += 1;
+        self.counters.prefill_tokens += plan.work.prefill_tokens;
+        self.counters.decode_tokens +=
+            plan.work.decode_seqs + plan.completions.len() as u64;
+        self.counters.batch_token_sum += plan.work.total_tokens();
+        self.counters.busy_time_s += dt;
+        self.record_power();
+        StepOutcome::Busy {
+            dt,
+            work: plan.work,
+        }
+    }
+
+    fn idle_advance(&mut self, dt: f64) {
+        use crate::gpu::perf::IterationCost;
+        let f_idle = match self.gpu.governor() {
+            GovernorKind::Default => self.gpu.table().min_mhz(),
+            _ => self.gpu.effective_mhz(false),
+        };
+        let cost = IterationCost {
+            time_s: dt,
+            util_compute: 0.0,
+            util_mem: 0.0,
+        };
+        let dt = self.gpu.account_iteration(f_idle, &cost, true);
+        self.clock.advance(dt);
+        self.counters.iterations += 1;
+        self.counters.idle_time_s += dt;
+        self.record_power();
+    }
+
+    fn harvest_finished(&mut self) {
+        let now = self.clock.now();
+        for id in self.sched.take_finished() {
+            let req = &self.sched.requests[id];
+            self.counters.finished += 1;
+            self.finished_log.push(FinishedRecord {
+                arrival_s: req.arrival_s,
+                first_token_s: req.first_token_s.unwrap_or(now),
+                finish_s: req.finish_s.unwrap_or(now),
+                prompt_tokens: req.prompt_tokens,
+                output_tokens: req.generated,
+                ttft: req.ttft().unwrap_or(0.0),
+                tpot: req.tpot().unwrap_or(0.0),
+                e2e: req.e2e().unwrap_or(0.0),
+            });
+        }
+    }
+
+    /// Run until virtual time `t_end` (or drained). Returns false when
+    /// drained before the deadline.
+    pub fn run_until(&mut self, t_end: f64) -> bool {
+        while self.clock.now() < t_end {
+            match self.step() {
+                StepOutcome::Drained => return false,
+                _ => {}
+            }
+        }
+        true
+    }
+
+    /// Current metric scrape (the AGFT monitor's input).
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let (hits, lookups) = self
+            .sched
+            .prefix
+            .as_ref()
+            .map(|p| p.stats())
+            .unwrap_or((0, 0));
+        MetricsSnapshot {
+            time_s: self.clock.now(),
+            iterations_total: self.counters.iterations,
+            busy_iterations_total: self.counters.busy_iterations,
+            prefill_tokens_total: self.counters.prefill_tokens,
+            decode_tokens_total: self.counters.decode_tokens,
+            batch_token_sum: self.counters.batch_token_sum,
+            finished_total: self.counters.finished,
+            preemptions_total: self.sched.preemptions(),
+            prefix_hit_tokens_total: hits,
+            prefix_lookup_tokens_total: lookups,
+            queue_time_s_total: self.counters.queue_time_s,
+            energy_j_total: self.gpu.energy_j(),
+            requests_waiting: self.sched.queue_depth(),
+            requests_running: self.sched.running_count(),
+            kv_usage: self.sched.kv.usage(),
+            power_w: self.gpu.power_w(),
+            clock_mhz: self.gpu.effective_mhz(self.sched.has_work()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+
+    fn requests(n: u64, rate: f64, prompt: u32, out: u32) -> Vec<Request> {
+        (0..n)
+            .map(|i| {
+                Request::new(i, i as f64 / rate, prompt, out, i as u32, 0)
+            })
+            .collect()
+    }
+
+    fn default_cfg() -> ExperimentConfig {
+        ExperimentConfig {
+            governor: GovernorKind::Default,
+            ..ExperimentConfig::default()
+        }
+    }
+
+    #[test]
+    fn drains_all_requests() {
+        let cfg = default_cfg();
+        let mut e = Engine::new(&cfg, requests(20, 5.0, 256, 32));
+        let still_running = e.run_until(1e9);
+        assert!(!still_running);
+        assert_eq!(e.finished_log.len(), 20);
+        assert_eq!(e.counters.finished, 20);
+        for rec in &e.finished_log {
+            assert!(rec.ttft > 0.0);
+            assert!(rec.e2e >= rec.ttft);
+            assert_eq!(rec.output_tokens, 32);
+        }
+    }
+
+    #[test]
+    fn energy_and_time_accounted() {
+        let cfg = default_cfg();
+        let mut e = Engine::new(&cfg, requests(10, 10.0, 128, 16));
+        e.run_until(1e9);
+        assert!(e.gpu.energy_j() > 0.0);
+        assert!(e.counters.busy_time_s > 0.0);
+        // Average busy power must exceed idle floor.
+        let busy_power = (e.gpu.energy_j()
+            - cfg.gpu.idle_w * e.counters.idle_time_s)
+            / e.counters.busy_time_s;
+        assert!(busy_power > cfg.gpu.idle_w, "busy_power={busy_power}");
+    }
+
+    #[test]
+    fn idles_between_sparse_arrivals() {
+        let cfg = default_cfg();
+        // Two requests 10 s apart.
+        let reqs = vec![
+            Request::new(0, 0.0, 64, 4, 0, 0),
+            Request::new(1, 10.0, 64, 4, 1, 0),
+        ];
+        let mut e = Engine::new(&cfg, reqs);
+        e.run_until(1e9);
+        assert!(e.counters.idle_time_s > 8.0,
+                "idle={}", e.counters.idle_time_s);
+        assert_eq!(e.finished_log.len(), 2);
+    }
+
+    #[test]
+    fn locked_low_clock_is_slower_but_cheaper_on_compute() {
+        let mk = |gov| {
+            let cfg = ExperimentConfig {
+                governor: gov,
+                ..ExperimentConfig::default()
+            };
+            let mut e = Engine::new(&cfg, requests(30, 50.0, 1024, 8));
+            e.run_until(1e9);
+            let ttft: f64 = e.finished_log.iter().map(|r| r.ttft).sum::<f64>()
+                / e.finished_log.len() as f64;
+            (ttft, e.gpu.energy_j())
+        };
+        let (ttft_hi, _) = mk(GovernorKind::Locked(1800));
+        let (ttft_lo, _) = mk(GovernorKind::Locked(600));
+        assert!(
+            ttft_lo > ttft_hi * 1.5,
+            "prefill-heavy TTFT must degrade at low clock: {ttft_lo} vs {ttft_hi}"
+        );
+    }
+
+    #[test]
+    fn snapshot_deltas_consistent() {
+        let cfg = default_cfg();
+        let mut e = Engine::new(&cfg, requests(50, 20.0, 256, 64));
+        let s0 = e.snapshot();
+        e.run_until(1.0);
+        let s1 = e.snapshot();
+        let d = s1.delta(&s0);
+        assert!(d.dt_s >= 1.0 - 1e-6);
+        assert!(d.energy_j > 0.0);
+        assert!(d.prefill_tokens > 0);
+        // Packing efficiency is well-defined.
+        if d.busy_iterations > 0 {
+            let packing = d.batch_token_sum as f64 / d.busy_iterations as f64;
+            assert!(packing >= 1.0);
+        }
+    }
+
+    #[test]
+    fn power_trace_samples_monotonic() {
+        let cfg = default_cfg();
+        let mut e = Engine::new(&cfg, requests(20, 10.0, 512, 32));
+        e.enable_power_trace(0.05);
+        e.run_until(1e9);
+        let trace = e.power_trace().unwrap();
+        assert!(trace.len() > 3);
+        for w in trace.windows(2) {
+            assert!(w[1].0 > w[0].0);
+        }
+        // Busy samples must be above idle power.
+        let max_w = trace.iter().map(|s| s.1).fold(0.0, f64::max);
+        assert!(max_w > cfg.gpu.idle_w * 2.0);
+    }
+}

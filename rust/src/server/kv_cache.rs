@@ -1,0 +1,212 @@
+//! Paged KV-cache block allocator (PagedAttention-style): fixed-size
+//! token blocks, O(1) alloc/free via a free list, and reference counting
+//! so prefix-cache blocks can be shared across requests.
+
+/// Paged block allocator.
+#[derive(Debug, Clone)]
+pub struct KvCache {
+    block_size: usize,
+    total_blocks: usize,
+    free: Vec<u32>,
+    refcount: Vec<u32>,
+}
+
+impl KvCache {
+    pub fn new(total_blocks: usize, block_size: usize) -> KvCache {
+        assert!(total_blocks > 0 && block_size > 0);
+        assert!(total_blocks < u32::MAX as usize);
+        KvCache {
+            block_size,
+            total_blocks,
+            // Reverse order so block 0 allocates first (cosmetic).
+            free: (0..total_blocks as u32).rev().collect(),
+            refcount: vec![0; total_blocks],
+        }
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.block_size
+    }
+
+    pub fn total_blocks(&self) -> usize {
+        self.total_blocks
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn used_blocks(&self) -> usize {
+        self.total_blocks - self.free.len()
+    }
+
+    /// Fraction of the cache in use — the paper's feature x6.
+    pub fn usage(&self) -> f64 {
+        self.used_blocks() as f64 / self.total_blocks as f64
+    }
+
+    /// Blocks needed to hold `tokens` tokens.
+    pub fn blocks_for(&self, tokens: u32) -> usize {
+        (tokens as usize).div_ceil(self.block_size)
+    }
+
+    /// Allocate `n` fresh blocks (refcount 1 each), or `None` if the pool
+    /// cannot satisfy the request (caller decides to queue or preempt).
+    pub fn alloc(&mut self, n: usize) -> Option<Vec<u32>> {
+        if self.free.len() < n {
+            return None;
+        }
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            let b = self.free.pop().unwrap();
+            debug_assert_eq!(self.refcount[b as usize], 0);
+            self.refcount[b as usize] = 1;
+            out.push(b);
+        }
+        Some(out)
+    }
+
+    /// Add a reference to already-allocated blocks (prefix-cache sharing).
+    pub fn share(&mut self, blocks: &[u32]) {
+        for &b in blocks {
+            assert!(
+                self.refcount[b as usize] > 0,
+                "sharing unallocated block {b}"
+            );
+            self.refcount[b as usize] += 1;
+        }
+    }
+
+    /// Release one reference on each block; blocks return to the pool
+    /// when their refcount reaches zero.
+    pub fn release(&mut self, blocks: &[u32]) {
+        for &b in blocks {
+            let rc = &mut self.refcount[b as usize];
+            assert!(*rc > 0, "double free of block {b}");
+            *rc -= 1;
+            if *rc == 0 {
+                self.free.push(b);
+            }
+        }
+    }
+
+    /// Invariant check (used by property tests): every block is either
+    /// free with refcount 0 or allocated with refcount > 0, exactly once.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let mut seen = vec![false; self.total_blocks];
+        for &b in &self.free {
+            let i = b as usize;
+            if seen[i] {
+                return Err(format!("block {b} on free list twice"));
+            }
+            seen[i] = true;
+            if self.refcount[i] != 0 {
+                return Err(format!(
+                    "free block {b} has refcount {}",
+                    self.refcount[i]
+                ));
+            }
+        }
+        for (i, &rc) in self.refcount.iter().enumerate() {
+            if !seen[i] && rc == 0 {
+                return Err(format!("block {i} leaked (rc 0, not free)"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::forall;
+
+    #[test]
+    fn alloc_free_roundtrip() {
+        let mut kv = KvCache::new(10, 16);
+        let a = kv.alloc(4).unwrap();
+        assert_eq!(kv.used_blocks(), 4);
+        assert!((kv.usage() - 0.4).abs() < 1e-12);
+        kv.release(&a);
+        assert_eq!(kv.used_blocks(), 0);
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn alloc_fails_when_exhausted() {
+        let mut kv = KvCache::new(4, 16);
+        let a = kv.alloc(3).unwrap();
+        assert!(kv.alloc(2).is_none());
+        assert!(kv.alloc(1).is_some());
+        kv.release(&a);
+        assert!(kv.alloc(2).is_some());
+    }
+
+    #[test]
+    fn sharing_defers_free() {
+        let mut kv = KvCache::new(4, 16);
+        let a = kv.alloc(2).unwrap();
+        kv.share(&a);
+        kv.release(&a); // one ref remains
+        assert_eq!(kv.used_blocks(), 2);
+        kv.release(&a);
+        assert_eq!(kv.used_blocks(), 0);
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    #[should_panic(expected = "double free")]
+    fn double_free_panics() {
+        let mut kv = KvCache::new(4, 16);
+        let a = kv.alloc(1).unwrap();
+        kv.release(&a);
+        kv.release(&a);
+    }
+
+    #[test]
+    fn blocks_for_rounds_up() {
+        let kv = KvCache::new(10, 16);
+        assert_eq!(kv.blocks_for(0), 0);
+        assert_eq!(kv.blocks_for(1), 1);
+        assert_eq!(kv.blocks_for(16), 1);
+        assert_eq!(kv.blocks_for(17), 2);
+    }
+
+    #[test]
+    fn property_random_alloc_share_release_never_corrupts() {
+        forall("kv cache invariants", 200, |rng| {
+            let mut kv = KvCache::new(32, 16);
+            let mut live: Vec<Vec<u32>> = Vec::new();
+            for _ in 0..200 {
+                match rng.index(3) {
+                    0 => {
+                        let n = rng.index(5) + 1;
+                        if let Some(blocks) = kv.alloc(n) {
+                            live.push(blocks);
+                        }
+                    }
+                    1 if !live.is_empty() => {
+                        let i = rng.index(live.len());
+                        let blocks = live[i].clone();
+                        kv.share(&blocks);
+                        live.push(blocks);
+                    }
+                    2 if !live.is_empty() => {
+                        let i = rng.index(live.len());
+                        let blocks = live.swap_remove(i);
+                        kv.release(&blocks);
+                    }
+                    _ => {}
+                }
+                kv.check_invariants()?;
+            }
+            for blocks in live.drain(..) {
+                kv.release(&blocks);
+            }
+            if kv.used_blocks() != 0 {
+                return Err(format!("leak: {} blocks", kv.used_blocks()));
+            }
+            kv.check_invariants()
+        });
+    }
+}

@@ -1,0 +1,185 @@
+//! Metric surface of the serving engine.
+//!
+//! [`MetricsSnapshot`] is the typed, cumulative view the AGFT monitor
+//! scrapes once per sampling window (the stand-in for vLLM's Prometheus
+//! endpoint); [`prometheus_text`] renders the same data in Prometheus
+//! exposition format for external scrapers. Everything here is a macro
+//! aggregate — no per-request fields, matching the paper's
+//! privacy/minimal-intrusiveness constraint.
+
+/// Cumulative counters + instantaneous gauges at a point in virtual time.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct MetricsSnapshot {
+    /// Virtual timestamp of the snapshot.
+    pub time_s: f64,
+    // --- counters (monotonic) ---
+    pub iterations_total: u64,
+    pub busy_iterations_total: u64,
+    pub prefill_tokens_total: u64,
+    pub decode_tokens_total: u64,
+    /// Σ tokens over busy iterations (packing-efficiency numerator).
+    pub batch_token_sum: u64,
+    pub finished_total: u64,
+    pub preemptions_total: u64,
+    pub prefix_hit_tokens_total: u64,
+    pub prefix_lookup_tokens_total: u64,
+    /// Virtual time spent with a non-empty wait queue (monotonic).
+    pub queue_time_s_total: f64,
+    pub energy_j_total: f64,
+    // --- gauges ---
+    pub requests_waiting: usize,
+    pub requests_running: usize,
+    pub kv_usage: f64,
+    pub power_w: f64,
+    pub clock_mhz: u32,
+}
+
+impl MetricsSnapshot {
+    /// Deltas of all counters relative to an earlier snapshot (the
+    /// feature extractor's per-window view).
+    pub fn delta(&self, earlier: &MetricsSnapshot) -> MetricsDelta {
+        MetricsDelta {
+            dt_s: self.time_s - earlier.time_s,
+            iterations: self.iterations_total - earlier.iterations_total,
+            busy_iterations: self.busy_iterations_total
+                - earlier.busy_iterations_total,
+            prefill_tokens: self.prefill_tokens_total
+                - earlier.prefill_tokens_total,
+            decode_tokens: self.decode_tokens_total
+                - earlier.decode_tokens_total,
+            batch_token_sum: self.batch_token_sum - earlier.batch_token_sum,
+            finished: self.finished_total - earlier.finished_total,
+            preemptions: self.preemptions_total - earlier.preemptions_total,
+            prefix_hit_tokens: self.prefix_hit_tokens_total
+                - earlier.prefix_hit_tokens_total,
+            prefix_lookup_tokens: self.prefix_lookup_tokens_total
+                - earlier.prefix_lookup_tokens_total,
+            queue_time_s: self.queue_time_s_total - earlier.queue_time_s_total,
+            energy_j: self.energy_j_total - earlier.energy_j_total,
+        }
+    }
+}
+
+/// Per-window counter deltas.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct MetricsDelta {
+    pub dt_s: f64,
+    pub iterations: u64,
+    pub busy_iterations: u64,
+    pub prefill_tokens: u64,
+    pub decode_tokens: u64,
+    pub batch_token_sum: u64,
+    pub finished: u64,
+    pub preemptions: u64,
+    pub prefix_hit_tokens: u64,
+    pub prefix_lookup_tokens: u64,
+    pub queue_time_s: f64,
+    pub energy_j: f64,
+}
+
+/// Render a snapshot in Prometheus text exposition format (the interface
+/// the paper scrapes on vLLM).
+pub fn prometheus_text(s: &MetricsSnapshot) -> String {
+    let mut out = String::with_capacity(1024);
+    let mut counter = |name: &str, help: &str, v: f64| {
+        out.push_str(&format!(
+            "# HELP agft_{name} {help}\n# TYPE agft_{name} counter\nagft_{name} {v}\n"
+        ));
+    };
+    counter("iterations_total", "engine iterations", s.iterations_total as f64);
+    counter(
+        "prefill_tokens_total",
+        "prompt tokens prefilled",
+        s.prefill_tokens_total as f64,
+    );
+    counter(
+        "decode_tokens_total",
+        "output tokens generated",
+        s.decode_tokens_total as f64,
+    );
+    counter(
+        "requests_finished_total",
+        "completed requests",
+        s.finished_total as f64,
+    );
+    counter(
+        "preemptions_total",
+        "recompute preemptions",
+        s.preemptions_total as f64,
+    );
+    counter(
+        "prefix_hit_tokens_total",
+        "prefix cache token hits",
+        s.prefix_hit_tokens_total as f64,
+    );
+    counter("energy_joules_total", "GPU energy", s.energy_j_total);
+    let mut gauge = |name: &str, help: &str, v: f64| {
+        out.push_str(&format!(
+            "# HELP agft_{name} {help}\n# TYPE agft_{name} gauge\nagft_{name} {v}\n"
+        ));
+    };
+    gauge(
+        "requests_waiting",
+        "queue depth",
+        s.requests_waiting as f64,
+    );
+    gauge(
+        "requests_running",
+        "running sequences",
+        s.requests_running as f64,
+    );
+    gauge("kv_cache_usage", "KV cache usage fraction", s.kv_usage);
+    gauge("power_watts", "instantaneous board power", s.power_w);
+    gauge("clock_mhz", "current core clock", s.clock_mhz as f64);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snap(t: f64, iters: u64, energy: f64) -> MetricsSnapshot {
+        MetricsSnapshot {
+            time_s: t,
+            iterations_total: iters,
+            busy_iterations_total: iters,
+            prefill_tokens_total: iters * 100,
+            decode_tokens_total: iters * 8,
+            batch_token_sum: iters * 108,
+            energy_j_total: energy,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn delta_subtracts_counters() {
+        let a = snap(1.0, 10, 50.0);
+        let b = snap(1.8, 25, 95.0);
+        let d = b.delta(&a);
+        assert!((d.dt_s - 0.8).abs() < 1e-12);
+        assert_eq!(d.iterations, 15);
+        assert_eq!(d.prefill_tokens, 1500);
+        assert!((d.energy_j - 45.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn prometheus_format_parses() {
+        let s = MetricsSnapshot {
+            kv_usage: 0.25,
+            power_w: 193.0,
+            clock_mhz: 1230,
+            ..snap(1.0, 5, 10.0)
+        };
+        let text = prometheus_text(&s);
+        assert!(text.contains("# TYPE agft_iterations_total counter"));
+        assert!(text.contains("agft_power_watts 193"));
+        assert!(text.contains("agft_clock_mhz 1230"));
+        assert!(text.contains("agft_kv_cache_usage 0.25"));
+        // every non-comment line is `name value`
+        for line in text.lines().filter(|l| !l.starts_with('#')) {
+            let parts: Vec<&str> = line.split(' ').collect();
+            assert_eq!(parts.len(), 2, "{line}");
+            parts[1].parse::<f64>().unwrap();
+        }
+    }
+}

@@ -1,0 +1,29 @@
+//! vLLM-like inference serving engine (the substitute for the paper's
+//! vLLM deployment, DESIGN.md §1).
+//!
+//! * [`request`] — request lifecycle and latency bookkeeping
+//!   (TTFT/TPOT/E2E exactly as the paper reports them).
+//! * [`kv_cache`] — paged, refcounted KV-cache block allocator
+//!   (PagedAttention-style) with preemption support.
+//! * [`prefix_cache`] — template-keyed prefix cache (vLLM automatic
+//!   prefix caching equivalent; drives the "High Cache Hit" prototype).
+//! * [`scheduler`] — continuous-batching iteration scheduler with
+//!   chunked prefill, token budgets and recompute preemption.
+//! * [`engine`] — the step loop tying scheduler + GPU roofline + virtual
+//!   clock together, exposing the macro metrics AGFT consumes.
+//! * [`static_batch`] — traditional static batching (Fig-1 baseline).
+//! * [`metrics`] — Prometheus-style metric export of the engine state.
+
+pub mod engine;
+pub mod kv_cache;
+pub mod metrics;
+pub mod prefix_cache;
+pub mod request;
+pub mod scheduler;
+pub mod static_batch;
+
+pub use engine::{Engine, EngineCounters, FinishedRecord};
+pub use kv_cache::KvCache;
+pub use prefix_cache::PrefixCache;
+pub use request::{Phase, Request};
+pub use scheduler::Scheduler;

@@ -1,0 +1,221 @@
+//! Prefix (template) cache — the vLLM automatic-prefix-caching
+//! equivalent. Keyed by prompt-template id; a hit lets a request skip
+//! prefill compute for its shared prefix by sharing refcounted KV blocks.
+//!
+//! Hit-rate statistics feed the paper's feature x7 (an aggregate that
+//! exposes no individual request's information).
+
+use std::collections::HashMap;
+
+use super::kv_cache::KvCache;
+
+#[derive(Debug, Clone)]
+struct Entry {
+    blocks: Vec<u32>,
+    tokens: u32,
+    last_used: u64,
+}
+
+/// LRU prefix cache over template ids.
+#[derive(Debug, Clone)]
+pub struct PrefixCache {
+    capacity_blocks: usize,
+    entries: HashMap<u32, Entry>,
+    used_blocks: usize,
+    tick: u64,
+    // cumulative token-level stats (x7 = hit / (hit + miss))
+    hit_tokens: u64,
+    lookup_tokens: u64,
+}
+
+impl PrefixCache {
+    pub fn new(capacity_blocks: usize) -> PrefixCache {
+        PrefixCache {
+            capacity_blocks,
+            entries: HashMap::new(),
+            used_blocks: 0,
+            tick: 0,
+            hit_tokens: 0,
+            lookup_tokens: 0,
+        }
+    }
+
+    /// Look up the cacheable prefix of a request. On a hit, the caller
+    /// receives the shared blocks (already re-refcounted in `kv`) and the
+    /// number of prompt tokens covered. `shared_prefix_tokens` is the
+    /// request's cacheable prefix length; statistics are token-level.
+    pub fn lookup(
+        &mut self,
+        template_id: u32,
+        shared_prefix_tokens: u32,
+        kv: &mut KvCache,
+    ) -> Option<(Vec<u32>, u32)> {
+        self.tick += 1;
+        self.lookup_tokens += shared_prefix_tokens as u64;
+        let tick = self.tick;
+        match self.entries.get_mut(&template_id) {
+            Some(entry) if shared_prefix_tokens >= entry.tokens => {
+                entry.last_used = tick;
+                kv.share(&entry.blocks);
+                self.hit_tokens += entry.tokens as u64;
+                Some((entry.blocks.clone(), entry.tokens))
+            }
+            _ => None,
+        }
+    }
+
+    /// Insert a freshly prefilled prefix: `blocks` are the request's
+    /// leading full blocks covering `tokens` prompt tokens. The cache
+    /// takes its own reference; LRU entries are evicted to fit.
+    pub fn insert(
+        &mut self,
+        template_id: u32,
+        blocks: &[u32],
+        tokens: u32,
+        kv: &mut KvCache,
+    ) {
+        if blocks.is_empty() || tokens == 0 {
+            return;
+        }
+        if blocks.len() > self.capacity_blocks {
+            return; // larger than the whole cache
+        }
+        if self.entries.contains_key(&template_id) {
+            return; // already cached (first writer wins)
+        }
+        while self.used_blocks + blocks.len() > self.capacity_blocks {
+            if !self.evict_lru(kv) {
+                return;
+            }
+        }
+        kv.share(blocks);
+        self.used_blocks += blocks.len();
+        self.tick += 1;
+        self.entries.insert(
+            template_id,
+            Entry {
+                blocks: blocks.to_vec(),
+                tokens,
+                last_used: self.tick,
+            },
+        );
+    }
+
+    fn evict_lru(&mut self, kv: &mut KvCache) -> bool {
+        let victim = self
+            .entries
+            .iter()
+            .min_by_key(|(_, e)| e.last_used)
+            .map(|(&k, _)| k);
+        match victim {
+            Some(k) => {
+                let entry = self.entries.remove(&k).unwrap();
+                self.used_blocks -= entry.blocks.len();
+                kv.release(&entry.blocks);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Drop every entry (releases the cache's block references).
+    pub fn clear(&mut self, kv: &mut KvCache) {
+        let keys: Vec<u32> = self.entries.keys().copied().collect();
+        for k in keys {
+            let entry = self.entries.remove(&k).unwrap();
+            self.used_blocks -= entry.blocks.len();
+            kv.release(&entry.blocks);
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn used_blocks(&self) -> usize {
+        self.used_blocks
+    }
+
+    /// Cumulative token-level (hits, lookups) — feature x7 is the ratio.
+    pub fn stats(&self) -> (u64, u64) {
+        (self.hit_tokens, self.lookup_tokens)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup() -> (PrefixCache, KvCache) {
+        (PrefixCache::new(8), KvCache::new(64, 16))
+    }
+
+    #[test]
+    fn miss_then_hit() {
+        let (mut pc, mut kv) = setup();
+        assert!(pc.lookup(7, 48, &mut kv).is_none());
+        let blocks = kv.alloc(3).unwrap(); // 48 tokens = 3 blocks
+        pc.insert(7, &blocks, 48, &mut kv);
+        let (shared, tokens) = pc.lookup(7, 48, &mut kv).unwrap();
+        assert_eq!(tokens, 48);
+        assert_eq!(shared, blocks);
+        let (h, l) = pc.stats();
+        assert_eq!((h, l), (48, 96)); // 1 miss + 1 hit, 48 tokens each
+    }
+
+    #[test]
+    fn shorter_request_prefix_is_a_miss() {
+        let (mut pc, mut kv) = setup();
+        let blocks = kv.alloc(3).unwrap();
+        pc.insert(7, &blocks, 48, &mut kv);
+        // A request whose shared prefix is shorter than the cached one
+        // cannot reuse it (different content beyond its own prefix).
+        assert!(pc.lookup(7, 32, &mut kv).is_none());
+    }
+
+    #[test]
+    fn lru_eviction_frees_blocks() {
+        let (mut pc, mut kv) = setup(); // capacity 8 blocks
+        let a = kv.alloc(4).unwrap();
+        let b = kv.alloc(4).unwrap();
+        pc.insert(1, &a, 64, &mut kv);
+        pc.insert(2, &b, 64, &mut kv);
+        kv.release(&a);
+        kv.release(&b); // only cache refs remain
+        assert_eq!(kv.used_blocks(), 8);
+        // Touch template 2 so template 1 is LRU.
+        pc.lookup(2, 64, &mut kv).map(|(bl, _)| kv.release(&bl));
+        let c = kv.alloc(4).unwrap();
+        pc.insert(3, &c, 64, &mut kv); // evicts template 1
+        assert_eq!(pc.len(), 2);
+        assert!(pc.lookup(1, 64, &mut kv).is_none());
+        assert!(pc.lookup(2, 64, &mut kv).is_some());
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn clear_releases_everything() {
+        let (mut pc, mut kv) = setup();
+        let a = kv.alloc(2).unwrap();
+        pc.insert(1, &a, 32, &mut kv);
+        kv.release(&a);
+        assert_eq!(kv.used_blocks(), 2);
+        pc.clear(&mut kv);
+        assert_eq!(kv.used_blocks(), 0);
+        assert!(pc.is_empty());
+    }
+
+    #[test]
+    fn oversized_insert_ignored() {
+        let (mut pc, mut kv) = setup();
+        let a = kv.alloc(9).unwrap(); // capacity is 8
+        pc.insert(1, &a, 144, &mut kv);
+        assert!(pc.is_empty());
+        kv.release(&a);
+        kv.check_invariants().unwrap();
+    }
+}

@@ -1,0 +1,208 @@
+//! Request lifecycle: arrival → (queue) → prefill → decode → finished,
+//! with the latency bookkeeping the paper's SLO metrics are built from.
+
+/// Processing phase of a request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// In the wait queue (arrived, not yet admitted).
+    Waiting,
+    /// Admitted; prompt tokens being prefilled (possibly chunked).
+    Prefill,
+    /// Generating output tokens, one per iteration.
+    Decode,
+    /// All output tokens produced; resources released.
+    Finished,
+}
+
+/// One inference request. Token counts are lengths only — per the paper's
+/// privacy stance the serving layer never sees prompt *content*, and the
+/// tuner never even sees these per-request lengths (only macro deltas).
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub arrival_s: f64,
+    /// Prompt (context) length in tokens.
+    pub prompt_tokens: u32,
+    /// Output tokens to generate before finishing.
+    pub target_output: u32,
+    /// Prompt-template identity (drives prefix-cache sharing).
+    pub template_id: u32,
+    /// Tokens of the prompt shared with other requests of this template
+    /// (the cacheable prefix).
+    pub shared_prefix_tokens: u32,
+
+    // --- dynamic state ---
+    pub phase: Phase,
+    /// Prompt tokens already prefilled (including cache-skipped ones).
+    pub prefilled: u32,
+    /// Prompt tokens skipped thanks to a prefix-cache hit.
+    pub cached_tokens: u32,
+    /// Output tokens generated so far.
+    pub generated: u32,
+    /// Value of `generated` at the last (re-)admission: tokens generated
+    /// before a preemption are re-prefilled as part of the prompt
+    /// (recompute policy) and must not be double-counted in the KV size.
+    pub resumed_generated: u32,
+    /// KV block ids held (owned + shared).
+    pub blocks: Vec<u32>,
+    /// Virtual time the first output token was emitted.
+    pub first_token_s: Option<f64>,
+    /// Virtual time the request finished.
+    pub finish_s: Option<f64>,
+    /// Number of times this request was preempted (recompute policy).
+    pub preemptions: u32,
+}
+
+impl Request {
+    pub fn new(
+        id: u64,
+        arrival_s: f64,
+        prompt_tokens: u32,
+        target_output: u32,
+        template_id: u32,
+        shared_prefix_tokens: u32,
+    ) -> Request {
+        assert!(prompt_tokens > 0, "empty prompt");
+        assert!(target_output > 0, "empty generation");
+        Request {
+            id,
+            arrival_s,
+            prompt_tokens,
+            target_output,
+            template_id,
+            shared_prefix_tokens: shared_prefix_tokens.min(prompt_tokens),
+            phase: Phase::Waiting,
+            prefilled: 0,
+            cached_tokens: 0,
+            generated: 0,
+            resumed_generated: 0,
+            blocks: Vec::new(),
+            first_token_s: None,
+            finish_s: None,
+            preemptions: 0,
+        }
+    }
+
+    /// Tokens whose K/V are *written* in the cache. The most recently
+    /// emitted token writes its KV only when its own decode iteration
+    /// runs (it is the next iteration's input), so post-admission
+    /// generation contributes `gen_since − 1`. Tokens generated before
+    /// the last preemption live inside `prefilled` (recompute).
+    pub fn kv_tokens(&self) -> u32 {
+        let gen_since = self.generated - self.resumed_generated;
+        self.prefilled + gen_since.saturating_sub(1)
+    }
+
+    /// Prompt tokens still to prefill (relative to the effective prompt).
+    pub fn prefill_remaining(&self) -> u32 {
+        self.effective_prompt().saturating_sub(self.prefilled)
+    }
+
+    /// Time to first token (defined once the first token exists).
+    pub fn ttft(&self) -> Option<f64> {
+        self.first_token_s.map(|t| t - self.arrival_s)
+    }
+
+    /// Time per output token over the decode phase (paper's TPOT:
+    /// generation time / (tokens − 1)).
+    pub fn tpot(&self) -> Option<f64> {
+        match (self.first_token_s, self.finish_s) {
+            (Some(first), Some(done)) if self.generated > 1 => {
+                Some((done - first) / (self.generated - 1) as f64)
+            }
+            (Some(_), Some(_)) => Some(0.0),
+            _ => None,
+        }
+    }
+
+    /// End-to-end latency.
+    pub fn e2e(&self) -> Option<f64> {
+        self.finish_s.map(|t| t - self.arrival_s)
+    }
+
+    /// Reset for recompute-style preemption: KV state is dropped; the
+    /// already-generated tokens are re-prefilled together with the prompt
+    /// when re-admitted (vLLM recompute semantics). TTFT, once set,
+    /// keeps its original value.
+    pub fn preempt(&mut self) {
+        self.phase = Phase::Waiting;
+        self.prefilled = 0;
+        self.cached_tokens = 0;
+        self.blocks.clear();
+        self.preemptions += 1;
+    }
+
+    /// Effective prompt length: original prompt plus the generated
+    /// tokens that existed at (re-)admission and must be recomputed.
+    pub fn effective_prompt(&self) -> u32 {
+        self.prompt_tokens + self.resumed_generated
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req() -> Request {
+        Request::new(1, 10.0, 100, 50, 3, 64)
+    }
+
+    #[test]
+    fn latency_accounting() {
+        let mut r = req();
+        assert_eq!(r.ttft(), None);
+        r.first_token_s = Some(10.5);
+        r.generated = 50;
+        r.finish_s = Some(11.48);
+        assert!((r.ttft().unwrap() - 0.5).abs() < 1e-12);
+        assert!((r.tpot().unwrap() - 0.98 / 49.0).abs() < 1e-12);
+        assert!((r.e2e().unwrap() - 1.48).abs() < 1e-12);
+    }
+
+    #[test]
+    fn single_token_tpot_zero() {
+        let mut r = req();
+        r.generated = 1;
+        r.first_token_s = Some(10.2);
+        r.finish_s = Some(10.2);
+        assert_eq!(r.tpot(), Some(0.0));
+    }
+
+    #[test]
+    fn preempt_resets_kv_but_keeps_progress() {
+        let mut r = req();
+        r.phase = Phase::Decode;
+        r.prefilled = 100;
+        r.generated = 7;
+        r.blocks = vec![1, 2, 3];
+        r.first_token_s = Some(10.4);
+        r.preempt();
+        assert_eq!(r.phase, Phase::Waiting);
+        assert_eq!(r.prefilled, 0);
+        assert!(r.blocks.is_empty());
+        assert_eq!(r.generated, 7);
+        assert_eq!(r.preemptions, 1);
+        assert_eq!(r.first_token_s, Some(10.4));
+        // On re-admission the generated tokens fold into the prompt.
+        r.resumed_generated = r.generated;
+        assert_eq!(r.effective_prompt(), 107);
+        r.prefilled = 107;
+        assert_eq!(r.kv_tokens(), 107);
+        r.generated += 1; // completion token emitted, KV not yet written
+        assert_eq!(r.kv_tokens(), 107);
+        r.generated += 1; // first real decode wrote the previous token
+        assert_eq!(r.kv_tokens(), 108);
+    }
+
+    #[test]
+    fn shared_prefix_clamped_to_prompt() {
+        let r = Request::new(1, 0.0, 32, 10, 0, 1000);
+        assert_eq!(r.shared_prefix_tokens, 32);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty prompt")]
+    fn rejects_empty_prompt() {
+        Request::new(1, 0.0, 0, 10, 0, 0);
+    }
+}

@@ -1,0 +1,566 @@
+//! Continuous-batching iteration scheduler (vLLM/Orca-style).
+//!
+//! Each engine iteration mixes one decode token per running sequence with
+//! chunked-prefill tokens for admitting sequences, under a per-iteration
+//! token budget (`max_batch_tokens`) and a sequence cap (`max_num_seqs`).
+//! KV blocks are allocated lazily; exhaustion triggers recompute
+//! preemption of the latest-admitted sequence (vLLM's policy).
+//!
+//! The scheduler produces an [`IterationWork`] for the GPU roofline and
+//! commits request-state transitions once the engine knows the
+//! iteration's (virtual) completion time.
+
+use std::collections::VecDeque;
+
+use crate::config::ServerConfig;
+use crate::gpu::perf::IterationWork;
+
+use super::kv_cache::KvCache;
+use super::prefix_cache::PrefixCache;
+use super::request::{Phase, Request};
+
+/// The plan for one iteration: the roofline work plus which requests
+/// decode / complete prefill (state committed after timing).
+#[derive(Debug, Clone, Default)]
+pub struct IterationPlan {
+    pub work: IterationWork,
+    /// Requests producing one decode token this iteration.
+    pub decode_ids: Vec<usize>,
+    /// Requests whose prefill completes this iteration (first token).
+    pub completions: Vec<usize>,
+}
+
+/// Continuous-batching scheduler state.
+#[derive(Debug)]
+pub struct Scheduler {
+    pub kv: KvCache,
+    pub prefix: Option<PrefixCache>,
+    max_num_seqs: usize,
+    max_batch_tokens: usize,
+    block_size: usize,
+    /// Request slab; indices are stable ids for the engine's lifetime.
+    pub requests: Vec<Request>,
+    waiting: VecDeque<usize>,
+    running: Vec<usize>, // admission order (last = preemption victim)
+    preemptions: u64,
+    /// Requests finished since the last `take_finished` (engine drain).
+    finished_recent: Vec<usize>,
+}
+
+impl Scheduler {
+    pub fn new(cfg: &ServerConfig) -> Scheduler {
+        Scheduler {
+            kv: KvCache::new(cfg.kv_blocks, cfg.block_size),
+            prefix: if cfg.prefix_cache {
+                Some(PrefixCache::new(cfg.prefix_cache_blocks))
+            } else {
+                None
+            },
+            max_num_seqs: cfg.max_num_seqs,
+            max_batch_tokens: cfg.max_batch_tokens,
+            block_size: cfg.block_size,
+            requests: Vec::new(),
+            waiting: VecDeque::new(),
+            running: Vec::new(),
+            preemptions: 0,
+            finished_recent: Vec::new(),
+        }
+    }
+
+    /// Drain the ids of requests that finished since the last call.
+    pub fn take_finished(&mut self) -> Vec<usize> {
+        std::mem::take(&mut self.finished_recent)
+    }
+
+    /// Enqueue an arrived request; returns its slab id.
+    pub fn submit(&mut self, req: Request) -> usize {
+        let id = self.requests.len();
+        self.requests.push(req);
+        self.waiting.push_back(id);
+        id
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.waiting.len()
+    }
+
+    pub fn running_count(&self) -> usize {
+        self.running.len()
+    }
+
+    pub fn has_work(&self) -> bool {
+        !self.waiting.is_empty() || !self.running.is_empty()
+    }
+
+    pub fn preemptions(&self) -> u64 {
+        self.preemptions
+    }
+
+    /// Admit waiting requests while capacity allows.
+    fn admit(&mut self) {
+        while self.running.len() < self.max_num_seqs {
+            let Some(&id) = self.waiting.front() else { break };
+            let needed_tokens = self.requests[id].effective_prompt();
+            let mut shared_blocks: Vec<u32> = Vec::new();
+            let mut cached_tokens = 0u32;
+            // Prefix-cache lookup: only for fresh requests whose shared
+            // prefix is strictly shorter than the prompt (at least one
+            // real token must be prefilled to produce logits).
+            if self.requests[id].generated == 0 {
+                let tpl = self.requests[id].template_id;
+                let spt = self.requests[id].shared_prefix_tokens;
+                if spt > 0 && spt < self.requests[id].prompt_tokens {
+                    if let Some(pc) = self.prefix.as_mut() {
+                        if let Some((blocks, tokens)) =
+                            pc.lookup(tpl, spt, &mut self.kv)
+                        {
+                            shared_blocks = blocks;
+                            cached_tokens = tokens;
+                        }
+                    }
+                }
+            }
+            // Admission control: the whole prompt must fit.
+            let total_blocks =
+                (needed_tokens as usize).div_ceil(self.block_size);
+            let fresh_needed =
+                total_blocks.saturating_sub(shared_blocks.len());
+            if self.kv.free_blocks() < fresh_needed {
+                // Roll back the shared reference and keep waiting.
+                if !shared_blocks.is_empty() {
+                    self.kv.release(&shared_blocks);
+                }
+                break;
+            }
+            self.waiting.pop_front();
+            let req = &mut self.requests[id];
+            req.phase = Phase::Prefill;
+            req.cached_tokens = cached_tokens;
+            req.prefilled = cached_tokens;
+            req.blocks = shared_blocks;
+            req.resumed_generated = req.generated;
+            self.running.push(id);
+        }
+    }
+
+    /// Preempt the latest-admitted running request other than `exclude`
+    /// (or `exclude` itself if it is the only one). Returns false if
+    /// there was nothing to preempt.
+    fn preempt_latest(&mut self, exclude: usize) -> bool {
+        let victim_pos = (0..self.running.len())
+            .rev()
+            .find(|&i| self.running[i] != exclude)
+            .or_else(|| {
+                self.running
+                    .iter()
+                    .position(|&id| id == exclude)
+            });
+        let Some(pos) = victim_pos else { return false };
+        let victim = self.running.remove(pos);
+        let blocks = std::mem::take(&mut self.requests[victim].blocks);
+        self.kv.release(&blocks);
+        self.requests[victim].preempt();
+        self.waiting.push_front(victim);
+        self.preemptions += 1;
+        true
+    }
+
+    /// Try to grow a request's block list to cover `tokens` tokens,
+    /// preempting later-admitted requests if the pool is exhausted.
+    /// Returns false if even preemption could not make room (the request
+    /// itself was preempted).
+    fn ensure_blocks(&mut self, id: usize, tokens: u32) -> bool {
+        loop {
+            let have = self.requests[id].blocks.len();
+            let need = (tokens as usize)
+                .div_ceil(self.block_size)
+                .saturating_sub(have);
+            if need == 0 {
+                return true;
+            }
+            if let Some(mut fresh) = self.kv.alloc(need) {
+                self.requests[id].blocks.append(&mut fresh);
+                return true;
+            }
+            let self_was_running =
+                self.running.iter().any(|&r| r == id);
+            if !self.preempt_latest(id) {
+                return false;
+            }
+            // If we ended up preempting ourselves, give up.
+            if self_was_running && !self.running.iter().any(|&r| r == id) {
+                return false;
+            }
+        }
+    }
+
+    /// Build the next iteration. Mutates allocation/prefill progress;
+    /// token-emission state is committed by [`Scheduler::commit`].
+    pub fn plan(&mut self) -> IterationPlan {
+        self.admit();
+        let mut plan = IterationPlan::default();
+        let mut budget = self.max_batch_tokens;
+
+        // --- decode: one token per running Decode sequence ---
+        let decode_candidates: Vec<usize> = self
+            .running
+            .iter()
+            .copied()
+            .filter(|&id| self.requests[id].phase == Phase::Decode)
+            .collect();
+        for id in decode_candidates {
+            if budget == 0 {
+                break;
+            }
+            // The request may have been preempted by an earlier decode's
+            // block grab within this same planning pass.
+            if self.requests[id].phase != Phase::Decode {
+                continue;
+            }
+            // The incoming token writes its KV at position kv_tokens,
+            // then attends over kv_tokens + 1 positions.
+            let next_tokens = self.requests[id].kv_tokens() + 1;
+            if !self.ensure_blocks(id, next_tokens) {
+                continue; // self-preempted
+            }
+            budget -= 1;
+            plan.work.decode_seqs += 1;
+            plan.work.decode_kv_tokens += next_tokens as u64;
+            plan.decode_ids.push(id);
+        }
+
+        // --- prefill: chunked, admission order ---
+        let prefill_candidates: Vec<usize> = self
+            .running
+            .iter()
+            .copied()
+            .filter(|&id| self.requests[id].phase == Phase::Prefill)
+            .collect();
+        for id in prefill_candidates {
+            if budget == 0 {
+                break;
+            }
+            if self.requests[id].phase != Phase::Prefill {
+                continue;
+            }
+            let target = self.requests[id].effective_prompt();
+            let remaining = target - self.requests[id].prefilled;
+            let chunk = remaining.min(budget as u32);
+            if chunk == 0 {
+                continue;
+            }
+            let upto = self.requests[id].prefilled + chunk;
+            if !self.ensure_blocks(id, upto) {
+                continue;
+            }
+            let ctx_before = self.requests[id].prefilled as u64;
+            self.requests[id].prefilled = upto;
+            budget -= chunk as usize;
+            plan.work.prefill_tokens += chunk as u64;
+            // Σ over chunk tokens of their context length ≈
+            // chunk * ctx_before + chunk²/2 (triangular attention).
+            plan.work.prefill_ctx_weighted +=
+                chunk as u64 * ctx_before + (chunk as u64).pow(2) / 2;
+            if upto == target {
+                plan.completions.push(id);
+            }
+        }
+        plan
+    }
+
+    /// Commit token emission at virtual time `now` (iteration end).
+    pub fn commit(&mut self, plan: &IterationPlan, now: f64) {
+        for &id in &plan.decode_ids {
+            // Skip requests preempted later in the same planning pass.
+            if self.requests[id].phase != Phase::Decode {
+                continue;
+            }
+            self.requests[id].generated += 1;
+            if self.requests[id].generated
+                >= self.requests[id].target_output
+            {
+                self.finish(id, now);
+            }
+        }
+        for &id in &plan.completions {
+            if self.requests[id].phase != Phase::Prefill {
+                continue;
+            }
+            // Prefill completion emits the first (or next, if resumed
+            // after preemption) token.
+            self.maybe_cache_prefix(id);
+            let req = &mut self.requests[id];
+            req.phase = Phase::Decode;
+            req.generated += 1;
+            if req.first_token_s.is_none() {
+                req.first_token_s = Some(now);
+            }
+            if req.generated >= req.target_output {
+                self.finish(id, now);
+            }
+        }
+    }
+
+    fn maybe_cache_prefix(&mut self, id: usize) {
+        let Some(pc) = self.prefix.as_mut() else { return };
+        let req = &self.requests[id];
+        if req.cached_tokens > 0 || req.generated > 0 {
+            return; // hit already, or resumed request
+        }
+        let full_blocks =
+            (req.shared_prefix_tokens as usize) / self.block_size;
+        if full_blocks == 0 {
+            return;
+        }
+        let tokens = (full_blocks * self.block_size) as u32;
+        let blocks: Vec<u32> =
+            req.blocks[..full_blocks].to_vec();
+        pc.insert(req.template_id, &blocks, tokens, &mut self.kv);
+    }
+
+    fn finish(&mut self, id: usize, now: f64) {
+        let req = &mut self.requests[id];
+        req.phase = Phase::Finished;
+        req.finish_s = Some(now);
+        let blocks = std::mem::take(&mut req.blocks);
+        self.kv.release(&blocks);
+        self.running.retain(|&r| r != id);
+        self.finished_recent.push(id);
+    }
+
+    /// Consistency checks for tests: running/waiting sets disjoint,
+    /// block accounting matches the allocator.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        self.kv.check_invariants()?;
+        for &id in &self.running {
+            let phase = self.requests[id].phase;
+            if phase != Phase::Prefill && phase != Phase::Decode {
+                return Err(format!("running req {id} in phase {phase:?}"));
+            }
+        }
+        for &id in &self.waiting {
+            if self.requests[id].phase != Phase::Waiting {
+                return Err(format!(
+                    "waiting req {id} in phase {:?}",
+                    self.requests[id].phase
+                ));
+            }
+            if !self.requests[id].blocks.is_empty() {
+                return Err(format!("waiting req {id} holds blocks"));
+            }
+        }
+        for &id in &self.running {
+            if self.waiting.contains(&id) {
+                return Err(format!("req {id} both running and waiting"));
+            }
+            let req = &self.requests[id];
+            let min_blocks =
+                (req.kv_tokens() as usize).div_ceil(self.block_size);
+            if req.blocks.len() < min_blocks {
+                return Err(format!(
+                    "req {id}: {} blocks < {} needed",
+                    req.blocks.len(),
+                    min_blocks
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ServerConfig;
+
+    fn small_cfg() -> ServerConfig {
+        ServerConfig {
+            max_num_seqs: 4,
+            max_batch_tokens: 64,
+            kv_blocks: 32,
+            block_size: 16,
+            prefix_cache: true,
+            prefix_cache_blocks: 8,
+            static_batch_size: 4,
+        }
+    }
+
+    fn drive_to_completion(s: &mut Scheduler, max_iters: usize) -> usize {
+        let mut iters = 0;
+        let mut t = 0.0;
+        while s.has_work() && iters < max_iters {
+            let plan = s.plan();
+            t += 0.01;
+            s.commit(&plan, t);
+            s.check_invariants().unwrap();
+            iters += 1;
+        }
+        iters
+    }
+
+    #[test]
+    fn single_request_lifecycle() {
+        let mut s = Scheduler::new(&small_cfg());
+        let id = s.submit(Request::new(0, 0.0, 100, 5, 0, 0));
+        let iters = drive_to_completion(&mut s, 100);
+        let req = &s.requests[id];
+        assert_eq!(req.phase, Phase::Finished);
+        assert_eq!(req.generated, 5);
+        assert!(req.first_token_s.is_some());
+        assert!(req.finish_s.unwrap() >= req.first_token_s.unwrap());
+        // 100-token prompt at 64-token budget = 2 prefill iters, then 4
+        // more decode tokens.
+        assert_eq!(iters, 6);
+        assert_eq!(s.kv.used_blocks(), 0);
+    }
+
+    #[test]
+    fn chunked_prefill_respects_budget() {
+        let mut s = Scheduler::new(&small_cfg());
+        s.submit(Request::new(0, 0.0, 200, 2, 0, 0));
+        let plan = s.plan();
+        assert_eq!(plan.work.prefill_tokens, 64);
+        assert!(plan.completions.is_empty());
+        s.commit(&plan, 0.01);
+        let plan2 = s.plan();
+        assert_eq!(plan2.work.prefill_tokens, 64);
+    }
+
+    #[test]
+    fn decode_and_prefill_interleave() {
+        let mut s = Scheduler::new(&small_cfg());
+        let a = s.submit(Request::new(0, 0.0, 32, 10, 0, 0));
+        // Finish A's prefill.
+        let plan = s.plan();
+        s.commit(&plan, 0.01);
+        assert_eq!(s.requests[a].phase, Phase::Decode);
+        // B arrives; next iteration decodes A and prefills B.
+        s.submit(Request::new(1, 0.0, 40, 3, 1, 0));
+        let plan = s.plan();
+        assert_eq!(plan.work.decode_seqs, 1);
+        assert_eq!(plan.work.prefill_tokens, 40);
+        assert_eq!(plan.completions.len(), 1);
+    }
+
+    #[test]
+    fn preemption_on_kv_exhaustion_and_recovery() {
+        // Pool of 8 blocks × 16 = 128 tokens total.
+        let cfg = ServerConfig {
+            kv_blocks: 8,
+            prefix_cache: false,
+            ..small_cfg()
+        };
+        let mut s = Scheduler::new(&cfg);
+        s.submit(Request::new(0, 0.0, 48, 80, 0, 0));
+        s.submit(Request::new(1, 0.0, 48, 80, 1, 0));
+        let iters = drive_to_completion(&mut s, 2000);
+        assert!(iters < 2000, "did not converge");
+        assert!(s.preemptions() > 0, "expected kv-pressure preemption");
+        for req in &s.requests {
+            assert_eq!(req.phase, Phase::Finished);
+            assert_eq!(req.generated, req.target_output);
+        }
+        assert_eq!(s.kv.used_blocks(), 0);
+    }
+
+    #[test]
+    fn prefix_cache_hit_skips_prefill_compute() {
+        let mut s = Scheduler::new(&small_cfg());
+        // Template 7 with a 32-token shared prefix (2 full blocks).
+        s.submit(Request::new(0, 0.0, 48, 2, 7, 32));
+        let p1 = s.plan();
+        assert_eq!(p1.work.prefill_tokens, 48); // cold: full prefill
+        s.commit(&p1, 0.01);
+        let mut t = 0.01;
+        while s.has_work() {
+            let p = s.plan();
+            t += 0.01;
+            s.commit(&p, t);
+        }
+        // Same template again: 32 tokens come from the cache.
+        let id2 = s.submit(Request::new(1, 1.0, 48, 2, 7, 32));
+        let p2 = s.plan();
+        assert_eq!(p2.work.prefill_tokens, 16, "hit should skip 32");
+        assert_eq!(s.requests[id2].cached_tokens, 32);
+        s.commit(&p2, t + 0.01);
+        while s.has_work() {
+            let p = s.plan();
+            t += 0.01;
+            s.commit(&p, t);
+        }
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn max_seqs_respected() {
+        let mut s = Scheduler::new(&small_cfg()); // max 4 seqs
+        for i in 0..8 {
+            s.submit(Request::new(i, 0.0, 16, 50, i as u32, 0));
+        }
+        let _ = s.plan();
+        assert_eq!(s.running_count(), 4);
+        assert_eq!(s.queue_depth(), 4);
+    }
+
+    #[test]
+    fn target_output_one_finishes_at_prefill() {
+        let mut s = Scheduler::new(&small_cfg());
+        let id = s.submit(Request::new(0, 0.0, 16, 1, 0, 0));
+        let plan = s.plan();
+        s.commit(&plan, 0.5);
+        let req = &s.requests[id];
+        assert_eq!(req.phase, Phase::Finished);
+        assert_eq!(req.first_token_s, Some(0.5));
+        assert_eq!(req.finish_s, Some(0.5));
+    }
+
+    #[test]
+    fn property_no_request_starves() {
+        use crate::util::check::forall;
+        forall("scheduler liveness", 25, |rng| {
+            let cfg = ServerConfig {
+                max_num_seqs: 4,
+                max_batch_tokens: 128,
+                kv_blocks: 24,
+                block_size: 16,
+                prefix_cache: rng.f64() < 0.5,
+                prefix_cache_blocks: 6,
+                static_batch_size: 4,
+            };
+            let mut s = Scheduler::new(&cfg);
+            let n = rng.index(10) + 2;
+            for i in 0..n {
+                let prompt = rng.range_u64(1, 150) as u32;
+                let out = rng.range_u64(1, 60) as u32;
+                let tpl = rng.range_u64(0, 3) as u32;
+                let shared = (prompt * 3 / 4).min(96);
+                s.submit(Request::new(i as u64, 0.0, prompt, out, tpl,
+                                      shared));
+            }
+            let mut t = 0.0;
+            let mut iters = 0;
+            while s.has_work() {
+                let plan = s.plan();
+                t += 0.01;
+                s.commit(&plan, t);
+                iters += 1;
+                if iters > 20_000 {
+                    return Err("livelock".to_string());
+                }
+                s.check_invariants()?;
+            }
+            for req in &s.requests {
+                if req.phase != Phase::Finished {
+                    return Err(format!("req {} unfinished", req.id));
+                }
+                if req.generated != req.target_output {
+                    return Err(format!(
+                        "req {} generated {} != {}",
+                        req.id, req.generated, req.target_output
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+}

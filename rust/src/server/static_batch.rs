@@ -1,0 +1,200 @@
+//! Traditional static batching (the paper's Fig-1 left panel): requests
+//! are grouped into fixed batches; the whole batch prefills together,
+//! then decodes until the *longest* sequence finishes, and results return
+//! all at once. Produces the clean two-phase power signature that
+//! continuous batching destroys.
+
+use crate::config::ExperimentConfig;
+use crate::gpu::perf::{IterationWork, PerfModel};
+use crate::gpu::SimGpu;
+use crate::sim::Clock;
+
+use super::request::Request;
+
+/// Result of a static-batching run.
+#[derive(Debug, Clone, Default)]
+pub struct StaticRunReport {
+    pub energy_j: f64,
+    pub duration_s: f64,
+    pub power_trace: Vec<(f64, f64)>,
+    pub ttfts: Vec<f64>,
+    pub e2es: Vec<f64>,
+}
+
+/// Run `requests` through static batching of width
+/// `cfg.server.static_batch_size` at the governor's clock.
+pub fn run_static(
+    cfg: &ExperimentConfig,
+    mut requests: Vec<Request>,
+    trace_every_s: f64,
+) -> StaticRunReport {
+    requests.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
+    let perf = PerfModel::new(&cfg.gpu, &cfg.model);
+    let mut gpu = SimGpu::new(&cfg.gpu, cfg.governor);
+    let mut clock = Clock::new();
+    let mut report = StaticRunReport::default();
+    let mut last_trace = f64::NEG_INFINITY;
+    let batch_size = cfg.server.static_batch_size.max(1);
+    let budget = cfg.server.max_batch_tokens as u32;
+
+    let mut trace = |t: f64, w: f64, report: &mut StaticRunReport| {
+        if t - last_trace >= trace_every_s {
+            report.power_trace.push((t, w));
+            last_trace = t;
+        }
+    };
+
+    for batch in requests.chunks(batch_size) {
+        // Wait (idle) until the whole batch has arrived — static batching
+        // blocks on batch formation.
+        let batch_ready = batch
+            .iter()
+            .map(|r| r.arrival_s)
+            .fold(f64::NEG_INFINITY, f64::max);
+        if batch_ready > clock.now() {
+            let mut t = clock.now();
+            while t < batch_ready {
+                let dt = (batch_ready - t).min(0.1);
+                let cost = crate::gpu::perf::IterationCost {
+                    time_s: dt,
+                    util_compute: 0.0,
+                    util_mem: 0.0,
+                };
+                let f_idle = gpu.table().min_mhz();
+                gpu.account_iteration(f_idle, &cost, true);
+                clock.advance(dt);
+                t = clock.now();
+                trace(t, gpu.power_w(), &mut report);
+            }
+        }
+
+        let f_mhz = gpu.effective_mhz(true);
+
+        // --- phase 1: batch prefill (chunked by token budget) ---
+        let mut remaining: Vec<u32> =
+            batch.iter().map(|r| r.prompt_tokens).collect();
+        let mut done_prefix: Vec<u32> = vec![0; batch.len()];
+        while remaining.iter().any(|&r| r > 0) {
+            let mut work = IterationWork::default();
+            let mut budget_left = budget;
+            for (i, rem) in remaining.iter_mut().enumerate() {
+                if *rem == 0 || budget_left == 0 {
+                    continue;
+                }
+                let chunk = (*rem).min(budget_left);
+                work.prefill_tokens += chunk as u64;
+                work.prefill_ctx_weighted += chunk as u64
+                    * done_prefix[i] as u64
+                    + (chunk as u64).pow(2) / 2;
+                done_prefix[i] += chunk;
+                *rem -= chunk;
+                budget_left -= chunk;
+            }
+            let cost = perf.cost(&work, f_mhz);
+            let dt = gpu.account_iteration(f_mhz, &cost, false);
+            clock.advance(dt);
+            trace(clock.now(), gpu.power_w(), &mut report);
+        }
+        for r in batch {
+            report.ttfts.push(clock.now() - r.arrival_s);
+        }
+
+        // --- phase 2: lockstep decode until the longest sequence ends ---
+        let max_out = batch.iter().map(|r| r.target_output).max().unwrap_or(0);
+        let mut kv: Vec<u32> = batch.iter().map(|r| r.prompt_tokens).collect();
+        for step in 0..max_out {
+            let mut work = IterationWork::default();
+            for (i, r) in batch.iter().enumerate() {
+                if step < r.target_output {
+                    work.decode_seqs += 1;
+                    work.decode_kv_tokens += kv[i] as u64;
+                    kv[i] += 1;
+                }
+            }
+            let cost = perf.cost(&work, f_mhz);
+            let dt = gpu.account_iteration(f_mhz, &cost, false);
+            clock.advance(dt);
+            trace(clock.now(), gpu.power_w(), &mut report);
+        }
+        // All results return together (the static-batching latency tax).
+        for r in batch {
+            report.e2es.push(clock.now() - r.arrival_s);
+        }
+    }
+
+    report.energy_j = gpu.energy_j();
+    report.duration_s = clock.now();
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ExperimentConfig, GovernorKind};
+
+    fn cfg() -> ExperimentConfig {
+        ExperimentConfig {
+            governor: GovernorKind::Default,
+            ..ExperimentConfig::default()
+        }
+    }
+
+    fn requests(n: u64) -> Vec<Request> {
+        (0..n)
+            .map(|i| Request::new(i, 0.1 * i as f64, 512, 64, i as u32, 0))
+            .collect()
+    }
+
+    #[test]
+    fn completes_and_accounts() {
+        let rep = run_static(&cfg(), requests(16), 0.05);
+        assert_eq!(rep.ttfts.len(), 16);
+        assert_eq!(rep.e2es.len(), 16);
+        assert!(rep.energy_j > 0.0);
+        assert!(rep.duration_s > 0.0);
+        assert!(!rep.power_trace.is_empty());
+    }
+
+    #[test]
+    fn all_results_return_together_per_batch() {
+        let mut c = cfg();
+        c.server.static_batch_size = 8;
+        let rep = run_static(&c, requests(8), 0.05);
+        // One batch → all e2e share the same finish time ⇒ e2e differences
+        // equal arrival differences.
+        let finish: Vec<f64> = rep
+            .e2es
+            .iter()
+            .zip(requests(8))
+            .map(|(e, r)| e + r.arrival_s)
+            .collect();
+        for w in finish.windows(2) {
+            assert!((w[0] - w[1]).abs() < 1e-9, "{finish:?}");
+        }
+    }
+
+    #[test]
+    fn two_phase_power_signature_visible() {
+        // Prefill (compute-bound) power must exceed decode power.
+        let mut c = cfg();
+        c.server.static_batch_size = 16;
+        let reqs: Vec<Request> = (0..16)
+            .map(|i| Request::new(i, 0.0, 2048, 256, i as u32, 0))
+            .collect();
+        let rep = run_static(&c, reqs, 0.01);
+        let n = rep.power_trace.len();
+        assert!(n > 10);
+        let early: f64 = rep.power_trace[..n / 8]
+            .iter()
+            .map(|s| s.1)
+            .sum::<f64>() / (n / 8) as f64;
+        let late: f64 = rep.power_trace[n * 6 / 8..]
+            .iter()
+            .map(|s| s.1)
+            .sum::<f64>() / (n - n * 6 / 8) as f64;
+        assert!(
+            early > late,
+            "prefill power {early} should exceed decode power {late}"
+        );
+    }
+}

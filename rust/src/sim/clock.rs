@@ -1,0 +1,55 @@
+//! Virtual clock. Monotonic, f64 seconds.
+
+/// Monotonic virtual clock (seconds since experiment start).
+#[derive(Debug, Clone, Default)]
+pub struct Clock {
+    now_s: f64,
+}
+
+impl Clock {
+    pub fn new() -> Clock {
+        Clock { now_s: 0.0 }
+    }
+
+    #[inline]
+    pub fn now(&self) -> f64 {
+        self.now_s
+    }
+
+    /// Advance by `dt` seconds. Panics on negative or non-finite dt —
+    /// time travel here is always an upstream model bug worth catching.
+    #[inline]
+    pub fn advance(&mut self, dt: f64) {
+        assert!(
+            dt.is_finite() && dt >= 0.0,
+            "clock advance by invalid dt={dt}"
+        );
+        self.now_s += dt;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn advances_monotonically() {
+        let mut c = Clock::new();
+        assert_eq!(c.now(), 0.0);
+        c.advance(0.5);
+        c.advance(0.25);
+        assert!((c.now() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid dt")]
+    fn rejects_negative() {
+        Clock::new().advance(-1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid dt")]
+    fn rejects_nan() {
+        Clock::new().advance(f64::NAN);
+    }
+}

@@ -1,0 +1,7 @@
+//! Discrete-event virtual time: the whole serving stack runs on a
+//! [`Clock`] so a 12-hour paper experiment completes in seconds of host
+//! time while latencies/energies stay physically meaningful.
+
+pub mod clock;
+
+pub use clock::Clock;

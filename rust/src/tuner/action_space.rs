@@ -1,0 +1,214 @@
+//! Action-space bookkeeping: the currently selectable frequencies, the
+//! permanently banned ones, and per-frequency observation statistics
+//! shared by pruning and refinement.
+
+use std::collections::{HashMap, HashSet};
+
+use crate::util::RunningStats;
+
+/// Per-frequency observation statistics.
+#[derive(Debug, Clone, Default)]
+pub struct FreqStats {
+    pub n: u64,
+    pub reward_sum: f64,
+    pub edp: RunningStats,
+}
+
+impl FreqStats {
+    pub fn mean_reward(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.reward_sum / self.n as f64
+        }
+    }
+}
+
+/// The mutable action space.
+#[derive(Debug, Clone)]
+pub struct ActionSpace {
+    active: Vec<u32>,
+    banned: HashSet<u32>,
+    stats: HashMap<u32, FreqStats>,
+    /// Pruning events (freq, round, permanent) — experiment telemetry.
+    pub prune_log: Vec<(u32, u64, bool)>,
+}
+
+impl ActionSpace {
+    /// Start with the given candidate frequencies (sorted ascending).
+    pub fn new(initial: Vec<u32>) -> ActionSpace {
+        let mut active = initial;
+        active.sort_unstable();
+        active.dedup();
+        assert!(!active.is_empty(), "empty initial action space");
+        ActionSpace {
+            active,
+            banned: HashSet::new(),
+            stats: HashMap::new(),
+            prune_log: Vec::new(),
+        }
+    }
+
+    pub fn active(&self) -> &[u32] {
+        &self.active
+    }
+
+    pub fn len(&self) -> usize {
+        self.active.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.active.is_empty()
+    }
+
+    pub fn contains(&self, freq: u32) -> bool {
+        self.active.contains(&freq)
+    }
+
+    pub fn is_banned(&self, freq: u32) -> bool {
+        self.banned.contains(&freq)
+    }
+
+    /// Record one window observation for a frequency.
+    pub fn record(&mut self, freq: u32, reward: f64, edp: f64) {
+        let s = self.stats.entry(freq).or_default();
+        s.n += 1;
+        s.reward_sum += reward;
+        s.edp.push(edp);
+    }
+
+    pub fn stats(&self, freq: u32) -> Option<&FreqStats> {
+        self.stats.get(&freq)
+    }
+
+    pub fn all_stats(&self) -> impl Iterator<Item = (&u32, &FreqStats)> {
+        self.stats.iter()
+    }
+
+    /// Remove a frequency from the active set; `permanent` additionally
+    /// bans it from ever re-entering (extreme pruning). Refuses to go
+    /// below `min_actions`. Returns whether the prune happened.
+    pub fn prune(
+        &mut self,
+        freq: u32,
+        round: u64,
+        permanent: bool,
+        min_actions: usize,
+    ) -> bool {
+        if self.active.len() <= min_actions {
+            return false;
+        }
+        let Some(pos) = self.active.iter().position(|&f| f == freq) else {
+            return false;
+        };
+        self.active.remove(pos);
+        if permanent {
+            self.banned.insert(freq);
+        }
+        self.prune_log.push((freq, round, permanent));
+        true
+    }
+
+    /// Replace the active set (refinement); banned frequencies are
+    /// filtered out. Keeps the old set if the result would be empty.
+    pub fn replace_active(&mut self, freqs: Vec<u32>) {
+        let mut next: Vec<u32> = freqs
+            .into_iter()
+            .filter(|f| !self.banned.contains(f))
+            .collect();
+        next.sort_unstable();
+        next.dedup();
+        if !next.is_empty() {
+            self.active = next;
+        }
+    }
+
+    /// Active frequency with the lowest historical mean EDP, requiring at
+    /// least `min_samples` observations (the statistical anchor).
+    pub fn best_by_edp(&self, min_samples: u64) -> Option<u32> {
+        self.active
+            .iter()
+            .filter_map(|&f| {
+                let s = self.stats.get(&f)?;
+                if s.n >= min_samples {
+                    Some((f, s.edp.mean()))
+                } else {
+                    None
+                }
+            })
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .map(|(f, _)| f)
+    }
+
+    /// Frequency (active or not, but not banned) with the lowest mean
+    /// EDP — used by reports.
+    pub fn best_overall_by_edp(&self, min_samples: u64) -> Option<u32> {
+        self.stats
+            .iter()
+            .filter(|(f, s)| !self.banned.contains(f) && s.n >= min_samples)
+            .min_by(|a, b| {
+                a.1.edp.mean().partial_cmp(&b.1.edp.mean()).unwrap()
+            })
+            .map(|(&f, _)| f)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn space() -> ActionSpace {
+        ActionSpace::new(vec![600, 900, 1200, 1500, 1800])
+    }
+
+    #[test]
+    fn record_and_rank() {
+        let mut s = space();
+        for (f, edp) in [(600u32, 5.0), (900, 3.0), (1200, 2.0), (1500, 2.5)]
+        {
+            for _ in 0..4 {
+                s.record(f, -edp, edp);
+            }
+        }
+        assert_eq!(s.best_by_edp(4), Some(1200));
+        assert_eq!(s.best_by_edp(5), None); // not enough samples
+    }
+
+    #[test]
+    fn prune_respects_min_actions() {
+        let mut s = space();
+        assert!(s.prune(600, 1, true, 3));
+        assert!(s.prune(900, 2, false, 3));
+        assert_eq!(s.len(), 3);
+        assert!(!s.prune(1200, 3, false, 3), "would go below min");
+        assert!(s.is_banned(600));
+        assert!(!s.is_banned(900));
+        assert_eq!(s.prune_log.len(), 2);
+    }
+
+    #[test]
+    fn replace_filters_banned() {
+        let mut s = space();
+        s.prune(600, 1, true, 1);
+        s.replace_active(vec![450, 600, 750, 900]);
+        assert_eq!(s.active(), &[450, 750, 900]);
+        // Banned stays banned across replacements.
+        s.replace_active(vec![600]);
+        assert_eq!(s.active(), &[450, 750, 900], "empty result keeps old");
+    }
+
+    #[test]
+    fn stats_survive_replacement() {
+        let mut s = space();
+        s.record(1200, -1.0, 2.0);
+        s.replace_active(vec![1050, 1200, 1350]);
+        assert_eq!(s.stats(1200).unwrap().n, 1);
+        assert_eq!(s.best_by_edp(1), Some(1200));
+    }
+
+    #[test]
+    #[should_panic(expected = "empty initial")]
+    fn rejects_empty() {
+        ActionSpace::new(vec![]);
+    }
+}

@@ -1,0 +1,201 @@
+//! The 7-dimensional workload fingerprint (paper §3.3 / §4.1).
+//!
+//! Built purely from per-window *deltas* of the engine's macro counters —
+//! never from request contents or per-request lengths:
+//!
+//! | dim | feature            | definition (per window)                  |
+//! |-----|--------------------|------------------------------------------|
+//! | x1  | queue presence     | 𝟙[requests_waiting > 0]                  |
+//! | x2  | prefill throughput | prefill_tokens / dt                      |
+//! | x3  | decode throughput  | decode_tokens / dt                       |
+//! | x4  | packing efficiency | batch tokens / busy iterations           |
+//! | x5  | concurrency        | requests_running                         |
+//! | x6  | KV cache usage     | used / total blocks                      |
+//! | x7  | prefix hit rate    | hit_tokens / lookup_tokens               |
+//!
+//! Raw features are squashed onto [0, 1] with fixed normalisers so the
+//! LinUCB design matrix stays well-conditioned. The context deliberately
+//! excludes frequency — frequency is the *action*, not context (§4.1).
+
+use crate::server::metrics::MetricsSnapshot;
+
+/// Context dimensionality (the paper's 7 features).
+pub const FEATURE_DIM: usize = 7;
+
+/// A normalised context vector.
+pub type ContextVector = [f64; FEATURE_DIM];
+
+/// Normalisation scales: a feature at `scale` maps to ~0.5 via x/(x+s).
+#[derive(Debug, Clone)]
+pub struct FeatureExtractor {
+    /// Prefill tokens/s mapping scale.
+    pub prefill_tps_scale: f64,
+    /// Decode tokens/s mapping scale.
+    pub decode_tps_scale: f64,
+    /// Tokens-per-iteration mapping scale.
+    pub packing_scale: f64,
+    /// Concurrent sequences mapping scale.
+    pub concurrency_scale: f64,
+    last: Option<MetricsSnapshot>,
+}
+
+impl Default for FeatureExtractor {
+    fn default() -> Self {
+        FeatureExtractor {
+            prefill_tps_scale: 2_000.0,
+            decode_tps_scale: 400.0,
+            packing_scale: 256.0,
+            concurrency_scale: 8.0,
+            last: None,
+        }
+    }
+}
+
+/// Saturating squash of a non-negative raw value onto [0, 1).
+#[inline]
+fn squash(x: f64, scale: f64) -> f64 {
+    let x = x.max(0.0);
+    x / (x + scale)
+}
+
+impl FeatureExtractor {
+    pub fn new() -> FeatureExtractor {
+        FeatureExtractor::default()
+    }
+
+    /// Observe the window-end snapshot and emit the context vector for
+    /// the window (None on the very first call — no delta exists yet).
+    pub fn observe(&mut self, snap: &MetricsSnapshot) -> Option<ContextVector> {
+        let prev = self.last.replace(*snap)?;
+        let d = snap.delta(&prev);
+        if d.dt_s <= 0.0 {
+            return None;
+        }
+        let packing = if d.busy_iterations > 0 {
+            d.batch_token_sum as f64 / d.busy_iterations as f64
+        } else {
+            0.0
+        };
+        let hit_rate = if d.prefix_lookup_tokens > 0 {
+            d.prefix_hit_tokens as f64 / d.prefix_lookup_tokens as f64
+        } else {
+            0.0
+        };
+        // x1: queue presence. The binary 𝟙[waiting > 0] of the paper,
+        // generalised to the *fraction of window time* a queue existed —
+        // identical for steady queues, but sub-window bursts (which an
+        // end-of-window gauge would miss entirely) register fractionally.
+        let queue_frac = (d.queue_time_s / d.dt_s).clamp(0.0, 1.0);
+        let queue = if snap.requests_waiting > 0 {
+            1.0
+        } else {
+            queue_frac
+        };
+        Some([
+            queue,
+            squash(d.prefill_tokens as f64 / d.dt_s, self.prefill_tps_scale),
+            squash(d.decode_tokens as f64 / d.dt_s, self.decode_tps_scale),
+            squash(packing, self.packing_scale),
+            squash(snap.requests_running as f64, self.concurrency_scale),
+            snap.kv_usage.clamp(0.0, 1.0),
+            hit_rate.clamp(0.0, 1.0),
+        ])
+    }
+
+    /// Reset the delta base (e.g. across experiment phases).
+    pub fn reset(&mut self) {
+        self.last = None;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snap(t: f64) -> MetricsSnapshot {
+        MetricsSnapshot {
+            time_s: t,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn first_observation_yields_none() {
+        let mut fx = FeatureExtractor::new();
+        assert!(fx.observe(&snap(0.0)).is_none());
+        assert!(fx.observe(&snap(0.8)).is_some());
+    }
+
+    #[test]
+    fn all_dims_bounded() {
+        let mut fx = FeatureExtractor::new();
+        fx.observe(&snap(0.0));
+        let s = MetricsSnapshot {
+            time_s: 0.8,
+            prefill_tokens_total: 1_000_000,
+            decode_tokens_total: 500_000,
+            busy_iterations_total: 10,
+            batch_token_sum: 1_500_000,
+            requests_waiting: 400,
+            requests_running: 64,
+            kv_usage: 0.93,
+            prefix_hit_tokens_total: 90,
+            prefix_lookup_tokens_total: 100,
+            ..Default::default()
+        };
+        let x = fx.observe(&s).unwrap();
+        for (i, v) in x.iter().enumerate() {
+            assert!((0.0..=1.0).contains(v), "x{} = {v}", i + 1);
+        }
+        assert_eq!(x[0], 1.0); // queue present
+        assert!(x[1] > 0.9); // saturated prefill throughput
+        assert!((x[6] - 0.9).abs() < 1e-9);
+    }
+
+    #[test]
+    fn workload_prototypes_have_distinct_fingerprints() {
+        // Synthetic check of §3.3: a long-context-like window and a
+        // high-concurrency-like window must differ most on the expected
+        // dimensions.
+        let mut fx = FeatureExtractor::new();
+        fx.observe(&snap(0.0));
+        let long_ctx = fx
+            .observe(&MetricsSnapshot {
+                time_s: 0.8,
+                prefill_tokens_total: 4_000,
+                decode_tokens_total: 40,
+                busy_iterations_total: 20,
+                batch_token_sum: 4_040,
+                requests_running: 2,
+                kv_usage: 0.5,
+                ..Default::default()
+            })
+            .unwrap();
+        let mut fx2 = FeatureExtractor::new();
+        fx2.observe(&snap(0.0));
+        let high_conc = fx2
+            .observe(&MetricsSnapshot {
+                time_s: 0.8,
+                prefill_tokens_total: 900,
+                decode_tokens_total: 700,
+                busy_iterations_total: 40,
+                batch_token_sum: 1_600,
+                requests_waiting: 12,
+                requests_running: 24,
+                kv_usage: 0.35,
+                ..Default::default()
+            })
+            .unwrap();
+        assert!(long_ctx[1] > high_conc[1]); // prefill throughput
+        assert!(high_conc[4] > long_ctx[4]); // concurrency
+        assert_eq!(high_conc[0], 1.0);
+        assert_eq!(long_ctx[0], 0.0);
+    }
+
+    #[test]
+    fn zero_duration_window_rejected() {
+        let mut fx = FeatureExtractor::new();
+        fx.observe(&snap(1.0));
+        assert!(fx.observe(&snap(1.0)).is_none());
+    }
+}

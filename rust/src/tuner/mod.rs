@@ -1,0 +1,39 @@
+//! The AGFT tuner — the paper's contribution (§4).
+//!
+//! A closed-loop, online frequency controller around the serving engine:
+//!
+//! 1. **Monitor** ([`features`]): scrape the engine's macro metrics each
+//!    sampling window and build the 7-dimensional context vector
+//!    (queue presence, prefill/decode throughput, packing efficiency,
+//!    concurrency, KV usage, prefix-cache hit rate). No prompt content,
+//!    no per-request lengths — the paper's privacy constraint.
+//! 2. **Decide** ([`linucb`]): a contextual LinUCB bandit over the
+//!    frequency action space picks the clock for the next window
+//!    (UCB exploration → greedy exploitation after convergence, detected
+//!    by a Page–Hinkley test, [`page_hinkley`]).
+//! 3. **Reward** ([`reward`]): −EDP of the window, normalised and
+//!    SLO-penalised.
+//! 4. **Prune** ([`pruning`]): extreme / historical / cascade pruning
+//!    shrink the action space.
+//! 5. **Refine** ([`refinement`]): re-centre a dense ±150 MHz action
+//!    space on the statistical (immature) or predictive (mature) anchor.
+//!
+//! [`AgftTuner`] orchestrates all of it; [`action_space`] owns the arm
+//! bookkeeping shared by the bandit, pruning and refinement.
+
+pub mod action_space;
+pub mod features;
+pub mod linucb;
+pub mod page_hinkley;
+pub mod pruning;
+pub mod refinement;
+pub mod reward;
+#[allow(clippy::module_inception)]
+pub mod tuner;
+
+pub use action_space::ActionSpace;
+pub use features::{ContextVector, FeatureExtractor, FEATURE_DIM};
+pub use linucb::LinUcb;
+pub use page_hinkley::PageHinkley;
+pub use reward::RewardCalculator;
+pub use tuner::{AgftTuner, TunerPhase, WindowDecision, WindowObservation};

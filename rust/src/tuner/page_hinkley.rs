@@ -1,0 +1,174 @@
+//! Page–Hinkley test (paper §4.2): the tuner's reward-stability signal.
+//!
+//! The classical PH statistic detects a *change* in the mean of a
+//! sequence; AGFT uses it inversely — the model is declared converged
+//! once the reward sequence has run for a configurable number of rounds
+//! without a PH alarm and with low dispersion (handled by the tuner).
+//! Two one-sided tests run simultaneously so both upward and downward
+//! mean shifts trigger an alarm.
+
+/// Two-sided Page–Hinkley change detector.
+#[derive(Debug, Clone)]
+pub struct PageHinkley {
+    /// Magnitude tolerance δ (changes smaller than δ are ignored).
+    delta: f64,
+    /// Detection threshold λ.
+    lambda: f64,
+    n: u64,
+    mean: f64,
+    /// Cumulative deviations (up / down) and their running extrema.
+    m_up: f64,
+    m_up_min: f64,
+    m_dn: f64,
+    m_dn_max: f64,
+    alarms: u64,
+    rounds_since_alarm: u64,
+}
+
+impl PageHinkley {
+    pub fn new(delta: f64, lambda: f64) -> PageHinkley {
+        assert!(lambda > 0.0);
+        PageHinkley {
+            delta,
+            lambda,
+            n: 0,
+            mean: 0.0,
+            m_up: 0.0,
+            m_up_min: 0.0,
+            m_dn: 0.0,
+            m_dn_max: 0.0,
+            alarms: 0,
+            rounds_since_alarm: 0,
+        }
+    }
+
+    /// Feed one sample; returns true if a change alarm fires (the
+    /// detector state resets on alarm).
+    pub fn add(&mut self, x: f64) -> bool {
+        self.n += 1;
+        self.mean += (x - self.mean) / self.n as f64;
+        // Upward shift statistic.
+        self.m_up += x - self.mean - self.delta;
+        self.m_up_min = self.m_up_min.min(self.m_up);
+        // Downward shift statistic.
+        self.m_dn += x - self.mean + self.delta;
+        self.m_dn_max = self.m_dn_max.max(self.m_dn);
+
+        let up_stat = self.m_up - self.m_up_min;
+        let dn_stat = self.m_dn_max - self.m_dn;
+        if up_stat > self.lambda || dn_stat > self.lambda {
+            self.alarms += 1;
+            self.rounds_since_alarm = 0;
+            self.reset_statistics();
+            true
+        } else {
+            self.rounds_since_alarm += 1;
+            false
+        }
+    }
+
+    fn reset_statistics(&mut self) {
+        self.n = 0;
+        self.mean = 0.0;
+        self.m_up = 0.0;
+        self.m_up_min = 0.0;
+        self.m_dn = 0.0;
+        self.m_dn_max = 0.0;
+    }
+
+    /// Full reset (statistics and alarm history).
+    pub fn reset(&mut self) {
+        self.reset_statistics();
+        self.alarms = 0;
+        self.rounds_since_alarm = 0;
+    }
+
+    /// Consecutive samples since the last alarm (or since start).
+    pub fn rounds_since_alarm(&self) -> u64 {
+        self.rounds_since_alarm
+    }
+
+    pub fn alarms(&self) -> u64 {
+        self.alarms
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn stable_sequence_never_alarms() {
+        let mut ph = PageHinkley::new(0.02, 2.5);
+        let mut rng = Pcg64::new(3);
+        for _ in 0..2_000 {
+            assert!(!ph.add(-1.0 + 0.05 * rng.normal()));
+        }
+        assert_eq!(ph.alarms(), 0);
+        assert_eq!(ph.rounds_since_alarm(), 2_000);
+    }
+
+    #[test]
+    fn detects_upward_mean_shift() {
+        let mut ph = PageHinkley::new(0.02, 2.5);
+        let mut rng = Pcg64::new(5);
+        for _ in 0..300 {
+            ph.add(-1.0 + 0.05 * rng.normal());
+        }
+        assert_eq!(ph.alarms(), 0);
+        let mut fired = false;
+        for _ in 0..100 {
+            if ph.add(-0.3 + 0.05 * rng.normal()) {
+                fired = true;
+                break;
+            }
+        }
+        assert!(fired, "upward shift undetected");
+    }
+
+    #[test]
+    fn detects_downward_mean_shift() {
+        let mut ph = PageHinkley::new(0.02, 2.5);
+        let mut rng = Pcg64::new(9);
+        for _ in 0..300 {
+            ph.add(-0.5 + 0.05 * rng.normal());
+        }
+        let mut fired = false;
+        for _ in 0..100 {
+            if ph.add(-1.4 + 0.05 * rng.normal()) {
+                fired = true;
+                break;
+            }
+        }
+        assert!(fired, "downward shift undetected");
+    }
+
+    #[test]
+    fn alarm_resets_counter() {
+        let mut ph = PageHinkley::new(0.0, 0.5);
+        for _ in 0..50 {
+            ph.add(0.0);
+        }
+        // Strong jump → alarm.
+        let mut fired = false;
+        for _ in 0..20 {
+            if ph.add(5.0) {
+                fired = true;
+                break;
+            }
+        }
+        assert!(fired);
+        assert!(ph.rounds_since_alarm() < 5);
+    }
+
+    #[test]
+    fn tolerates_changes_below_delta() {
+        // δ large: slow drift within tolerance never alarms.
+        let mut ph = PageHinkley::new(0.5, 2.0);
+        for i in 0..1_000 {
+            let x = (i as f64) * 1e-4; // tiny drift
+            assert!(!ph.add(x), "alarmed on sub-delta drift at {i}");
+        }
+    }
+}

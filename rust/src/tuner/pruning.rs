@@ -1,0 +1,249 @@
+//! Intelligent action-space pruning (paper §4.3): three complementary
+//! mechanisms that focus exploration on promising frequency regions.
+
+use crate::config::PruningConfig;
+
+use super::action_space::ActionSpace;
+
+/// Outcome of one pruning sweep (telemetry for the ablation study).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct PruneReport {
+    pub extreme: Vec<u32>,
+    pub historical: Vec<u32>,
+    pub cascade: Vec<u32>,
+}
+
+impl PruneReport {
+    pub fn total(&self) -> usize {
+        self.extreme.len() + self.historical.len() + self.cascade.len()
+    }
+}
+
+/// Run one pruning sweep at decision round `round`.
+///
+/// * **Extreme-frequency instant pruning** — early rounds only
+///   (`round < extreme_max_round`): a frequency with `n ≥ 3` samples and
+///   mean reward below the hard threshold (−1.2) is *permanently*
+///   removed as pathological.
+/// * **Historical-performance pruning** — mature rounds
+///   (`round ≥ hist_min_round`): a frequency explored `n ≥ 6` times whose
+///   mean EDP exceeds the best action's by more than a dynamic tolerance
+///   (σ of all actions' mean EDPs × `hist_tolerance_sigma`) is removed.
+/// * **Cascade pruning** — when either mechanism removes a frequency
+///   below `cascade_frac × f_max`, all lower frequencies go with it in
+///   one step (physical intuition: if 500 MHz is too slow, 400 MHz is
+///   too).
+pub fn prune_sweep(
+    space: &mut ActionSpace,
+    cfg: &PruningConfig,
+    round: u64,
+    f_max_mhz: u32,
+) -> PruneReport {
+    let mut report = PruneReport::default();
+    if !cfg.enabled {
+        return report;
+    }
+    let cascade_below = (cfg.cascade_frac * f_max_mhz as f64) as u32;
+
+    // --- extreme pruning (early phase, permanent) ---
+    if round < cfg.extreme_max_round {
+        let victims: Vec<u32> = space
+            .active()
+            .iter()
+            .copied()
+            .filter(|&f| {
+                space
+                    .stats(f)
+                    .map(|s| {
+                        s.n >= cfg.extreme_min_samples
+                            && s.mean_reward() < cfg.extreme_reward_threshold
+                    })
+                    .unwrap_or(false)
+            })
+            .collect();
+        for f in victims {
+            if space.prune(f, round, true, cfg.min_actions) {
+                report.extreme.push(f);
+                cascade(space, cfg, round, f, cascade_below, &mut report);
+            }
+        }
+    }
+
+    // --- historical pruning (mature phase) ---
+    if round >= cfg.hist_min_round {
+        // Dynamic tolerance: σ of the explored actions' mean EDPs.
+        let means: Vec<f64> = space
+            .active()
+            .iter()
+            .filter_map(|&f| space.stats(f))
+            .filter(|s| s.n >= cfg.hist_min_samples)
+            .map(|s| s.edp.mean())
+            .collect();
+        if means.len() >= 2 {
+            let best = means.iter().cloned().fold(f64::MAX, f64::min);
+            let mean_of_means =
+                means.iter().sum::<f64>() / means.len() as f64;
+            let var = means
+                .iter()
+                .map(|m| (m - mean_of_means) * (m - mean_of_means))
+                .sum::<f64>()
+                / means.len() as f64;
+            let tolerance = cfg.hist_tolerance_sigma * var.sqrt();
+            let victims: Vec<u32> = space
+                .active()
+                .iter()
+                .copied()
+                .filter(|&f| {
+                    space
+                        .stats(f)
+                        .map(|s| {
+                            s.n >= cfg.hist_min_samples
+                                && s.edp.mean() - best > tolerance
+                                && tolerance > 0.0
+                        })
+                        .unwrap_or(false)
+                })
+                .collect();
+            for f in victims {
+                if space.prune(f, round, false, cfg.min_actions) {
+                    report.historical.push(f);
+                    cascade(space, cfg, round, f, cascade_below, &mut report);
+                }
+            }
+        }
+    }
+    report
+}
+
+/// Cascade: prune everything below `f` if `f` sits under the hardware
+/// threshold.
+fn cascade(
+    space: &mut ActionSpace,
+    cfg: &PruningConfig,
+    round: u64,
+    pruned_f: u32,
+    cascade_below: u32,
+    report: &mut PruneReport,
+) {
+    if pruned_f >= cascade_below {
+        return;
+    }
+    let lower: Vec<u32> = space
+        .active()
+        .iter()
+        .copied()
+        .filter(|&f| f < pruned_f)
+        .collect();
+    for f in lower {
+        if space.prune(f, round, false, cfg.min_actions) {
+            report.cascade.push(f);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PruningConfig;
+    use crate::tuner::action_space::ActionSpace;
+
+    fn feed(space: &mut ActionSpace, f: u32, n: u64, reward: f64, edp: f64) {
+        for _ in 0..n {
+            space.record(f, reward, edp);
+        }
+    }
+
+    fn grid() -> ActionSpace {
+        ActionSpace::new((0..=10).map(|i| 300 + i * 150).collect())
+        // 300, 450, ..., 1800
+    }
+
+    #[test]
+    fn extreme_prunes_pathological_early() {
+        let mut space = grid();
+        let cfg = PruningConfig::default();
+        feed(&mut space, 300, 3, -2.0, 9.0); // pathological
+        feed(&mut space, 1200, 3, -0.9, 2.0);
+        let rep = prune_sweep(&mut space, &cfg, 10, 1800);
+        assert_eq!(rep.extreme, vec![300]);
+        assert!(space.is_banned(300));
+        assert!(space.contains(1200));
+    }
+
+    #[test]
+    fn extreme_requires_min_samples_and_early_round() {
+        let cfg = PruningConfig::default();
+        let mut space = grid();
+        feed(&mut space, 300, 2, -2.0, 9.0); // only 2 samples
+        let rep = prune_sweep(&mut space, &cfg, 10, 1800);
+        assert!(rep.extreme.is_empty());
+        feed(&mut space, 300, 1, -2.0, 9.0); // now 3, but too late
+        let rep = prune_sweep(&mut space, &cfg, 80, 1800);
+        assert!(rep.extreme.is_empty());
+    }
+
+    #[test]
+    fn historical_prunes_significantly_worse() {
+        let cfg = PruningConfig::default();
+        let mut space = grid();
+        // Best arm EDP 2.0; bad arm EDP 8.0; others explored near best.
+        feed(&mut space, 1200, 8, -0.8, 2.0);
+        feed(&mut space, 1350, 8, -0.85, 2.2);
+        feed(&mut space, 1050, 8, -0.9, 2.4);
+        feed(&mut space, 1800, 8, -1.1, 8.0);
+        let rep = prune_sweep(&mut space, &cfg, 40, 1800);
+        assert_eq!(rep.historical, vec![1800]);
+        assert!(!space.is_banned(1800), "historical is not permanent");
+    }
+
+    #[test]
+    fn cascade_clears_everything_below_a_low_prune() {
+        let cfg = PruningConfig::default();
+        let mut space = grid();
+        feed(&mut space, 600, 3, -2.5, 9.0); // pathological at 600 < 900
+        let rep = prune_sweep(&mut space, &cfg, 10, 1800);
+        assert_eq!(rep.extreme, vec![600]);
+        assert_eq!(rep.cascade, vec![300, 450]);
+        assert!(!space.contains(300) && !space.contains(450));
+    }
+
+    #[test]
+    fn no_cascade_above_threshold() {
+        let cfg = PruningConfig::default();
+        let mut space = grid();
+        // 1800 is above f_max/2=900: no cascade.
+        feed(&mut space, 1800, 3, -2.5, 9.0);
+        let rep = prune_sweep(&mut space, &cfg, 10, 1800);
+        assert_eq!(rep.extreme, vec![1800]);
+        assert!(rep.cascade.is_empty());
+        assert!(space.contains(300));
+    }
+
+    #[test]
+    fn never_empties_below_min_actions() {
+        let cfg = PruningConfig {
+            min_actions: 9,
+            ..PruningConfig::default()
+        };
+        let mut space = grid(); // 11 arms
+        for f in space.active().to_vec() {
+            feed(&mut space, f, 3, -2.5, 9.0); // everything pathological
+        }
+        let rep = prune_sweep(&mut space, &cfg, 10, 1800);
+        assert_eq!(space.len(), 9);
+        assert_eq!(rep.total(), 2);
+    }
+
+    #[test]
+    fn disabled_pruning_is_inert() {
+        let cfg = PruningConfig {
+            enabled: false,
+            ..PruningConfig::default()
+        };
+        let mut space = grid();
+        feed(&mut space, 300, 5, -3.0, 99.0);
+        let rep = prune_sweep(&mut space, &cfg, 10, 1800);
+        assert_eq!(rep.total(), 0);
+        assert_eq!(space.len(), 11);
+    }
+}

@@ -1,0 +1,225 @@
+//! Mixed maturity-based refinement (paper §4.4): periodically re-centre
+//! a dense ±150 MHz / 15 MHz action window on an anchor frequency —
+//! statistical (best historical EDP) before the learner matures,
+//! predictive (highest LinUCB UCB) afterwards.
+
+use crate::config::RefinementConfig;
+use crate::gpu::FreqTable;
+
+use super::action_space::ActionSpace;
+use super::features::ContextVector;
+use super::linucb::LinUcb;
+
+/// Which anchor rule produced a refinement (telemetry).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AnchorKind {
+    Statistical,
+    Predictive,
+}
+
+/// A refinement event.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Refinement {
+    pub anchor_mhz: u32,
+    pub kind: AnchorKind,
+    pub new_len: usize,
+}
+
+/// Statistical anchor: the active frequency with the lowest historical
+/// mean EDP, given enough samples (§4.4 "Statistical Refinement").
+pub fn statistical_anchor(
+    space: &ActionSpace,
+    min_samples: u64,
+) -> Option<u32> {
+    space.best_by_edp(min_samples)
+}
+
+/// Predictive anchor: the candidate with the highest UCB potential under
+/// the mature LinUCB model and the current context (§4.4 "Predictive
+/// Refinement").
+pub fn predictive_anchor(
+    linucb: &mut LinUcb,
+    space: &ActionSpace,
+    x: &ContextVector,
+    alpha: f64,
+) -> Option<u32> {
+    linucb.select_ucb(space.active(), x, alpha)
+}
+
+/// Build the refined window: `anchor ± radius` snapped to the hardware
+/// grid at `step` MHz granularity, excluding banned frequencies. The
+/// anchor itself is always included.
+pub fn build_window(
+    table: &FreqTable,
+    anchor_mhz: u32,
+    cfg: &RefinementConfig,
+) -> Vec<u32> {
+    let step = cfg.step_mhz.max(table.step_mhz());
+    let lo = anchor_mhz.saturating_sub(cfg.radius_mhz).max(table.min_mhz());
+    let hi = (anchor_mhz + cfg.radius_mhz).min(table.max_mhz());
+    let mut out = Vec::new();
+    let mut f = lo;
+    while f <= hi {
+        let snapped = table.quantize(f);
+        if out.last() != Some(&snapped) {
+            out.push(snapped);
+        }
+        f += step;
+    }
+    let anchor = table.quantize(anchor_mhz);
+    if !out.contains(&anchor) {
+        out.push(anchor);
+        out.sort_unstable();
+    }
+    out
+}
+
+/// Perform one refinement pass if due; returns the event when the action
+/// space was re-centred.
+#[allow(clippy::too_many_arguments)]
+pub fn refine(
+    space: &mut ActionSpace,
+    linucb: &mut LinUcb,
+    table: &FreqTable,
+    cfg: &RefinementConfig,
+    round: u64,
+    maturity_rounds: u64,
+    x: &ContextVector,
+    alpha: f64,
+) -> Option<Refinement> {
+    if !cfg.enabled || round == 0 || round % cfg.refine_period != 0 {
+        return None;
+    }
+    let (anchor, kind) = if round < maturity_rounds {
+        (
+            statistical_anchor(space, cfg.min_anchor_samples)?,
+            AnchorKind::Statistical,
+        )
+    } else {
+        (
+            predictive_anchor(linucb, space, x, alpha)?,
+            AnchorKind::Predictive,
+        )
+    };
+    let window = build_window(table, anchor, cfg);
+    space.replace_active(window);
+    Some(Refinement {
+        anchor_mhz: anchor,
+        kind,
+        new_len: space.len(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{GpuConfig, RefinementConfig};
+    use crate::tuner::action_space::ActionSpace;
+    use crate::tuner::features::FEATURE_DIM;
+
+    fn table() -> FreqTable {
+        FreqTable::from_config(&GpuConfig::default())
+    }
+
+    #[test]
+    fn window_is_pm150_at_15() {
+        let w = build_window(&table(), 1230, &RefinementConfig::default());
+        assert_eq!(w.len(), 21); // 1080..=1380 step 15
+        assert_eq!(w[0], 1080);
+        assert_eq!(*w.last().unwrap(), 1380);
+        assert!(w.contains(&1230));
+    }
+
+    #[test]
+    fn window_clamped_at_table_edges() {
+        let w = build_window(&table(), 250, &RefinementConfig::default());
+        assert_eq!(w[0], 210);
+        assert!(*w.last().unwrap() <= 400);
+        let w = build_window(&table(), 1800, &RefinementConfig::default());
+        assert_eq!(*w.last().unwrap(), 1800);
+        assert_eq!(w[0], 1650);
+    }
+
+    #[test]
+    fn coarse_ablation_step() {
+        let cfg = RefinementConfig {
+            step_mhz: 75, // "No-grain" ablation
+            ..RefinementConfig::default()
+        };
+        let w = build_window(&table(), 1230, &cfg);
+        assert_eq!(w.len(), 5); // 1080, 1155, 1230, 1305, 1380
+        for f in &w {
+            assert!(table().contains(*f));
+        }
+    }
+
+    #[test]
+    fn statistical_phase_uses_best_edp() {
+        let mut space = ActionSpace::new(vec![600, 1200, 1800]);
+        let mut ucb = LinUcb::new(1.0);
+        for _ in 0..5 {
+            space.record(600, -2.0, 8.0);
+            space.record(1200, -0.8, 2.0);
+            space.record(1800, -1.0, 3.0);
+        }
+        let x = [0.5; FEATURE_DIM];
+        let cfg = RefinementConfig {
+            refine_period: 25,
+            ..Default::default()
+        };
+        let r = refine(&mut space, &mut ucb, &table(), &cfg, 25, 100, &x, 1.0)
+            .unwrap();
+        assert_eq!(r.kind, AnchorKind::Statistical);
+        assert_eq!(r.anchor_mhz, 1200);
+        assert_eq!(space.active()[0], 1050);
+        assert_eq!(*space.active().last().unwrap(), 1350);
+    }
+
+    #[test]
+    fn predictive_phase_uses_linucb() {
+        let mut space = ActionSpace::new(vec![600, 1200, 1800]);
+        let mut ucb = LinUcb::new(1.0);
+        let x = [0.5; FEATURE_DIM];
+        for _ in 0..30 {
+            ucb.update(1800, &x, 0.9);
+            ucb.update(1200, &x, -0.5);
+            ucb.update(600, &x, -2.0);
+        }
+        let cfg = RefinementConfig::default();
+        let r =
+            refine(&mut space, &mut ucb, &table(), &cfg, 150, 100, &x, 0.1)
+                .unwrap();
+        assert_eq!(r.kind, AnchorKind::Predictive);
+        assert_eq!(r.anchor_mhz, 1800);
+    }
+
+    #[test]
+    fn skips_between_periods_and_without_samples() {
+        let mut space = ActionSpace::new(vec![600, 1200]);
+        let mut ucb = LinUcb::new(1.0);
+        let x = [0.0; FEATURE_DIM];
+        let cfg = RefinementConfig::default();
+        // Round not on the period boundary.
+        assert!(refine(&mut space, &mut ucb, &table(), &cfg, 26, 100, &x,
+                       1.0).is_none());
+        // On the boundary but no arm has min_anchor_samples yet.
+        assert!(refine(&mut space, &mut ucb, &table(), &cfg, 25, 100, &x,
+                       1.0).is_none());
+    }
+
+    #[test]
+    fn disabled_refinement_inert() {
+        let mut space = ActionSpace::new(vec![600, 1200]);
+        let mut ucb = LinUcb::new(1.0);
+        let x = [0.0; FEATURE_DIM];
+        let cfg = RefinementConfig {
+            enabled: false,
+            ..Default::default()
+        };
+        for _ in 0..5 {
+            space.record(1200, -1.0, 1.0);
+        }
+        assert!(refine(&mut space, &mut ucb, &table(), &cfg, 25, 100, &x,
+                       1.0).is_none());
+    }
+}

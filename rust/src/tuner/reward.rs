@@ -1,0 +1,242 @@
+//! Reward signal (paper §4.2): inversely proportional to the window's
+//! Energy-Delay Product, normalised by an auto-calibrated reference so
+//! the configured pruning thresholds (e.g. the −1.2 "pathological" cut)
+//! are meaningful on any hardware, plus an SLO-violation penalty.
+//!
+//! Window EDP: `E_w × delay_w`, where `delay_w` is the mean end-to-end
+//! latency of the requests completing in the window — the paper's
+//! request-level `Delay` term. Using *observed request latency* (not
+//! tokens/s) is what makes under-clocking self-defeating: a slow clock
+//! piles up the wait queue, E2E explodes, and the resulting deeply
+//! negative rewards trigger extreme/cascade pruning of the low band.
+
+use crate::config::TunerConfig;
+
+/// Inputs measured over one sampling window.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct WindowMeasurement {
+    pub energy_j: f64,
+    pub dt_s: f64,
+    /// Tokens processed in the window (prefill + decode).
+    pub tokens: u64,
+    /// Mean TTFT of requests that got their first token this window
+    /// (None if none did).
+    pub ttft_mean: Option<f64>,
+    /// Mean TPOT of requests finishing this window.
+    pub tpot_mean: Option<f64>,
+    /// Mean end-to-end latency of requests finishing this window.
+    pub e2e_mean: Option<f64>,
+}
+
+impl WindowMeasurement {
+    /// Window EDP (J·s). None for windows that rendered no measurable
+    /// service (no tokens, or no request completed to report a delay) —
+    /// there is nothing to learn from those.
+    pub fn edp(&self) -> Option<f64> {
+        if self.tokens == 0 || self.dt_s <= 0.0 {
+            return None;
+        }
+        let delay = self.e2e_mean?;
+        Some(self.energy_j * delay)
+    }
+}
+
+/// EDP → reward transformer with auto-calibrating normaliser.
+///
+/// The reference EDP is pinned from the first windows (median) and then
+/// tracks the measured EDP with a slow exponential moving average: real
+/// production workloads drift on hour scales (paper §2.4), which would
+/// otherwise shift the whole reward scale and keep the Page–Hinkley
+/// detector permanently alarmed. With the adaptive reference, rewards
+/// measure efficiency *relative to the recent operating regime*; abrupt
+/// drift still spikes the reward (and trips PH) until the reference
+/// re-adapts over ~1/β windows.
+#[derive(Debug, Clone)]
+pub struct RewardCalculator {
+    clip_lo: f64,
+    clip_hi: f64,
+    ttft_slo_s: f64,
+    tpot_slo_s: f64,
+    slo_penalty: f64,
+    warmup_target: u64,
+    ref_beta: f64,
+    smooth_beta: f64,
+    warmup: Vec<f64>,
+    edp_ref: Option<f64>,
+    edp_smooth: Option<f64>,
+}
+
+impl RewardCalculator {
+    pub fn new(cfg: &TunerConfig) -> RewardCalculator {
+        RewardCalculator {
+            clip_lo: cfg.reward_clip_lo,
+            clip_hi: cfg.reward_clip_hi,
+            ttft_slo_s: cfg.ttft_slo_s,
+            tpot_slo_s: cfg.tpot_slo_s,
+            slo_penalty: cfg.slo_penalty,
+            warmup_target: cfg.edp_ref_windows.max(1),
+            ref_beta: cfg.edp_ref_beta,
+            smooth_beta: cfg.edp_smooth_beta,
+            warmup: Vec::new(),
+            edp_ref: None,
+            edp_smooth: None,
+        }
+    }
+
+    /// The EDP normaliser once calibrated.
+    pub fn edp_ref(&self) -> Option<f64> {
+        self.edp_ref
+    }
+
+    pub fn is_calibrated(&self) -> bool {
+        self.edp_ref.is_some()
+    }
+
+    fn calibrating_ref(&mut self, edp: f64) -> f64 {
+        match self.edp_ref {
+            Some(r) => {
+                // Slow drift-tracking (see type docs). The pre-update
+                // reference prices *this* window, so a sudden regime
+                // change is still fully visible in the reward.
+                let next = r + self.ref_beta * (edp - r);
+                self.edp_ref = Some(next.max(1e-12));
+                r
+            }
+            None => {
+                self.warmup.push(edp);
+                if self.warmup.len() as u64 >= self.warmup_target {
+                    let mut xs = self.warmup.clone();
+                    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                    let median = xs[xs.len() / 2];
+                    self.edp_ref = Some(median.max(1e-12));
+                    self.edp_ref.unwrap()
+                } else {
+                    // Use the running mean until the median is pinned.
+                    let sum: f64 = self.warmup.iter().sum();
+                    (sum / self.warmup.len() as f64).max(1e-12)
+                }
+            }
+        }
+    }
+
+    /// Reward for a window (None for idle windows).
+    ///
+    /// The raw window EDP is smoothed with a short EMA before pricing:
+    /// with few requests finishing per 0.8 s window, a single heavy-tail
+    /// prompt makes the delay estimate jump by an order of magnitude, and
+    /// unsmoothed rewards would keep the Page–Hinkley detector alarmed on
+    /// pure sampling noise. `edp_smooth_beta = 1` disables smoothing.
+    pub fn reward(&mut self, m: &WindowMeasurement) -> Option<f64> {
+        let raw = m.edp()?;
+        let edp = match self.edp_smooth {
+            Some(s) => s + self.smooth_beta * (raw - s),
+            None => raw,
+        };
+        self.edp_smooth = Some(edp);
+        let edp_ref = self.calibrating_ref(edp);
+        let mut r = -edp / edp_ref;
+        // SLO guard: violations push the reward towards the pruning
+        // thresholds ("while adhering to SLOs", §4).
+        if let Some(ttft) = m.ttft_mean {
+            if ttft > self.ttft_slo_s {
+                r -= self.slo_penalty * (ttft / self.ttft_slo_s - 1.0);
+            }
+        }
+        if let Some(tpot) = m.tpot_mean {
+            if tpot > self.tpot_slo_s {
+                r -= self.slo_penalty * (tpot / self.tpot_slo_s - 1.0);
+            }
+        }
+        Some(r.clamp(self.clip_lo, self.clip_hi))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TunerConfig;
+
+    fn calc() -> RewardCalculator {
+        RewardCalculator::new(&TunerConfig::default())
+    }
+
+    fn window(energy: f64, dt: f64, tokens: u64) -> WindowMeasurement {
+        WindowMeasurement {
+            energy_j: energy,
+            dt_s: dt,
+            tokens,
+            ttft_mean: None,
+            tpot_mean: None,
+            e2e_mean: Some(1.0),
+        }
+    }
+
+    #[test]
+    fn idle_window_gives_no_reward() {
+        let mut c = calc();
+        assert_eq!(c.reward(&window(10.0, 0.8, 0)), None);
+        // Busy window but nothing finished → no delay observation.
+        let m = WindowMeasurement {
+            e2e_mean: None,
+            ..window(10.0, 0.8, 100)
+        };
+        assert_eq!(c.reward(&m), None);
+    }
+
+    #[test]
+    fn lower_edp_is_better() {
+        let mut c = calc();
+        // Calibrate on identical windows → reward ≈ −1.
+        for _ in 0..8 {
+            c.reward(&window(160.0, 0.8, 800));
+        }
+        assert!(c.is_calibrated());
+        let base = c.reward(&window(160.0, 0.8, 800)).unwrap();
+        let better = c.reward(&window(100.0, 0.8, 800)).unwrap();
+        let worse = c.reward(&window(300.0, 0.8, 800)).unwrap();
+        assert!((base + 1.0).abs() < 1e-9, "base={base}");
+        assert!(better > base && worse < base);
+    }
+
+    #[test]
+    fn reward_clipped() {
+        let mut c = calc();
+        for _ in 0..8 {
+            c.reward(&window(160.0, 0.8, 800));
+        }
+        let r = c.reward(&window(1e9, 0.8, 800)).unwrap();
+        assert_eq!(r, TunerConfig::default().reward_clip_lo);
+    }
+
+    #[test]
+    fn slo_violation_penalised() {
+        let mut c = calc();
+        for _ in 0..8 {
+            c.reward(&window(160.0, 0.8, 800));
+        }
+        let ok = c
+            .reward(&WindowMeasurement {
+                ttft_mean: Some(0.1),
+                tpot_mean: Some(0.02),
+                ..window(160.0, 0.8, 800)
+            })
+            .unwrap();
+        let bad = c
+            .reward(&WindowMeasurement {
+                ttft_mean: Some(2.0), // 4x the 0.5 s SLO
+                tpot_mean: Some(0.02),
+                ..window(160.0, 0.8, 800)
+            })
+            .unwrap();
+        assert!(bad < ok - 1.0, "ok={ok} bad={bad}");
+    }
+
+    #[test]
+    fn edp_definition() {
+        let m = WindowMeasurement {
+            e2e_mean: Some(2.5),
+            ..window(200.0, 0.8, 1000)
+        };
+        assert!((m.edp().unwrap() - 200.0 * 2.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,578 @@
+//! [`AgftTuner`] — the closed-loop orchestrator tying the paper's §4
+//! pieces together: monitor → context vector → LinUCB decision →
+//! reward/update → pruning → maturity-based refinement.
+//!
+//! The tuner is engine-agnostic: the experiment harness scrapes a
+//! [`MetricsSnapshot`] once per sampling window (0.8 s of virtual time)
+//! and feeds it in as a [`WindowObservation`]; the tuner answers with a
+//! [`WindowDecision`] carrying the frequency to lock for the next window.
+//!
+//! Decision scoring normally runs through the native [`LinUcb`]
+//! implementation; plugging in a [`UcbScorer`] (the PJRT-loaded Pallas
+//! LinUCB kernel from [`crate::runtime`]) routes Eq. 1 through the
+//! three-layer HLO path instead — bit-compatibility between the two is
+//! asserted in integration tests.
+
+use crate::config::TunerConfig;
+use crate::gpu::FreqTable;
+use crate::server::metrics::MetricsSnapshot;
+use crate::util::RollingStats;
+
+use super::action_space::ActionSpace;
+use super::features::{ContextVector, FeatureExtractor, FEATURE_DIM};
+use super::linucb::LinUcb;
+use super::page_hinkley::PageHinkley;
+use super::pruning::{prune_sweep, PruneReport};
+use super::refinement::{refine, Refinement};
+use super::reward::{RewardCalculator, WindowMeasurement};
+
+/// Exploration (UCB) vs exploitation (greedy) — paper §4.2.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TunerPhase {
+    /// UCB-guided learning (Eq. 1).
+    Exploration,
+    /// Greedy application of the learned policy (Eq. 2).
+    Exploitation,
+}
+
+/// One sampling window's worth of monitor data.
+#[derive(Debug, Clone, Copy)]
+pub struct WindowObservation {
+    /// Engine metric scrape at the window end.
+    pub snapshot: MetricsSnapshot,
+    /// Mean TTFT of requests completing in the window (SLO signal).
+    pub ttft_mean: Option<f64>,
+    /// Mean TPOT of requests completing in the window.
+    pub tpot_mean: Option<f64>,
+    /// Mean end-to-end latency of requests completing in the window —
+    /// the `Delay` term of the window EDP.
+    pub e2e_mean: Option<f64>,
+}
+
+/// The tuner's answer for one window.
+#[derive(Debug, Clone, Copy)]
+pub struct WindowDecision {
+    /// Decision round index (0-based).
+    pub round: u64,
+    /// Frequency to lock for the next window (MHz).
+    pub freq_mhz: u32,
+    /// Phase the decision was made in.
+    pub phase: TunerPhase,
+    /// Context vector the decision used.
+    pub context: ContextVector,
+    /// Reward credited to the *previous* decision (None for idle windows
+    /// or before calibration).
+    pub reward: Option<f64>,
+    /// Arms removed by this round's pruning sweep.
+    pub pruned: usize,
+    /// Action-space refinement applied this round, if any.
+    pub refined: Option<Refinement>,
+    /// Exploration weight used (0 in exploitation).
+    pub alpha: f64,
+}
+
+/// External scorer for Eq. 1 over padded arm stacks — implemented by the
+/// HLO/PJRT runtime ([`crate::runtime::HloLinUcbScorer`]). Inputs follow
+/// the `linucb.hlo.txt` artifact layout: `theta [K,d]`, `ainv [K,d,d]`,
+/// `x [d]`, scalar `alpha`, `mask [K]` (0 ⇒ arm scores −∞).
+pub trait UcbScorer {
+    fn score(
+        &mut self,
+        theta: &[f32],
+        ainv: &[f32],
+        x: &[f32],
+        alpha: f32,
+        mask: &[f32],
+        k: usize,
+        d: usize,
+    ) -> Result<Vec<f32>, String>;
+}
+
+/// The AGFT tuner (paper Fig. 8).
+pub struct AgftTuner {
+    cfg: TunerConfig,
+    table: FreqTable,
+    features: FeatureExtractor,
+    linucb: LinUcb,
+    space: ActionSpace,
+    ph: PageHinkley,
+    reward: RewardCalculator,
+    rolling: RollingStats,
+    phase: TunerPhase,
+    round: u64,
+    converged_round: Option<u64>,
+    /// Rolling reward mean captured at the moment of convergence —
+    /// the reference level for drift detection.
+    converged_reward: f64,
+    /// (frequency, context) of the decision awaiting its reward.
+    pending: Option<(u32, ContextVector)>,
+    last_snap: Option<MetricsSnapshot>,
+    scorer: Option<Box<dyn UcbScorer>>,
+    // --- telemetry (drives Fig 13/14 and the ablation tables) ---
+    /// (round, reward) for every credited reward.
+    pub reward_log: Vec<(u64, f64)>,
+    /// (round, freq) for every decision.
+    pub freq_log: Vec<(u64, u32)>,
+    /// Cumulative pruning report.
+    pub prune_total: PruneReport,
+    /// All refinement events.
+    pub refine_log: Vec<(u64, Refinement)>,
+}
+
+impl AgftTuner {
+    /// Build a tuner over the GPU's frequency table. The initial action
+    /// space is the coarse bootstrap grid (refinement densifies it later).
+    pub fn new(cfg: &TunerConfig, table: FreqTable) -> AgftTuner {
+        let bootstrap = table.coarse_grid(cfg.refinement.bootstrap_step_mhz);
+        AgftTuner {
+            cfg: cfg.clone(),
+            table,
+            features: FeatureExtractor::new(),
+            linucb: LinUcb::new(cfg.ridge),
+            space: ActionSpace::new(bootstrap),
+            ph: PageHinkley::new(cfg.ph_delta, cfg.ph_lambda),
+            reward: RewardCalculator::new(cfg),
+            rolling: RollingStats::new(40),
+            phase: TunerPhase::Exploration,
+            round: 0,
+            converged_round: None,
+            converged_reward: f64::NEG_INFINITY,
+            pending: None,
+            last_snap: None,
+            scorer: None,
+            reward_log: Vec::new(),
+            freq_log: Vec::new(),
+            prune_total: PruneReport::default(),
+            refine_log: Vec::new(),
+        }
+    }
+
+    /// Route Eq.-1 scoring through an external (HLO) scorer.
+    pub fn with_scorer(mut self, scorer: Box<dyn UcbScorer>) -> AgftTuner {
+        self.scorer = Some(scorer);
+        self
+    }
+
+    pub fn phase(&self) -> TunerPhase {
+        self.phase
+    }
+
+    pub fn round(&self) -> u64 {
+        self.round
+    }
+
+    /// Round at which the tuner first entered exploitation.
+    pub fn converged_round(&self) -> Option<u64> {
+        self.converged_round
+    }
+
+    /// Page-Hinkley alarms fired so far (telemetry).
+    pub fn ph_alarms(&self) -> u64 {
+        self.ph.alarms()
+    }
+
+    /// Rolling reward statistics (mean, std) over the last 40 rewards.
+    pub fn rolling_reward(&self) -> (f64, f64) {
+        (self.rolling.mean(), self.rolling.std())
+    }
+
+    pub fn action_space(&self) -> &ActionSpace {
+        &self.space
+    }
+
+    pub fn linucb(&self) -> &LinUcb {
+        &self.linucb
+    }
+
+    pub fn reward_calculator(&self) -> &RewardCalculator {
+        &self.reward
+    }
+
+    /// Decaying exploration weight α_t.
+    pub fn alpha(&self) -> f64 {
+        self.cfg.alpha0 / (1.0 + self.round as f64 / self.cfg.alpha_tau).sqrt()
+    }
+
+    /// Process one sampling window: credit the previous decision's reward,
+    /// run pruning + refinement, and pick the next frequency.
+    ///
+    /// Returns `None` on the very first window (no delta exists yet) —
+    /// the caller keeps the current clock.
+    pub fn step(&mut self, obs: &WindowObservation) -> Option<WindowDecision> {
+        let prev = self.last_snap.replace(obs.snapshot);
+        let x = self.features.observe(&obs.snapshot);
+        let (Some(prev), Some(x)) = (prev, x) else {
+            return None;
+        };
+
+        // --- reward the pending decision (Eqs. 3–5) ---
+        let d = obs.snapshot.delta(&prev);
+        let meas = WindowMeasurement {
+            energy_j: d.energy_j,
+            dt_s: d.dt_s,
+            tokens: d.prefill_tokens + d.decode_tokens,
+            ttft_mean: obs.ttft_mean,
+            tpot_mean: obs.tpot_mean,
+            e2e_mean: obs.e2e_mean,
+        };
+        let mut credited = None;
+        if let Some((freq, x_prev)) = self.pending.take() {
+            if let (Some(r), Some(edp)) = (self.reward.reward(&meas), meas.edp())
+            {
+                self.linucb.update(freq, &x_prev, r);
+                self.space.record(freq, r, edp);
+                self.rolling.push(r);
+                self.reward_log.push((self.round, r));
+                credited = Some(r);
+                let alarm = self.ph.add(r);
+                self.update_phase(alarm);
+            }
+        }
+
+        // --- pruning sweep (§4.3) ---
+        let report = prune_sweep(
+            &mut self.space,
+            &self.cfg.pruning,
+            self.round,
+            self.table.max_mhz(),
+        );
+        let pruned = report.total();
+        self.prune_total.extreme.extend(&report.extreme);
+        self.prune_total.historical.extend(&report.historical);
+        self.prune_total.cascade.extend(&report.cascade);
+
+        // --- mixed maturity-based refinement (§4.4) ---
+        // The anchor uses the same exploration weight as selection: in
+        // exploitation the anchor is the *greedy* winner — re-centring
+        // on an optimistic, under-sampled arm would let a single
+        // refinement discard the learned region wholesale.
+        let alpha_sel = match self.phase {
+            TunerPhase::Exploration => self.alpha(),
+            TunerPhase::Exploitation => 0.0,
+        };
+        let refined = refine(
+            &mut self.space,
+            &mut self.linucb,
+            &self.table,
+            &self.cfg.refinement,
+            self.round,
+            self.cfg.maturity_rounds,
+            &x,
+            alpha_sel,
+        );
+        if let Some(r) = refined {
+            self.refine_log.push((self.round, r));
+        }
+
+        // --- select the next action (Eq. 1 / Eq. 2) ---
+        let freq = self
+            .select(&x, alpha_sel)
+            .expect("action space can never be empty");
+        self.freq_log.push((self.round, freq));
+        let decision = WindowDecision {
+            round: self.round,
+            freq_mhz: freq,
+            phase: self.phase,
+            context: x,
+            reward: credited,
+            pruned,
+            refined,
+            alpha: alpha_sel,
+        };
+        self.pending = Some((freq, x));
+        self.round += 1;
+        Some(decision)
+    }
+
+    /// Phase transition logic: Page–Hinkley stability + low reward
+    /// dispersion ⇒ exploitation; a PH alarm during exploitation (workload
+    /// drift) re-opens exploration.
+    fn update_phase(&mut self, alarm: bool) {
+        match self.phase {
+            TunerPhase::Exploration => {
+                // Exploitation requires (1) learner maturity plus a full
+                // stability horizon, (2) a quiet Page–Hinkley detector,
+                // and (3) low reward dispersion. (1) prevents locking in
+                // before the action space has been meaningfully explored
+                // and refined.
+                let mature = self.round
+                    >= self.cfg.maturity_rounds + self.cfg.converge_stable_rounds;
+                let stable =
+                    self.ph.rounds_since_alarm() >= self.cfg.converge_stable_rounds;
+                let tight = self.rolling.is_full()
+                    && self.rolling.std()
+                        <= self.cfg.converge_std_frac * self.rolling.mean().abs();
+                if mature && stable && tight {
+                    self.phase = TunerPhase::Exploitation;
+                    self.converged_round.get_or_insert(self.round);
+                    self.converged_reward = self.rolling.mean();
+                }
+            }
+            TunerPhase::Exploitation => {
+                // A PH alarm alone is not enough to abandon the learned
+                // policy — noise triggers it occasionally. Re-open
+                // exploration only when the reward level has genuinely
+                // degraded versus the level locked in at convergence
+                // (workload drift made the policy stale).
+                let degraded = self.rolling.mean()
+                    < self.converged_reward
+                        - 0.15 * self.converged_reward.abs();
+                if alarm && degraded {
+                    self.phase = TunerPhase::Exploration;
+                } else if self.rolling.mean() > self.converged_reward {
+                    // Track improvements so the degradation reference
+                    // stays current.
+                    self.converged_reward = self.rolling.mean();
+                }
+            }
+        }
+    }
+
+    /// Eq. 1 argmax over the active set, through the external scorer when
+    /// configured (falls back to native for oversized candidate sets).
+    ///
+    /// In exploitation the candidate set is restricted to arms with at
+    /// least one observation: a fresh arm's prior predicts reward 0,
+    /// which would always beat the (negative, −EDP-shaped) rewards of
+    /// every *learned* arm and turn the greedy policy into blind
+    /// exploration of whatever refinement just injected.
+    fn select(&mut self, x: &ContextVector, alpha: f64) -> Option<u32> {
+        let mut candidates = self.space.active().to_vec();
+        if self.phase == TunerPhase::Exploitation {
+            let explored: Vec<u32> = candidates
+                .iter()
+                .copied()
+                .filter(|&f| self.linucb.arm(f).map_or(false, |a| a.n > 0))
+                .collect();
+            if !explored.is_empty() {
+                candidates = explored;
+            }
+        }
+        if let Some(freq) = self.select_external(&candidates, x, alpha) {
+            return Some(freq);
+        }
+        self.linucb.select_ucb(&candidates, x, alpha)
+    }
+
+    fn select_external(
+        &mut self,
+        candidates: &[u32],
+        x: &ContextVector,
+        alpha: f64,
+    ) -> Option<u32> {
+        let scorer = self.scorer.as_mut()?;
+        const K: usize = 32;
+        const D: usize = 8;
+        if candidates.is_empty() || candidates.len() > K {
+            return None;
+        }
+        // Ensure every candidate has an arm model (fresh prior for new
+        // arms — identical to the native path).
+        let mut theta = vec![0f32; K * D];
+        let mut ainv = vec![0f32; K * D * D];
+        let mut mask = vec![0f32; K];
+        for (i, &f) in candidates.iter().enumerate() {
+            self.linucb.touch(f);
+            let arm = self.linucb.arm(f).expect("touched arm exists");
+            let (t, a) = arm.export_padded(D);
+            theta[i * D..(i + 1) * D].copy_from_slice(&t);
+            ainv[i * D * D..(i + 1) * D * D].copy_from_slice(&a);
+            mask[i] = 1.0;
+        }
+        let mut xp = [0f32; D];
+        for i in 0..FEATURE_DIM {
+            xp[i] = x[i] as f32;
+        }
+        let scores = scorer
+            .score(&theta, &ainv, &xp, alpha as f32, &mask, K, D)
+            .ok()?;
+        // Argmax with the native tie-break (ties → higher frequency).
+        let mut best: Option<(u32, f32)> = None;
+        for (i, &f) in candidates.iter().enumerate() {
+            let s = scores[i];
+            let better = match best {
+                None => true,
+                Some((bf, bs)) => s > bs || (s == bs && f > bf),
+            };
+            if better {
+                best = Some((f, s));
+            }
+        }
+        best.map(|(f, _)| f)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{GpuConfig, TunerConfig};
+    use crate::server::metrics::MetricsSnapshot;
+
+    fn table() -> FreqTable {
+        FreqTable::from_config(&GpuConfig::default())
+    }
+
+    /// Synthetic environment: EDP(f) is a U-curve with a minimum at
+    /// `f_opt`; windows advance 0.8 s and process 800 tokens.
+    struct FakeEnv {
+        t: f64,
+        snap: MetricsSnapshot,
+        f_opt: f64,
+    }
+
+    impl FakeEnv {
+        fn new(f_opt: f64) -> FakeEnv {
+            FakeEnv {
+                t: 0.0,
+                snap: MetricsSnapshot::default(),
+                f_opt,
+            }
+        }
+
+        /// Window under clock `f`; returns the observation.
+        fn window(&mut self, f_mhz: u32) -> WindowObservation {
+            self.t += 0.8;
+            let fr = f_mhz as f64 / 1800.0;
+            let fo = self.f_opt / 1800.0;
+            // U-shaped EDP(f): constant per-window energy, quadratic
+            // request latency around the optimum → EDP = E × e2e is a
+            // clean U-curve the bandit must locate.
+            let e2e = 1.0 + 4.0 * (fr - fo) * (fr - fo);
+            let tokens = 800u64;
+            let energy = 100.0;
+            self.snap.time_s = self.t;
+            self.snap.prefill_tokens_total += 700;
+            self.snap.decode_tokens_total += 100;
+            self.snap.busy_iterations_total += 20;
+            self.snap.batch_token_sum += tokens;
+            self.snap.energy_j_total += energy;
+            self.snap.requests_running = 4;
+            self.snap.kv_usage = 0.3;
+            WindowObservation {
+                snapshot: self.snap,
+                ttft_mean: Some(0.05),
+                tpot_mean: Some(0.02),
+                e2e_mean: Some(e2e),
+            }
+        }
+    }
+
+    fn run(tuner: &mut AgftTuner, env: &mut FakeEnv, rounds: usize) -> u32 {
+        let mut f = 1800;
+        for _ in 0..rounds {
+            let obs = env.window(f);
+            if let Some(d) = tuner.step(&obs) {
+                f = d.freq_mhz;
+            }
+        }
+        f
+    }
+
+    #[test]
+    fn first_window_yields_no_decision() {
+        let mut tuner = AgftTuner::new(&TunerConfig::default(), table());
+        let mut env = FakeEnv::new(1230.0);
+        let obs = env.window(1800);
+        assert!(tuner.step(&obs).is_none());
+        let obs = env.window(1800);
+        assert!(tuner.step(&obs).is_some());
+    }
+
+    #[test]
+    fn converges_near_the_edp_optimum() {
+        let cfg = TunerConfig::default();
+        let mut tuner = AgftTuner::new(&cfg, table());
+        let mut env = FakeEnv::new(1230.0);
+        let f_final = run(&mut tuner, &mut env, 400);
+        // The synthetic U is shallow near its optimum; judge the learned
+        // point by its EDP sub-optimality (what the paper's own Table-6
+        // deviations — up to 7.5 % in frequency — imply), not by a
+        // razor-thin frequency band.
+        let edp = |f: u32| {
+            let fr = f as f64 / 1800.0;
+            let fo = 1230.0 / 1800.0;
+            1.0 + 4.0 * (fr - fo) * (fr - fo)
+        };
+        let subopt = edp(f_final) / edp(1230) - 1.0;
+        assert!(
+            subopt < 0.10,
+            "converged to {f_final} ({:.1} % above optimal EDP)",
+            subopt * 100.0
+        );
+        // Action space should have refined down from the bootstrap grid.
+        assert!(!tuner.refine_log.is_empty(), "no refinement happened");
+    }
+
+    #[test]
+    fn reaches_exploitation_on_stable_rewards() {
+        let cfg = TunerConfig {
+            converge_stable_rounds: 60,
+            ..TunerConfig::default()
+        };
+        let mut tuner = AgftTuner::new(&cfg, table());
+        let mut env = FakeEnv::new(1230.0);
+        run(&mut tuner, &mut env, 500);
+        assert_eq!(tuner.phase(), TunerPhase::Exploitation);
+        assert!(tuner.converged_round().is_some());
+    }
+
+    #[test]
+    fn drift_reopens_exploration_and_retunes() {
+        let cfg = TunerConfig {
+            converge_stable_rounds: 60,
+            ..TunerConfig::default()
+        };
+        let mut tuner = AgftTuner::new(&cfg, table());
+        let mut env = FakeEnv::new(1230.0);
+        run(&mut tuner, &mut env, 400);
+        assert_eq!(tuner.phase(), TunerPhase::Exploitation);
+        // Workload shift: optimum jumps to a much higher frequency.
+        env.f_opt = 1650.0;
+        let f_final = run(&mut tuner, &mut env, 500);
+        assert!(
+            f_final >= 1500,
+            "did not re-adapt after drift: {f_final}"
+        );
+    }
+
+    #[test]
+    fn pruning_removes_low_frequencies() {
+        let cfg = TunerConfig::default();
+        let mut tuner = AgftTuner::new(&cfg, table());
+        let mut env = FakeEnv::new(1395.0);
+        run(&mut tuner, &mut env, 300);
+        assert!(
+            tuner.prune_total.total() > 0,
+            "pruning never fired on a high-optimum workload"
+        );
+    }
+
+    #[test]
+    fn idle_windows_credit_no_reward() {
+        let cfg = TunerConfig::default();
+        let mut tuner = AgftTuner::new(&cfg, table());
+        let mut env = FakeEnv::new(1230.0);
+        tuner.step(&env.window(1800));
+        tuner.step(&env.window(1800));
+        // Idle window: time advances, counters do not.
+        env.snap.time_s += 0.8;
+        env.t += 0.8;
+        let obs = WindowObservation {
+            snapshot: env.snap,
+            ttft_mean: None,
+            tpot_mean: None,
+            e2e_mean: None,
+        };
+        let d = tuner.step(&obs).unwrap();
+        assert_eq!(d.reward, None);
+    }
+
+    #[test]
+    fn alpha_decays() {
+        let cfg = TunerConfig::default();
+        let mut tuner = AgftTuner::new(&cfg, table());
+        let a0 = tuner.alpha();
+        tuner.round = 200;
+        assert!(tuner.alpha() < a0 * 0.5);
+    }
+}

@@ -1,0 +1,84 @@
+//! Mini property-based testing harness (offline `proptest` substitute).
+//!
+//! A property is a closure over a seeded [`Pcg64`]; the harness runs it
+//! for `iters` randomised cases and reports the failing case's seed so it
+//! can be replayed deterministically:
+//!
+//! ```no_run
+//! # // no_run: doctest binaries miss the cargo rpath to libxla_extension
+//! use agft::util::check::forall;
+//! forall("sum is commutative", 256, |rng| {
+//!     let (a, b) = (rng.f64(), rng.f64());
+//!     if a + b == b + a { Ok(()) } else { Err(format!("{a} {b}")) }
+//! });
+//! ```
+
+use super::rng::Pcg64;
+
+/// Run `prop` for `iters` random cases; panic with the case seed and the
+/// property's message on the first failure.
+pub fn forall<F>(name: &str, iters: u64, mut prop: F)
+where
+    F: FnMut(&mut Pcg64) -> Result<(), String>,
+{
+    forall_seeded(name, 0xA6F7_2024, iters, &mut prop);
+}
+
+/// Like [`forall`] with an explicit base seed (replay a failure by pasting
+/// the reported case seed here with `iters = 1`).
+pub fn forall_seeded<F>(name: &str, base_seed: u64, iters: u64, prop: &mut F)
+where
+    F: FnMut(&mut Pcg64) -> Result<(), String>,
+{
+    for i in 0..iters {
+        let case_seed = base_seed.wrapping_add(i.wrapping_mul(0x9E37_79B9));
+        let mut rng = Pcg64::new(case_seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property {name:?} failed on case {i} \
+                 (replay seed: {case_seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Assert two floats are within `tol` (absolute), with a labelled panic.
+pub fn close(label: &str, got: f64, want: f64, tol: f64) -> Result<(), String> {
+    if (got - want).abs() <= tol || (got.is_nan() && want.is_nan()) {
+        Ok(())
+    } else {
+        Err(format!("{label}: got {got}, want {want} (tol {tol})"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivially_true() {
+        forall("true", 64, |_| Ok(()));
+    }
+
+    #[test]
+    #[should_panic(expected = "replay seed")]
+    fn reports_seed_on_failure() {
+        forall("always fails", 4, |_| Err("nope".to_string()));
+    }
+
+    #[test]
+    fn rng_cases_vary() {
+        let mut seen = std::collections::HashSet::new();
+        forall("distinct cases", 32, |rng| {
+            seen.insert(rng.next_u64());
+            Ok(())
+        });
+        assert!(seen.len() >= 30);
+    }
+
+    #[test]
+    fn close_helper() {
+        assert!(close("x", 1.0, 1.0005, 1e-3).is_ok());
+        assert!(close("x", 1.0, 2.0, 1e-3).is_err());
+    }
+}

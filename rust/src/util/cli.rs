@@ -1,0 +1,134 @@
+//! Tiny CLI argument parser (offline `clap` substitute): subcommand +
+//! `--flag value` / `--switch` pairs with typed accessors.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: `prog <subcommand> [--key value | --switch]...`.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (exclusive of argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut iter = args.into_iter().peekable();
+        while let Some(arg) = iter.next() {
+            if let Some(name) = arg.strip_prefix("--") {
+                if name.is_empty() {
+                    return Err("bare `--` not supported".to_string());
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|next| !next.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    out.flags.insert(name.to_string(), v);
+                } else {
+                    out.switches.push(name.to_string());
+                }
+            } else if out.subcommand.is_none() && out.positional.is_empty() {
+                out.subcommand = Some(arg);
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Args, String> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+            || self.flags.contains_key(switch)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_str(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<f64>()
+                .map_err(|e| format!("--{key} {v:?}: {e}")),
+        }
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<usize>()
+                .map_err(|e| format!("--{key} {v:?}: {e}")),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<u64>()
+                .map_err(|e| format!("--{key} {v:?}: {e}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse(&["serve", "--minutes", "20", "--seed=7", "--verbose"]);
+        assert_eq!(a.subcommand.as_deref(), Some("serve"));
+        assert_eq!(a.get_f64("minutes", 0.0).unwrap(), 20.0);
+        assert_eq!(a.get_u64("seed", 0).unwrap(), 7);
+        assert!(a.has("verbose"));
+        assert!(!a.has("quiet"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&["sweep"]);
+        assert_eq!(a.get_usize("rounds", 100).unwrap(), 100);
+        assert_eq!(a.get_str("workload", "normal"), "normal");
+    }
+
+    #[test]
+    fn positional_after_subcommand() {
+        let a = parse(&["run", "trace.csv", "--fast"]);
+        assert_eq!(a.positional, vec!["trace.csv"]);
+        assert!(a.has("fast"));
+    }
+
+    #[test]
+    fn negative_number_as_value() {
+        let a = parse(&["x", "--offset", "-3.5"]);
+        assert_eq!(a.get_f64("offset", 0.0).unwrap(), -3.5);
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let a = parse(&["x", "--n", "abc"]);
+        assert!(a.get_usize("n", 1).is_err());
+    }
+}

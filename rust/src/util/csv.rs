@@ -1,0 +1,198 @@
+//! CSV writing/reading for benchmark series (`results/*.csv`) and
+//! workload traces.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+/// Buffered CSV writer with a fixed header; row length is validated.
+pub struct CsvWriter {
+    out: Box<dyn Write>,
+    columns: usize,
+}
+
+impl CsvWriter {
+    /// Create a file-backed writer (creates parent dirs).
+    pub fn create(
+        path: impl AsRef<Path>,
+        header: &[&str],
+    ) -> std::io::Result<CsvWriter> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let file = BufWriter::new(File::create(path)?);
+        Self::from_writer(Box::new(file), header)
+    }
+
+    /// Create an in-memory writer (tests).
+    pub fn in_memory(header: &[&str]) -> std::io::Result<(CsvWriter, SharedBuf)> {
+        let buf = SharedBuf::default();
+        let w = Self::from_writer(Box::new(buf.clone()), header)?;
+        Ok((w, buf))
+    }
+
+    fn from_writer(
+        mut out: Box<dyn Write>,
+        header: &[&str],
+    ) -> std::io::Result<CsvWriter> {
+        writeln!(out, "{}", header.join(","))?;
+        Ok(CsvWriter {
+            out,
+            columns: header.len(),
+        })
+    }
+
+    /// Write one row; each cell is escaped if needed.
+    pub fn row(&mut self, cells: &[String]) -> std::io::Result<()> {
+        assert_eq!(
+            cells.len(),
+            self.columns,
+            "row width {} != header width {}",
+            cells.len(),
+            self.columns
+        );
+        let escaped: Vec<String> =
+            cells.iter().map(|c| escape(c)).collect();
+        writeln!(self.out, "{}", escaped.join(","))
+    }
+
+    /// Convenience: write a row of f64 with fixed precision.
+    pub fn row_f64(&mut self, cells: &[f64]) -> std::io::Result<()> {
+        let strs: Vec<String> =
+            cells.iter().map(|x| format!("{x:.6}")).collect();
+        self.row(&strs)
+    }
+
+    pub fn flush(&mut self) -> std::io::Result<()> {
+        self.out.flush()
+    }
+}
+
+fn escape(cell: &str) -> String {
+    if cell.contains(',') || cell.contains('"') || cell.contains('\n') {
+        format!("\"{}\"", cell.replace('"', "\"\""))
+    } else {
+        cell.to_string()
+    }
+}
+
+/// Parse CSV text into (header, rows). Handles quoted cells.
+pub fn parse(text: &str) -> Result<(Vec<String>, Vec<Vec<String>>), String> {
+    let mut lines = text.lines();
+    let header = match lines.next() {
+        Some(h) => split_row(h)?,
+        None => return Err("empty csv".to_string()),
+    };
+    let mut rows = Vec::new();
+    for (i, line) in lines.enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let row = split_row(line)?;
+        if row.len() != header.len() {
+            return Err(format!(
+                "row {} has {} cells, header has {}",
+                i + 2,
+                row.len(),
+                header.len()
+            ));
+        }
+        rows.push(row);
+    }
+    Ok((header, rows))
+}
+
+fn split_row(line: &str) -> Result<Vec<String>, String> {
+    let mut cells = Vec::new();
+    let mut cur = String::new();
+    let mut chars = line.chars().peekable();
+    let mut quoted = false;
+    while let Some(c) = chars.next() {
+        if quoted {
+            match c {
+                '"' => {
+                    if chars.peek() == Some(&'"') {
+                        cur.push('"');
+                        chars.next();
+                    } else {
+                        quoted = false;
+                    }
+                }
+                c => cur.push(c),
+            }
+        } else {
+            match c {
+                '"' => quoted = true,
+                ',' => {
+                    cells.push(std::mem::take(&mut cur));
+                }
+                c => cur.push(c),
+            }
+        }
+    }
+    if quoted {
+        return Err("unterminated quote".to_string());
+    }
+    cells.push(cur);
+    Ok(cells)
+}
+
+/// A shared in-memory byte buffer implementing `Write` (test sink).
+#[derive(Clone, Default)]
+pub struct SharedBuf(std::sync::Arc<std::sync::Mutex<Vec<u8>>>);
+
+impl SharedBuf {
+    pub fn contents(&self) -> String {
+        String::from_utf8_lossy(&self.0.lock().unwrap()).to_string()
+    }
+}
+
+impl Write for SharedBuf {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        self.0.lock().unwrap().extend_from_slice(buf);
+        Ok(buf.len())
+    }
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let (mut w, buf) = CsvWriter::in_memory(&["a", "b"]).unwrap();
+        w.row(&["1".into(), "x,y".into()]).unwrap();
+        w.row(&["2".into(), "has \"q\"".into()]).unwrap();
+        w.flush().unwrap();
+        let (header, rows) = parse(&buf.contents()).unwrap();
+        assert_eq!(header, vec!["a", "b"]);
+        assert_eq!(rows[0], vec!["1", "x,y"]);
+        assert_eq!(rows[1], vec!["2", "has \"q\""]);
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn wrong_width_panics() {
+        let (mut w, _) = CsvWriter::in_memory(&["a", "b"]).unwrap();
+        w.row(&["only-one".into()]).unwrap();
+    }
+
+    #[test]
+    fn parse_rejects_ragged() {
+        assert!(parse("a,b\n1,2,3\n").is_err());
+        assert!(parse("a,b\n\"unterminated\n").is_err());
+    }
+
+    #[test]
+    fn f64_rows() {
+        let (mut w, buf) = CsvWriter::in_memory(&["x", "y"]).unwrap();
+        w.row_f64(&[1.5, -0.25]).unwrap();
+        w.flush().unwrap();
+        let (_, rows) = parse(&buf.contents()).unwrap();
+        assert_eq!(rows[0][0].parse::<f64>().unwrap(), 1.5);
+    }
+}

@@ -1,0 +1,17 @@
+//! Offline substrates: PRNG, statistics, JSON, CSV, CLI parsing and a
+//! mini property-test harness.
+//!
+//! The build environment has no network access and the offline crate set
+//! is only the `xla` dependency closure, so the usual ecosystem crates
+//! (`rand`, `serde`, `clap`, `proptest`, `criterion`) are re-implemented
+//! here at the scale this project needs.
+
+pub mod check;
+pub mod cli;
+pub mod csv;
+pub mod json;
+pub mod rng;
+pub mod stats;
+
+pub use rng::Pcg64;
+pub use stats::{Percentiles, RollingStats, RunningStats};

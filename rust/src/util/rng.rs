@@ -1,0 +1,303 @@
+//! PCG-64 pseudo-random generator plus the distribution samplers the
+//! workload generators need (uniform, normal, log-normal, exponential,
+//! Poisson, Zipf). Deterministic: every experiment takes an explicit seed
+//! so paper tables regenerate bit-identically.
+
+/// PCG XSL-RR 128/64 generator (O'Neill 2014).
+#[derive(Debug, Clone)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+    /// Cached second normal variate from Box–Muller.
+    spare_normal: Option<f64>,
+}
+
+const PCG_MULT: u128 = 0x2360_ed05_1fc6_5da4_4385_df64_9fcc_f645;
+
+impl Pcg64 {
+    /// Create a generator from a seed; distinct seeds give independent
+    /// streams (stream id is derived from the seed too).
+    pub fn new(seed: u64) -> Self {
+        let mut rng = Pcg64 {
+            state: 0,
+            inc: ((seed as u128).wrapping_mul(0x9e37_79b9_7f4a_7c15) << 1) | 1,
+            spare_normal: None,
+        };
+        rng.state = rng
+            .inc
+            .wrapping_add(seed as u128)
+            .wrapping_mul(PCG_MULT)
+            .wrapping_add(rng.inc);
+        rng.next_u64();
+        rng
+    }
+
+    /// Derive an independent child stream (for per-component RNGs).
+    pub fn fork(&mut self, tag: u64) -> Pcg64 {
+        Pcg64::new(self.next_u64() ^ tag.wrapping_mul(0xd6e8_feb8_6659_fd93))
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let rot = (self.state >> 122) as u32;
+        let xored = ((self.state >> 64) as u64) ^ (self.state as u64);
+        xored.rotate_right(rot)
+    }
+
+    /// Uniform in `[0, 1)`.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in `[lo, hi]` (inclusive). `lo <= hi` required.
+    pub fn range_u64(&mut self, lo: u64, hi: u64) -> u64 {
+        debug_assert!(lo <= hi);
+        let span = hi - lo + 1;
+        if span == 0 {
+            return self.next_u64(); // full range
+        }
+        // Lemire's method with rejection for unbiased sampling.
+        loop {
+            let x = self.next_u64();
+            let m = (x as u128).wrapping_mul(span as u128);
+            let l = m as u64;
+            if l >= span.wrapping_neg() % span {
+                return lo + (m >> 64) as u64;
+            }
+        }
+    }
+
+    /// Uniform usize in `[lo, hi)` (half-open, matches slice indexing).
+    pub fn index(&mut self, len: usize) -> usize {
+        debug_assert!(len > 0);
+        self.range_u64(0, len as u64 - 1) as usize
+    }
+
+    /// Uniform in `[lo, hi)`.
+    pub fn uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.f64()
+    }
+
+    /// Standard normal via Box–Muller (cached pair).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.spare_normal.take() {
+            return z;
+        }
+        loop {
+            let u1 = self.f64();
+            let u2 = self.f64();
+            if u1 <= f64::EPSILON {
+                continue;
+            }
+            let r = (-2.0 * u1.ln()).sqrt();
+            let th = 2.0 * std::f64::consts::PI * u2;
+            self.spare_normal = Some(r * th.sin());
+            return r * th.cos();
+        }
+    }
+
+    /// Normal with mean/std.
+    pub fn normal_ms(&mut self, mean: f64, std: f64) -> f64 {
+        mean + std * self.normal()
+    }
+
+    /// Log-normal given the mean/std of the *underlying* normal.
+    pub fn lognormal(&mut self, mu: f64, sigma: f64) -> f64 {
+        (mu + sigma * self.normal()).exp()
+    }
+
+    /// Exponential with rate `lambda` (mean `1/lambda`).
+    pub fn exponential(&mut self, lambda: f64) -> f64 {
+        debug_assert!(lambda > 0.0);
+        -(1.0 - self.f64()).ln() / lambda
+    }
+
+    /// Poisson-distributed count with mean `lambda` (inversion for small
+    /// lambda, normal approximation above 60).
+    pub fn poisson(&mut self, lambda: f64) -> u64 {
+        if lambda <= 0.0 {
+            return 0;
+        }
+        if lambda > 60.0 {
+            let x = self.normal_ms(lambda, lambda.sqrt());
+            return x.max(0.0).round() as u64;
+        }
+        let limit = (-lambda).exp();
+        let mut prod = self.f64();
+        let mut n = 0;
+        while prod > limit {
+            prod *= self.f64();
+            n += 1;
+        }
+        n
+    }
+
+    /// Zipf-like rank sampler over `[0, n)` with exponent `s` (used for
+    /// skewed prompt-template popularity). `s = 0` is uniform.
+    pub fn zipf(&mut self, n: usize, s: f64) -> usize {
+        debug_assert!(n > 0);
+        if s <= 0.0 {
+            return self.index(n);
+        }
+        // Inverse-CDF on the (cached-free, n is small) harmonic weights.
+        let target = self.f64();
+        let mut total = 0.0;
+        for k in 1..=n {
+            total += (k as f64).powf(-s);
+        }
+        let mut acc = 0.0;
+        for k in 1..=n {
+            acc += (k as f64).powf(-s) / total;
+            if target <= acc {
+                return k - 1;
+            }
+        }
+        n - 1
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.index(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Pick a uniformly random element.
+    pub fn choice<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.index(xs.len())]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_instances() {
+        let mut a = Pcg64::new(123);
+        let mut b = Pcg64::new(123);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Pcg64::new(1);
+        let mut b = Pcg64::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut rng = Pcg64::new(7);
+        for _ in 0..10_000 {
+            let x = rng.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn uniform_mean_reasonable() {
+        let mut rng = Pcg64::new(11);
+        let n = 50_000;
+        let mean: f64 = (0..n).map(|_| rng.f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn range_inclusive_bounds_hit() {
+        let mut rng = Pcg64::new(3);
+        let mut lo_seen = false;
+        let mut hi_seen = false;
+        for _ in 0..10_000 {
+            let x = rng.range_u64(5, 8);
+            assert!((5..=8).contains(&x));
+            lo_seen |= x == 5;
+            hi_seen |= x == 8;
+        }
+        assert!(lo_seen && hi_seen);
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Pcg64::new(17);
+        let n = 100_000;
+        let xs: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+            / n as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.03, "var={var}");
+    }
+
+    #[test]
+    fn poisson_mean_matches_lambda() {
+        let mut rng = Pcg64::new(23);
+        for &lambda in &[0.5, 3.0, 20.0, 100.0] {
+            let n = 20_000;
+            let mean: f64 = (0..n).map(|_| rng.poisson(lambda) as f64)
+                .sum::<f64>() / n as f64;
+            assert!(
+                (mean - lambda).abs() < lambda.max(1.0) * 0.05 + 0.05,
+                "lambda={lambda} mean={mean}"
+            );
+        }
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let mut rng = Pcg64::new(31);
+        let n = 50_000;
+        let mean: f64 = (0..n).map(|_| rng.exponential(4.0)).sum::<f64>()
+            / n as f64;
+        assert!((mean - 0.25).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn zipf_skews_to_low_ranks() {
+        let mut rng = Pcg64::new(37);
+        let mut counts = [0usize; 10];
+        for _ in 0..20_000 {
+            counts[rng.zipf(10, 1.2)] += 1;
+        }
+        assert!(counts[0] > counts[4]);
+        assert!(counts[4] > counts[9]);
+    }
+
+    #[test]
+    fn zipf_zero_exponent_uniformish() {
+        let mut rng = Pcg64::new(41);
+        let mut counts = [0usize; 4];
+        for _ in 0..40_000 {
+            counts[rng.zipf(4, 0.0)] += 1;
+        }
+        for &c in &counts {
+            assert!((c as f64 - 10_000.0).abs() < 600.0, "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Pcg64::new(43);
+        let mut xs: Vec<u32> = (0..100).collect();
+        rng.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn fork_streams_independent() {
+        let mut root = Pcg64::new(5);
+        let mut a = root.fork(1);
+        let mut b = root.fork(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+}

@@ -1,0 +1,334 @@
+//! Streaming and windowed statistics used across metrics, reward tracking
+//! and the paper's table generation (mean, std, CV, percentiles).
+
+/// Welford online accumulator: numerically-stable mean/variance plus
+/// min/max, O(1) per sample.
+#[derive(Debug, Clone, Default)]
+pub struct RunningStats {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+    sum: f64,
+}
+
+impl RunningStats {
+    pub fn new() -> Self {
+        RunningStats {
+            n: 0,
+            mean: 0.0,
+            m2: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            sum: 0.0,
+        }
+    }
+
+    #[inline]
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        self.sum += x;
+        let delta = x - self.mean;
+        self.mean += delta / self.n as f64;
+        self.m2 += delta * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.mean
+        }
+    }
+
+    /// Sample variance (n-1 denominator).
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    /// Coefficient of variation, std/|mean| — the paper's stability metric
+    /// (Tables 4 & 5). Zero when the mean is zero.
+    pub fn cv(&self) -> f64 {
+        let m = self.mean();
+        if m.abs() < 1e-12 {
+            0.0
+        } else {
+            self.std() / m.abs()
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    /// Merge another accumulator (parallel reduction).
+    pub fn merge(&mut self, other: &RunningStats) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n1 = self.n as f64;
+        let n2 = other.n as f64;
+        let delta = other.mean - self.mean;
+        let n = n1 + n2;
+        self.mean += delta * n2 / n;
+        self.m2 += other.m2 + delta * delta * n1 * n2 / n;
+        self.n += other.n;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+/// Fixed-capacity rolling window: mean/std over the last `cap` samples.
+/// Used for the Fig-14 reward rolling statistics and the Page–Hinkley
+/// stabilisation signal.
+#[derive(Debug, Clone)]
+pub struct RollingStats {
+    buf: Vec<f64>,
+    cap: usize,
+    head: usize,
+    len: usize,
+    sum: f64,
+    sum_sq: f64,
+}
+
+impl RollingStats {
+    pub fn new(cap: usize) -> Self {
+        assert!(cap > 0);
+        RollingStats {
+            buf: vec![0.0; cap],
+            cap,
+            head: 0,
+            len: 0,
+            sum: 0.0,
+            sum_sq: 0.0,
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        if self.len == self.cap {
+            let old = self.buf[self.head];
+            self.sum -= old;
+            self.sum_sq -= old * old;
+        } else {
+            self.len += 1;
+        }
+        self.buf[self.head] = x;
+        self.head = (self.head + 1) % self.cap;
+        self.sum += x;
+        self.sum_sq += x * x;
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.len == self.cap
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.len == 0 {
+            0.0
+        } else {
+            self.sum / self.len as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        if self.len < 2 {
+            return 0.0;
+        }
+        let n = self.len as f64;
+        let var = (self.sum_sq - self.sum * self.sum / n) / (n - 1.0);
+        var.max(0.0).sqrt()
+    }
+}
+
+/// Percentile summary computed from a full sample vector (used for SLO
+/// latency reporting: p50/p90/p99).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Percentiles {
+    pub p50: f64,
+    pub p90: f64,
+    pub p95: f64,
+    pub p99: f64,
+}
+
+impl Percentiles {
+    pub fn from_samples(samples: &[f64]) -> Self {
+        if samples.is_empty() {
+            return Percentiles::default();
+        }
+        let mut xs: Vec<f64> = samples.to_vec();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Percentiles {
+            p50: percentile_sorted(&xs, 0.50),
+            p90: percentile_sorted(&xs, 0.90),
+            p95: percentile_sorted(&xs, 0.95),
+            p99: percentile_sorted(&xs, 0.99),
+        }
+    }
+}
+
+/// Linear-interpolation percentile over an ascending-sorted slice.
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let pos = q.clamp(0.0, 1.0) * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        sorted[lo] + (pos - lo as f64) * (sorted[hi] - sorted[lo])
+    }
+}
+
+/// Relative difference `(new - base) / base` in percent — the paper's
+/// "Diff" columns.
+pub fn pct_diff(new: f64, base: f64) -> f64 {
+    if base.abs() < 1e-12 {
+        return 0.0;
+    }
+    (new - base) / base * 100.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn running_stats_basic() {
+        let mut s = RunningStats::new();
+        for x in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+            s.push(x);
+        }
+        assert_eq!(s.count(), 8);
+        assert!((s.mean() - 5.0).abs() < 1e-12);
+        assert!((s.std() - 2.138089935299395).abs() < 1e-9);
+        assert_eq!(s.min(), 2.0);
+        assert_eq!(s.max(), 9.0);
+    }
+
+    #[test]
+    fn running_stats_empty() {
+        let s = RunningStats::new();
+        assert_eq!(s.mean(), 0.0);
+        assert_eq!(s.std(), 0.0);
+        assert_eq!(s.cv(), 0.0);
+    }
+
+    #[test]
+    fn cv_matches_definition() {
+        let mut s = RunningStats::new();
+        for x in [10.0, 12.0, 8.0, 11.0, 9.0] {
+            s.push(x);
+        }
+        assert!((s.cv() - s.std() / s.mean()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_equals_sequential() {
+        let xs: Vec<f64> = (0..100).map(|i| (i as f64).sin() * 10.0).collect();
+        let mut all = RunningStats::new();
+        for &x in &xs {
+            all.push(x);
+        }
+        let mut a = RunningStats::new();
+        let mut b = RunningStats::new();
+        for &x in &xs[..37] {
+            a.push(x);
+        }
+        for &x in &xs[37..] {
+            b.push(x);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), all.count());
+        assert!((a.mean() - all.mean()).abs() < 1e-9);
+        assert!((a.std() - all.std()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rolling_window_evicts() {
+        let mut r = RollingStats::new(3);
+        r.push(1.0);
+        r.push(2.0);
+        r.push(3.0);
+        assert!((r.mean() - 2.0).abs() < 1e-12);
+        r.push(10.0); // evicts 1.0 -> window {2,3,10}
+        assert!((r.mean() - 5.0).abs() < 1e-12);
+        assert_eq!(r.len(), 3);
+        assert!(r.is_full());
+    }
+
+    #[test]
+    fn rolling_std_matches_naive() {
+        let mut r = RollingStats::new(5);
+        let xs = [4.0, 7.0, 13.0, 16.0, 9.0, 2.0, 5.0];
+        for &x in &xs {
+            r.push(x);
+        }
+        let window = &xs[2..]; // last 5
+        let mean: f64 = window.iter().sum::<f64>() / 5.0;
+        let var: f64 =
+            window.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / 4.0;
+        assert!((r.std() - var.sqrt()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentiles_sorted() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let p = Percentiles::from_samples(&xs);
+        assert!((p.p50 - 50.5).abs() < 1e-9);
+        assert!((p.p99 - 99.01).abs() < 0.05);
+        assert!(p.p90 > p.p50 && p.p99 > p.p90);
+    }
+
+    #[test]
+    fn pct_diff_signs() {
+        assert!((pct_diff(130.0, 230.0) + 43.478).abs() < 0.01);
+        assert!((pct_diff(0.037, 0.033) - 12.12).abs() < 0.1);
+        assert_eq!(pct_diff(5.0, 0.0), 0.0);
+    }
+}

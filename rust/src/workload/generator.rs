@@ -1,0 +1,150 @@
+//! Request-stream synthesis from a [`WorkloadSpec`]: Poisson arrivals,
+//! uniform length draws within the prototype's ranges, Zipf-skewed
+//! template popularity.
+
+use crate::server::Request;
+use crate::util::Pcg64;
+
+use super::spec::WorkloadSpec;
+
+/// Generate the request stream for `duration_s` of virtual time at base
+/// rate `arrival_rps` (multiplied by the spec's concurrency factor).
+pub fn generate(
+    spec: &WorkloadSpec,
+    arrival_rps: f64,
+    duration_s: f64,
+    seed: u64,
+) -> Vec<Request> {
+    let rate = arrival_rps * spec.concurrency_mult * spec.rate_scale;
+    assert!(rate > 0.0 && duration_s > 0.0);
+    let mut rng = Pcg64::new(seed ^ SEED_SALT);
+    let mut out = Vec::new();
+    let mut t = 0.0;
+    let mut id = 0u64;
+    loop {
+        t += rng.exponential(rate);
+        if t >= duration_s {
+            break;
+        }
+        out.push(sample_request(spec, &mut rng, id, t));
+        id += 1;
+    }
+    out
+}
+
+/// Generate exactly `n` requests (the paper's "5000-task rounds").
+pub fn generate_n(
+    spec: &WorkloadSpec,
+    arrival_rps: f64,
+    n: usize,
+    seed: u64,
+) -> Vec<Request> {
+    let rate = arrival_rps * spec.concurrency_mult * spec.rate_scale;
+    assert!(rate > 0.0);
+    let mut rng = Pcg64::new(seed ^ SEED_SALT);
+    let mut out = Vec::with_capacity(n);
+    let mut t = 0.0;
+    for id in 0..n as u64 {
+        t += rng.exponential(rate);
+        out.push(sample_request(spec, &mut rng, id, t));
+    }
+    out
+}
+
+fn sample_request(
+    spec: &WorkloadSpec,
+    rng: &mut Pcg64,
+    id: u64,
+    arrival_s: f64,
+) -> Request {
+    let ctx = rng.range_u64(spec.ctx_range.0 as u64, spec.ctx_range.1 as u64)
+        as u32;
+    let gen = rng.range_u64(spec.gen_range.0 as u64, spec.gen_range.1 as u64)
+        as u32;
+    let template =
+        rng.zipf(spec.template_pool as usize, spec.template_zipf) as u32;
+    let shared = template_prefix_tokens(spec, template);
+    Request::new(id, arrival_s, ctx, gen, template, shared)
+}
+
+/// The cacheable prefix length of a template — a *template* attribute
+/// (its fixed system-prompt/boilerplate text), identical for every
+/// request instantiating it; only then can a later request's lookup hit
+/// the first writer's cached prefix. Deterministically derived from the
+/// template id, ranging over `[0.7, 1.0] × shared_prefix_frac × ctx_min`
+/// so it always fits inside the shortest prompt of the prototype.
+pub fn template_prefix_tokens(spec: &WorkloadSpec, template: u32) -> u32 {
+    let base = spec.ctx_range.0 as f64 * spec.shared_prefix_frac;
+    // SplitMix64 hash of the template id → stable per-template jitter.
+    let mut z = (template as u64).wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^= z >> 31;
+    let f = 0.7 + 0.3 * (z as f64 / u64::MAX as f64);
+    ((base * f) as u32).max(1)
+}
+
+/// Salt mixed into workload seeds so a workload stream and any
+/// same-seeded component RNG stay decorrelated.
+const SEED_SALT: u64 = 0xA6F7_2024;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::spec::WorkloadSpec;
+
+    #[test]
+    fn lengths_within_spec_ranges() {
+        for spec in WorkloadSpec::all() {
+            let reqs = generate_n(&spec, 2.0, 500, 3);
+            assert_eq!(reqs.len(), 500);
+            for r in &reqs {
+                assert!(
+                    (spec.ctx_range.0..=spec.ctx_range.1)
+                        .contains(&r.prompt_tokens),
+                    "{} ctx {}",
+                    spec.name,
+                    r.prompt_tokens
+                );
+                assert!((spec.gen_range.0..=spec.gen_range.1)
+                    .contains(&r.target_output));
+                assert!(r.template_id < spec.template_pool);
+            }
+        }
+    }
+
+    #[test]
+    fn arrival_rate_scales_with_concurrency() {
+        let n_spec = WorkloadSpec::normal_load();
+        let h_spec = WorkloadSpec::high_concurrency();
+        let normal = generate(&n_spec, 2.0, 500.0, 1);
+        let high = generate(&h_spec, 2.0, 500.0, 1);
+        let ratio = high.len() as f64 / normal.len() as f64;
+        let want = (h_spec.concurrency_mult * h_spec.rate_scale)
+            / (n_spec.concurrency_mult * n_spec.rate_scale);
+        assert!(
+            (want * 0.85..want * 1.15).contains(&ratio),
+            "ratio={ratio}, want≈{want}"
+        );
+    }
+
+    #[test]
+    fn arrivals_sorted_and_positive() {
+        let reqs = generate(&WorkloadSpec::long_context(), 1.0, 300.0, 5);
+        for w in reqs.windows(2) {
+            assert!(w[1].arrival_s >= w[0].arrival_s);
+        }
+        assert!(reqs.iter().all(|r| r.arrival_s >= 0.0));
+    }
+
+    #[test]
+    fn high_cache_hit_uses_tiny_pool() {
+        let reqs = generate_n(&WorkloadSpec::high_cache_hit(), 2.0, 200, 2);
+        let mut seen = std::collections::HashSet::new();
+        for r in &reqs {
+            seen.insert(r.template_id);
+        }
+        assert!(seen.len() <= 5);
+        assert!(seen.len() >= 3);
+    }
+}

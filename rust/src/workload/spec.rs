@@ -1,0 +1,141 @@
+//! The five workload prototypes of Table 1, each probing one axis of the
+//! serving system (prefill/decode balance, request pressure, prefix
+//! locality).
+
+/// A workload prototype (Table 1 row).
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkloadSpec {
+    pub name: &'static str,
+    /// Context (prompt) length range, inclusive.
+    pub ctx_range: (u32, u32),
+    /// Generation (output) length range, inclusive.
+    pub gen_range: (u32, u32),
+    /// Arrival-rate multiplier ("Concurrency" column).
+    pub concurrency_mult: f64,
+    /// Feasibility scale on the arrival rate: heavy prototypes (huge
+    /// prompts, 5× pressure) must stay *near but below* GPU saturation
+    /// at the top clock, or EDP(f) loses its interior optimum (the queue
+    /// term dominates at every frequency and the sweep pins to f_max —
+    /// the paper's Fig-6 optima are interior for every prototype).
+    pub rate_scale: f64,
+    /// Prompt-template pool size ("Prompt Templates" column); a small
+    /// pool (5) maximises prefix reuse, modelling a high KV-cache hit
+    /// rate.
+    pub template_pool: u32,
+    /// Fraction of each prompt shared with other requests of the same
+    /// template (the cacheable prefix).
+    pub shared_prefix_frac: f64,
+    /// Zipf exponent for template popularity (0 = uniform).
+    pub template_zipf: f64,
+}
+
+impl WorkloadSpec {
+    /// "Normal Load": 256–1024 ctx, 100–350 gen, 1×, 500 templates.
+    pub fn normal_load() -> WorkloadSpec {
+        WorkloadSpec {
+            name: "normal",
+            ctx_range: (256, 1024),
+            gen_range: (100, 350),
+            concurrency_mult: 1.0,
+            rate_scale: 1.0,
+            template_pool: 500,
+            shared_prefix_frac: 0.75,
+            template_zipf: 0.8,
+        }
+    }
+
+    /// "Long Context": 1024–8192 ctx, 1–100 gen.
+    pub fn long_context() -> WorkloadSpec {
+        WorkloadSpec {
+            name: "long_context",
+            ctx_range: (1024, 8192),
+            gen_range: (1, 100),
+            rate_scale: 0.15,
+            ..Self::normal_load()
+        }
+    }
+
+    /// "Long Generation": 1–256 ctx, 350 gen.
+    pub fn long_generation() -> WorkloadSpec {
+        WorkloadSpec {
+            name: "long_generation",
+            ctx_range: (1, 256),
+            gen_range: (350, 350),
+            ..Self::normal_load()
+        }
+    }
+
+    /// "High Concurrency": Normal shape at 5× arrival pressure.
+    pub fn high_concurrency() -> WorkloadSpec {
+        WorkloadSpec {
+            name: "high_concurrency",
+            concurrency_mult: 5.0,
+            rate_scale: 0.40,
+            ..Self::normal_load()
+        }
+    }
+
+    /// "High Cache Hit": Normal shape over a 5-template pool.
+    pub fn high_cache_hit() -> WorkloadSpec {
+        WorkloadSpec {
+            name: "high_cache_hit",
+            template_pool: 5,
+            shared_prefix_frac: 0.875,
+            template_zipf: 0.0,
+            ..Self::normal_load()
+        }
+    }
+
+    /// All five prototypes in paper order.
+    pub fn all() -> Vec<WorkloadSpec> {
+        vec![
+            Self::normal_load(),
+            Self::long_context(),
+            Self::long_generation(),
+            Self::high_concurrency(),
+            Self::high_cache_hit(),
+        ]
+    }
+
+    pub fn by_name(name: &str) -> Result<WorkloadSpec, String> {
+        Self::all()
+            .into_iter()
+            .find(|s| s.name == name)
+            .ok_or_else(|| format!("unknown workload prototype {name:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_values() {
+        let n = WorkloadSpec::normal_load();
+        assert_eq!(n.ctx_range, (256, 1024));
+        assert_eq!(n.gen_range, (100, 350));
+        assert_eq!(n.template_pool, 500);
+
+        let lc = WorkloadSpec::long_context();
+        assert_eq!(lc.ctx_range, (1024, 8192));
+        assert_eq!(lc.gen_range, (1, 100));
+
+        let lg = WorkloadSpec::long_generation();
+        assert_eq!(lg.ctx_range, (1, 256));
+        assert_eq!(lg.gen_range, (350, 350));
+
+        let hc = WorkloadSpec::high_concurrency();
+        assert_eq!(hc.concurrency_mult, 5.0);
+
+        let hh = WorkloadSpec::high_cache_hit();
+        assert_eq!(hh.template_pool, 5);
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        for spec in WorkloadSpec::all() {
+            assert_eq!(WorkloadSpec::by_name(spec.name).unwrap(), spec);
+        }
+        assert!(WorkloadSpec::by_name("nope").is_err());
+    }
+}

@@ -1,0 +1,171 @@
+//! Trace file I/O: the on-disk request-stream format (CSV), mirroring
+//! the fields of the Azure public dataset (timestamp, context tokens,
+//! generated tokens) plus the template id our prefix cache keys on.
+
+use std::path::Path;
+
+use crate::server::Request;
+use crate::util::csv;
+
+/// One trace row.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TraceRecord {
+    pub arrival_s: f64,
+    pub context_tokens: u32,
+    pub generated_tokens: u32,
+    pub template_id: u32,
+    pub shared_prefix_tokens: u32,
+}
+
+/// Write records to a CSV file.
+pub fn write_trace(
+    path: impl AsRef<Path>,
+    records: &[TraceRecord],
+) -> Result<(), String> {
+    let mut w = csv::CsvWriter::create(
+        path,
+        &[
+            "arrival_s",
+            "context_tokens",
+            "generated_tokens",
+            "template_id",
+            "shared_prefix_tokens",
+        ],
+    )
+    .map_err(|e| e.to_string())?;
+    for r in records {
+        w.row(&[
+            format!("{:.6}", r.arrival_s),
+            r.context_tokens.to_string(),
+            r.generated_tokens.to_string(),
+            r.template_id.to_string(),
+            r.shared_prefix_tokens.to_string(),
+        ])
+        .map_err(|e| e.to_string())?;
+    }
+    w.flush().map_err(|e| e.to_string())
+}
+
+/// Read a trace CSV.
+pub fn read_trace(path: impl AsRef<Path>) -> Result<Vec<TraceRecord>, String> {
+    let text = std::fs::read_to_string(path.as_ref())
+        .map_err(|e| format!("{}: {e}", path.as_ref().display()))?;
+    let (header, rows) = csv::parse(&text)?;
+    let idx = |name: &str| {
+        header
+            .iter()
+            .position(|h| h == name)
+            .ok_or_else(|| format!("missing column {name:?}"))
+    };
+    let (ia, ic, ig, it, is) = (
+        idx("arrival_s")?,
+        idx("context_tokens")?,
+        idx("generated_tokens")?,
+        idx("template_id")?,
+        idx("shared_prefix_tokens")?,
+    );
+    let mut out = Vec::with_capacity(rows.len());
+    for (n, row) in rows.iter().enumerate() {
+        let parse_u32 = |cell: &str| {
+            cell.parse::<u32>()
+                .map_err(|e| format!("row {}: {e}", n + 2))
+        };
+        out.push(TraceRecord {
+            arrival_s: row[ia]
+                .parse::<f64>()
+                .map_err(|e| format!("row {}: {e}", n + 2))?,
+            context_tokens: parse_u32(&row[ic])?,
+            generated_tokens: parse_u32(&row[ig])?,
+            template_id: parse_u32(&row[it])?,
+            shared_prefix_tokens: parse_u32(&row[is])?,
+        });
+    }
+    Ok(out)
+}
+
+/// Convert records to engine requests (ids assigned by position).
+pub fn to_requests(records: &[TraceRecord]) -> Vec<Request> {
+    records
+        .iter()
+        .enumerate()
+        .map(|(i, r)| {
+            Request::new(
+                i as u64,
+                r.arrival_s,
+                r.context_tokens.max(1),
+                r.generated_tokens.max(1),
+                r.template_id,
+                r.shared_prefix_tokens,
+            )
+        })
+        .collect()
+}
+
+/// Convert requests back to trace records (for persisting synthesized
+/// workloads).
+pub fn from_requests(requests: &[Request]) -> Vec<TraceRecord> {
+    requests
+        .iter()
+        .map(|r| TraceRecord {
+            arrival_s: r.arrival_s,
+            context_tokens: r.prompt_tokens,
+            generated_tokens: r.target_output,
+            template_id: r.template_id,
+            shared_prefix_tokens: r.shared_prefix_tokens,
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_via_file() {
+        let records = vec![
+            TraceRecord {
+                arrival_s: 0.5,
+                context_tokens: 1024,
+                generated_tokens: 128,
+                template_id: 3,
+                shared_prefix_tokens: 768,
+            },
+            TraceRecord {
+                arrival_s: 1.25,
+                context_tokens: 64,
+                generated_tokens: 350,
+                template_id: 0,
+                shared_prefix_tokens: 0,
+            },
+        ];
+        let dir = std::env::temp_dir().join("agft_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.csv");
+        write_trace(&path, &records).unwrap();
+        let back = read_trace(&path).unwrap();
+        assert_eq!(back, records);
+    }
+
+    #[test]
+    fn requests_roundtrip() {
+        let records = vec![TraceRecord {
+            arrival_s: 2.0,
+            context_tokens: 100,
+            generated_tokens: 10,
+            template_id: 7,
+            shared_prefix_tokens: 64,
+        }];
+        let reqs = to_requests(&records);
+        assert_eq!(reqs[0].prompt_tokens, 100);
+        assert_eq!(from_requests(&reqs), records);
+    }
+
+    #[test]
+    fn read_rejects_missing_columns() {
+        let dir = std::env::temp_dir().join("agft_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.csv");
+        std::fs::write(&path, "a,b\n1,2\n").unwrap();
+        assert!(read_trace(&path).is_err());
+    }
+}
