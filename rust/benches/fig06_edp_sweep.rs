@@ -9,8 +9,9 @@
 //! (virtual s, default 240) trade fidelity for wall-clock.
 
 use agft::config::{ExperimentConfig, WorkloadKind};
+use agft::experiment::executor::Executor;
 use agft::experiment::report;
-use agft::experiment::sweep::edp_sweep;
+use agft::experiment::sweep::edp_sweep_with;
 use agft::gpu::FreqTable;
 use agft::workload::WorkloadSpec;
 
@@ -19,8 +20,10 @@ fn env_f64(key: &str, default: f64) -> f64 {
 }
 
 fn main() {
-    let step = env_f64("AGFT_SWEEP_STEP", 45.0) as u32;
+    let step = (env_f64("AGFT_SWEEP_STEP", 45.0) as u32).max(1);
     let duration = env_f64("AGFT_SWEEP_DURATION", 240.0);
+    let exec = Executor::new();
+    eprintln!("sweeping on {} workers", exec.workers());
     let paper = [
         ("normal", 1230u32),
         ("long_context", 1395),
@@ -43,7 +46,7 @@ fn main() {
             .into_iter()
             .filter(|f| (f - table.min_mhz()) % step == 0 || *f == table.max_mhz())
             .collect();
-        let sweep = edp_sweep(&cfg, &freqs).unwrap();
+        let sweep = edp_sweep_with(&cfg, &freqs, &exec).unwrap();
         let paper_opt = paper[idx].1;
         rows.push(vec![
             spec.name.to_string(),

@@ -35,7 +35,10 @@ fn main() {
     // tuner would maximise clock instead of minimising EDP).
     cfg.tuner.ttft_slo_s = 0.6;
     cfg.tuner.tpot_slo_s = 0.03;
-    eprintln!("running {hours} virtual hours, AGFT vs default ...");
+    eprintln!(
+        "running {hours} virtual hours, AGFT vs default (both legs \
+         concurrently over one shared request stream) ..."
+    );
     let t0 = std::time::Instant::now();
     let (agft, base) = run_pair(&cfg).unwrap();
     eprintln!("done in {:.1} s host time", t0.elapsed().as_secs_f64());

@@ -2,17 +2,24 @@
 //!
 //! * `engine.step` — the inner loop every experiment spins millions of
 //!   times (12 virtual hours ≈ 2 M iterations).
-//! * `linucb.update` / `linucb.select_ucb` — the per-window decision
-//!   math (Eqs. 1–5).
+//! * `linucb.update` / `linucb.select_ucb` / `linucb.select_greedy` —
+//!   the per-window decision math (Eqs. 1–5; greedy is the α=0 fast
+//!   path exploitation runs on).
 //! * `tuner.step` — the full monitor→decide→prune→refine window path.
+//! * `edp_sweep` — grid wall-clock, serial vs the parallel experiment
+//!   executor (the tentpole ≥4×-on-4-cores target).
 //! * `hlo scorer` — the PJRT-executed Pallas kernel per decision (only
 //!   when `artifacts/` is built).
 //!
 //! Prints ns/op; EXPERIMENTS.md §Perf records the before/after log.
+//! `AGFT_SKIP_SWEEP_BENCH=1` skips the (slower) sweep wall-clock
+//! section — CI smoke uses it.
 
 use std::time::Instant;
 
 use agft::config::{ExperimentConfig, GovernorKind, TunerConfig, WorkloadKind};
+use agft::experiment::executor::Executor;
+use agft::experiment::sweep::edp_sweep_with;
 use agft::gpu::FreqTable;
 use agft::server::Engine;
 use agft::tuner::tuner::{AgftTuner, WindowObservation};
@@ -80,6 +87,9 @@ fn main() {
     bench("linucb.select_ucb (28 arms)", 300_000, || {
         let _ = linucb.select_ucb(&freqs, &x0, 0.5);
     });
+    bench("linucb.select_greedy (28 arms)", 300_000, || {
+        let _ = linucb.select_greedy(&freqs, &x0);
+    });
 
     // --- full tuner window ---
     let table = FreqTable::from_config(&cfg.gpu);
@@ -103,6 +113,32 @@ fn main() {
         };
         let _ = tuner.step(&obs);
     });
+
+    // --- sweep wall-clock: serial vs parallel executor ---
+    if std::env::var("AGFT_SKIP_SWEEP_BENCH").is_err() {
+        let sweep_cfg = ExperimentConfig {
+            duration_s: 120.0,
+            arrival_rps: 2.0,
+            workload: WorkloadKind::Prototype("normal".to_string()),
+            ..ExperimentConfig::default()
+        };
+        let freqs: Vec<u32> = (0..16).map(|i| 300 + i * 100).collect();
+        let time_sweep = |exec: &Executor| {
+            let t0 = Instant::now();
+            let r = edp_sweep_with(&sweep_cfg, &freqs, exec).unwrap();
+            (t0.elapsed().as_secs_f64(), r.optimum.freq_mhz)
+        };
+        let (t_ser, f_ser) = time_sweep(&Executor::with_workers(1));
+        let par = Executor::new();
+        let (t_par, f_par) = time_sweep(&par);
+        assert_eq!(f_ser, f_par, "parallel sweep changed the optimum");
+        println!(
+            "edp_sweep 16 pts x 120 s       serial {t_ser:6.2} s | \
+             {} workers {t_par:6.2} s | speedup {:.2}x",
+            par.workers(),
+            t_ser / t_par.max(1e-9)
+        );
+    }
 
     // --- HLO-backed scorer (three-layer decision path) ---
     match agft::runtime::find_artifacts_dir()

@@ -4,18 +4,11 @@
 //! +151 % (energy) / +34 % (EDP) / +40 % (TTFT) / +43 % (TPOT).
 
 use agft::config::{ExperimentConfig, WorkloadKind};
-use agft::experiment::harness::{run_experiment, RunResult};
-use agft::experiment::phases::{phase_metrics, split_at, PhaseComparison};
+use agft::experiment::phases::{
+    grain_ablation_variant, phase_metrics, run_grid, stable_windows,
+    PhaseComparison,
+};
 use agft::experiment::report;
-
-fn stable_windows(r: &RunResult) -> &[agft::experiment::harness::WindowRecord] {
-    let converged = r
-        .tuner
-        .as_ref()
-        .and_then(|t| t.converged_round)
-        .unwrap_or(r.windows.len() as u64 / 2);
-    split_at(&r.windows, converged).1
-}
 
 fn main() {
     let mut base_cfg = ExperimentConfig {
@@ -31,14 +24,17 @@ fn main() {
     // Deployment-realistic SLOs (see tab02_03_phases.rs).
     base_cfg.tuner.ttft_slo_s = 0.6;
     base_cfg.tuner.tpot_slo_s = 0.03;
-    let mut nograin_cfg = base_cfg.clone();
-    // "No-grain": the agent may only pick coarse 150 MHz steps (the
-    // refinement window degenerates to anchor ± 150 at 150 MHz = 3 arms).
-    nograin_cfg.tuner.refinement.step_mhz = 90;
-    nograin_cfg.tuner.refinement.bootstrap_step_mhz = 180;
+    let nograin_cfg = grain_ablation_variant(&base_cfg);
 
-    let full = run_experiment(&base_cfg).unwrap();
-    let nograin = run_experiment(&nograin_cfg).unwrap();
+    // Both ablation legs are independent → run them concurrently on the
+    // experiment executor.
+    let grid = vec![
+        ("full".to_string(), base_cfg),
+        ("no-grain".to_string(), nograin_cfg),
+    ];
+    let mut results = run_grid(&grid).unwrap();
+    let (_, nograin) = results.pop().unwrap();
+    let (_, full) = results.pop().unwrap();
 
     let m_full = phase_metrics(stable_windows(&full));
     let m_ng = phase_metrics(stable_windows(&nograin));

@@ -5,18 +5,11 @@
 //! the paper; the text states CVs are *higher* without pruning).
 
 use agft::config::{ExperimentConfig, WorkloadKind};
-use agft::experiment::harness::{run_experiment, RunResult};
-use agft::experiment::phases::{phase_metrics, split_at, PhaseComparison};
+use agft::experiment::phases::{
+    phase_metrics, pruning_ablation_variant, run_grid, stable_windows,
+    PhaseComparison,
+};
 use agft::experiment::report;
-
-fn stable_windows(r: &RunResult) -> &[agft::experiment::harness::WindowRecord] {
-    let converged = r
-        .tuner
-        .as_ref()
-        .and_then(|t| t.converged_round)
-        .unwrap_or(r.windows.len() as u64 / 2);
-    split_at(&r.windows, converged).1
-}
 
 fn main() {
     let mut base_cfg = ExperimentConfig {
@@ -32,11 +25,16 @@ fn main() {
     // Deployment-realistic SLOs (see tab02_03_phases.rs).
     base_cfg.tuner.ttft_slo_s = 0.6;
     base_cfg.tuner.tpot_slo_s = 0.03;
-    let mut noprune_cfg = base_cfg.clone();
-    noprune_cfg.tuner.pruning.enabled = false;
+    let noprune_cfg = pruning_ablation_variant(&base_cfg);
 
-    let full = run_experiment(&base_cfg).unwrap();
-    let noprune = run_experiment(&noprune_cfg).unwrap();
+    // Independent legs → parallel grid.
+    let grid = vec![
+        ("full".to_string(), base_cfg),
+        ("no-pruning".to_string(), noprune_cfg),
+    ];
+    let mut results = run_grid(&grid).unwrap();
+    let (_, noprune) = results.pop().unwrap();
+    let (_, full) = results.pop().unwrap();
     println!(
         "pruning events: full={} / no-pruning={}",
         full.tuner

@@ -6,9 +6,10 @@
 //! (−3.3 %), High Cache Hit 1200/1290 (+7.5 %).
 
 use agft::config::{ExperimentConfig, WorkloadKind};
-use agft::experiment::harness::run_experiment;
+use agft::experiment::executor::Executor;
+use agft::experiment::phases::run_grid;
 use agft::experiment::report;
-use agft::experiment::sweep::edp_sweep;
+use agft::experiment::sweep::edp_sweep_with;
 use agft::gpu::FreqTable;
 use agft::workload::WorkloadSpec;
 
@@ -40,41 +41,60 @@ fn main() {
         ("high_concurrency", 1365, 1320),
         ("high_cache_hit", 1200, 1290),
     ];
-    let mut rows = Vec::new();
-    let mut csv = Vec::new();
-    for (idx, spec) in WorkloadSpec::all().into_iter().enumerate() {
+    let exec = Executor::new();
+    // Pass 1 — offline: one fine sweep per prototype, each fanned out
+    // over the executor (one worker per locked-clock point).
+    let mut sweeps = Vec::new();
+    for spec in WorkloadSpec::all() {
         let cfg = ExperimentConfig {
             duration_s: 300.0,
             arrival_rps: 2.0,
             workload: WorkloadKind::Prototype(spec.name.to_string()),
             ..ExperimentConfig::default()
         };
-        // Offline: fine sweep around the operating band.
         let table = FreqTable::from_config(&cfg.gpu);
         let freqs = table.in_range(900, table.max_mhz());
-        let sweep = edp_sweep(&cfg, &freqs).unwrap();
-        let offline = sweep.optimum.freq_mhz;
+        let sweep = edp_sweep_with(&cfg, &freqs, &exec).unwrap();
+        eprintln!("{}: offline optimum {}", spec.name, sweep.optimum.freq_mhz);
+        sweeps.push((cfg, sweep));
+    }
 
-        // Online: long AGFT run to convergence, then the modal
-        // exploitation frequency ("the learned frequency"). Decode-heavy
-        // prototypes have nearly flat EDP(f) around the optimum (Fig 6),
-        // so resolving it against window noise needs the paper's full
-        // 5000-request horizon and a longer exploration phase.
-        let mut online_cfg = ExperimentConfig {
-            duration_s: 3000.0,
-            ..cfg.clone()
-        };
-        online_cfg.tuner.converge_stable_rounds = 300;
-        online_cfg.tuner.alpha_tau = 120.0;
-        // Per-workload SLOs, set relative to what the EDP-optimal clock
-        // can deliver (a deployment serving 8k-token contexts does not
-        // run a 150 ms TTFT SLO): 1.5x the offline optimum's latency.
-        online_cfg.tuner.ttft_slo_s =
-            (sweep.optimum.mean_ttft * 1.5).max(0.15);
-        online_cfg.tuner.tpot_slo_s =
-            (sweep.optimum.mean_tpot * 1.5).max(0.02);
-        let run = run_experiment(&online_cfg).unwrap();
-        let online = learned_frequency(&run);
+    // Pass 2 — online: long AGFT runs to convergence, then the modal
+    // exploitation frequency ("the learned frequency"). Decode-heavy
+    // prototypes have nearly flat EDP(f) around the optimum (Fig 6), so
+    // resolving it against window noise needs the paper's full
+    // 5000-request horizon and a longer exploration phase. The five
+    // runs are independent → one parallel grid.
+    let grid: Vec<(String, ExperimentConfig)> = WorkloadSpec::all()
+        .into_iter()
+        .zip(&sweeps)
+        .map(|(spec, (cfg, sweep))| {
+            let mut online_cfg = ExperimentConfig {
+                duration_s: 3000.0,
+                ..cfg.clone()
+            };
+            online_cfg.tuner.converge_stable_rounds = 300;
+            online_cfg.tuner.alpha_tau = 120.0;
+            // Per-workload SLOs, set relative to what the EDP-optimal
+            // clock can deliver (a deployment serving 8k-token contexts
+            // does not run a 150 ms TTFT SLO): 1.5x the offline
+            // optimum's latency.
+            online_cfg.tuner.ttft_slo_s =
+                (sweep.optimum.mean_ttft * 1.5).max(0.15);
+            online_cfg.tuner.tpot_slo_s =
+                (sweep.optimum.mean_tpot * 1.5).max(0.02);
+            (spec.name.to_string(), online_cfg)
+        })
+        .collect();
+    let online_runs = run_grid(&grid).unwrap();
+
+    let mut rows = Vec::new();
+    let mut csv = Vec::new();
+    for (idx, spec) in WorkloadSpec::all().into_iter().enumerate() {
+        let (_, sweep) = &sweeps[idx];
+        let offline = sweep.optimum.freq_mhz;
+        let (_, run) = &online_runs[idx];
+        let online = learned_frequency(run);
         eprintln!(
             "{}: offline {} / online {:?} (converged {:?})",
             spec.name,

@@ -1,0 +1,301 @@
+//! Parallel experiment executor: runs independent experiment jobs on a
+//! scoped `std::thread` pool (zero new dependencies) with deterministic,
+//! input-ordered results.
+//!
+//! Every grid-shaped caller in the repo — the locked-clock EDP sweeps
+//! (Fig 6, Table 6's offline column), AGFT-vs-baseline pairs
+//! (Figs 11–14, Tables 2/3) and the ablation grids (Tables 4/5) — is a
+//! set of *independent* virtual-clock replays. Each job owns its whole
+//! simulation state, so the only shared data is the realized request
+//! stream (an `Arc<[Request]>`, cloned by handle, not by value) and the
+//! result slots.
+//!
+//! Scheduling is a shared atomic work index: each worker claims the next
+//! unclaimed job when it goes idle, so long jobs (low-clock sweep points
+//! pay a far bigger latency bill than high-clock ones) never serialize
+//! the pool behind a static partition. Results are written into
+//! per-index slots, so the output order equals the input order no matter
+//! which worker ran which job — parallel and serial execution are
+//! bit-identical.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::sync::Mutex;
+
+use crate::config::ExperimentConfig;
+use crate::server::Request;
+use crate::workload;
+
+use super::harness::{run_shared, RunResult};
+
+/// Default worker count: `AGFT_WORKERS` when set (and > 0), otherwise
+/// the host's available parallelism.
+pub fn default_workers() -> usize {
+    std::env::var("AGFT_WORKERS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&w| w > 0)
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        })
+}
+
+/// Per-job outcome inside [`Executor::try_map`] — a dedicated variant
+/// for cancellation keeps it impossible to confuse with a real job
+/// error, whatever the error text.
+enum JobOutcome<R> {
+    Done(R),
+    Failed(String),
+    Cancelled,
+}
+
+/// A reusable experiment executor (the pool is scoped per call, so the
+/// struct itself is just the worker-count policy and is `Copy`-cheap to
+/// pass around).
+#[derive(Debug, Clone, Copy)]
+pub struct Executor {
+    workers: usize,
+}
+
+impl Default for Executor {
+    fn default() -> Executor {
+        Executor::new()
+    }
+}
+
+impl Executor {
+    /// Executor with the default worker count (see [`default_workers`]).
+    pub fn new() -> Executor {
+        Executor::with_workers(default_workers())
+    }
+
+    /// Executor with an explicit worker count (clamped to ≥ 1). One
+    /// worker runs every job inline on the calling thread — the serial
+    /// reference path the determinism tests compare against.
+    pub fn with_workers(workers: usize) -> Executor {
+        Executor {
+            workers: workers.max(1),
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Map `f` over `jobs` on the pool. `f(i, &jobs[i])` may run on any
+    /// worker; the returned vector is always in input order. A panicking
+    /// job propagates the panic to the caller (after the scope joins).
+    pub fn map<T, R, F>(&self, jobs: &[T], f: F) -> Vec<R>
+    where
+        T: Sync,
+        R: Send,
+        F: Fn(usize, &T) -> R + Sync,
+    {
+        let n = jobs.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let workers = self.workers.min(n);
+        if workers <= 1 {
+            return jobs.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+        }
+        let next = AtomicUsize::new(0);
+        let slots: Vec<Mutex<Option<R>>> =
+            (0..n).map(|_| Mutex::new(None)).collect();
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                scope.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let r = f(i, &jobs[i]);
+                    *slots[i].lock().unwrap() = Some(r);
+                });
+            }
+        });
+        slots
+            .into_iter()
+            .map(|s| {
+                s.into_inner()
+                    .expect("no worker panicked")
+                    .expect("every slot was filled")
+            })
+            .collect()
+    }
+
+    /// Fallible [`Executor::map`] with fail-fast cancellation: once one
+    /// job errors, not-yet-started jobs are skipped instead of burning
+    /// the rest of the grid's compute. On success the output equals a
+    /// serial run exactly (the determinism guarantee). On failure some
+    /// error from the grid is returned; when several jobs are invalid,
+    /// *which* one's error surfaces depends on worker timing — fail-fast
+    /// deliberately trades error-path reproducibility for not running
+    /// the rest of a doomed grid.
+    pub fn try_map<T, R, F>(
+        &self,
+        jobs: &[T],
+        f: F,
+    ) -> Result<Vec<R>, String>
+    where
+        T: Sync,
+        R: Send,
+        F: Fn(usize, &T) -> Result<R, String> + Sync,
+    {
+        let cancelled = AtomicBool::new(false);
+        let results = self.map(jobs, |i, t| {
+            if cancelled.load(Ordering::Relaxed) {
+                return JobOutcome::Cancelled;
+            }
+            match f(i, t) {
+                Ok(v) => JobOutcome::Done(v),
+                Err(e) => {
+                    cancelled.store(true, Ordering::Relaxed);
+                    JobOutcome::Failed(e)
+                }
+            }
+        });
+        let mut out = Vec::with_capacity(results.len());
+        let mut first_err = None;
+        for r in results {
+            match r {
+                JobOutcome::Done(v) => out.push(v),
+                JobOutcome::Failed(e) => {
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                }
+                JobOutcome::Cancelled => {}
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            // A job can only be cancelled after some job failed, so a
+            // short output without an error would be an executor bug —
+            // never hand callers a silently truncated result set.
+            None if out.len() == jobs.len() => Ok(out),
+            None => Err(
+                "executor cancelled jobs without recording an error"
+                    .to_string(),
+            ),
+        }
+    }
+
+    /// Run a batch of full experiments concurrently, each realizing its
+    /// own workload (configs may differ in seed/workload/duration).
+    /// Results are in config order; a failure cancels unstarted jobs.
+    pub fn run_experiments(
+        &self,
+        cfgs: &[ExperimentConfig],
+    ) -> Result<Vec<RunResult>, String> {
+        self.try_map(cfgs, |_, cfg| {
+            let requests: Arc<[Request]> = workload::realize(
+                &cfg.workload,
+                cfg.arrival_rps,
+                cfg.duration_s,
+                cfg.seed,
+            )?
+            .into();
+            run_shared(cfg, requests)
+        })
+    }
+
+    /// Run a batch of experiments over one *shared* pre-realized request
+    /// stream (locked-clock sweep points, AGFT-vs-baseline pairs): the
+    /// stream is shared by `Arc` handle, never re-cloned per job.
+    pub fn run_experiments_shared(
+        &self,
+        cfgs: &[ExperimentConfig],
+        requests: &Arc<[Request]>,
+    ) -> Result<Vec<RunResult>, String> {
+        self.try_map(cfgs, |_, cfg| run_shared(cfg, Arc::clone(requests)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_preserves_input_order() {
+        let exec = Executor::with_workers(4);
+        let jobs: Vec<u64> = (0..100).collect();
+        let out = exec.map(&jobs, |i, &x| {
+            assert_eq!(i as u64, x);
+            x * x
+        });
+        let want: Vec<u64> = (0..100).map(|x| x * x).collect();
+        assert_eq!(out, want);
+    }
+
+    #[test]
+    fn map_handles_empty_and_single() {
+        let exec = Executor::with_workers(8);
+        let empty: Vec<u32> = Vec::new();
+        assert!(exec.map(&empty, |_, &x| x).is_empty());
+        assert_eq!(exec.map(&[7u32], |_, &x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn serial_and_parallel_agree_on_pure_jobs() {
+        let jobs: Vec<f64> = (0..64).map(|i| i as f64 * 0.37).collect();
+        let f = |_: usize, &x: &f64| (x.sin() * 1e6).round();
+        let ser = Executor::with_workers(1).map(&jobs, f);
+        let par = Executor::with_workers(6).map(&jobs, f);
+        assert_eq!(ser, par);
+    }
+
+    #[test]
+    fn try_map_returns_values_or_real_error() {
+        let exec = Executor::with_workers(3);
+        let jobs: Vec<u32> = (0..40).collect();
+        let ok = exec
+            .try_map(&jobs, |_, &x| Ok::<u32, String>(x * 2))
+            .unwrap();
+        assert_eq!(ok.len(), 40);
+        assert_eq!(ok[39], 78);
+        // One poisoned job: the surfaced error is the real one, never
+        // the internal cancellation sentinel.
+        let err = exec
+            .try_map(&jobs, |_, &x| {
+                if x == 7 {
+                    Err("bad config".to_string())
+                } else {
+                    Ok(x)
+                }
+            })
+            .unwrap_err();
+        assert_eq!(err, "bad config");
+    }
+
+    #[test]
+    fn worker_count_floors_at_one() {
+        assert_eq!(Executor::with_workers(0).workers(), 1);
+        assert!(Executor::new().workers() >= 1);
+    }
+
+    #[test]
+    fn run_experiments_matches_run_experiment() {
+        use crate::config::WorkloadKind;
+        use crate::experiment::harness::run_experiment;
+        let cfg = ExperimentConfig {
+            duration_s: 30.0,
+            arrival_rps: 2.0,
+            workload: WorkloadKind::Prototype("normal".to_string()),
+            ..ExperimentConfig::default()
+        };
+        let direct = run_experiment(&cfg).unwrap();
+        let batch = Executor::with_workers(2)
+            .run_experiments(&[cfg.clone(), cfg.clone()])
+            .unwrap();
+        for r in &batch {
+            assert_eq!(
+                r.total_energy_j.to_bits(),
+                direct.total_energy_j.to_bits()
+            );
+            assert_eq!(r.finished.len(), direct.finished.len());
+        }
+    }
+}

@@ -1,12 +1,20 @@
 //! Drive a full experiment: workload → engine → (optionally) AGFT tuner,
 //! sampled at the paper's 0.8 s window cadence.
+//!
+//! Request streams are shared by `Arc` handle ([`run_shared`]) so
+//! grid-shaped callers (sweeps, pairs, ablations) replay the identical
+//! workload from many threads without per-run clones.
+
+use std::sync::Arc;
 
 use crate::config::{ExperimentConfig, GovernorKind};
 use crate::gpu::FreqTable;
-use crate::server::{Engine, FinishedRecord};
+use crate::server::{Engine, FinishedRecord, Request};
 use crate::tuner::tuner::{TunerPhase, WindowObservation};
 use crate::tuner::AgftTuner;
 use crate::workload;
+
+use super::executor::Executor;
 
 /// One sampling window's record (the row type behind Fig 13 and the
 /// ablation tables).
@@ -137,9 +145,18 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> Result<RunResult, String> {
 /// pairs share the identical workload).
 pub fn run_with_requests(
     cfg: &ExperimentConfig,
-    requests: Vec<crate::server::Request>,
+    requests: Vec<Request>,
 ) -> Result<RunResult, String> {
-    let mut engine = Engine::new(cfg, requests);
+    run_shared(cfg, requests.into())
+}
+
+/// Run over a *shared* pre-materialised request stream — the zero-clone
+/// path every parallel grid caller (sweeps, pairs, ablations) uses.
+pub fn run_shared(
+    cfg: &ExperimentConfig,
+    requests: Arc<[Request]>,
+) -> Result<RunResult, String> {
+    let mut engine = Engine::with_shared(cfg, requests);
     let mut tuner = match cfg.governor {
         GovernorKind::Agft => {
             let table = FreqTable::from_config(&cfg.gpu);
@@ -238,24 +255,39 @@ pub fn run_with_requests(
 }
 
 /// Run AGFT and the default-governor baseline over the *identical*
-/// request stream; returns (agft, baseline).
+/// request stream; returns (agft, baseline). The two runs are
+/// independent virtual-clock replays, so they execute concurrently on
+/// the default experiment executor (sharing the stream by `Arc`
+/// handle).
 pub fn run_pair(cfg: &ExperimentConfig) -> Result<(RunResult, RunResult), String> {
-    let requests = workload::realize(
+    run_pair_with(cfg, &Executor::new())
+}
+
+/// [`run_pair`] on an explicit executor (`--workers` plumbing).
+pub fn run_pair_with(
+    cfg: &ExperimentConfig,
+    exec: &Executor,
+) -> Result<(RunResult, RunResult), String> {
+    let requests: Arc<[Request]> = workload::realize(
         &cfg.workload,
         cfg.arrival_rps,
         cfg.duration_s,
         cfg.seed,
-    )?;
-    let agft_cfg = ExperimentConfig {
-        governor: GovernorKind::Agft,
-        ..cfg.clone()
-    };
-    let base_cfg = ExperimentConfig {
-        governor: GovernorKind::Default,
-        ..cfg.clone()
-    };
-    let agft = run_with_requests(&agft_cfg, requests.clone())?;
-    let base = run_with_requests(&base_cfg, requests)?;
+    )?
+    .into();
+    let cfgs = [
+        ExperimentConfig {
+            governor: GovernorKind::Agft,
+            ..cfg.clone()
+        },
+        ExperimentConfig {
+            governor: GovernorKind::Default,
+            ..cfg.clone()
+        },
+    ];
+    let mut results = exec.run_experiments_shared(&cfgs, &requests)?;
+    let base = results.pop().expect("two results");
+    let agft = results.pop().expect("two results");
     Ok((agft, base))
 }
 

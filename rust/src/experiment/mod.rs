@@ -4,18 +4,30 @@
 //! * [`harness`] — run one [`crate::config::ExperimentConfig`] to a
 //!   window-level log ([`harness::RunResult`]); run AGFT-vs-baseline
 //!   pairs over the identical request stream.
+//! * [`executor`] — parallel experiment executor: independent jobs on a
+//!   scoped thread pool with deterministic, input-ordered results; every
+//!   grid-shaped caller (sweeps, pairs, ablations) routes through it.
 //! * [`sweep`] — offline frequency sweeps: EDP(f) U-curves and their
-//!   optima (Fig 6, Table 6's "Offline" column).
+//!   optima (Fig 6, Table 6's "Offline" column), one worker per
+//!   locked-clock point.
 //! * [`phases`] — learning vs post-convergence splits and the Table-2/3
-//!   metric comparisons.
+//!   metric comparisons, plus the parallel ablation-grid runner.
 //! * [`report`] — plain-text table rendering + CSV emission shared by
 //!   all bench binaries.
 
+pub mod executor;
 pub mod harness;
 pub mod phases;
 pub mod report;
 pub mod sweep;
 
-pub use harness::{run_experiment, run_pair, RunResult, WindowRecord};
-pub use phases::{phase_metrics, split_at, PhaseComparison};
-pub use sweep::{edp_sweep, SweepPoint};
+pub use executor::Executor;
+pub use harness::{
+    run_experiment, run_pair, run_pair_with, run_shared, RunResult,
+    WindowRecord,
+};
+pub use phases::{
+    phase_metrics, run_grid, run_grid_with, split_at, stable_windows,
+    PhaseComparison,
+};
+pub use sweep::{edp_sweep, edp_sweep_with, SweepPoint};

@@ -5,9 +5,15 @@
 //! request stream, reproducing the paper's `AGFT mean / Normal mean /
 //! Diff` rows for Energy, EDP, TTFT, TPOT and E2E.
 
+use std::sync::Arc;
+
+use crate::config::ExperimentConfig;
+use crate::server::Request;
 use crate::util::stats::pct_diff;
 use crate::util::RunningStats;
+use crate::workload;
 
+use super::executor::Executor;
 use super::harness::{RunResult, WindowRecord};
 
 /// Aggregates of one metric over a phase.
@@ -108,6 +114,84 @@ impl PhaseComparison {
     pub fn get(&self, metric: &str) -> Option<&ComparisonRow> {
         self.rows.iter().find(|r| r.metric == metric)
     }
+}
+
+/// Run a labelled ablation grid — independent experiment variants, each
+/// realizing its own workload — concurrently on the default experiment
+/// executor. Results keep the input order; the first error wins.
+pub fn run_grid(
+    grid: &[(String, ExperimentConfig)],
+) -> Result<Vec<(String, RunResult)>, String> {
+    run_grid_with(grid, &Executor::new())
+}
+
+/// [`run_grid`] on an explicit executor (`--workers` plumbing). When
+/// every leg draws the same workload (typical ablations differ only in
+/// tuner knobs), the request stream is realized once and shared by
+/// `Arc` handle across the legs.
+pub fn run_grid_with(
+    grid: &[(String, ExperimentConfig)],
+    exec: &Executor,
+) -> Result<Vec<(String, RunResult)>, String> {
+    let cfgs: Vec<ExperimentConfig> =
+        grid.iter().map(|(_, c)| c.clone()).collect();
+    let same_stream = cfgs.split_first().map_or(false, |(first, rest)| {
+        rest.iter().all(|c| {
+            c.workload == first.workload
+                && c.arrival_rps == first.arrival_rps
+                && c.duration_s == first.duration_s
+                && c.seed == first.seed
+        })
+    });
+    let results = if same_stream {
+        let first = &cfgs[0];
+        let requests: Arc<[Request]> = workload::realize(
+            &first.workload,
+            first.arrival_rps,
+            first.duration_s,
+            first.seed,
+        )?
+        .into();
+        exec.run_experiments_shared(&cfgs, &requests)?
+    } else {
+        exec.run_experiments(&cfgs)?
+    };
+    Ok(grid
+        .iter()
+        .map(|(name, _)| name.clone())
+        .zip(results)
+        .collect())
+}
+
+/// The paper's "No-grain" ablation variant (Table 4): coarse-only
+/// frequency control — the refinement step degenerates to 90 MHz over a
+/// 180 MHz bootstrap grid. Single source of truth for the CLI and the
+/// tab04 bench.
+pub fn grain_ablation_variant(base: &ExperimentConfig) -> ExperimentConfig {
+    let mut c = base.clone();
+    c.tuner.refinement.step_mhz = 90;
+    c.tuner.refinement.bootstrap_step_mhz = 180;
+    c
+}
+
+/// The paper's "No pruning" ablation variant (Table 5). Single source
+/// of truth for the CLI and the tab05 bench.
+pub fn pruning_ablation_variant(base: &ExperimentConfig) -> ExperimentConfig {
+    let mut c = base.clone();
+    c.tuner.pruning.enabled = false;
+    c
+}
+
+/// The stable (post-convergence) window slice of a run; when a noisy
+/// run never formally converges, the second half of the horizon stands
+/// in (the convention every ablation table uses).
+pub fn stable_windows(r: &RunResult) -> &[WindowRecord] {
+    let converged = r
+        .tuner
+        .as_ref()
+        .and_then(|t| t.converged_round)
+        .unwrap_or(r.windows.len() as u64 / 2);
+    split_at(&r.windows, converged).1
 }
 
 /// Split an AGFT run + aligned baseline at convergence and produce the

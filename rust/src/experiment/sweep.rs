@@ -2,11 +2,21 @@
 //! point, replay the workload, and chart EDP(f). The minima are the
 //! "theoretical optimum" column of Table 6 and the highlighted points of
 //! Fig 6.
+//!
+//! Sweep points are independent locked-clock replays of one realized
+//! request stream, so they run concurrently on the
+//! [`super::executor::Executor`]: the stream is shared by `Arc` handle
+//! (never re-cloned per point) and the point order — hence the located
+//! optimum — is identical to a serial sweep.
+
+use std::sync::Arc;
 
 use crate::config::{ExperimentConfig, GovernorKind};
 use crate::gpu::FreqTable;
+use crate::server::Request;
 
-use super::harness::run_with_requests;
+use super::executor::Executor;
+use super::harness::run_shared;
 
 /// One sweep sample.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -29,20 +39,36 @@ pub struct SweepResult {
 
 impl SweepResult {
     /// The EDP curve must be U-ish: strictly worse at both edges than at
-    /// the optimum. Used by calibration tests.
+    /// the optimum. Used by calibration tests. Degenerate sweeps (fewer
+    /// than 3 points) cannot express a U and report `false` instead of
+    /// panicking.
     pub fn is_u_shaped(&self) -> bool {
-        let first = self.points.first().unwrap();
-        let last = self.points.last().unwrap();
+        if self.points.len() < 3 {
+            return false;
+        }
+        let first = &self.points[0];
+        let last = &self.points[self.points.len() - 1];
         first.edp > self.optimum.edp && last.edp > self.optimum.edp
     }
 }
 
-/// Sweep EDP over `freqs` (defaults to the whole table at `step_mhz`
-/// granularity when `freqs` is empty). Each point replays the identical
-/// request stream under a locked clock.
+/// Sweep EDP over `freqs` (defaults to the whole table at the base
+/// step when `freqs` is empty) with the default executor. Each point
+/// replays the identical request stream under a locked clock.
 pub fn edp_sweep(
     cfg: &ExperimentConfig,
     freqs: &[u32],
+) -> Result<SweepResult, String> {
+    edp_sweep_with(cfg, freqs, &Executor::new())
+}
+
+/// [`edp_sweep`] on an explicit executor. `Executor::with_workers(1)`
+/// is the serial reference path; any worker count produces bit-identical
+/// points in identical order.
+pub fn edp_sweep_with(
+    cfg: &ExperimentConfig,
+    freqs: &[u32],
+    exec: &Executor,
 ) -> Result<SweepResult, String> {
     let table = FreqTable::from_config(&cfg.gpu);
     let freqs: Vec<u32> = if freqs.is_empty() {
@@ -50,14 +76,17 @@ pub fn edp_sweep(
     } else {
         freqs.to_vec()
     };
-    let requests = crate::workload::realize(
+    if freqs.is_empty() {
+        return Err("empty sweep".to_string());
+    }
+    let requests: Arc<[Request]> = crate::workload::realize(
         &cfg.workload,
         cfg.arrival_rps,
         cfg.duration_s,
         cfg.seed,
-    )?;
-    let mut points = Vec::with_capacity(freqs.len());
-    for &f in &freqs {
+    )?
+    .into();
+    let points = exec.try_map(&freqs, |_, &f| {
         // Sweep points run to *drain* — the paper measures the energy
         // and delay to complete the full task round at each clock, so a
         // slow clock must pay its full latency bill rather than having
@@ -67,17 +96,17 @@ pub fn edp_sweep(
             duration_s: cfg.duration_s * 1e3,
             ..cfg.clone()
         };
-        let r = run_with_requests(&run_cfg, requests.clone())?;
+        let r = run_shared(&run_cfg, Arc::clone(&requests))?;
         let delay: f64 = r.finished.iter().map(|rec| rec.e2e).sum();
-        points.push(SweepPoint {
+        Ok(SweepPoint {
             freq_mhz: f,
             energy_j: r.total_energy_j,
             delay_s: delay,
             edp: r.total_energy_j * delay,
             mean_ttft: r.mean_ttft(),
             mean_tpot: r.mean_tpot(),
-        });
-    }
+        })
+    })?;
     let optimum = *points
         .iter()
         .min_by(|a, b| a.edp.partial_cmp(&b.edp).unwrap())
@@ -126,4 +155,17 @@ mod tests {
             hch.optimum.freq_mhz
         );
     }
+
+    #[test]
+    fn degenerate_sweeps_are_not_u_shaped() {
+        // 1- and 2-point sweeps used to panic inside `is_u_shaped`.
+        for freqs in [&[1230u32][..], &[900, 1500][..]] {
+            let r = edp_sweep(&cfg("normal"), freqs).unwrap();
+            assert_eq!(r.points.len(), freqs.len());
+            assert!(!r.is_u_shaped());
+        }
+    }
+
+    // Parallel-vs-serial bitwise determinism is covered end-to-end by
+    // tests/perf_semantics.rs::parallel_sweep_is_bit_identical_to_serial.
 }

@@ -17,13 +17,26 @@
 use agft::config::{
     self, ExperimentConfig, GovernorKind, WorkloadKind,
 };
-use agft::experiment::harness::{run_experiment, run_pair};
-use agft::experiment::phases::learning_and_stable;
+use agft::experiment::executor::Executor;
+use agft::experiment::harness::{run_experiment, run_pair_with};
+use agft::experiment::phases::{
+    grain_ablation_variant, learning_and_stable, phase_metrics,
+    pruning_ablation_variant, run_grid_with, stable_windows,
+    PhaseComparison,
+};
 use agft::experiment::report::{self, render_comparison};
-use agft::experiment::sweep::edp_sweep;
+use agft::experiment::sweep::edp_sweep_with;
 use agft::gpu::FreqTable;
 use agft::util::cli::Args;
 use agft::workload::{self, trace};
+
+/// `--workers N` (default: AGFT_WORKERS env or available parallelism).
+fn executor_from(args: &Args) -> Result<Executor, String> {
+    Ok(match args.get("workers") {
+        None => Executor::new(),
+        Some(_) => Executor::with_workers(args.get_usize("workers", 0)?),
+    })
+}
 
 fn base_config(args: &Args) -> Result<ExperimentConfig, String> {
     let mut cfg = match args.get("config") {
@@ -71,7 +84,7 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
 
 fn cmd_compare(args: &Args) -> Result<(), String> {
     let cfg = base_config(args)?;
-    let (agft, base) = run_pair(&cfg)?;
+    let (agft, base) = run_pair_with(&cfg, &executor_from(args)?)?;
     println!(
         "energy: AGFT {:.0} J vs default {:.0} J ({:+.1} %)",
         agft.total_energy_j,
@@ -86,14 +99,26 @@ fn cmd_compare(args: &Args) -> Result<(), String> {
 
 fn cmd_sweep(args: &Args) -> Result<(), String> {
     let cfg = base_config(args)?;
-    let step = args.get_u64("step", 45)? as u32;
+    let step_raw = args.get_u64("step", 45)?;
+    let step = u32::try_from(step_raw)
+        .ok()
+        .filter(|&s| s > 0)
+        .ok_or_else(|| {
+            format!("--step {step_raw}: must be a positive MHz step")
+        })?;
+    let exec = executor_from(args)?;
     let table = FreqTable::from_config(&cfg.gpu);
     let freqs: Vec<u32> = table
         .all()
         .into_iter()
         .filter(|f| (f - table.min_mhz()) % step == 0)
         .collect();
-    let sweep = edp_sweep(&cfg, &freqs)?;
+    eprintln!(
+        "sweeping {} locked-clock points on {} workers ...",
+        freqs.len(),
+        exec.workers()
+    );
+    let sweep = edp_sweep_with(&cfg, &freqs, &exec)?;
     let rows: Vec<Vec<String>> = sweep
         .points
         .iter()
@@ -120,13 +145,17 @@ fn cmd_fingerprint(args: &Args) -> Result<(), String> {
     use agft::analysis::fingerprint::{
         normalize_fingerprints, run_fingerprint, FEATURE_NAMES,
     };
-    let mut prints = Vec::new();
+    // One independent fingerprint run per prototype → fan them out on
+    // the experiment executor (results stay in prototype order).
+    let mut cfgs = Vec::new();
     for spec in agft::workload::WorkloadSpec::all() {
         let mut cfg = base_config(args)?;
         cfg.governor = GovernorKind::Default;
         cfg.workload = WorkloadKind::Prototype(spec.name.to_string());
-        prints.push(run_fingerprint(&cfg)?);
+        cfgs.push(cfg);
     }
+    let prints =
+        executor_from(args)?.try_map(&cfgs, |_, cfg| run_fingerprint(cfg))?;
     let norm = normalize_fingerprints(&prints);
     for p in &norm {
         print!("{:18}", p.workload);
@@ -139,6 +168,58 @@ fn cmd_fingerprint(args: &Args) -> Result<(), String> {
         "dims: {}",
         FEATURE_NAMES.join(" | ")
     );
+    Ok(())
+}
+
+fn cmd_ablation(args: &Args) -> Result<(), String> {
+    let which = args.get_str("which", "grain");
+    let mut base = base_config(args)?;
+    // The ablation compares AGFT tuner variants, so the governor is not
+    // a free knob here — reject a conflicting flag instead of silently
+    // overriding it.
+    if let Some(g) = args.get("governor") {
+        if base.governor != GovernorKind::Agft {
+            return Err(format!(
+                "--governor {g}: ablation always compares AGFT tuner \
+                 variants (drop the flag or pass agft)"
+            ));
+        }
+    }
+    base.governor = GovernorKind::Agft;
+    let mut grid: Vec<(String, ExperimentConfig)> =
+        vec![("full".to_string(), base.clone())];
+    match which.as_str() {
+        "grain" => grid
+            .push(("no-grain".to_string(), grain_ablation_variant(&base))),
+        "pruning" => grid.push((
+            "no-pruning".to_string(),
+            pruning_ablation_variant(&base),
+        )),
+        other => {
+            return Err(format!(
+                "unknown ablation {other:?} (want grain|pruning)"
+            ))
+        }
+    }
+    eprintln!(
+        "running {}-variant ablation grid in parallel ...",
+        grid.len()
+    );
+    let results = run_grid_with(&grid, &executor_from(args)?)?;
+    let (_, full) = &results[0];
+    let m_full = phase_metrics(stable_windows(full));
+    for (name, run) in &results[1..] {
+        let m_var = phase_metrics(stable_windows(run));
+        let cmp = PhaseComparison::build(&m_var, &m_full);
+        println!(
+            "{}",
+            report::render_cv_comparison(
+                &format!("ablation: {name} vs full (stable phase)"),
+                name,
+                &cmp,
+            )
+        );
+    }
     Ok(())
 }
 
@@ -173,9 +254,12 @@ fn cmd_metrics(args: &Args) -> Result<(), String> {
 
 fn usage() -> ! {
     eprintln!(
-        "usage: agft <serve|compare|sweep|fingerprint|trace-gen|metrics|bench-all> [options]\n\
+        "usage: agft <serve|compare|sweep|ablation|fingerprint|trace-gen|\
+         metrics|bench-all> [options]\n\
          common options: --config <toml> --workload <name> --governor \
-         <default|agft|locked:MHZ> --duration S --rps R --seed N\n\
+         <default|agft|locked:MHZ> --duration S --rps R --seed N \
+         --workers N\n\
+         ablation options: --which grain|pruning\n\
          workloads: normal long_context long_generation high_concurrency \
          high_cache_hit azure2023 azure2024 trace:<path>"
     );
@@ -198,6 +282,7 @@ fn main() {
         "serve" => cmd_serve(&args),
         "compare" | "longrun" => cmd_compare(&args),
         "sweep" => cmd_sweep(&args),
+        "ablation" => cmd_ablation(&args),
         "fingerprint" => cmd_fingerprint(&args),
         "trace-gen" => cmd_trace_gen(&args),
         "metrics" => cmd_metrics(&args),

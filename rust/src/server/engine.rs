@@ -6,8 +6,15 @@
 //! The engine is governor-agnostic: the `Default` baseline, locked-clock
 //! sweep points and the AGFT tuner all drive the same loop (AGFT calls
 //! [`crate::gpu::SimGpu::set_clock`] between sampling windows).
+//!
+//! Hot-path notes: the request stream is shared (`Arc<[Request]>` + a
+//! cursor) so sweep points replaying the same workload never clone the
+//! full stream; the iteration plan is a reusable scratch buffer, so a
+//! steady-state busy step performs no heap allocation; idle periods
+//! fast-forward straight to the next arrival (bounded by the caller's
+//! sampling horizon) instead of spinning quantized `idle_tick_s` steps.
 
-use std::collections::VecDeque;
+use std::sync::Arc;
 
 use crate::config::{ExperimentConfig, GovernorKind};
 use crate::gpu::perf::{IterationWork, PerfModel};
@@ -16,7 +23,7 @@ use crate::sim::Clock;
 
 use super::metrics::MetricsSnapshot;
 use super::request::Request;
-use super::scheduler::Scheduler;
+use super::scheduler::{IterationPlan, Scheduler};
 
 /// Cumulative engine counters (see [`MetricsSnapshot`] for the scrape
 /// view).
@@ -54,8 +61,8 @@ pub struct FinishedRecord {
 pub enum StepOutcome {
     /// A busy iteration ran (`dt` seconds of work).
     Busy { dt: f64, work: IterationWork },
-    /// No runnable work; idled for `dt` (bounded by the idle tick or the
-    /// next arrival).
+    /// No runnable work; idled for `dt` (bounded by the next arrival and
+    /// the caller's time bound, or by the idle tick in quantized mode).
     Idle { dt: f64 },
     /// Nothing left: no work, no future arrivals.
     Drained,
@@ -67,25 +74,57 @@ pub struct Engine {
     pub gpu: SimGpu,
     pub sched: Scheduler,
     perf: PerfModel,
-    arrivals: VecDeque<Request>,
+    /// Shared, arrival-sorted request stream; `next_arrival` is the
+    /// cursor of the first not-yet-submitted request.
+    arrivals: Arc<[Request]>,
+    next_arrival: usize,
     pub counters: EngineCounters,
     /// Completed-request latency log.
     pub finished_log: Vec<FinishedRecord>,
+    /// Reusable iteration-plan scratch (capacity persists across steps,
+    /// so the busy path is allocation-free at steady state).
+    plan_scratch: IterationPlan,
     /// Optional (t, W) power trace for Fig-1 style plots.
     power_trace: Option<Vec<(f64, f64)>>,
     trace_every_s: f64,
     last_trace_s: f64,
-    /// Idle advance quantum (keeps sampling windows responsive).
+    /// Idle advance quantum — used for KV-blocked stalls, and for empty
+    /// idle when fast-forward is disabled.
     idle_tick_s: f64,
+    /// Event-driven idle: jump straight to the next arrival (bounded by
+    /// the caller's `run_until` horizon) instead of quantized ticks.
+    idle_fast_forward: bool,
 }
 
 impl Engine {
-    /// Build an engine from an experiment config and a pre-generated,
-    /// arrival-sorted request stream.
-    pub fn new(cfg: &ExperimentConfig, mut requests: Vec<Request>) -> Engine {
-        requests.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
+    /// Build an engine from an experiment config and a pre-generated
+    /// request stream (sorted here if needed).
+    pub fn new(cfg: &ExperimentConfig, requests: Vec<Request>) -> Engine {
+        Engine::with_shared(cfg, requests.into())
+    }
+
+    /// Build an engine over a *shared* request stream. The stream is
+    /// re-sorted (into a private copy) only when it is not already
+    /// arrival-ordered, so sweep points sharing one realized workload
+    /// pay zero per-run clone cost.
+    pub fn with_shared(
+        cfg: &ExperimentConfig,
+        requests: Arc<[Request]>,
+    ) -> Engine {
+        let sorted = requests
+            .windows(2)
+            .all(|w| w[0].arrival_s <= w[1].arrival_s);
+        let requests = if sorted {
+            requests
+        } else {
+            let mut v: Vec<Request> = requests.to_vec();
+            v.sort_by(|a, b| {
+                a.arrival_s.partial_cmp(&b.arrival_s).unwrap()
+            });
+            v.into()
+        };
         let max_tokens = cfg.server.kv_blocks * cfg.server.block_size;
-        for r in &requests {
+        for r in requests.iter() {
             assert!(
                 ((r.prompt_tokens + r.target_output) as usize) < max_tokens,
                 "request {} cannot ever fit in the KV pool",
@@ -97,21 +136,34 @@ impl Engine {
             gpu: SimGpu::new(&cfg.gpu, cfg.governor),
             sched: Scheduler::new(&cfg.server),
             perf: PerfModel::new(&cfg.gpu, &cfg.model),
-            arrivals: requests.into(),
+            arrivals: requests,
+            next_arrival: 0,
             counters: EngineCounters::default(),
             finished_log: Vec::new(),
+            plan_scratch: IterationPlan::default(),
             power_trace: None,
             trace_every_s: 0.1,
             last_trace_s: f64::NEG_INFINITY,
             idle_tick_s: 0.05,
+            idle_fast_forward: true,
         }
     }
 
     /// Record an instantaneous power sample every `every_s` of virtual
-    /// time into an in-memory trace (Fig 1).
+    /// time into an in-memory trace (Fig 1). Tracing re-enables the
+    /// quantized idle tick: one event-jump per idle gap would yield a
+    /// single sample where the figure needs the dense idle floor (call
+    /// [`Engine::set_idle_fast_forward`] afterwards to override).
     pub fn enable_power_trace(&mut self, every_s: f64) {
         self.power_trace = Some(Vec::new());
         self.trace_every_s = every_s;
+        self.idle_fast_forward = false;
+    }
+
+    /// Toggle event-driven idle fast-forward (on by default). The
+    /// quantized mode is kept for A/B timeline-equivalence tests.
+    pub fn set_idle_fast_forward(&mut self, on: bool) {
+        self.idle_fast_forward = on;
     }
 
     pub fn power_trace(&self) -> Option<&[(f64, f64)]> {
@@ -119,18 +171,17 @@ impl Engine {
     }
 
     pub fn pending_arrivals(&self) -> usize {
-        self.arrivals.len()
+        self.arrivals.len() - self.next_arrival
     }
 
     fn pull_arrivals(&mut self) {
         let now = self.clock.now();
-        while let Some(front) = self.arrivals.front() {
-            if front.arrival_s <= now {
-                let req = self.arrivals.pop_front().unwrap();
-                self.sched.submit(req);
-            } else {
-                break;
-            }
+        while self.next_arrival < self.arrivals.len()
+            && self.arrivals[self.next_arrival].arrival_s <= now
+        {
+            let req = self.arrivals[self.next_arrival].clone();
+            self.sched.submit(req);
+            self.next_arrival += 1;
         }
     }
 
@@ -145,28 +196,44 @@ impl Engine {
         }
     }
 
-    /// Run one engine iteration (busy or idle).
-    pub fn step(&mut self) -> StepOutcome {
+    /// Run one engine iteration (busy or idle), idling at most to
+    /// `t_bound` when fast-forwarding (pass `f64::INFINITY` for no
+    /// bound).
+    fn step_bounded(&mut self, t_bound: f64) -> StepOutcome {
         self.pull_arrivals();
 
         if !self.sched.has_work() {
-            return match self.arrivals.front() {
+            return match self.arrivals.get(self.next_arrival) {
                 None => StepOutcome::Drained,
                 Some(next) => {
-                    let dt = (next.arrival_s - self.clock.now())
-                        .clamp(0.0, self.idle_tick_s)
-                        .max(1e-6);
+                    let gap = next.arrival_s - self.clock.now();
+                    let dt = if self.idle_fast_forward {
+                        // Event-driven: one jump to the next arrival,
+                        // clipped to the caller's sampling horizon so
+                        // window scrapes stay on cadence.
+                        let cap = if t_bound.is_finite() {
+                            (t_bound - self.clock.now()).max(0.0)
+                        } else {
+                            f64::INFINITY
+                        };
+                        gap.min(cap).max(1e-6)
+                    } else {
+                        gap.clamp(0.0, self.idle_tick_s).max(1e-6)
+                    };
                     self.idle_advance(dt);
                     StepOutcome::Idle { dt }
                 }
             };
         }
 
-        let plan = self.sched.plan();
+        let mut plan = std::mem::take(&mut self.plan_scratch);
+        self.sched.plan_into(&mut plan);
         if plan.work.is_idle() {
             // Work exists but nothing is runnable (KV-blocked admission);
             // idle briefly — running requests will free blocks, or the
-            // next arrival shifts the picture.
+            // next arrival shifts the picture. This stall resolves on
+            // engine state, not on an arrival, so it keeps the quantum.
+            self.plan_scratch = plan;
             let dt = self.idle_tick_s;
             self.idle_advance(dt);
             return StepOutcome::Idle { dt };
@@ -190,10 +257,14 @@ impl Engine {
         self.counters.batch_token_sum += plan.work.total_tokens();
         self.counters.busy_time_s += dt;
         self.record_power();
-        StepOutcome::Busy {
-            dt,
-            work: plan.work,
-        }
+        let work = plan.work;
+        self.plan_scratch = plan;
+        StepOutcome::Busy { dt, work }
+    }
+
+    /// Run one engine iteration (busy or idle) with no idle bound.
+    pub fn step(&mut self) -> StepOutcome {
+        self.step_bounded(f64::INFINITY)
     }
 
     fn idle_advance(&mut self, dt: f64) {
@@ -216,8 +287,9 @@ impl Engine {
 
     fn harvest_finished(&mut self) {
         let now = self.clock.now();
-        for id in self.sched.take_finished() {
-            let req = &self.sched.requests[id];
+        let (requests, finished) = self.sched.finished_view();
+        for &id in finished {
+            let req = &requests[id];
             self.counters.finished += 1;
             self.finished_log.push(FinishedRecord {
                 arrival_s: req.arrival_s,
@@ -230,13 +302,14 @@ impl Engine {
                 e2e: req.e2e().unwrap_or(0.0),
             });
         }
+        self.sched.clear_finished();
     }
 
     /// Run until virtual time `t_end` (or drained). Returns false when
     /// drained before the deadline.
     pub fn run_until(&mut self, t_end: f64) -> bool {
         while self.clock.now() < t_end {
-            match self.step() {
+            match self.step_bounded(t_end) {
                 StepOutcome::Drained => return false,
                 _ => {}
             }
@@ -339,6 +412,70 @@ mod tests {
     }
 
     #[test]
+    fn idle_fast_forward_takes_one_jump() {
+        let cfg = default_cfg();
+        let mk = |ff: bool| {
+            let reqs = vec![
+                Request::new(0, 0.0, 64, 4, 0, 0),
+                Request::new(1, 10.0, 64, 4, 1, 0),
+            ];
+            let mut e = Engine::new(&cfg, reqs);
+            e.set_idle_fast_forward(ff);
+            e.run_until(1e9);
+            e
+        };
+        let ff = mk(true);
+        let quant = mk(false);
+        // Same served timeline...
+        assert_eq!(ff.finished_log.len(), quant.finished_log.len());
+        for (a, b) in ff.finished_log.iter().zip(&quant.finished_log) {
+            assert!((a.finish_s - b.finish_s).abs() < 1e-6);
+            assert!((a.ttft - b.ttft).abs() < 1e-6);
+        }
+        // ...same idle wall-clock, far fewer iterations (the ~10 s gap
+        // collapses from ~200 ticks into one event jump).
+        assert!((ff.counters.idle_time_s - quant.counters.idle_time_s)
+            .abs() < 1e-6);
+        assert!(
+            ff.counters.iterations + 150 < quant.counters.iterations,
+            "ff {} vs quantized {}",
+            ff.counters.iterations,
+            quant.counters.iterations
+        );
+    }
+
+    #[test]
+    fn run_until_bounds_idle_fast_forward() {
+        let cfg = default_cfg();
+        // One request far in the future: run_until must stop at its
+        // horizon, not leap past it to the arrival.
+        let reqs = vec![Request::new(0, 100.0, 64, 4, 0, 0)];
+        let mut e = Engine::new(&cfg, reqs);
+        assert!(e.run_until(1.0));
+        assert!((e.clock.now() - 1.0).abs() < 1e-9,
+                "clock overshot: {}", e.clock.now());
+        assert_eq!(e.finished_log.len(), 0);
+    }
+
+    #[test]
+    fn busy_steps_are_allocation_reusing() {
+        // Behavioural proxy for the scratch-plan reuse: repeated busy
+        // steps keep producing identical work through the same plan
+        // buffer (capacity persists, contents reset each step).
+        let cfg = default_cfg();
+        let mut e = Engine::new(&cfg, requests(50, 1000.0, 64, 64));
+        let mut busy = 0;
+        while let StepOutcome::Busy { work, .. } = e.step() {
+            assert!(work.total_tokens() > 0);
+            busy += 1;
+            if busy > 200 {
+                break;
+            }
+        }
+        assert!(busy > 10);
+    }
+
+    #[test]
     fn locked_low_clock_is_slower_but_cheaper_on_compute() {
         let mk = |gov| {
             let cfg = ExperimentConfig {
@@ -374,6 +511,37 @@ mod tests {
         if d.busy_iterations > 0 {
             let packing = d.batch_token_sum as f64 / d.busy_iterations as f64;
             assert!(packing >= 1.0);
+        }
+    }
+
+    #[test]
+    fn shared_stream_needs_no_per_engine_clone() {
+        let cfg = default_cfg();
+        let stream: Arc<[Request]> = requests(20, 5.0, 256, 32).into();
+        let mut a = Engine::with_shared(&cfg, Arc::clone(&stream));
+        let mut b = Engine::with_shared(&cfg, Arc::clone(&stream));
+        a.run_until(1e9);
+        b.run_until(1e9);
+        assert_eq!(a.finished_log.len(), 20);
+        assert_eq!(
+            a.gpu.energy_j().to_bits(),
+            b.gpu.energy_j().to_bits(),
+            "identical engines over one shared stream must be bit-equal"
+        );
+    }
+
+    #[test]
+    fn unsorted_shared_stream_is_resorted() {
+        let cfg = default_cfg();
+        let mut reqs = requests(10, 5.0, 128, 8);
+        reqs.reverse();
+        let mut e = Engine::with_shared(&cfg, reqs.into());
+        e.run_until(1e9);
+        assert_eq!(e.finished_log.len(), 10);
+        // Without re-sorting, the earliest arrival would sit unsubmitted
+        // behind the latest one and pick up ~1.8 s of spurious TTFT.
+        for rec in &e.finished_log {
+            assert!(rec.ttft < 1.0, "ttft {} too high", rec.ttft);
         }
     }
 

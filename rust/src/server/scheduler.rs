@@ -21,6 +21,10 @@ use super::request::{Phase, Request};
 
 /// The plan for one iteration: the roofline work plus which requests
 /// decode / complete prefill (state committed after timing).
+///
+/// Designed as a reusable scratch buffer: [`IterationPlan::reset`]
+/// clears contents but keeps vector capacity, so the engine's busy path
+/// plans every iteration without heap allocation at steady state.
 #[derive(Debug, Clone, Default)]
 pub struct IterationPlan {
     pub work: IterationWork,
@@ -28,6 +32,15 @@ pub struct IterationPlan {
     pub decode_ids: Vec<usize>,
     /// Requests whose prefill completes this iteration (first token).
     pub completions: Vec<usize>,
+}
+
+impl IterationPlan {
+    /// Clear contents for reuse, retaining allocated capacity.
+    pub fn reset(&mut self) {
+        self.work = IterationWork::default();
+        self.decode_ids.clear();
+        self.completions.clear();
+    }
 }
 
 /// Continuous-batching scheduler state.
@@ -43,8 +56,11 @@ pub struct Scheduler {
     waiting: VecDeque<usize>,
     running: Vec<usize>, // admission order (last = preemption victim)
     preemptions: u64,
-    /// Requests finished since the last `take_finished` (engine drain).
+    /// Requests finished since the last engine drain.
     finished_recent: Vec<usize>,
+    /// Reusable candidate buffer for [`Scheduler::plan_into`] (avoids
+    /// two Vec allocations per engine iteration).
+    cand_scratch: Vec<usize>,
 }
 
 impl Scheduler {
@@ -64,12 +80,20 @@ impl Scheduler {
             running: Vec::new(),
             preemptions: 0,
             finished_recent: Vec::new(),
+            cand_scratch: Vec::new(),
         }
     }
 
-    /// Drain the ids of requests that finished since the last call.
-    pub fn take_finished(&mut self) -> Vec<usize> {
-        std::mem::take(&mut self.finished_recent)
+    /// Allocation-free view of the finished-id backlog alongside the
+    /// request slab (the engine reads records, then calls
+    /// [`Scheduler::clear_finished`]).
+    pub fn finished_view(&self) -> (&[Request], &[usize]) {
+        (&self.requests, &self.finished_recent)
+    }
+
+    /// Clear the finished backlog, retaining its capacity.
+    pub fn clear_finished(&mut self) {
+        self.finished_recent.clear();
     }
 
     /// Enqueue an arrived request; returns its slab id.
@@ -194,21 +218,37 @@ impl Scheduler {
         }
     }
 
-    /// Build the next iteration. Mutates allocation/prefill progress;
-    /// token-emission state is committed by [`Scheduler::commit`].
+    /// Build the next iteration into a fresh plan (convenience wrapper
+    /// over [`Scheduler::plan_into`] for tests and one-shot callers).
     pub fn plan(&mut self) -> IterationPlan {
-        self.admit();
         let mut plan = IterationPlan::default();
+        self.plan_into(&mut plan);
+        plan
+    }
+
+    /// Build the next iteration into a caller-owned scratch plan
+    /// (cleared here; capacity reused). Mutates allocation/prefill
+    /// progress; token-emission state is committed by
+    /// [`Scheduler::commit`].
+    pub fn plan_into(&mut self, plan: &mut IterationPlan) {
+        plan.reset();
+        self.admit();
         let mut budget = self.max_batch_tokens;
 
+        // Candidate ids are snapshotted into a reusable scratch buffer
+        // because `ensure_blocks` may preempt (mutate `running`) while
+        // we iterate.
+        let mut cand = std::mem::take(&mut self.cand_scratch);
+
         // --- decode: one token per running Decode sequence ---
-        let decode_candidates: Vec<usize> = self
-            .running
-            .iter()
-            .copied()
-            .filter(|&id| self.requests[id].phase == Phase::Decode)
-            .collect();
-        for id in decode_candidates {
+        cand.clear();
+        cand.extend(
+            self.running
+                .iter()
+                .copied()
+                .filter(|&id| self.requests[id].phase == Phase::Decode),
+        );
+        for &id in &cand {
             if budget == 0 {
                 break;
             }
@@ -230,13 +270,14 @@ impl Scheduler {
         }
 
         // --- prefill: chunked, admission order ---
-        let prefill_candidates: Vec<usize> = self
-            .running
-            .iter()
-            .copied()
-            .filter(|&id| self.requests[id].phase == Phase::Prefill)
-            .collect();
-        for id in prefill_candidates {
+        cand.clear();
+        cand.extend(
+            self.running
+                .iter()
+                .copied()
+                .filter(|&id| self.requests[id].phase == Phase::Prefill),
+        );
+        for &id in &cand {
             if budget == 0 {
                 break;
             }
@@ -265,7 +306,7 @@ impl Scheduler {
                 plan.completions.push(id);
             }
         }
-        plan
+        self.cand_scratch = cand;
     }
 
     /// Commit token emission at virtual time `now` (iteration end).

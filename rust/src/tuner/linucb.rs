@@ -54,9 +54,14 @@ impl ArmModel {
         dot(&ax, x).max(0.0).sqrt()
     }
 
-    /// UCB score (Eq. 1 for one arm).
+    /// UCB score (Eq. 1 for one arm). The exploitation path (α = 0)
+    /// skips the O(d²) width quadratic form entirely — greedy scoring
+    /// is a single θᵀx dot product per arm.
     #[inline]
     pub fn ucb(&self, x: &ContextVector, alpha: f64) -> f64 {
+        if alpha == 0.0 {
+            return self.predict(x);
+        }
         self.predict(x) + alpha * self.width(x)
     }
 
@@ -344,6 +349,27 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn greedy_fast_path_matches_explicit_zero_alpha() {
+        // The α = 0 shortcut must score identically to the full Eq.-1
+        // form (width is finite, so predict + 0·width == predict).
+        let mut ucb = LinUcb::new(1.0);
+        let mut rng = Pcg64::new(11);
+        for _ in 0..50 {
+            let x = ctx(&mut rng);
+            ucb.update(600 + (rng.index(5) as u32) * 300, &x, rng.f64());
+        }
+        for _ in 0..20 {
+            let x = ctx(&mut rng);
+            for f in [600u32, 900, 1200, 1500, 1800] {
+                let arm = ucb.arm_mut(f);
+                let fast = arm.ucb(&x, 0.0);
+                let full = arm.predict(&x) + 0.0 * arm.width(&x);
+                assert_eq!(fast.to_bits(), full.to_bits());
+            }
+        }
     }
 
     #[test]

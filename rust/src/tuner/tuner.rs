@@ -108,6 +108,9 @@ pub struct AgftTuner {
     pending: Option<(u32, ContextVector)>,
     last_snap: Option<MetricsSnapshot>,
     scorer: Option<Box<dyn UcbScorer>>,
+    /// Reusable candidate buffer for the per-window selection (avoids a
+    /// fresh `to_vec` of the action space every 0.8 s decision).
+    cand_scratch: Vec<u32>,
     // --- telemetry (drives Fig 13/14 and the ablation tables) ---
     /// (round, reward) for every credited reward.
     pub reward_log: Vec<(u64, f64)>,
@@ -140,6 +143,7 @@ impl AgftTuner {
             pending: None,
             last_snap: None,
             scorer: None,
+            cand_scratch: Vec::new(),
             reward_log: Vec::new(),
             freq_log: Vec::new(),
             prune_total: PruneReport::default(),
@@ -337,21 +341,26 @@ impl AgftTuner {
     /// every *learned* arm and turn the greedy policy into blind
     /// exploration of whatever refinement just injected.
     fn select(&mut self, x: &ContextVector, alpha: f64) -> Option<u32> {
-        let mut candidates = self.space.active().to_vec();
+        // The candidate set lives in a reusable scratch buffer: the
+        // selection runs every window, and re-allocating the action
+        // space per decision is pure hot-path waste.
+        let mut candidates = std::mem::take(&mut self.cand_scratch);
+        candidates.clear();
+        candidates.extend_from_slice(self.space.active());
         if self.phase == TunerPhase::Exploitation {
-            let explored: Vec<u32> = candidates
-                .iter()
-                .copied()
-                .filter(|&f| self.linucb.arm(f).map_or(false, |a| a.n > 0))
-                .collect();
-            if !explored.is_empty() {
-                candidates = explored;
+            let linucb = &self.linucb;
+            candidates
+                .retain(|&f| linucb.arm(f).map_or(false, |a| a.n > 0));
+            if candidates.is_empty() {
+                candidates.extend_from_slice(self.space.active());
             }
         }
-        if let Some(freq) = self.select_external(&candidates, x, alpha) {
-            return Some(freq);
-        }
-        self.linucb.select_ucb(&candidates, x, alpha)
+        let picked = match self.select_external(&candidates, x, alpha) {
+            Some(freq) => Some(freq),
+            None => self.linucb.select_ucb(&candidates, x, alpha),
+        };
+        self.cand_scratch = candidates;
+        picked
     }
 
     fn select_external(

@@ -1,0 +1,205 @@
+//! Perf-overhaul semantics tests: the parallel experiment executor must
+//! be bit-identical to the serial path, and the engine's event-driven
+//! idle fast-forward must preserve the window-level timeline the
+//! quantized idle tick produced.
+
+use std::sync::Arc;
+
+use agft::config::{ExperimentConfig, GovernorKind, WorkloadKind};
+use agft::experiment::executor::Executor;
+use agft::experiment::harness::run_experiment;
+use agft::experiment::phases::run_grid;
+use agft::experiment::sweep::edp_sweep_with;
+use agft::server::{Engine, Request};
+use agft::workload;
+
+fn proto(name: &str, duration: f64) -> ExperimentConfig {
+    ExperimentConfig {
+        duration_s: duration,
+        arrival_rps: 2.0,
+        workload: WorkloadKind::Prototype(name.to_string()),
+        ..ExperimentConfig::default()
+    }
+}
+
+#[test]
+fn parallel_sweep_is_bit_identical_to_serial() {
+    // The tentpole determinism guarantee: a sweep fanned out over
+    // workers produces the exact SweepPoint vector of a serial sweep.
+    let cfg = proto("normal", 60.0);
+    let freqs: Vec<u32> = (0..8).map(|i| 600 + i * 150).collect();
+    let ser = edp_sweep_with(&cfg, &freqs, &Executor::with_workers(1))
+        .unwrap();
+    let par = edp_sweep_with(&cfg, &freqs, &Executor::with_workers(4))
+        .unwrap();
+    assert_eq!(ser.points.len(), par.points.len());
+    for (a, b) in ser.points.iter().zip(&par.points) {
+        assert_eq!(a.freq_mhz, b.freq_mhz);
+        assert_eq!(a.energy_j.to_bits(), b.energy_j.to_bits());
+        assert_eq!(a.delay_s.to_bits(), b.delay_s.to_bits());
+        assert_eq!(a.edp.to_bits(), b.edp.to_bits());
+        assert_eq!(a.mean_ttft.to_bits(), b.mean_ttft.to_bits());
+        assert_eq!(a.mean_tpot.to_bits(), b.mean_tpot.to_bits());
+    }
+    assert_eq!(ser.optimum.freq_mhz, par.optimum.freq_mhz);
+}
+
+#[test]
+fn executor_pair_matches_standalone_runs() {
+    // run_pair routes through the executor; each leg must equal the
+    // same config run alone over the same realized stream.
+    let cfg = proto("normal", 120.0);
+    let (agft, base) = agft::experiment::harness::run_pair(&cfg).unwrap();
+    let solo_agft = run_experiment(&ExperimentConfig {
+        governor: GovernorKind::Agft,
+        ..cfg.clone()
+    })
+    .unwrap();
+    let solo_base = run_experiment(&ExperimentConfig {
+        governor: GovernorKind::Default,
+        ..cfg.clone()
+    })
+    .unwrap();
+    assert_eq!(
+        agft.total_energy_j.to_bits(),
+        solo_agft.total_energy_j.to_bits()
+    );
+    assert_eq!(
+        base.total_energy_j.to_bits(),
+        solo_base.total_energy_j.to_bits()
+    );
+    assert_eq!(agft.finished.len(), solo_agft.finished.len());
+    assert_eq!(base.finished.len(), solo_base.finished.len());
+}
+
+#[test]
+fn grid_runner_is_deterministic_and_ordered() {
+    let mut grid = Vec::new();
+    for (i, name) in ["normal", "high_cache_hit", "long_generation"]
+        .iter()
+        .enumerate()
+    {
+        let mut cfg = proto(name, 60.0);
+        cfg.seed += i as u64;
+        grid.push((name.to_string(), cfg));
+    }
+    let a = run_grid(&grid).unwrap();
+    let b = run_grid(&grid).unwrap();
+    assert_eq!(a.len(), 3);
+    for ((name_a, ra), ((name_b, rb), (want, _))) in
+        a.iter().zip(b.iter().zip(&grid))
+    {
+        assert_eq!(name_a, want);
+        assert_eq!(name_b, want);
+        assert_eq!(
+            ra.total_energy_j.to_bits(),
+            rb.total_energy_j.to_bits()
+        );
+        assert_eq!(ra.finished.len(), rb.finished.len());
+    }
+}
+
+/// Drive an engine on the harness's 0.8 s window cadence and collect
+/// the per-window scrape timeline.
+fn window_timeline(
+    cfg: &ExperimentConfig,
+    requests: Arc<[Request]>,
+    fast_forward: bool,
+) -> (Engine, Vec<(f64, f64, u32)>) {
+    let mut engine = Engine::with_shared(cfg, requests);
+    engine.set_idle_fast_forward(fast_forward);
+    let mut windows = Vec::new();
+    let mut t_next = 0.8;
+    loop {
+        let alive = engine.run_until(t_next);
+        let snap = engine.snapshot();
+        windows.push((snap.time_s, snap.energy_j_total, snap.clock_mhz));
+        if !alive || snap.time_s >= cfg.duration_s {
+            break;
+        }
+        t_next += 0.8;
+    }
+    (engine, windows)
+}
+
+#[test]
+fn idle_fast_forward_preserves_window_timeline() {
+    // Sparse arrivals → long idle gaps: the quantized tick and the
+    // event jump must agree on the served timeline and on the
+    // window-level energy/clock series (up to one idle-tick of window
+    // boundary slack and fp-summation noise on idle energy).
+    let mut cfg = proto("normal", 200.0);
+    cfg.arrival_rps = 0.2; // mean 5 s between arrivals
+    cfg.governor = GovernorKind::Locked(1230);
+    let requests: Arc<[Request]> = workload::realize(
+        &cfg.workload,
+        cfg.arrival_rps,
+        cfg.duration_s,
+        cfg.seed,
+    )
+    .unwrap()
+    .into();
+
+    let (e_ff, w_ff) =
+        window_timeline(&cfg, Arc::clone(&requests), true);
+    let (e_q, w_q) = window_timeline(&cfg, requests, false);
+
+    // Identical served requests with matching latencies.
+    assert_eq!(e_ff.finished_log.len(), e_q.finished_log.len());
+    assert!(!e_ff.finished_log.is_empty());
+    for (a, b) in e_ff.finished_log.iter().zip(&e_q.finished_log) {
+        assert_eq!(a.prompt_tokens, b.prompt_tokens);
+        assert_eq!(a.output_tokens, b.output_tokens);
+        assert!((a.ttft - b.ttft).abs() < 1e-6, "{} vs {}", a.ttft, b.ttft);
+        assert!((a.e2e - b.e2e).abs() < 1e-6);
+        assert!((a.finish_s - b.finish_s).abs() < 1e-6);
+    }
+
+    // Same window count; boundaries within one idle tick; same clock
+    // sequence; cumulative energy tracks within fp noise.
+    assert_eq!(w_ff.len(), w_q.len());
+    let total = e_q.gpu.energy_j().max(1.0);
+    for ((t_a, en_a, c_a), (t_b, en_b, c_b)) in
+        w_ff.iter().zip(&w_q)
+    {
+        assert!((t_a - t_b).abs() <= 0.05 + 1e-9, "{t_a} vs {t_b}");
+        assert_eq!(c_a, c_b);
+        // Window boundary slack shifts at most one idle-tick of idle
+        // energy between adjacent windows.
+        let idle_w = cfg.gpu.idle_w.max(1.0);
+        assert!(
+            (en_a - en_b).abs() <= 0.06 * idle_w + 1e-6 * total,
+            "cumulative energy diverged: {en_a} vs {en_b}"
+        );
+    }
+
+    // The fast-forward run must do materially fewer iterations — that
+    // is the point of the optimization.
+    assert!(
+        e_ff.counters.iterations < e_q.counters.iterations,
+        "ff {} !< quantized {}",
+        e_ff.counters.iterations,
+        e_q.counters.iterations
+    );
+    // Idle wall-clock itself is preserved.
+    assert!(
+        (e_ff.counters.idle_time_s - e_q.counters.idle_time_s).abs()
+            < 1e-3,
+        "idle time drifted: {} vs {}",
+        e_ff.counters.idle_time_s,
+        e_q.counters.idle_time_s
+    );
+}
+
+#[test]
+fn full_harness_runs_are_seed_stable_under_parallel_pairs() {
+    // End-to-end reproducibility guard across the new parallel plumbing:
+    // two identical run_pair invocations are bit-identical.
+    let cfg = proto("high_concurrency", 90.0);
+    let (a1, b1) = agft::experiment::harness::run_pair(&cfg).unwrap();
+    let (a2, b2) = agft::experiment::harness::run_pair(&cfg).unwrap();
+    assert_eq!(a1.total_energy_j.to_bits(), a2.total_energy_j.to_bits());
+    assert_eq!(b1.total_energy_j.to_bits(), b2.total_energy_j.to_bits());
+    let (t1, t2) = (a1.tuner.unwrap(), a2.tuner.unwrap());
+    assert_eq!(t1.freq_log, t2.freq_log);
+}
