@@ -8,6 +8,11 @@
 //! * `tuner.step` — the full monitor→decide→prune→refine window path.
 //! * `edp_sweep` — grid wall-clock, serial vs the parallel experiment
 //!   executor (the tentpole ≥4×-on-4-cores target).
+//! * `kv-pressure event vs quantized` — a bursty, KV-starved workload
+//!   driven end to end on the window cadence in both idle modes: the
+//!   event-driven engine must finish the identical workload (bitwise
+//!   energy/timeline) in strictly fewer engine steps, and the same A/B
+//!   runs through `run_grid` at the sweep level.
 //! * `hlo scorer` — the PJRT-executed Pallas kernel per decision (only
 //!   when `artifacts/` is built).
 //!
@@ -15,16 +20,43 @@
 //! `AGFT_SKIP_SWEEP_BENCH=1` skips the (slower) sweep wall-clock
 //! section — CI smoke uses it.
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use agft::config::{ExperimentConfig, GovernorKind, TunerConfig, WorkloadKind};
 use agft::experiment::executor::Executor;
+use agft::experiment::phases::run_grid;
 use agft::experiment::sweep::edp_sweep_with;
 use agft::gpu::FreqTable;
-use agft::server::Engine;
+use agft::server::{Engine, Request};
 use agft::tuner::tuner::{AgftTuner, WindowObservation};
 use agft::util::Pcg64;
 use agft::workload;
+
+/// Bursts of oversized requests over a starved KV pool: 4 requests every
+/// 10 s, each growing to 500 KV tokens (32 blocks) against a 96-block
+/// pool — recompute preemption while a burst is in flight, dead air
+/// between bursts. The dead air is where quantized mode burns ~140 idle
+/// ticks per burst and the event-driven engine takes one jump.
+fn kv_pressure_requests() -> Vec<Request> {
+    let mut reqs = Vec::new();
+    let mut id = 0u64;
+    for burst in 0..24u64 {
+        let t0 = burst as f64 * 10.0;
+        for k in 0..4u64 {
+            reqs.push(Request::new(
+                id,
+                t0 + k as f64 * 0.01,
+                400,
+                100,
+                id as u32,
+                0,
+            ));
+            id += 1;
+        }
+    }
+    reqs
+}
 
 fn bench(name: &str, iters: u64, mut f: impl FnMut()) -> f64 {
     // Warmup.
@@ -113,6 +145,128 @@ fn main() {
         };
         let _ = tuner.step(&obs);
     });
+
+    // --- event-driven vs quantized under KV pressure ---
+    // Bursty arrivals over a starved KV pool: heavy preemption while a
+    // burst is in flight, dead air between bursts. The event-driven
+    // engine must serve the identical workload (bitwise energy and
+    // completion timeline — the tentpole equivalence guarantee) in
+    // strictly fewer engine steps.
+    {
+        let mut kv_cfg = ExperimentConfig {
+            duration_s: 240.0,
+            governor: GovernorKind::Locked(1230),
+            ..ExperimentConfig::default()
+        };
+        kv_cfg.server.kv_blocks = 96; // 1536 tokens — far below demand
+        kv_cfg.server.prefix_cache_blocks = 16;
+        kv_cfg.server.max_num_seqs = 8;
+        let requests: Arc<[Request]> = kv_pressure_requests().into();
+        let run = |event_driven: bool| {
+            let mut cfg = kv_cfg.clone();
+            cfg.event_driven = event_driven;
+            let mut engine =
+                Engine::with_shared(&cfg, Arc::clone(&requests));
+            let t0 = Instant::now();
+            let mut t_next = 0.8;
+            loop {
+                let alive = engine.run_until(t_next);
+                if !alive || engine.clock.now() >= cfg.duration_s {
+                    break;
+                }
+                t_next += 0.8;
+            }
+            (engine, t0.elapsed().as_secs_f64())
+        };
+        let (ev, ev_host_s) = run(true);
+        let (qu, qu_host_s) = run(false);
+        assert!(
+            ev.sched.preemptions() > 0,
+            "scenario must actually hit KV pressure"
+        );
+        assert_eq!(ev.finished_log.len(), qu.finished_log.len());
+        assert!(!ev.finished_log.is_empty());
+        for (a, b) in ev.finished_log.iter().zip(&qu.finished_log) {
+            assert_eq!(a.finish_s.to_bits(), b.finish_s.to_bits());
+        }
+        assert_eq!(
+            ev.gpu.energy_j().to_bits(),
+            qu.gpu.energy_j().to_bits(),
+            "modes must be bitwise energy-identical"
+        );
+        assert!(
+            ev.counters.iterations < qu.counters.iterations,
+            "event-driven must take strictly fewer steps: {} vs {}",
+            ev.counters.iterations,
+            qu.counters.iterations
+        );
+        println!(
+            "kv-pressure 240 s burst replay    event {:>8} steps \
+             ({ev_host_s:.3} s) | quantized {:>8} steps ({qu_host_s:.3} s) \
+             | {:.1}x fewer steps",
+            ev.counters.iterations,
+            qu.counters.iterations,
+            qu.counters.iterations as f64 / ev.counters.iterations as f64
+        );
+    }
+
+    // --- the same A/B end to end through run_grid + edp_sweep ---
+    if std::env::var("AGFT_SKIP_SWEEP_BENCH").is_err() {
+        let mut base = ExperimentConfig {
+            duration_s: 120.0,
+            arrival_rps: 0.6, // sparse: idle gaps dominate wall-clock
+            governor: GovernorKind::Locked(1230),
+            workload: WorkloadKind::Prototype("normal".to_string()),
+            ..ExperimentConfig::default()
+        };
+        base.server.kv_blocks = 256;
+        let mut quantized = base.clone();
+        quantized.event_driven = false;
+        let grid = vec![
+            ("event".to_string(), base.clone()),
+            ("quantized".to_string(), quantized),
+        ];
+        let t0 = Instant::now();
+        let results = run_grid(&grid).unwrap();
+        let grid_s = t0.elapsed().as_secs_f64();
+        let ev = &results[0].1;
+        let qu = &results[1].1;
+        assert_eq!(
+            ev.total_energy_j.to_bits(),
+            qu.total_energy_j.to_bits(),
+            "run_grid legs must agree bitwise across idle modes"
+        );
+        assert_eq!(ev.finished.len(), qu.finished.len());
+        println!(
+            "run_grid event/quantized A/B      {:.2} s wall | energy \
+             bit-equal over {} requests",
+            grid_s,
+            ev.finished.len()
+        );
+
+        // Sweep wall-clock in both modes: the event-driven engine is the
+        // one the paper's Fig-6 grids actually feel.
+        let freqs: Vec<u32> = (0..8).map(|i| 600 + i * 150).collect();
+        let exec = Executor::new();
+        let time_sweep = |cfg: &ExperimentConfig| {
+            let t0 = Instant::now();
+            let r = edp_sweep_with(cfg, &freqs, &exec).unwrap();
+            (t0.elapsed().as_secs_f64(), r.optimum.freq_mhz)
+        };
+        let (t_event, f_event) = time_sweep(&base);
+        let mut base_q = base.clone();
+        base_q.event_driven = false;
+        let (t_quant, f_quant) = time_sweep(&base_q);
+        assert_eq!(
+            f_event, f_quant,
+            "idle mode must not move the sweep optimum"
+        );
+        println!(
+            "edp_sweep 8 pts x 120 s sparse    event {t_event:6.2} s | \
+             quantized {t_quant:6.2} s | speedup {:.2}x",
+            t_quant / t_event.max(1e-9)
+        );
+    }
 
     // --- sweep wall-clock: serial vs parallel executor ---
     if std::env::var("AGFT_SKIP_SWEEP_BENCH").is_err() {

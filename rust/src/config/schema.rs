@@ -351,6 +351,12 @@ pub struct ExperimentConfig {
     pub engine: EngineKind,
     /// Mean request arrival rate (req/s) before workload multipliers.
     pub arrival_rps: f64,
+    /// Event-driven engine idle (default): the virtual clock jumps
+    /// straight between events (arrivals, window boundaries) instead of
+    /// spinning the 50 ms idle quantum. `false` selects the quantized
+    /// A/B reference mode — bitwise-equivalent on timelines and energy
+    /// (enforced by `tests/perf_semantics.rs`), just slower.
+    pub event_driven: bool,
     pub results_dir: String,
 }
 
@@ -367,6 +373,7 @@ impl Default for ExperimentConfig {
             governor: GovernorKind::Agft,
             engine: EngineKind::Analytical,
             arrival_rps: 2.0,
+            event_driven: true,
             results_dir: "results".to_string(),
         }
     }
@@ -562,6 +569,7 @@ impl ExperimentConfig {
             }
             override_field!(e, "duration_s", c.duration_s, as_f64);
             override_field!(e, "arrival_rps", c.arrival_rps, as_f64);
+            override_field!(e, "event_driven", c.event_driven, as_bool);
             override_string!(e, "results_dir", c.results_dir);
             if let Some(w) = e.get("workload") {
                 let name = w.as_str().ok_or("bad workload")?;
@@ -665,6 +673,7 @@ step_mhz = 60
         .unwrap();
         let c = ExperimentConfig::from_toml(&doc).unwrap();
         assert_eq!(c.seed, 7);
+        assert!(c.event_driven, "event-driven engine is the default");
         assert_eq!(c.workload,
                    WorkloadKind::Prototype("high_concurrency".into()));
         assert_eq!(c.governor, GovernorKind::Locked(1230));
@@ -673,6 +682,13 @@ step_mhz = 60
         // untouched defaults survive
         assert_eq!(c.tuner.window_s, 0.8);
         assert_eq!(c.tuner.pruning.extreme_reward_threshold, -1.2);
+    }
+
+    #[test]
+    fn event_driven_toggle_parses() {
+        let doc = toml::parse("[experiment]\nevent_driven = false").unwrap();
+        let c = ExperimentConfig::from_toml(&doc).unwrap();
+        assert!(!c.event_driven);
     }
 
     #[test]

@@ -163,6 +163,109 @@ pub fn run_grid_with(
         .collect())
 }
 
+/// Mean with a 95 % normal-approximation confidence half-width (the
+/// across-seed column the paper's Tables 2–5 imply but never print).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct MeanCi {
+    pub mean: f64,
+    pub half95: f64,
+    pub n: u64,
+}
+
+impl MeanCi {
+    pub fn from_samples(xs: impl Iterator<Item = f64>) -> MeanCi {
+        let mut s = RunningStats::new();
+        for x in xs {
+            s.push(x);
+        }
+        let n = s.count();
+        let half95 = if n >= 2 {
+            1.96 * s.std() / (n as f64).sqrt()
+        } else {
+            0.0
+        };
+        MeanCi {
+            mean: s.mean(),
+            half95,
+            n,
+        }
+    }
+}
+
+/// The five paper metrics for one grid variant, aggregated across seed
+/// replicas (per-seed stable-phase window means → mean ± 95 % CI).
+#[derive(Debug, Clone)]
+pub struct SeedSummary {
+    pub label: String,
+    pub seeds: u64,
+    pub energy_j: MeanCi,
+    pub edp: MeanCi,
+    pub ttft: MeanCi,
+    pub tpot: MeanCi,
+    pub e2e: MeanCi,
+}
+
+/// Replicate a labelled grid across `seeds` consecutive seed offsets;
+/// replica labels gain a `#s<k>` suffix so [`summarize_seeds`] can group
+/// them back. The expanded grid goes through [`run_grid`] unchanged, so
+/// all variant × seed legs fan out on the experiment executor together.
+pub fn seed_grid(
+    grid: &[(String, ExperimentConfig)],
+    seeds: u64,
+) -> Vec<(String, ExperimentConfig)> {
+    if seeds <= 1 {
+        return grid.to_vec();
+    }
+    let mut out = Vec::with_capacity(grid.len() * seeds as usize);
+    for (label, cfg) in grid {
+        for s in 0..seeds {
+            let mut c = cfg.clone();
+            c.seed = cfg.seed.wrapping_add(s);
+            out.push((format!("{label}#s{s}"), c));
+        }
+    }
+    out
+}
+
+/// Group [`seed_grid`] results back by base label (first-appearance
+/// order) and aggregate each variant's stable-phase metrics across its
+/// seed replicas.
+pub fn summarize_seeds(results: &[(String, RunResult)]) -> Vec<SeedSummary> {
+    let mut groups: Vec<(String, Vec<&RunResult>)> = Vec::new();
+    for (label, run) in results {
+        let base = match label.rfind("#s") {
+            Some(i) if label[i + 2..].chars().all(|c| c.is_ascii_digit()) => {
+                label[..i].to_string()
+            }
+            _ => label.clone(),
+        };
+        match groups.iter_mut().find(|(l, _)| *l == base) {
+            Some((_, runs)) => runs.push(run),
+            None => groups.push((base, vec![run])),
+        }
+    }
+    groups
+        .into_iter()
+        .map(|(label, runs)| {
+            let ms: Vec<PhaseMetrics> = runs
+                .iter()
+                .map(|r| phase_metrics(stable_windows(r)))
+                .collect();
+            SeedSummary {
+                label,
+                seeds: ms.len() as u64,
+                energy_j: MeanCi::from_samples(
+                    ms.iter().map(|m| m.energy_j.mean),
+                ),
+                edp: MeanCi::from_samples(ms.iter().map(|m| m.edp.mean)),
+                ttft: MeanCi::from_samples(ms.iter().map(|m| m.ttft.mean)),
+                tpot: MeanCi::from_samples(ms.iter().map(|m| m.tpot.mean)),
+                e2e: MeanCi::from_samples(ms.iter().map(|m| m.e2e.mean)),
+            }
+        })
+        .collect()
+}
+
 /// The paper's "No-grain" ablation variant (Table 4): coarse-only
 /// frequency control — the refinement step degenerates to 90 MHz over a
 /// 180 MHz bootstrap grid. Single source of truth for the CLI and the
@@ -270,6 +373,62 @@ mod tests {
         assert!((energy.diff_pct - (-50.0)).abs() < 1e-9);
         let ttft = c.get("TTFT").unwrap();
         assert!(ttft.diff_pct > 0.0, "AGFT slower → positive diff");
+    }
+
+    #[test]
+    fn mean_ci_matches_closed_form() {
+        let c = MeanCi::from_samples([1.0, 2.0, 3.0].into_iter());
+        assert_eq!(c.n, 3);
+        assert!((c.mean - 2.0).abs() < 1e-12);
+        // std = 1, half-width = 1.96/√3.
+        assert!((c.half95 - 1.96 / 3f64.sqrt()).abs() < 1e-12);
+        let single = MeanCi::from_samples([5.0].into_iter());
+        assert_eq!(single.half95, 0.0);
+    }
+
+    #[test]
+    fn seed_grid_expands_and_summary_groups() {
+        let base = ExperimentConfig::default();
+        let grid = vec![
+            ("full".to_string(), base.clone()),
+            ("no-pruning".to_string(), base.clone()),
+        ];
+        let expanded = seed_grid(&grid, 3);
+        assert_eq!(expanded.len(), 6);
+        assert_eq!(expanded[0].0, "full#s0");
+        assert_eq!(expanded[2].0, "full#s2");
+        assert_eq!(expanded[2].1.seed, base.seed + 2);
+        assert_eq!(expanded[3].0, "no-pruning#s0");
+        // seeds == 1 leaves the grid (and labels) untouched.
+        assert_eq!(seed_grid(&grid, 1)[0].0, "full");
+
+        // Grouping: three replicas with window energies 10/20/30 → mean
+        // 20 with the 3-sample CI, preserving variant order. Four
+        // windows per run so the never-converged fallback (second half
+        // of the horizon) leaves a non-empty stable slice.
+        let run = |e: f64| super::super::harness::RunResult {
+            windows: (0..4).map(|_| window(e, 2.0, 0.03)).collect(),
+            finished: Vec::new(),
+            total_energy_j: e,
+            duration_s: 1.0,
+            clock_changes: 0,
+            tuner: None,
+        };
+        let results = vec![
+            ("full#s0".to_string(), run(10.0)),
+            ("full#s1".to_string(), run(20.0)),
+            ("full#s2".to_string(), run(30.0)),
+            ("no-pruning#s0".to_string(), run(40.0)),
+        ];
+        let summary = summarize_seeds(&results);
+        assert_eq!(summary.len(), 2);
+        assert_eq!(summary[0].label, "full");
+        assert_eq!(summary[0].seeds, 3);
+        assert!((summary[0].energy_j.mean - 20.0).abs() < 1e-9);
+        assert!(summary[0].energy_j.half95 > 0.0);
+        assert_eq!(summary[1].label, "no-pruning");
+        assert_eq!(summary[1].seeds, 1);
+        assert!((summary[1].energy_j.mean - 40.0).abs() < 1e-9);
     }
 
     #[test]

@@ -7,7 +7,7 @@ use std::path::{Path, PathBuf};
 
 use crate::util::csv::CsvWriter;
 
-use super::phases::PhaseComparison;
+use super::phases::{MeanCi, PhaseComparison, SeedSummary};
 
 /// Render a fixed-width text table.
 pub fn render_table(title: &str, header: &[&str], rows: &[Vec<String>]) -> String {
@@ -95,6 +95,36 @@ pub fn render_cv_comparison(title: &str, label: &str, c: &PhaseComparison) -> St
     )
 }
 
+/// Render a multi-seed grid summary (`--seeds N`): one row per paper
+/// metric, one `mean ± 95 % CI` column per variant.
+pub fn render_seed_summary(title: &str, summaries: &[SeedSummary]) -> String {
+    let header: Vec<String> = std::iter::once("Metric".to_string())
+        .chain(
+            summaries
+                .iter()
+                .map(|s| format!("{} (n={})", s.label, s.seeds)),
+        )
+        .collect();
+    let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let cell = |c: &MeanCi| format!("{:.3} ± {:.3}", c.mean, c.half95);
+    let metrics: [(&str, fn(&SeedSummary) -> &MeanCi); 5] = [
+        ("Energy (J)", |s| &s.energy_j),
+        ("EDP", |s| &s.edp),
+        ("TTFT", |s| &s.ttft),
+        ("TPOT", |s| &s.tpot),
+        ("E2E", |s| &s.e2e),
+    ];
+    let rows: Vec<Vec<String>> = metrics
+        .iter()
+        .map(|(name, get)| {
+            std::iter::once(name.to_string())
+                .chain(summaries.iter().map(|s| cell(get(s))))
+                .collect()
+        })
+        .collect();
+    render_table(title, &header_refs, &rows)
+}
+
 /// Ensure `results/` exists and return the CSV path for a bench.
 pub fn results_path(name: &str) -> PathBuf {
     let dir = Path::new("results");
@@ -174,6 +204,34 @@ mod tests {
             assert!(text.contains(metric), "missing {metric} in {text}");
         }
         assert!(text.contains("+0.0 %"));
+    }
+
+    #[test]
+    fn seed_summary_renders_ci_columns() {
+        use crate::experiment::phases::{MeanCi, SeedSummary};
+        let s = |label: &str, mean: f64| SeedSummary {
+            label: label.to_string(),
+            seeds: 5,
+            energy_j: MeanCi {
+                mean,
+                half95: 1.5,
+                n: 5,
+            },
+            edp: MeanCi::default(),
+            ttft: MeanCi::default(),
+            tpot: MeanCi::default(),
+            e2e: MeanCi::default(),
+        };
+        let text = render_seed_summary(
+            "ablation (5 seeds)",
+            &[s("full", 120.0), s("no-pruning", 140.0)],
+        );
+        assert!(text.contains("full (n=5)"));
+        assert!(text.contains("no-pruning (n=5)"));
+        assert!(text.contains("120.000 ± 1.500"), "{text}");
+        for metric in ["Energy (J)", "EDP", "TTFT", "TPOT", "E2E"] {
+            assert!(text.contains(metric), "missing {metric}");
+        }
     }
 
     #[test]

@@ -116,6 +116,43 @@ impl SimGpu {
         dt
     }
 
+    /// Integrate an idle span `[t0, t1]` analytically at the idle floor
+    /// (piecewise-constant power ⇒ one exact product, no per-tick
+    /// accumulation). The event-driven engine calls this once per idle
+    /// span at the span's closing event; the quantized A/B mode defers
+    /// its per-tick accounting to the same call with the same endpoints,
+    /// so both modes add the bitwise-identical energy. Returns the span
+    /// length.
+    pub fn account_idle_span(&mut self, t0: f64, t1: f64) -> f64 {
+        debug_assert!(t1 >= t0, "negative idle span {t0}..{t1}");
+        let dt = t1 - t0;
+        self.energy_j += self.power.idle_span_energy_j(t0, t1);
+        self.last_power_w = self.power.idle_w();
+        self.total_time_s += dt;
+        dt
+    }
+
+    /// Consume any pending clock-change latency, charging it as idle
+    /// time (the nvidia-smi round-trip blocks the engine, not the SMs).
+    /// The engine calls this once at idle-span entry; busy iterations
+    /// keep consuming it through [`SimGpu::account_iteration`]. Returns
+    /// the seconds charged (0.0 when nothing was pending).
+    pub fn take_pending_lock_latency(&mut self) -> f64 {
+        let lat = self.pending_lock_latency_s;
+        if lat > 0.0 {
+            self.energy_j += self.power.idle_w() * lat;
+            self.total_time_s += lat;
+            self.pending_lock_latency_s = 0.0;
+        }
+        lat
+    }
+
+    /// Pin the instantaneous-power gauge to the idle floor (span entry:
+    /// the NVML sample a scrape would see mid-span).
+    pub fn note_idle(&mut self) {
+        self.last_power_w = self.power.idle_w();
+    }
+
     /// NVML-style instantaneous power sample (W).
     pub fn power_w(&self) -> f64 {
         self.last_power_w
@@ -206,6 +243,33 @@ mod tests {
         g.account_iteration(210, &c, true);
         assert!((g.energy_j() - GpuConfig::default().idle_w).abs() < 1e-9);
         assert_eq!(g.busy_time_s(), 0.0);
+    }
+
+    #[test]
+    fn idle_span_is_one_exact_product() {
+        let mut g = SimGpu::new(&GpuConfig::default(), GovernorKind::Default);
+        let dt = g.account_idle_span(3.0, 13.0);
+        assert_eq!(dt.to_bits(), 10.0f64.to_bits());
+        assert_eq!(
+            g.energy_j().to_bits(),
+            (GpuConfig::default().idle_w * 10.0).to_bits()
+        );
+        assert_eq!(g.power_w(), GpuConfig::default().idle_w);
+        assert_eq!(g.busy_time_s(), 0.0);
+    }
+
+    #[test]
+    fn pending_latency_taken_once_as_idle() {
+        let cfg = GpuConfig::default();
+        let mut g = SimGpu::new(&cfg, GovernorKind::Agft);
+        g.set_clock(900);
+        let lat = g.take_pending_lock_latency();
+        assert!((lat - cfg.set_clock_latency_s).abs() < 1e-12);
+        assert!((g.energy_j() - cfg.idle_w * lat).abs() < 1e-12);
+        // Consumed: neither a second take nor the next iteration re-charges.
+        assert_eq!(g.take_pending_lock_latency(), 0.0);
+        let dt = g.account_iteration(900, &busy_cost(0.01), false);
+        assert!((dt - 0.01).abs() < 1e-12);
     }
 
     #[test]

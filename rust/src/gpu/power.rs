@@ -77,6 +77,25 @@ impl PowerModel {
     pub fn iteration_power_w(&self, f_mhz: u32, cost: &IterationCost) -> f64 {
         self.power_w(f_mhz, cost.util_compute, cost.util_mem)
     }
+
+    /// Analytic energy of a piecewise-constant span: the board holds one
+    /// operating point over `[t0, t1]`, so the integral is a single
+    /// product. The event-driven engine leans on this being *exact*: an
+    /// idle gap contributes `idle_w · (t1 − t0)` whether the engine
+    /// crossed it in one jump or in two hundred quantized ticks — the
+    /// same f64 product either way, which is what makes the two engine
+    /// modes bitwise energy-equivalent.
+    #[inline]
+    pub fn span_energy_j(&self, power_w: f64, t0: f64, t1: f64) -> f64 {
+        debug_assert!(t1 >= t0, "negative span {t0}..{t1}");
+        power_w * (t1 - t0)
+    }
+
+    /// Idle-floor energy over a span (the most common analytic span).
+    #[inline]
+    pub fn idle_span_energy_j(&self, t0: f64, t1: f64) -> f64 {
+        self.span_energy_j(self.idle_w, t0, t1)
+    }
 }
 
 #[cfg(test)]
@@ -169,6 +188,17 @@ mod tests {
             "EDP proxy minimum {} vs knee {knee}",
             best.0
         );
+    }
+
+    #[test]
+    fn span_energy_is_partition_invariant_at_constant_power() {
+        // One jump over [0, 10] equals the per-endpoint sum only when
+        // both use identical endpoints — the event-driven engine flushes
+        // idle spans at event timestamps precisely so both modes compute
+        // the *same single product*.
+        let m = model();
+        let whole = m.idle_span_energy_j(2.5, 12.5);
+        assert_eq!(whole.to_bits(), (m.idle_w() * 10.0).to_bits());
     }
 
     #[test]

@@ -21,8 +21,8 @@ use agft::experiment::executor::Executor;
 use agft::experiment::harness::{run_experiment, run_pair_with};
 use agft::experiment::phases::{
     grain_ablation_variant, learning_and_stable, phase_metrics,
-    pruning_ablation_variant, run_grid_with, stable_windows,
-    PhaseComparison,
+    pruning_ablation_variant, run_grid_with, seed_grid, stable_windows,
+    summarize_seeds, PhaseComparison,
 };
 use agft::experiment::report::{self, render_comparison};
 use agft::experiment::sweep::edp_sweep_with;
@@ -201,11 +201,36 @@ fn cmd_ablation(args: &Args) -> Result<(), String> {
             ))
         }
     }
+    // `--seeds N` replicates every variant across N consecutive seeds;
+    // the whole variant × seed grid fans out on the executor at once and
+    // the report gains mean ± 95 % CI columns.
+    let seeds = args.get_u64("seeds", 1)?;
+    if seeds == 0 {
+        return Err("--seeds 0: need at least one replica".to_string());
+    }
+    let run_grid_spec = seed_grid(&grid, seeds);
     eprintln!(
-        "running {}-variant ablation grid in parallel ...",
-        grid.len()
+        "running {}-leg ablation grid ({} variants x {} seeds) in \
+         parallel ...",
+        run_grid_spec.len(),
+        grid.len(),
+        seeds,
     );
-    let results = run_grid_with(&grid, &executor_from(args)?)?;
+    let results = run_grid_with(&run_grid_spec, &executor_from(args)?)?;
+    if seeds > 1 {
+        let summary = summarize_seeds(&results);
+        println!(
+            "{}",
+            report::render_seed_summary(
+                &format!(
+                    "ablation: {which} (stable phase, {seeds} seeds, \
+                     mean ± 95 % CI)"
+                ),
+                &summary,
+            )
+        );
+        return Ok(());
+    }
     let (_, full) = &results[0];
     let m_full = phase_metrics(stable_windows(full));
     for (name, run) in &results[1..] {
@@ -259,7 +284,8 @@ fn usage() -> ! {
          common options: --config <toml> --workload <name> --governor \
          <default|agft|locked:MHZ> --duration S --rps R --seed N \
          --workers N\n\
-         ablation options: --which grain|pruning\n\
+         ablation options: --which grain|pruning --seeds N (mean ± CI \
+         over N seed replicas)\n\
          workloads: normal long_context long_generation high_concurrency \
          high_cache_hit azure2023 azure2024 trace:<path>"
     );

@@ -2,22 +2,45 @@
 //! produced once by `make artifacts` from the L2 JAX model and L1 Pallas
 //! kernels) and executes them from the rust request path.
 //!
-//! * [`artifacts`] — locate + parse `meta.json`, resolve artifact paths.
-//! * [`client`] — PJRT CPU client wrapper: HLO text → compile → executable.
-//! * [`linucb_hlo`] — the Pallas LinUCB scoring kernel as a live
+//! * [`artifacts`] — locate + parse `meta.json`, resolve artifact paths
+//!   (std-only, always compiled).
+//! * `client` — PJRT CPU client wrapper: HLO text → compile → executable.
+//! * `linucb_hlo` — the Pallas LinUCB scoring kernel as a live
 //!   [`crate::tuner::tuner::UcbScorer`] (the `--decision-engine hlo` path).
-//! * [`token_engine`] — prefill/decode execution of the tiny-llama
+//! * `token_engine` — prefill/decode execution of the tiny-llama
 //!   artifacts: real token generation for the end-to-end example.
+//!
+//! The PJRT-backed modules need the `xla` crate, which exists only in the
+//! offline image's vendored crate set — it is not on crates.io, so the
+//! default build cannot declare it as a dependency. They are therefore
+//! gated behind the `xla-runtime` cargo feature; without it, std-only
+//! stubs with identical signatures fail soft at load time
+//! ([`stub`](self)), keeping every probing call site (benches, parity
+//! tests) compiling and behaving as "artifacts unavailable".
 //!
 //! Python never runs here — the HLO text is self-contained (weights are
 //! baked in as constants).
 
 pub mod artifacts;
+
+#[cfg(feature = "xla-runtime")]
 pub mod client;
+#[cfg(feature = "xla-runtime")]
 pub mod linucb_hlo;
+#[cfg(feature = "xla-runtime")]
 pub mod token_engine;
 
+#[cfg(not(feature = "xla-runtime"))]
+mod stub;
+
 pub use artifacts::{find_artifacts_dir, ArtifactMeta, Artifacts};
+
+#[cfg(feature = "xla-runtime")]
 pub use client::Runtime;
+#[cfg(feature = "xla-runtime")]
 pub use linucb_hlo::HloLinUcbScorer;
+#[cfg(feature = "xla-runtime")]
 pub use token_engine::HloTokenEngine;
+
+#[cfg(not(feature = "xla-runtime"))]
+pub use stub::{HloLinUcbScorer, HloTokenEngine, Runtime};

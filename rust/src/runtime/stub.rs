@@ -1,0 +1,100 @@
+//! Std-only stand-ins for the PJRT runtime, compiled when the
+//! `xla-runtime` feature is off (the default — the `xla` crate only
+//! exists in the offline image's vendored crate set, not on crates.io).
+//!
+//! Every entry point keeps the real module's signature and fails soft at
+//! *load* time, so callers that probe for the HLO path (the perf bench,
+//! the integration parity test, `AgftTuner::with_scorer` plumbing) build
+//! and run unchanged: they see "runtime unavailable" exactly as they
+//! would on a machine without the artifacts.
+
+use crate::tuner::tuner::UcbScorer;
+
+use super::artifacts::Artifacts;
+
+const UNAVAILABLE: &str = "PJRT runtime unavailable: built without the \
+                           `xla-runtime` feature (rebuild with \
+                           --features xla-runtime inside the offline \
+                           image that vendors the xla crate)";
+
+/// Stub PJRT client: construction always fails soft.
+pub struct Runtime {
+    _private: (),
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime, String> {
+        Err(UNAVAILABLE.to_string())
+    }
+
+    pub fn platform_name(&self) -> String {
+        unreachable!("stub Runtime cannot be constructed")
+    }
+}
+
+/// Stub HLO-backed Eq.-1 scorer.
+pub struct HloLinUcbScorer {
+    /// Executions so far (mirrors the real scorer's telemetry field).
+    pub calls: u64,
+}
+
+impl HloLinUcbScorer {
+    pub fn load(
+        _rt: &Runtime,
+        _arts: &Artifacts,
+    ) -> Result<HloLinUcbScorer, String> {
+        Err(UNAVAILABLE.to_string())
+    }
+
+    pub fn score_raw(
+        &mut self,
+        _theta: &[f32],
+        _ainv: &[f32],
+        _x: &[f32],
+        _alpha: f32,
+        _mask: &[f32],
+    ) -> Result<Vec<f32>, String> {
+        Err(UNAVAILABLE.to_string())
+    }
+}
+
+impl UcbScorer for HloLinUcbScorer {
+    fn score(
+        &mut self,
+        _theta: &[f32],
+        _ainv: &[f32],
+        _x: &[f32],
+        _alpha: f32,
+        _mask: &[f32],
+        _k: usize,
+        _d: usize,
+    ) -> Result<Vec<f32>, String> {
+        Err(UNAVAILABLE.to_string())
+    }
+}
+
+/// Stub token engine (the e2e example that needs the real one is gated
+/// behind `required-features = ["xla-runtime"]`).
+pub struct HloTokenEngine {
+    _private: (),
+}
+
+impl HloTokenEngine {
+    pub fn load(
+        _rt: &Runtime,
+        _arts: &Artifacts,
+    ) -> Result<HloTokenEngine, String> {
+        Err(UNAVAILABLE.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stubs_fail_soft_with_a_pointer_to_the_feature() {
+        let err = Runtime::cpu().err().unwrap();
+        assert!(err.contains("xla-runtime"), "{err}");
+    }
+}

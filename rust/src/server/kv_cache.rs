@@ -50,6 +50,13 @@ impl KvCache {
         (tokens as usize).div_ceil(self.block_size)
     }
 
+    /// Blocks still missing before an allocation of `need` fresh blocks
+    /// could succeed (0 ⇒ the pool can satisfy it now). The admission
+    /// path uses this as its prefix-cache reclaim target.
+    pub fn shortfall(&self, need: usize) -> usize {
+        need.saturating_sub(self.free.len())
+    }
+
     /// Allocate `n` fresh blocks (refcount 1 each), or `None` if the pool
     /// cannot satisfy the request (caller decides to queue or preempt).
     pub fn alloc(&mut self, n: usize) -> Option<Vec<u32>> {
@@ -170,6 +177,15 @@ mod tests {
         assert_eq!(kv.blocks_for(1), 1);
         assert_eq!(kv.blocks_for(16), 1);
         assert_eq!(kv.blocks_for(17), 2);
+    }
+
+    #[test]
+    fn shortfall_measures_missing_blocks() {
+        let mut kv = KvCache::new(10, 16);
+        assert_eq!(kv.shortfall(10), 0);
+        let _a = kv.alloc(7).unwrap();
+        assert_eq!(kv.shortfall(3), 0);
+        assert_eq!(kv.shortfall(5), 2);
     }
 
     #[test]

@@ -25,6 +25,11 @@ pub struct MetricsSnapshot {
     pub prefix_lookup_tokens_total: u64,
     /// Virtual time spent with a non-empty wait queue (monotonic).
     pub queue_time_s_total: f64,
+    /// Virtual time spent idle (monotonic). Accrued per idle *span* at
+    /// event boundaries, so it is bitwise-identical between the
+    /// event-driven and quantized engine modes regardless of how many
+    /// steps crossed the span.
+    pub idle_time_s_total: f64,
     pub energy_j_total: f64,
     // --- gauges ---
     pub requests_waiting: usize,
@@ -55,6 +60,7 @@ impl MetricsSnapshot {
             prefix_lookup_tokens: self.prefix_lookup_tokens_total
                 - earlier.prefix_lookup_tokens_total,
             queue_time_s: self.queue_time_s_total - earlier.queue_time_s_total,
+            idle_time_s: self.idle_time_s_total - earlier.idle_time_s_total,
             energy_j: self.energy_j_total - earlier.energy_j_total,
         }
     }
@@ -74,6 +80,7 @@ pub struct MetricsDelta {
     pub prefix_hit_tokens: u64,
     pub prefix_lookup_tokens: u64,
     pub queue_time_s: f64,
+    pub idle_time_s: f64,
     pub energy_j: f64,
 }
 

@@ -26,4 +26,4 @@ pub use engine::{Engine, EngineCounters, FinishedRecord};
 pub use kv_cache::KvCache;
 pub use prefix_cache::PrefixCache;
 pub use request::{Phase, Request};
-pub use scheduler::Scheduler;
+pub use scheduler::{BlockRelease, Scheduler};

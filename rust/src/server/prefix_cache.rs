@@ -101,7 +101,13 @@ impl PrefixCache {
         );
     }
 
-    fn evict_lru(&mut self, kv: &mut KvCache) -> bool {
+    /// Evict the least-recently-used entry, releasing the cache's block
+    /// references; returns false when the cache is already empty. Public
+    /// because the scheduler reclaims cached blocks when admission would
+    /// otherwise deadlock (nothing running ⇒ no completion will ever
+    /// free blocks ⇒ the cache's references are the only reclaimable
+    /// capacity — vLLM treats cached blocks as free for the same reason).
+    pub fn evict_lru(&mut self, kv: &mut KvCache) -> bool {
         let victim = self
             .entries
             .iter()

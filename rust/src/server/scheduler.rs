@@ -43,6 +43,26 @@ impl IterationPlan {
     }
 }
 
+/// What will next return KV blocks to the pool — the engine's
+/// next-event oracle consults this to classify a stalled (nothing
+/// runnable) iteration instead of spinning a fixed idle quantum.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BlockRelease {
+    /// A running sequence will release its blocks when its decode
+    /// completes; the earliest such completion is at least
+    /// `min_remaining_tokens` decode iterations away. While any sequence
+    /// runs, the engine is busy anyway — this variant exists so the
+    /// oracle can *prove* a stall never coexists with in-flight work.
+    Decode { min_remaining_tokens: u32 },
+    /// Only the prefix cache holds reclaimable blocks. No virtual-time
+    /// event will free them — admission reclaims them synchronously
+    /// (see [`Scheduler::plan_into`]'s admit path) rather than waiting.
+    PrefixCache { blocks: usize },
+    /// Nothing in flight or cached holds blocks; any stall is bounded by
+    /// the next arrival alone.
+    Nothing,
+}
+
 /// Continuous-batching scheduler state.
 #[derive(Debug)]
 pub struct Scheduler {
@@ -56,6 +76,8 @@ pub struct Scheduler {
     waiting: VecDeque<usize>,
     running: Vec<usize>, // admission order (last = preemption victim)
     preemptions: u64,
+    /// Admission-time prefix-cache reclaims (deadlock-avoidance events).
+    cache_reclaims: u64,
     /// Requests finished since the last engine drain.
     finished_recent: Vec<usize>,
     /// Reusable candidate buffer for [`Scheduler::plan_into`] (avoids
@@ -79,6 +101,7 @@ impl Scheduler {
             waiting: VecDeque::new(),
             running: Vec::new(),
             preemptions: 0,
+            cache_reclaims: 0,
             finished_recent: Vec::new(),
             cand_scratch: Vec::new(),
         }
@@ -120,6 +143,35 @@ impl Scheduler {
         self.preemptions
     }
 
+    /// Admission-time prefix-cache reclaim events so far.
+    pub fn cache_reclaims(&self) -> u64 {
+        self.cache_reclaims
+    }
+
+    /// The earliest future source of freed KV blocks (see
+    /// [`BlockRelease`]). Running sequences dominate cached blocks:
+    /// their completion is a concrete virtual-time event, while cached
+    /// blocks only move on synchronous reclaim.
+    pub fn next_block_release(&self) -> BlockRelease {
+        let min_remaining = self
+            .running
+            .iter()
+            .map(|&id| {
+                let r = &self.requests[id];
+                r.target_output.saturating_sub(r.generated).max(1)
+            })
+            .min();
+        if let Some(min_remaining_tokens) = min_remaining {
+            return BlockRelease::Decode {
+                min_remaining_tokens,
+            };
+        }
+        match self.prefix.as_ref().map(|p| p.used_blocks()) {
+            Some(blocks) if blocks > 0 => BlockRelease::PrefixCache { blocks },
+            _ => BlockRelease::Nothing,
+        }
+    }
+
     /// Admit waiting requests while capacity allows.
     fn admit(&mut self) {
         while self.running.len() < self.max_num_seqs {
@@ -153,6 +205,28 @@ impl Scheduler {
                 // Roll back the shared reference and keep waiting.
                 if !shared_blocks.is_empty() {
                     self.kv.release(&shared_blocks);
+                }
+                // With nothing running, no completion will ever free
+                // blocks — the only reclaimable capacity is the prefix
+                // cache's own references, and waiting on them would
+                // deadlock the engine. Evict LRU entries until the head
+                // request fits (aiming at its full footprint, since the
+                // eviction may invalidate the hit just rolled back),
+                // then retry the admission. Running sequences keep the
+                // old behaviour: their completions free blocks soon.
+                if self.running.is_empty() {
+                    if let Some(pc) = self.prefix.as_mut() {
+                        let mut evicted = false;
+                        while self.kv.shortfall(total_blocks) > 0
+                            && pc.evict_lru(&mut self.kv)
+                        {
+                            evicted = true;
+                        }
+                        if evicted {
+                            self.cache_reclaims += 1;
+                            continue;
+                        }
+                    }
                 }
                 break;
             }
@@ -553,6 +627,71 @@ mod tests {
         assert_eq!(req.phase, Phase::Finished);
         assert_eq!(req.first_token_s, Some(0.5));
         assert_eq!(req.finish_s, Some(0.5));
+    }
+
+    #[test]
+    fn next_block_release_classifies_states() {
+        let mut s = Scheduler::new(&small_cfg());
+        assert_eq!(s.next_block_release(), BlockRelease::Nothing);
+        // Running sequence → Decode with its remaining budget.
+        let id = s.submit(Request::new(0, 0.0, 32, 10, 0, 0));
+        let plan = s.plan();
+        s.commit(&plan, 0.01); // prefill completes, 1 of 10 generated
+        assert_eq!(
+            s.next_block_release(),
+            BlockRelease::Decode {
+                min_remaining_tokens: 9
+            }
+        );
+        // Drain; only the prefix cache (empty here: no shared prefix)
+        // could hold blocks afterwards.
+        let mut t = 0.01;
+        while s.has_work() {
+            let p = s.plan();
+            t += 0.01;
+            s.commit(&p, t);
+        }
+        assert_eq!(s.requests[id].phase, Phase::Finished);
+        assert_eq!(s.next_block_release(), BlockRelease::Nothing);
+    }
+
+    #[test]
+    fn stalled_admission_reclaims_prefix_cache() {
+        // Pool of 8 blocks; a 4-block prefix parks in the cache, then a
+        // request needing 6 fresh blocks arrives with nothing running.
+        // Pre-reclaim schedulers idled forever here (nothing running ⇒
+        // nothing ever frees blocks); now the cache is evicted and the
+        // request admits immediately.
+        let cfg = ServerConfig {
+            kv_blocks: 8,
+            prefix_cache_blocks: 4,
+            ..small_cfg()
+        };
+        let mut s = Scheduler::new(&cfg);
+        // Seed the cache: template 9, 64-token shared prefix (4 blocks).
+        s.submit(Request::new(0, 0.0, 64, 1, 9, 64));
+        let mut t = 0.0;
+        while s.has_work() {
+            let p = s.plan();
+            t += 0.01;
+            s.commit(&p, t);
+        }
+        assert_eq!(s.kv.used_blocks(), 4, "cache should retain the prefix");
+        assert_eq!(s.next_block_release(),
+                   BlockRelease::PrefixCache { blocks: 4 });
+        // 90-token prompt (6 blocks) > 4 free blocks: requires reclaim.
+        let id = s.submit(Request::new(1, 1.0, 90, 2, 3, 0));
+        let plan = s.plan();
+        assert!(!plan.work.is_idle(), "admission must not stall");
+        assert!(s.cache_reclaims() > 0);
+        while s.has_work() {
+            let p = s.plan();
+            t += 0.01;
+            s.commit(&p, t);
+            s.check_invariants().unwrap();
+        }
+        assert_eq!(s.requests[id].phase, Phase::Finished);
+        assert_eq!(s.kv.used_blocks(), 0);
     }
 
     #[test]

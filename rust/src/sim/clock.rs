@@ -26,6 +26,22 @@ impl Clock {
         );
         self.now_s += dt;
     }
+
+    /// Jump to the absolute timestamp `t` (the event-driven engine's
+    /// primitive). Unlike summing `advance` deltas, landing on an
+    /// absolute event timestamp is exact: every engine mode that targets
+    /// the same event reaches the bitwise-identical clock value, which is
+    /// what makes quantized/event-driven timeline equivalence provable
+    /// rather than approximate.
+    #[inline]
+    pub fn advance_to(&mut self, t: f64) {
+        assert!(
+            t.is_finite() && t >= self.now_s,
+            "clock advance_to {t} behind now={}",
+            self.now_s
+        );
+        self.now_s = t;
+    }
 }
 
 #[cfg(test)]
@@ -51,5 +67,22 @@ mod tests {
     #[should_panic(expected = "invalid dt")]
     fn rejects_nan() {
         Clock::new().advance(f64::NAN);
+    }
+
+    #[test]
+    fn advance_to_lands_exactly() {
+        let mut c = Clock::new();
+        c.advance_to(0.3);
+        assert_eq!(c.now().to_bits(), 0.3f64.to_bits());
+        c.advance_to(0.3); // zero-length jump is legal
+        assert_eq!(c.now().to_bits(), 0.3f64.to_bits());
+    }
+
+    #[test]
+    #[should_panic(expected = "behind now")]
+    fn advance_to_rejects_past() {
+        let mut c = Clock::new();
+        c.advance(1.0);
+        c.advance_to(0.5);
     }
 }

@@ -16,6 +16,14 @@
 //! Raw features are squashed onto [0, 1] with fixed normalisers so the
 //! LinUCB design matrix stays well-conditioned. The context deliberately
 //! excludes frequency — frequency is the *action*, not context (§4.1).
+//!
+//! Window accounting is driven by **event boundaries**, never by engine
+//! step counts: every feature derives from time-integrated counters
+//! (`queue_time_s`, `idle_time_s`, token totals) or *busy*-iteration
+//! counts, all of which are bitwise-identical between the event-driven
+//! and quantized engine modes. Total step count — the one counter the
+//! two modes disagree on, by design — must never leak into the context
+//! (guarded by `features_ignore_engine_step_count` below).
 
 use crate::server::metrics::MetricsSnapshot;
 
@@ -190,6 +198,44 @@ mod tests {
         assert!(high_conc[4] > long_ctx[4]); // concurrency
         assert_eq!(high_conc[0], 1.0);
         assert_eq!(long_ctx[0], 0.0);
+    }
+
+    #[test]
+    fn features_ignore_engine_step_count() {
+        // The event-driven engine crosses an idle gap in one step where
+        // quantized mode takes hundreds; `iterations_total` is therefore
+        // mode-dependent and must never influence the context vector.
+        let base = MetricsSnapshot {
+            time_s: 0.8,
+            prefill_tokens_total: 900,
+            decode_tokens_total: 300,
+            busy_iterations_total: 25,
+            batch_token_sum: 1_200,
+            requests_running: 3,
+            kv_usage: 0.4,
+            queue_time_s_total: 0.2,
+            idle_time_s_total: 0.1,
+            ..Default::default()
+        };
+        let mut a = FeatureExtractor::new();
+        a.observe(&MetricsSnapshot::default());
+        let xa = a
+            .observe(&MetricsSnapshot {
+                iterations_total: 26, // event-driven: busy + 1 jump
+                ..base
+            })
+            .unwrap();
+        let mut b = FeatureExtractor::new();
+        b.observe(&MetricsSnapshot::default());
+        let xb = b
+            .observe(&MetricsSnapshot {
+                iterations_total: 226, // quantized: busy + 200 ticks
+                ..base
+            })
+            .unwrap();
+        for (va, vb) in xa.iter().zip(&xb) {
+            assert_eq!(va.to_bits(), vb.to_bits());
+        }
     }
 
     #[test]

@@ -83,6 +83,14 @@ impl ArmModel {
         self.n += 1;
     }
 
+    /// Revision counter for export caching: bumps exactly once per
+    /// [`ArmModel::update`] (the only mutation path), so a cached export
+    /// is stale iff its recorded revision differs.
+    #[inline]
+    pub fn revision(&self) -> u64 {
+        self.n
+    }
+
     /// Export (θ, A⁻¹) rows padded to `pad` lanes — feeds the HLO-backed
     /// scorer whose kernel operates on padded [K, 8] / [K, 8, 8] stacks.
     pub fn export_padded(&self, pad: usize) -> (Vec<f32>, Vec<f32>) {
@@ -98,6 +106,81 @@ impl ArmModel {
             }
         }
         (theta, ainv)
+    }
+}
+
+/// Per-arm cache of [`ArmModel::export_padded`] buffers for the HLO
+/// decision path. The padded f64→f32 re-export used to run for every
+/// candidate arm every 0.8 s window; arms only change on reward updates
+/// (one arm per window), so a revision check (dirty flag = the arm's
+/// update counter) makes all other arms a pure buffer reuse.
+#[derive(Debug, Clone)]
+pub struct PaddedExportCache {
+    pad: usize,
+    /// Sorted by frequency (same layout rationale as [`LinUcb::arms`]).
+    entries: Vec<(u32, PaddedEntry)>,
+    /// Export calls avoided / performed (telemetry for the perf bench).
+    pub hits: u64,
+    pub misses: u64,
+}
+
+#[derive(Debug, Clone)]
+struct PaddedEntry {
+    revision: u64,
+    theta: Vec<f32>,
+    ainv: Vec<f32>,
+}
+
+impl PaddedExportCache {
+    pub fn new(pad: usize) -> PaddedExportCache {
+        assert!(pad >= D);
+        PaddedExportCache {
+            pad,
+            entries: Vec::new(),
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    /// The padded (θ, A⁻¹) rows for `freq`, re-exported only when the
+    /// arm has been updated since the last export.
+    pub fn get(&mut self, freq: u32, arm: &ArmModel) -> (&[f32], &[f32]) {
+        let idx = match self
+            .entries
+            .binary_search_by_key(&freq, |(f, _)| *f)
+        {
+            Ok(i) => {
+                if self.entries[i].1.revision == arm.revision() {
+                    self.hits += 1;
+                } else {
+                    let (theta, ainv) = arm.export_padded(self.pad);
+                    let e = &mut self.entries[i].1;
+                    e.theta = theta;
+                    e.ainv = ainv;
+                    e.revision = arm.revision();
+                    self.misses += 1;
+                }
+                i
+            }
+            Err(i) => {
+                let (theta, ainv) = arm.export_padded(self.pad);
+                self.entries.insert(
+                    i,
+                    (
+                        freq,
+                        PaddedEntry {
+                            revision: arm.revision(),
+                            theta,
+                            ainv,
+                        },
+                    ),
+                );
+                self.misses += 1;
+                i
+            }
+        };
+        let e = &self.entries[idx].1;
+        (&e.theta, &e.ainv)
     }
 }
 
@@ -370,6 +453,34 @@ mod tests {
                 assert_eq!(fast.to_bits(), full.to_bits());
             }
         }
+    }
+
+    #[test]
+    fn padded_export_cache_invalidates_on_update() {
+        let mut ucb = LinUcb::new(1.0);
+        let x = [0.5; D];
+        ucb.update(1200, &x, 0.3);
+        ucb.update(900, &x, -0.2);
+        let mut cache = PaddedExportCache::new(8);
+        // First touch: misses; repeat without updates: pure hits with
+        // identical buffers.
+        let (t1, _) = cache.get(1200, ucb.arm(1200).unwrap());
+        let t1 = t1.to_vec();
+        let _ = cache.get(900, ucb.arm(900).unwrap());
+        assert_eq!((cache.hits, cache.misses), (0, 2));
+        let (t2, a2) = cache.get(1200, ucb.arm(1200).unwrap());
+        assert_eq!(t1, t2);
+        assert_eq!(a2.len(), 64);
+        assert_eq!(cache.hits, 1);
+        // An update dirties exactly that arm.
+        ucb.update(1200, &x, 0.9);
+        let (t3, _) = cache.get(1200, ucb.arm(1200).unwrap());
+        let (want, _) = ucb.arm(1200).unwrap().export_padded(8);
+        assert_eq!(t3, &want[..]);
+        assert_ne!(t3, &t1[..]);
+        assert_eq!(cache.misses, 3);
+        let _ = cache.get(900, ucb.arm(900).unwrap());
+        assert_eq!(cache.hits, 2, "undirtied arm must stay cached");
     }
 
     #[test]

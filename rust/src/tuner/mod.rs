@@ -33,7 +33,7 @@ pub mod tuner;
 
 pub use action_space::ActionSpace;
 pub use features::{ContextVector, FeatureExtractor, FEATURE_DIM};
-pub use linucb::LinUcb;
+pub use linucb::{LinUcb, PaddedExportCache};
 pub use page_hinkley::PageHinkley;
 pub use reward::RewardCalculator;
 pub use tuner::{AgftTuner, TunerPhase, WindowDecision, WindowObservation};

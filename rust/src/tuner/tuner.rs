@@ -20,7 +20,7 @@ use crate::util::RollingStats;
 
 use super::action_space::ActionSpace;
 use super::features::{ContextVector, FeatureExtractor, FEATURE_DIM};
-use super::linucb::LinUcb;
+use super::linucb::{LinUcb, PaddedExportCache};
 use super::page_hinkley::PageHinkley;
 use super::pruning::{prune_sweep, PruneReport};
 use super::refinement::{refine, Refinement};
@@ -71,6 +71,10 @@ pub struct WindowDecision {
     pub alpha: f64,
 }
 
+/// Padded arm-stack geometry of the `linucb.hlo.txt` artifact.
+const HLO_K: usize = 32;
+const HLO_D: usize = 8;
+
 /// External scorer for Eq. 1 over padded arm stacks — implemented by the
 /// HLO/PJRT runtime ([`crate::runtime::HloLinUcbScorer`]). Inputs follow
 /// the `linucb.hlo.txt` artifact layout: `theta [K,d]`, `ainv [K,d,d]`,
@@ -111,6 +115,14 @@ pub struct AgftTuner {
     /// Reusable candidate buffer for the per-window selection (avoids a
     /// fresh `to_vec` of the action space every 0.8 s decision).
     cand_scratch: Vec<u32>,
+    /// Per-arm padded (θ, A⁻¹) export cache for the HLO scorer path:
+    /// at most one arm is updated per window, so every other candidate's
+    /// f64→f32 re-export is a cache hit (revision = arm update count).
+    pad_cache: PaddedExportCache,
+    /// Reusable [K·D] / [K·D·D] / [K] stacks handed to the HLO scorer.
+    stack_theta: Vec<f32>,
+    stack_ainv: Vec<f32>,
+    stack_mask: Vec<f32>,
     // --- telemetry (drives Fig 13/14 and the ablation tables) ---
     /// (round, reward) for every credited reward.
     pub reward_log: Vec<(u64, f64)>,
@@ -144,6 +156,10 @@ impl AgftTuner {
             last_snap: None,
             scorer: None,
             cand_scratch: Vec::new(),
+            pad_cache: PaddedExportCache::new(HLO_D),
+            stack_theta: Vec::new(),
+            stack_ainv: Vec::new(),
+            stack_mask: Vec::new(),
             reward_log: Vec::new(),
             freq_log: Vec::new(),
             prune_total: PruneReport::default(),
@@ -190,6 +206,12 @@ impl AgftTuner {
 
     pub fn reward_calculator(&self) -> &RewardCalculator {
         &self.reward
+    }
+
+    /// (hits, misses) of the padded-export cache on the HLO decision
+    /// path (telemetry for the perf bench).
+    pub fn pad_cache_stats(&self) -> (u64, u64) {
+        (self.pad_cache.hits, self.pad_cache.misses)
     }
 
     /// Decaying exploration weight α_t.
@@ -369,31 +391,48 @@ impl AgftTuner {
         x: &ContextVector,
         alpha: f64,
     ) -> Option<u32> {
-        let scorer = self.scorer.as_mut()?;
-        const K: usize = 32;
-        const D: usize = 8;
+        if self.scorer.is_none() {
+            return None;
+        }
+        const K: usize = HLO_K;
+        const D: usize = HLO_D;
         if candidates.is_empty() || candidates.len() > K {
             return None;
         }
-        // Ensure every candidate has an arm model (fresh prior for new
-        // arms — identical to the native path).
-        let mut theta = vec![0f32; K * D];
-        let mut ainv = vec![0f32; K * D * D];
-        let mut mask = vec![0f32; K];
+        // Assemble the padded arm stacks into reusable scratch buffers.
+        // Per-arm exports come from the revision-tracked cache: at most
+        // one arm changed since the last window, so the remaining
+        // candidates are straight memcpys of cached rows (fresh arms get
+        // the prior model via `touch`, identical to the native path).
+        self.stack_theta.clear();
+        self.stack_theta.resize(K * D, 0.0);
+        self.stack_ainv.clear();
+        self.stack_ainv.resize(K * D * D, 0.0);
+        self.stack_mask.clear();
+        self.stack_mask.resize(K, 0.0);
         for (i, &f) in candidates.iter().enumerate() {
             self.linucb.touch(f);
             let arm = self.linucb.arm(f).expect("touched arm exists");
-            let (t, a) = arm.export_padded(D);
-            theta[i * D..(i + 1) * D].copy_from_slice(&t);
-            ainv[i * D * D..(i + 1) * D * D].copy_from_slice(&a);
-            mask[i] = 1.0;
+            let (t, a) = self.pad_cache.get(f, arm);
+            self.stack_theta[i * D..(i + 1) * D].copy_from_slice(t);
+            self.stack_ainv[i * D * D..(i + 1) * D * D].copy_from_slice(a);
+            self.stack_mask[i] = 1.0;
         }
         let mut xp = [0f32; D];
         for i in 0..FEATURE_DIM {
             xp[i] = x[i] as f32;
         }
+        let scorer = self.scorer.as_mut()?;
         let scores = scorer
-            .score(&theta, &ainv, &xp, alpha as f32, &mask, K, D)
+            .score(
+                &self.stack_theta,
+                &self.stack_ainv,
+                &xp,
+                alpha as f32,
+                &self.stack_mask,
+                K,
+                D,
+            )
             .ok()?;
         // Argmax with the native tie-break (ties → higher frequency).
         let mut best: Option<(u32, f32)> = None;
@@ -574,6 +613,39 @@ mod tests {
         };
         let d = tuner.step(&obs).unwrap();
         assert_eq!(d.reward, None);
+    }
+
+    #[test]
+    fn external_path_reuses_padded_exports() {
+        // A scorer that always declines forces the native fallback but
+        // still drives the padded-stack assembly every window; with at
+        // most one arm updated per window, the revision-tracked cache
+        // must serve the overwhelming majority of exports from cache.
+        struct Decline;
+        impl UcbScorer for Decline {
+            fn score(
+                &mut self,
+                _theta: &[f32],
+                _ainv: &[f32],
+                _x: &[f32],
+                _alpha: f32,
+                _mask: &[f32],
+                _k: usize,
+                _d: usize,
+            ) -> Result<Vec<f32>, String> {
+                Err("declined (native fallback)".to_string())
+            }
+        }
+        let mut tuner = AgftTuner::new(&TunerConfig::default(), table())
+            .with_scorer(Box::new(Decline));
+        let mut env = FakeEnv::new(1230.0);
+        run(&mut tuner, &mut env, 200);
+        let (hits, misses) = tuner.pad_cache_stats();
+        assert!(hits + misses > 0, "external path never exercised");
+        assert!(
+            hits > misses * 3,
+            "cache ineffective: {hits} hits vs {misses} misses"
+        );
     }
 
     #[test]
