@@ -13,6 +13,11 @@
 //!   event-driven engine must finish the identical workload (bitwise
 //!   energy/timeline) in strictly fewer engine steps, and the same A/B
 //!   runs through `run_grid` at the sweep level.
+//! * `steady-decode span vs per-step` — long decode tails with sparse
+//!   arrivals driven in both busy modes: the batched decode fast-path
+//!   must finish the identical workload (bitwise energy/timeline,
+//!   asserted in-bench so CI smoke enforces it) in strictly fewer
+//!   engine steps; the log line reports the step and wall-clock ratios.
 //! * `hlo scorer` — the PJRT-executed Pallas kernel per decision (only
 //!   when `artifacts/` is built).
 //!
@@ -88,6 +93,12 @@ fn main() {
     )
     .unwrap();
     let mut engine = Engine::new(&cfg, requests);
+    // Per-step mode: this row tracks the cost of ONE planned+priced
+    // iteration across PRs. With the decode fast-path on, a single
+    // `step()` can swallow a whole span (see the steady-decode row for
+    // that win), which would both skew the ns/op series and drain the
+    // stream mid-bench.
+    engine.set_decode_span(false);
     let step_ns = bench("engine.step (busy mix)", 300_000, || {
         let _ = engine.step();
     });
@@ -207,6 +218,89 @@ fn main() {
             ev.counters.iterations,
             qu.counters.iterations,
             qu.counters.iterations as f64 / ev.counters.iterations as f64
+        );
+    }
+
+    // --- batched decode span vs per-step on steady-state decode ---
+    // Long decode tails with sparse arrivals: the regime the paper's
+    // EDP sweeps spend most wall-clock in. Once arrivals drain into
+    // running sequences, every window is a stable decode-only stretch,
+    // so the span engine prices ~a window of iterations per engine step
+    // while the per-step reference pays the full planner each token.
+    // Bitwise identity (energy + completion timeline) is asserted here
+    // so the CI smoke job enforces it on every push.
+    {
+        let mut sd_cfg = ExperimentConfig {
+            duration_s: 400.0,
+            governor: GovernorKind::Locked(1230),
+            ..ExperimentConfig::default()
+        };
+        sd_cfg.server.max_num_seqs = 8;
+        // 6 requests 2 s apart per wave, waves 60 s apart: each wave
+        // decodes a ~3000-token tail with nothing waiting.
+        let mut reqs = Vec::new();
+        let mut id = 0u64;
+        for wave in 0..6u64 {
+            for k in 0..6u64 {
+                reqs.push(Request::new(
+                    id,
+                    wave as f64 * 60.0 + k as f64 * 2.0,
+                    128,
+                    3000,
+                    id as u32,
+                    0,
+                ));
+                id += 1;
+            }
+        }
+        let requests: Arc<[Request]> = reqs.into();
+        let run = |decode_span: bool| {
+            let mut cfg = sd_cfg.clone();
+            cfg.decode_span = decode_span;
+            let mut engine =
+                Engine::with_shared(&cfg, Arc::clone(&requests));
+            let t0 = Instant::now();
+            let mut t_next = 0.8;
+            loop {
+                let alive = engine.run_until(t_next);
+                if !alive || engine.clock.now() >= cfg.duration_s {
+                    break;
+                }
+                t_next += 0.8;
+            }
+            (engine, t0.elapsed().as_secs_f64())
+        };
+        let (sp, sp_host_s) = run(true);
+        let (ps, ps_host_s) = run(false);
+        assert_eq!(sp.finished_log.len(), ps.finished_log.len());
+        assert!(!sp.finished_log.is_empty());
+        for (a, b) in sp.finished_log.iter().zip(&ps.finished_log) {
+            assert_eq!(a.finish_s.to_bits(), b.finish_s.to_bits());
+        }
+        assert_eq!(
+            sp.gpu.energy_j().to_bits(),
+            ps.gpu.energy_j().to_bits(),
+            "decode-span mode must be bitwise energy-identical"
+        );
+        assert_eq!(
+            sp.counters.busy_iterations,
+            ps.counters.busy_iterations
+        );
+        assert!(sp.counters.decode_spans > 0);
+        assert!(
+            sp.counters.iterations < ps.counters.iterations,
+            "decode spans must take strictly fewer steps: {} vs {}",
+            sp.counters.iterations,
+            ps.counters.iterations
+        );
+        println!(
+            "steady-decode 400 s replay        span {:>8} steps \
+             ({sp_host_s:.3} s) | per-step {:>8} steps ({ps_host_s:.3} s) \
+             | {:.1}x fewer steps, {:.2}x wall",
+            sp.counters.iterations,
+            ps.counters.iterations,
+            ps.counters.iterations as f64 / sp.counters.iterations as f64,
+            ps_host_s / sp_host_s.max(1e-9),
         );
     }
 

@@ -357,6 +357,12 @@ pub struct ExperimentConfig {
     /// A/B reference mode — bitwise-equivalent on timelines and energy
     /// (enforced by `tests/perf_semantics.rs`), just slower.
     pub event_driven: bool,
+    /// Batched decode fast-path (default): stable decode-only stretches
+    /// are priced as one span per engine step. `false` selects the
+    /// per-step A/B reference mode — bitwise-equivalent on timelines,
+    /// features and energy (enforced by
+    /// `tests/decode_span_semantics.rs`), just more steps.
+    pub decode_span: bool,
     pub results_dir: String,
 }
 
@@ -374,6 +380,7 @@ impl Default for ExperimentConfig {
             engine: EngineKind::Analytical,
             arrival_rps: 2.0,
             event_driven: true,
+            decode_span: true,
             results_dir: "results".to_string(),
         }
     }
@@ -570,6 +577,7 @@ impl ExperimentConfig {
             override_field!(e, "duration_s", c.duration_s, as_f64);
             override_field!(e, "arrival_rps", c.arrival_rps, as_f64);
             override_field!(e, "event_driven", c.event_driven, as_bool);
+            override_field!(e, "decode_span", c.decode_span, as_bool);
             override_string!(e, "results_dir", c.results_dir);
             if let Some(w) = e.get("workload") {
                 let name = w.as_str().ok_or("bad workload")?;
@@ -689,6 +697,15 @@ step_mhz = 60
         let doc = toml::parse("[experiment]\nevent_driven = false").unwrap();
         let c = ExperimentConfig::from_toml(&doc).unwrap();
         assert!(!c.event_driven);
+        assert!(c.decode_span, "decode span stays on independently");
+    }
+
+    #[test]
+    fn decode_span_toggle_parses() {
+        let doc = toml::parse("[experiment]\ndecode_span = false").unwrap();
+        let c = ExperimentConfig::from_toml(&doc).unwrap();
+        assert!(!c.decode_span);
+        assert!(c.event_driven, "idle handling stays event-driven");
     }
 
     #[test]

@@ -27,7 +27,10 @@ pub use harness::{
     WindowRecord,
 };
 pub use phases::{
-    phase_metrics, run_grid, run_grid_with, split_at, stable_windows,
-    PhaseComparison,
+    compare_seed_grid, phase_metrics, run_compare_seeded, run_grid,
+    run_grid_with, split_at, stable_windows, PhaseComparison,
 };
-pub use sweep::{edp_sweep, edp_sweep_with, SweepPoint};
+pub use sweep::{
+    edp_sweep, edp_sweep_seeded, edp_sweep_with, SeededSweepPoint,
+    SeededSweepResult, SweepPoint,
+};

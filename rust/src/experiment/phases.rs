@@ -14,7 +14,7 @@ use crate::util::RunningStats;
 use crate::workload;
 
 use super::executor::Executor;
-use super::harness::{RunResult, WindowRecord};
+use super::harness::{run_shared, RunResult, WindowRecord};
 
 /// Aggregates of one metric over a phase.
 #[derive(Debug, Clone, Copy, Default)]
@@ -266,6 +266,64 @@ pub fn summarize_seeds(results: &[(String, RunResult)]) -> Vec<SeedSummary> {
         .collect()
 }
 
+/// The AGFT-vs-default comparison grid, seed-replicated: the two legs
+/// of `agft compare --seeds N` expanded through [`seed_grid`] so the
+/// whole governor × seed matrix fans out on the experiment executor at
+/// once and [`summarize_seeds`] can fold it back into mean ± 95 % CI
+/// columns (the across-seed row Tables 2–3 imply).
+pub fn compare_seed_grid(
+    base: &ExperimentConfig,
+    seeds: u64,
+) -> Vec<(String, ExperimentConfig)> {
+    let grid = vec![
+        (
+            "agft".to_string(),
+            ExperimentConfig {
+                governor: crate::config::GovernorKind::Agft,
+                ..base.clone()
+            },
+        ),
+        (
+            "default".to_string(),
+            ExperimentConfig {
+                governor: crate::config::GovernorKind::Default,
+                ..base.clone()
+            },
+        ),
+    ];
+    seed_grid(&grid, seeds)
+}
+
+/// Run the [`compare_seed_grid`] with per-seed stream sharing: each
+/// seed's workload is realized exactly once and shared by `Arc` handle
+/// across both governor legs. (`run_grid_with`'s same-stream fast path
+/// only covers grids where *every* leg draws the identical seed, so
+/// routing the mixed-seed comparison grid through it would realize
+/// each stream twice — and re-parse trace-backed workloads twice.)
+pub fn run_compare_seeded(
+    base: &ExperimentConfig,
+    seeds: u64,
+    exec: &Executor,
+) -> Result<Vec<(String, RunResult)>, String> {
+    let grid = compare_seed_grid(base, seeds);
+    let streams: Vec<Arc<[Request]>> = (0..seeds.max(1))
+        .map(|s| {
+            workload::realize(
+                &base.workload,
+                base.arrival_rps,
+                base.duration_s,
+                base.seed.wrapping_add(s),
+            )
+            .map(Into::into)
+        })
+        .collect::<Result<_, String>>()?;
+    let results = exec.try_map(&grid, |_, (_, cfg)| {
+        let s = cfg.seed.wrapping_sub(base.seed) as usize;
+        run_shared(cfg, Arc::clone(&streams[s]))
+    })?;
+    Ok(grid.into_iter().map(|(label, _)| label).zip(results).collect())
+}
+
 /// The paper's "No-grain" ablation variant (Table 4): coarse-only
 /// frequency control — the refinement step degenerates to 90 MHz over a
 /// 180 MHz bootstrap grid. Single source of truth for the CLI and the
@@ -429,6 +487,50 @@ mod tests {
         assert_eq!(summary[1].label, "no-pruning");
         assert_eq!(summary[1].seeds, 1);
         assert!((summary[1].energy_j.mean - 40.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn run_compare_seeded_matches_independent_grid_runs() {
+        use crate::config::WorkloadKind;
+        // The stream-sharing fast path must be a pure wall-clock
+        // optimisation: legs equal the generic grid runner bitwise.
+        let base = ExperimentConfig {
+            duration_s: 40.0,
+            arrival_rps: 2.0,
+            workload: WorkloadKind::Prototype("normal".to_string()),
+            ..ExperimentConfig::default()
+        };
+        let exec = Executor::new();
+        let shared = run_compare_seeded(&base, 2, &exec).unwrap();
+        let generic =
+            run_grid_with(&compare_seed_grid(&base, 2), &exec).unwrap();
+        assert_eq!(shared.len(), 4);
+        for ((la, ra), (lb, rb)) in shared.iter().zip(&generic) {
+            assert_eq!(la, lb);
+            assert_eq!(
+                ra.total_energy_j.to_bits(),
+                rb.total_energy_j.to_bits(),
+                "leg {la} diverged from the generic grid runner"
+            );
+            assert_eq!(ra.finished.len(), rb.finished.len());
+        }
+    }
+
+    #[test]
+    fn compare_seed_grid_expands_both_governors() {
+        use crate::config::GovernorKind;
+        let base = ExperimentConfig::default();
+        let grid = compare_seed_grid(&base, 3);
+        assert_eq!(grid.len(), 6);
+        assert_eq!(grid[0].0, "agft#s0");
+        assert_eq!(grid[0].1.governor, GovernorKind::Agft);
+        assert_eq!(grid[2].1.seed, base.seed + 2);
+        assert_eq!(grid[3].0, "default#s0");
+        assert_eq!(grid[3].1.governor, GovernorKind::Default);
+        // Single seed keeps plain labels for the non-replicated path.
+        let single = compare_seed_grid(&base, 1);
+        assert_eq!(single[0].0, "agft");
+        assert_eq!(single[1].0, "default");
     }
 
     #[test]

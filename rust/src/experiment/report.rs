@@ -125,6 +125,34 @@ pub fn render_seed_summary(title: &str, summaries: &[SeedSummary]) -> String {
     render_table(title, &header_refs, &rows)
 }
 
+/// Render a seed-replicated sweep (`agft sweep --seeds N`): one row per
+/// frequency, each EDP/energy/delay/TTFT column a `mean ± 95 % CI` over
+/// the seed replicas.
+pub fn render_seeded_sweep(
+    title: &str,
+    sweep: &crate::experiment::sweep::SeededSweepResult,
+) -> String {
+    let cell = |c: &MeanCi| format!("{:.3e} ± {:.1e}", c.mean, c.half95);
+    let rows: Vec<Vec<String>> = sweep
+        .points
+        .iter()
+        .map(|p| {
+            vec![
+                p.freq_mhz.to_string(),
+                cell(&p.energy_j),
+                cell(&p.delay_s),
+                cell(&p.edp),
+                cell(&p.mean_ttft),
+            ]
+        })
+        .collect();
+    render_table(
+        &format!("{title} ({} seeds, mean ± 95 % CI)", sweep.seeds),
+        &["MHz", "energy J", "delay s", "EDP", "TTFT s"],
+        &rows,
+    )
+}
+
 /// Ensure `results/` exists and return the CSV path for a bench.
 pub fn results_path(name: &str) -> PathBuf {
     let dir = Path::new("results");
@@ -232,6 +260,28 @@ mod tests {
         for metric in ["Energy (J)", "EDP", "TTFT", "TPOT", "E2E"] {
             assert!(text.contains(metric), "missing {metric}");
         }
+    }
+
+    #[test]
+    fn seeded_sweep_renders_ci_cells() {
+        use crate::experiment::sweep::{SeededSweepPoint, SeededSweepResult};
+        let p = |f: u32, edp: f64| SeededSweepPoint {
+            freq_mhz: f,
+            energy_j: MeanCi { mean: 100.0, half95: 2.0, n: 3 },
+            delay_s: MeanCi { mean: 10.0, half95: 0.5, n: 3 },
+            edp: MeanCi { mean: edp, half95: 30.0, n: 3 },
+            mean_ttft: MeanCi { mean: 0.05, half95: 0.001, n: 3 },
+        };
+        let sweep = SeededSweepResult {
+            points: vec![p(900, 1000.0), p(1500, 800.0)],
+            optimum: p(1500, 800.0),
+            seeds: 3,
+        };
+        let text = render_seeded_sweep("EDP(f) sweep", &sweep);
+        assert!(text.contains("3 seeds"), "{text}");
+        assert!(text.contains("900"));
+        assert!(text.contains("±"), "{text}");
+        assert!(text.contains("1.000e3 ± 3.0e1"), "{text}");
     }
 
     #[test]

@@ -17,6 +17,7 @@ use crate::server::Request;
 
 use super::executor::Executor;
 use super::harness::run_shared;
+use super::phases::MeanCi;
 
 /// One sweep sample.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -52,6 +53,56 @@ impl SweepResult {
     }
 }
 
+/// Resolve a sweep's frequency grid: the caller's list, or the whole
+/// table when it is empty. Shared by the single-seed and seeded sweeps
+/// so both always agree on the default grid.
+fn resolve_freqs(
+    cfg: &ExperimentConfig,
+    freqs: &[u32],
+) -> Result<Vec<u32>, String> {
+    let table = FreqTable::from_config(&cfg.gpu);
+    let freqs: Vec<u32> = if freqs.is_empty() {
+        table.all()
+    } else {
+        freqs.to_vec()
+    };
+    if freqs.is_empty() {
+        return Err("empty sweep".to_string());
+    }
+    Ok(freqs)
+}
+
+/// One locked-clock sweep leg over a pre-realized stream. Legs run to
+/// *drain* — the paper measures the energy and delay to complete the
+/// full task round at each clock, so a slow clock must pay its full
+/// latency bill rather than having queued work truncated at the
+/// horizon. Single source of truth for [`edp_sweep_with`] and
+/// [`edp_sweep_seeded`], so the drain horizon and the delay/EDP
+/// definitions can never desynchronize between them.
+fn sweep_leg(
+    cfg: &ExperimentConfig,
+    f: u32,
+    seed: u64,
+    requests: &Arc<[Request]>,
+) -> Result<SweepPoint, String> {
+    let run_cfg = ExperimentConfig {
+        governor: GovernorKind::Locked(f),
+        duration_s: cfg.duration_s * 1e3,
+        seed,
+        ..cfg.clone()
+    };
+    let r = run_shared(&run_cfg, Arc::clone(requests))?;
+    let delay: f64 = r.finished.iter().map(|rec| rec.e2e).sum();
+    Ok(SweepPoint {
+        freq_mhz: f,
+        energy_j: r.total_energy_j,
+        delay_s: delay,
+        edp: r.total_energy_j * delay,
+        mean_ttft: r.mean_ttft(),
+        mean_tpot: r.mean_tpot(),
+    })
+}
+
 /// Sweep EDP over `freqs` (defaults to the whole table at the base
 /// step when `freqs` is empty) with the default executor. Each point
 /// replays the identical request stream under a locked clock.
@@ -70,15 +121,7 @@ pub fn edp_sweep_with(
     freqs: &[u32],
     exec: &Executor,
 ) -> Result<SweepResult, String> {
-    let table = FreqTable::from_config(&cfg.gpu);
-    let freqs: Vec<u32> = if freqs.is_empty() {
-        table.all()
-    } else {
-        freqs.to_vec()
-    };
-    if freqs.is_empty() {
-        return Err("empty sweep".to_string());
-    }
+    let freqs = resolve_freqs(cfg, freqs)?;
     let requests: Arc<[Request]> = crate::workload::realize(
         &cfg.workload,
         cfg.arrival_rps,
@@ -86,32 +129,99 @@ pub fn edp_sweep_with(
         cfg.seed,
     )?
     .into();
-    let points = exec.try_map(&freqs, |_, &f| {
-        // Sweep points run to *drain* — the paper measures the energy
-        // and delay to complete the full task round at each clock, so a
-        // slow clock must pay its full latency bill rather than having
-        // queued work truncated at the horizon.
-        let run_cfg = ExperimentConfig {
-            governor: GovernorKind::Locked(f),
-            duration_s: cfg.duration_s * 1e3,
-            ..cfg.clone()
-        };
-        let r = run_shared(&run_cfg, Arc::clone(&requests))?;
-        let delay: f64 = r.finished.iter().map(|rec| rec.e2e).sum();
-        Ok(SweepPoint {
-            freq_mhz: f,
-            energy_j: r.total_energy_j,
-            delay_s: delay,
-            edp: r.total_energy_j * delay,
-            mean_ttft: r.mean_ttft(),
-            mean_tpot: r.mean_tpot(),
-        })
-    })?;
+    let points = exec
+        .try_map(&freqs, |_, &f| sweep_leg(cfg, f, cfg.seed, &requests))?;
     let optimum = *points
         .iter()
         .min_by(|a, b| a.edp.partial_cmp(&b.edp).unwrap())
         .ok_or("empty sweep")?;
     Ok(SweepResult { points, optimum })
+}
+
+/// One seed-replicated sweep sample: each column aggregates the same
+/// locked clock over `n` independently realized workloads (consecutive
+/// seeds) into mean ± 95 % CI — the across-seed EDP(f) bands Fig 6
+/// implies.
+#[derive(Debug, Clone)]
+pub struct SeededSweepPoint {
+    pub freq_mhz: u32,
+    pub energy_j: MeanCi,
+    pub delay_s: MeanCi,
+    pub edp: MeanCi,
+    pub mean_ttft: MeanCi,
+}
+
+/// Seed-replicated sweep with the optimum located on the seed-mean EDP
+/// curve.
+#[derive(Debug, Clone)]
+pub struct SeededSweepResult {
+    pub points: Vec<SeededSweepPoint>,
+    pub optimum: SeededSweepPoint,
+    pub seeds: u64,
+}
+
+/// [`edp_sweep_with`] replicated across `seeds` consecutive seed
+/// offsets (`cfg.seed .. cfg.seed + seeds`): every frequency × seed leg
+/// is an independent locked-clock replay, so the whole matrix fans out
+/// on the executor at once; per-seed streams are realized once and
+/// shared by `Arc` handle across that seed's frequency legs. Point
+/// order (and hence the located optimum) is deterministic: frequencies
+/// in input order, seeds aggregated per frequency.
+pub fn edp_sweep_seeded(
+    cfg: &ExperimentConfig,
+    freqs: &[u32],
+    seeds: u64,
+    exec: &Executor,
+) -> Result<SeededSweepResult, String> {
+    if seeds == 0 {
+        return Err("--seeds 0: need at least one replica".to_string());
+    }
+    let freqs = resolve_freqs(cfg, freqs)?;
+    let streams: Vec<Arc<[Request]>> = (0..seeds)
+        .map(|s| {
+            crate::workload::realize(
+                &cfg.workload,
+                cfg.arrival_rps,
+                cfg.duration_s,
+                cfg.seed.wrapping_add(s),
+            )
+            .map(Into::into)
+        })
+        .collect::<Result<_, String>>()?;
+    // Flat (frequency, seed) job list → full executor fan-out.
+    let jobs: Vec<(u32, usize)> = freqs
+        .iter()
+        .flat_map(|&f| (0..seeds as usize).map(move |s| (f, s)))
+        .collect();
+    let legs = exec.try_map(&jobs, |_, &(f, s)| {
+        sweep_leg(cfg, f, cfg.seed.wrapping_add(s as u64), &streams[s])
+    })?;
+    let points: Vec<SeededSweepPoint> = legs
+        .chunks_exact(seeds as usize)
+        .map(|replicas| SeededSweepPoint {
+            freq_mhz: replicas[0].freq_mhz,
+            energy_j: MeanCi::from_samples(
+                replicas.iter().map(|p| p.energy_j),
+            ),
+            delay_s: MeanCi::from_samples(
+                replicas.iter().map(|p| p.delay_s),
+            ),
+            edp: MeanCi::from_samples(replicas.iter().map(|p| p.edp)),
+            mean_ttft: MeanCi::from_samples(
+                replicas.iter().map(|p| p.mean_ttft),
+            ),
+        })
+        .collect();
+    let optimum = points
+        .iter()
+        .min_by(|a, b| a.edp.mean.partial_cmp(&b.edp.mean).unwrap())
+        .cloned()
+        .ok_or("empty sweep")?;
+    Ok(SeededSweepResult {
+        points,
+        optimum,
+        seeds,
+    })
 }
 
 #[cfg(test)]
@@ -164,6 +274,54 @@ mod tests {
             assert_eq!(r.points.len(), freqs.len());
             assert!(!r.is_u_shaped());
         }
+    }
+
+    #[test]
+    fn seeded_sweep_edp_columns_carry_mean_and_ci() {
+        // The --seeds contract: every column is a per-frequency MeanCi
+        // over N independently realized workloads, the mean matching
+        // the corresponding single-seed sweeps exactly.
+        let base = cfg("normal");
+        let freqs = [900u32, 1500];
+        let seeds = 3u64;
+        let exec = Executor::new();
+        let r = edp_sweep_seeded(&base, &freqs, seeds, &exec).unwrap();
+        assert_eq!(r.seeds, 3);
+        assert_eq!(r.points.len(), 2);
+        // Per-seed reference sweeps (same grid, one seed each).
+        let singles: Vec<SweepResult> = (0..seeds)
+            .map(|s| {
+                let mut c = base.clone();
+                c.seed = base.seed + s;
+                edp_sweep_with(&c, &freqs, &exec).unwrap()
+            })
+            .collect();
+        for (i, p) in r.points.iter().enumerate() {
+            assert_eq!(p.freq_mhz, freqs[i]);
+            for col in [&p.energy_j, &p.delay_s, &p.edp, &p.mean_ttft] {
+                assert_eq!(col.n, seeds);
+                assert!(col.half95.is_finite() && col.half95 >= 0.0);
+            }
+            // Independent seeds realize different streams, so the CI
+            // half-width is strictly positive.
+            assert!(p.edp.half95 > 0.0, "degenerate EDP CI at {i}");
+            let want: f64 = singles
+                .iter()
+                .map(|s| s.points[i].edp)
+                .sum::<f64>()
+                / seeds as f64;
+            assert!(
+                (p.edp.mean - want).abs() <= want.abs() * 1e-12,
+                "seed-mean EDP {} != {}",
+                p.edp.mean,
+                want
+            );
+        }
+        // One replica degenerates to a zero-width interval.
+        let one = edp_sweep_seeded(&base, &freqs, 1, &exec).unwrap();
+        assert_eq!(one.points[0].edp.n, 1);
+        assert_eq!(one.points[0].edp.half95, 0.0);
+        assert!(edp_sweep_seeded(&base, &freqs, 0, &exec).is_err());
     }
 
     // Parallel-vs-serial bitwise determinism is covered end-to-end by

@@ -116,6 +116,31 @@ impl SimGpu {
         dt
     }
 
+    /// Account one interior iteration of a busy decode span. Bitwise
+    /// the same accounting as [`SimGpu::account_iteration`] with no
+    /// pending clock-lock latency (same products, same accumulation
+    /// order into the same fields), minus the latency branch: the span
+    /// entry iteration goes through `account_iteration` and consumes any
+    /// pending latency there, so interior iterations provably have none
+    /// (clock locks only happen between engine steps). Returns the time
+    /// charged.
+    pub fn account_span_iteration(
+        &mut self,
+        f_mhz: u32,
+        cost: &IterationCost,
+    ) -> f64 {
+        debug_assert_eq!(
+            self.pending_lock_latency_s, 0.0,
+            "lock latency pending inside a decode span"
+        );
+        let p = self.power.iteration_power_w(f_mhz, cost);
+        self.energy_j += p * cost.time_s;
+        self.last_power_w = p;
+        self.busy_time_s += cost.time_s;
+        self.total_time_s += cost.time_s;
+        cost.time_s
+    }
+
     /// Integrate an idle span `[t0, t1]` analytically at the idle floor
     /// (piecewise-constant power ⇒ one exact product, no per-tick
     /// accumulation). The event-driven engine calls this once per idle
@@ -230,6 +255,30 @@ mod tests {
         g.account_iteration(1800, &c, false);
         assert!((g.energy_j() - expected_p * 0.01).abs() < 1e-9);
         assert!((g.busy_time_s() - 0.01).abs() < 1e-12);
+    }
+
+    #[test]
+    fn span_iteration_accounting_matches_account_iteration_bitwise() {
+        let cfg = GpuConfig::default();
+        let mk = || SimGpu::new(&cfg, GovernorKind::Locked(1230));
+        let costs: Vec<IterationCost> = (0..50)
+            .map(|i| IterationCost {
+                time_s: 0.009 + i as f64 * 1e-5,
+                util_compute: 0.3 + i as f64 * 0.01,
+                util_mem: 0.9,
+            })
+            .collect();
+        let mut a = mk();
+        let mut b = mk();
+        for c in &costs {
+            let da = a.account_iteration(1230, c, false);
+            let db = b.account_span_iteration(1230, c);
+            assert_eq!(da.to_bits(), db.to_bits());
+        }
+        assert_eq!(a.energy_j().to_bits(), b.energy_j().to_bits());
+        assert_eq!(a.busy_time_s().to_bits(), b.busy_time_s().to_bits());
+        assert_eq!(a.total_time_s().to_bits(), b.total_time_s().to_bits());
+        assert_eq!(a.power_w().to_bits(), b.power_w().to_bits());
     }
 
     #[test]

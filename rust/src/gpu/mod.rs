@@ -15,5 +15,5 @@ pub mod power;
 
 pub use device::SimGpu;
 pub use freq::FreqTable;
-pub use perf::{IterationCost, IterationWork, PerfModel};
+pub use perf::{DecodeSpanPricer, IterationCost, IterationWork, PerfModel};
 pub use power::PowerModel;

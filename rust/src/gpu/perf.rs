@@ -127,6 +127,64 @@ impl PerfModel {
         weights + kv_read + kv_write
     }
 
+    /// Price a homogeneous decode span: consecutive decode-only
+    /// iterations over a fixed sequence set, whose only evolution is KV
+    /// growth (`decode_kv_tokens += decode_seqs` per iteration — the
+    /// recurrence folded analytically, never re-derived from scheduler
+    /// state). The returned pricer is self-contained (it owns a copy of
+    /// the model constants, so it borrows nothing from the caller) and
+    /// evaluates each iteration's roofline terms *in iteration order*
+    /// with exactly the arithmetic of [`PerfModel::cost`]: the per-step
+    /// reference accumulates `time_s`/energy as an ordered f64 sum, so
+    /// span pricing must produce bitwise-identical per-iteration values
+    /// to stay bitwise-equivalent end to end. What the span *does* hoist
+    /// is everything invariant in `i`: the clock-dependent roofline
+    /// ceilings (`peak_flops`, `mem_bw` — one `powf` per span instead of
+    /// one per iteration) and all scheduler work.
+    pub fn cost_decode_span(
+        &self,
+        w0: &IterationWork,
+        f_mhz: u32,
+    ) -> DecodeSpanPricer {
+        debug_assert!(
+            w0.prefill_tokens == 0 && w0.decode_seqs > 0,
+            "decode span over non-decode work: {w0:?}"
+        );
+        DecodeSpanPricer {
+            model: self.clone(),
+            work: *w0,
+            peak_flops: self.peak_flops(f_mhz),
+            mem_bw: self.mem_bw(f_mhz),
+        }
+    }
+
+    /// Closed-form Σ FLOPs over `steps` span iterations (Gauss sum of
+    /// the affine KV growth). The analytic statement of what a span
+    /// prices, cross-checked against the iterated pricer by the unit
+    /// tests below; the engine's accounting itself stays per-iteration
+    /// for bitwise equivalence.
+    pub fn decode_span_flops(&self, w0: &IterationWork, steps: u64) -> f64 {
+        let k = steps as f64;
+        let n = w0.decode_seqs as f64;
+        let kv0 = w0.decode_kv_tokens as f64;
+        let linear = self.flops_per_token * n * k;
+        let attn = self.attn_flops_per_ctx_tok
+            * (kv0 * k + n * k * (k - 1.0) / 2.0);
+        linear + attn
+    }
+
+    /// Closed-form Σ HBM bytes over `steps` span iterations.
+    pub fn decode_span_bytes(&self, w0: &IterationWork, steps: u64) -> f64 {
+        let k = steps as f64;
+        let n = w0.decode_seqs as f64;
+        let kv0 = w0.decode_kv_tokens as f64;
+        let weights = self.weight_bytes * k;
+        let kv_read = self.kv_bytes_per_token
+            * (kv0 * k + n * k * (k - 1.0) / 2.0);
+        let kv_write = self.kv_bytes_per_token * n * k;
+        weights + kv_read + kv_write
+    }
+
     /// Iteration cost at clock `f`.
     pub fn cost(&self, w: &IterationWork, f_mhz: u32) -> IterationCost {
         if w.is_idle() {
@@ -145,6 +203,46 @@ impl PerfModel {
             util_compute: (t_c / time_s).min(1.0),
             util_mem: (t_m / time_s).min(1.0),
         }
+    }
+}
+
+/// Self-contained per-iteration pricer for a homogeneous decode span
+/// (see [`PerfModel::cost_decode_span`]). Owns a copy of the model
+/// constants plus the span-invariant clock ceilings, so the engine can
+/// drive it inside its accounting loop without borrowing the model.
+#[derive(Debug, Clone)]
+pub struct DecodeSpanPricer {
+    model: PerfModel,
+    work: IterationWork,
+    peak_flops: f64,
+    mem_bw: f64,
+}
+
+impl DecodeSpanPricer {
+    /// Price the next span iteration and fold its KV growth in. The
+    /// arithmetic mirrors [`PerfModel::cost`] term for term (same
+    /// dividends, same divisors, same rounding sites), which is what
+    /// makes the batched fast-path bitwise-identical to per-step
+    /// pricing.
+    pub fn next_cost(&mut self) -> IterationCost {
+        let w = &self.work;
+        let t_c = self.model.flops(w) / self.peak_flops;
+        let t_m = self.model.bytes(w) / self.mem_bw;
+        let busy = t_c.max(t_m);
+        let time_s = busy + self.model.iter_overhead_s;
+        let cost = IterationCost {
+            time_s,
+            util_compute: (t_c / time_s).min(1.0),
+            util_mem: (t_m / time_s).min(1.0),
+        };
+        self.work.decode_kv_tokens += self.work.decode_seqs;
+        cost
+    }
+
+    /// The work the *next* call to [`DecodeSpanPricer::next_cost`] will
+    /// price (KV already grown past the iterations priced so far).
+    pub fn work(&self) -> &IterationWork {
+        &self.work
     }
 }
 
@@ -231,6 +329,53 @@ mod tests {
         let c = m.cost(&IterationWork::default(), 1800);
         assert_eq!(c.time_s, GpuConfig::default().iter_overhead_s);
         assert_eq!(c.util_compute, 0.0);
+    }
+
+    #[test]
+    fn span_pricer_is_bitwise_identical_to_per_step_costs() {
+        // The fast-path contract: every span iteration's cost must be
+        // the *same f64s* the per-step reference computes when it
+        // re-plans and re-prices iteration by iteration.
+        let m = model();
+        for f in [210, 600, 1230, 1800] {
+            let w0 = decode_work(8, 256);
+            let mut pricer = m.cost_decode_span(&w0, f);
+            let mut w = w0;
+            for i in 0..200u64 {
+                let span = pricer.next_cost();
+                let step = m.cost(&w, f);
+                assert_eq!(
+                    span.time_s.to_bits(),
+                    step.time_s.to_bits(),
+                    "time diverged at f={f} i={i}"
+                );
+                assert_eq!(
+                    span.util_compute.to_bits(),
+                    step.util_compute.to_bits()
+                );
+                assert_eq!(span.util_mem.to_bits(), step.util_mem.to_bits());
+                w.decode_kv_tokens += w.decode_seqs;
+            }
+            assert_eq!(pricer.work().decode_kv_tokens, w.decode_kv_tokens);
+        }
+    }
+
+    #[test]
+    fn span_analytic_sums_match_iterated_totals() {
+        let m = model();
+        let w0 = decode_work(16, 700);
+        let steps = 137u64;
+        let (mut flops, mut bytes) = (0.0, 0.0);
+        let mut w = w0;
+        for _ in 0..steps {
+            flops += m.flops(&w);
+            bytes += m.bytes(&w);
+            w.decode_kv_tokens += w.decode_seqs;
+        }
+        let af = m.decode_span_flops(&w0, steps);
+        let ab = m.decode_span_bytes(&w0, steps);
+        assert!((af - flops).abs() / flops < 1e-12, "{af} vs {flops}");
+        assert!((ab - bytes).abs() / bytes < 1e-12, "{ab} vs {bytes}");
     }
 
     #[test]

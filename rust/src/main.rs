@@ -84,6 +84,38 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
 
 fn cmd_compare(args: &Args) -> Result<(), String> {
     let cfg = base_config(args)?;
+    // `--seeds N` replicates the AGFT/default pair across N consecutive
+    // seeds (whole governor × seed grid fanned out at once) and reports
+    // stable-phase mean ± 95 % CI columns instead of the single-seed
+    // learning/stable tables.
+    let seeds = args.get_u64("seeds", 1)?;
+    if seeds == 0 {
+        return Err("--seeds 0: need at least one replica".to_string());
+    }
+    if seeds > 1 {
+        eprintln!(
+            "running {}-leg comparison grid (2 governors x {seeds} \
+             seeds) in parallel ...",
+            2 * seeds,
+        );
+        let results = agft::experiment::phases::run_compare_seeded(
+            &cfg,
+            seeds,
+            &executor_from(args)?,
+        )?;
+        let summary = summarize_seeds(&results);
+        println!(
+            "{}",
+            report::render_seed_summary(
+                &format!(
+                    "AGFT vs default (stable phase, {seeds} seeds, \
+                     mean ± 95 % CI)"
+                ),
+                &summary,
+            )
+        );
+        return Ok(());
+    }
     let (agft, base) = run_pair_with(&cfg, &executor_from(args)?)?;
     println!(
         "energy: AGFT {:.0} J vs default {:.0} J ({:+.1} %)",
@@ -113,6 +145,32 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
         .into_iter()
         .filter(|f| (f - table.min_mhz()) % step == 0)
         .collect();
+    // `--seeds N`: every frequency is replicated across N consecutive
+    // seeds and the EDP columns carry mean ± 95 % CI (the curve the
+    // whole frequency × seed matrix fans out on the executor at once).
+    let seeds = args.get_u64("seeds", 1)?;
+    if seeds == 0 {
+        return Err("--seeds 0: need at least one replica".to_string());
+    }
+    if seeds > 1 {
+        eprintln!(
+            "sweeping {} locked-clock points x {seeds} seeds on {} \
+             workers ...",
+            freqs.len(),
+            exec.workers()
+        );
+        let sweep = agft::experiment::sweep::edp_sweep_seeded(
+            &cfg, &freqs, seeds, &exec,
+        )?;
+        println!("{}", report::render_seeded_sweep("EDP(f) sweep", &sweep));
+        println!(
+            "optimum: {} MHz (seed-mean EDP {:.3e} ± {:.1e})",
+            sweep.optimum.freq_mhz,
+            sweep.optimum.edp.mean,
+            sweep.optimum.edp.half95,
+        );
+        return Ok(());
+    }
     eprintln!(
         "sweeping {} locked-clock points on {} workers ...",
         freqs.len(),
@@ -284,8 +342,9 @@ fn usage() -> ! {
          common options: --config <toml> --workload <name> --governor \
          <default|agft|locked:MHZ> --duration S --rps R --seed N \
          --workers N\n\
-         ablation options: --which grain|pruning --seeds N (mean ± CI \
-         over N seed replicas)\n\
+         ablation options: --which grain|pruning\n\
+         multi-seed: compare|sweep|ablation accept --seeds N (mean ± \
+         95 % CI over N seed replicas)\n\
          workloads: normal long_context long_generation high_concurrency \
          high_cache_hit azure2023 azure2024 trace:<path>"
     );

@@ -28,6 +28,23 @@
 //! bitwise-identical to event-driven mode on completion timelines,
 //! window scrapes, energy totals and traces, differing only in step
 //! count.
+//!
+//! Busy iterations get the same treatment through the **batched decode
+//! fast-path**: when the scheduler's plan is decode-only and stable
+//! (nothing waiting, every running sequence planned — see
+//! [`super::scheduler::Scheduler::next_plan_invalidation`]), the engine
+//! prices up to `k = min(tokens to the first finish, KV-safe horizon)`
+//! iterations in one span without re-entering the planner, stopping
+//! early at any event per-step mode would observe (an arrival landing
+//! mid-span, the caller's `t_bound`). Each span iteration's roofline
+//! terms are evaluated in iteration order with the per-step arithmetic
+//! ([`crate::gpu::perf::DecodeSpanPricer`]) and KV blocks are grown at
+//! the exact (iteration, sequence) instants per-step planning would
+//! allocate them, so completion timelines, scrapes, features and energy
+//! stay bitwise-identical to the per-step reference
+//! (`set_decode_span(false)`) while the span costs one engine step —
+//! `iterations_total` and `decode_spans_total` are the only
+//! deliberately mode-dependent counters.
 
 use std::sync::Arc;
 
@@ -56,6 +73,16 @@ pub struct EngineCounters {
     /// sub-window queueing bursts register in the x1 feature even when
     /// the queue is empty again at scrape time).
     pub queue_time_s: f64,
+    /// Batched decode spans executed (each counts once in `iterations`
+    /// but contributes all its steps to `busy_iterations`). Like the
+    /// step count, this is deliberately mode-dependent telemetry: the
+    /// per-step reference always reads 0.
+    pub decode_spans: u64,
+    /// Busy iterations covered by decode spans (Σ span lengths). The
+    /// exact step saving over the per-step reference is
+    /// `span_steps - decode_spans`, an invariant
+    /// `tests/decode_span_semantics.rs` asserts per case.
+    pub span_steps: u64,
 }
 
 /// Latency record of a completed request (drives Tables 2/3 and Fig 13).
@@ -76,6 +103,15 @@ pub struct FinishedRecord {
 pub enum StepOutcome {
     /// A busy iteration ran (`dt` seconds of work).
     Busy { dt: f64, work: IterationWork },
+    /// A batched decode span ran: `steps` structurally-identical
+    /// decode-only iterations priced back to back in one engine step.
+    /// `work` is the span's *entry* iteration shape; its
+    /// `decode_kv_tokens` grew by `decode_seqs` each subsequent step.
+    BusySpan {
+        dt: f64,
+        steps: u64,
+        work: IterationWork,
+    },
     /// No runnable work; idled for `dt` (bounded by the next arrival and
     /// the caller's time bound, or by the idle tick in quantized mode).
     Idle { dt: f64 },
@@ -110,9 +146,16 @@ pub struct Engine {
     /// Event-driven idle (default): jump straight to the next event.
     /// Off = the quantized A/B reference mode.
     event_driven: bool,
+    /// Batched decode fast-path (default): price stable decode-only
+    /// stretches as one span. Off = the per-step A/B reference mode.
+    decode_span: bool,
     /// Entry timestamp of the currently open idle span; its energy/time
     /// flush exactly once, at the span's closing event.
     idle_span_start: Option<f64>,
+    /// Reusable per-sequence block-growth schedule for decode spans
+    /// (capacity persists, so span entry allocates nothing at steady
+    /// state).
+    span_cross_scratch: Vec<u64>,
 }
 
 impl Engine {
@@ -165,7 +208,9 @@ impl Engine {
             last_trace_s: f64::NEG_INFINITY,
             idle_tick_s: 0.05,
             event_driven: cfg.event_driven,
+            decode_span: cfg.decode_span,
             idle_span_start: None,
+            span_cross_scratch: Vec::new(),
         }
     }
 
@@ -188,6 +233,14 @@ impl Engine {
     /// equivalence tests.
     pub fn set_idle_fast_forward(&mut self, on: bool) {
         self.event_driven = on;
+    }
+
+    /// Toggle the batched decode fast-path (on by default). Per-step
+    /// mode is kept as the A/B reference for the bitwise
+    /// timeline/feature/energy equivalence tests
+    /// (`tests/decode_span_semantics.rs`).
+    pub fn set_decode_span(&mut self, on: bool) {
+        self.decode_span = on;
     }
 
     pub fn power_trace(&self) -> Option<&[(f64, f64)]> {
@@ -295,8 +348,14 @@ impl Engine {
             self.idle_span_start.is_none(),
             "busy iteration inside an open idle span"
         );
-        let t0 = self.clock.now();
         let f_mhz = self.gpu.effective_mhz(true);
+        if self.decode_span {
+            let horizon = self.sched.next_plan_invalidation(&plan);
+            if horizon >= 2 {
+                return self.run_decode_span(plan, f_mhz, horizon, t_bound);
+            }
+        }
+        let t0 = self.clock.now();
         let cost = self.perf.cost(&plan.work, f_mhz);
         let dt = self.gpu.account_iteration(f_mhz, &cost, false);
         if self.sched.queue_depth() > 0 {
@@ -322,6 +381,117 @@ impl Engine {
     /// Run one engine iteration (busy or idle) with no idle bound.
     pub fn step(&mut self) -> StepOutcome {
         self.step_bounded(f64::INFINITY)
+    }
+
+    /// Execute a batched decode span: up to `max_steps` structurally
+    /// identical decode-only iterations priced back to back without
+    /// re-entering the planner. Bitwise-equivalence discipline:
+    ///
+    /// * per-iteration costs come from the span pricer, which evaluates
+    ///   the per-step arithmetic in iteration order over the analytic
+    ///   KV-growth recurrence;
+    /// * energy/time/clock accumulate through the identical per-step
+    ///   accounting calls in the identical order (ordered f64 sums are
+    ///   observable state);
+    /// * between iterations — exactly where per-step mode would re-plan
+    ///   — the span stops at any event that mode would observe: the
+    ///   caller's `t_bound` (window boundary / run horizon, where the
+    ///   tuner may act) or an arrival whose timestamp has been reached;
+    /// * KV blocks grow at the same (iteration, sequence) instants
+    ///   per-step planning allocates them, so even the block ids (and
+    ///   hence the free-list evolution any later admission or
+    ///   preemption sees) match the reference.
+    ///
+    /// Token emission commits once at span end; since `max_steps` never
+    /// exceeds any sequence's remaining budget, a finish can only land
+    /// on the final iteration, whose end timestamp is the same ordered
+    /// f64 sum per-step mode reaches.
+    fn run_decode_span(
+        &mut self,
+        plan: IterationPlan,
+        f_mhz: u32,
+        max_steps: u64,
+        t_bound: f64,
+    ) -> StepOutcome {
+        debug_assert!(max_steps >= 2);
+        let t_enter = self.clock.now();
+        let next_arrival_s = self
+            .arrivals
+            .get(self.next_arrival)
+            .map_or(f64::INFINITY, |r| r.arrival_s);
+        // Per-sequence block-growth schedule: the span iteration index
+        // at which each sequence's KV next crosses a block boundary
+        // (sequence j crosses at iteration i when `kv_j + i + 1` first
+        // exceeds `block_size * blocks_j`).
+        let bs = self.sched.kv.block_size() as u64;
+        let mut cross = std::mem::take(&mut self.span_cross_scratch);
+        cross.clear();
+        cross.extend(plan.decode_ids.iter().map(|&id| {
+            let r = &self.sched.requests[id];
+            bs * r.blocks.len() as u64 - r.kv_tokens() as u64
+        }));
+        let mut next_cross =
+            cross.iter().copied().min().unwrap_or(u64::MAX);
+
+        let mut pricer = self.perf.cost_decode_span(&plan.work, f_mhz);
+        let mut steps = 0u64;
+        loop {
+            if steps > 0 {
+                // This is where per-step mode would re-enter the
+                // planner: stop at any external event it would see.
+                if self.clock.reached(t_bound)
+                    || self.clock.reached(next_arrival_s)
+                {
+                    break;
+                }
+                if steps == next_cross {
+                    for (c, &id) in
+                        cross.iter_mut().zip(&plan.decode_ids)
+                    {
+                        if *c == steps {
+                            self.sched.span_alloc_block(id);
+                            *c += bs;
+                        }
+                    }
+                    next_cross =
+                        cross.iter().copied().min().unwrap_or(u64::MAX);
+                }
+            }
+            let t0 = self.clock.now();
+            let cost = pricer.next_cost();
+            let dt = if steps == 0 {
+                // Span entry consumes any pending clock-lock latency,
+                // exactly like the first per-step iteration would.
+                self.gpu.account_iteration(f_mhz, &cost, false)
+            } else {
+                self.gpu.account_span_iteration(f_mhz, &cost)
+            };
+            self.clock.advance(dt);
+            self.counters.busy_time_s += dt;
+            self.trace_span(t0, self.clock.now(), self.gpu.power_w());
+            steps += 1;
+            if steps >= max_steps {
+                break;
+            }
+        }
+        self.span_cross_scratch = cross;
+        self.sched.commit_span(&plan, steps, self.clock.now());
+        self.harvest_finished();
+
+        self.counters.iterations += 1;
+        self.counters.decode_spans += 1;
+        self.counters.span_steps += steps;
+        self.counters.busy_iterations += steps;
+        self.counters.decode_tokens += plan.work.decode_seqs * steps;
+        self.counters.batch_token_sum +=
+            plan.work.total_tokens() * steps;
+        let work = plan.work;
+        self.plan_scratch = plan;
+        StepOutcome::BusySpan {
+            dt: self.clock.now() - t_enter,
+            steps,
+            work,
+        }
     }
 
     /// One idle step toward the absolute event timestamp `event_s`.
@@ -393,7 +563,7 @@ impl Engine {
     /// Run until virtual time `t_end` (or drained). Returns false when
     /// drained before the deadline.
     pub fn run_until(&mut self, t_end: f64) -> bool {
-        while self.clock.now() < t_end {
+        while !self.clock.reached(t_end) {
             if let StepOutcome::Drained = self.step_bounded(t_end) {
                 return false;
             }
@@ -424,6 +594,7 @@ impl Engine {
         MetricsSnapshot {
             time_s: self.clock.now(),
             iterations_total: self.counters.iterations,
+            decode_spans_total: self.counters.decode_spans,
             busy_iterations_total: self.counters.busy_iterations,
             prefill_tokens_total: self.counters.prefill_tokens,
             decode_tokens_total: self.counters.decode_tokens,
@@ -572,9 +743,19 @@ mod tests {
         let cfg = default_cfg();
         let mut e = Engine::new(&cfg, requests(50, 1000.0, 64, 64));
         let mut busy = 0;
-        while let StepOutcome::Busy { work, .. } = e.step() {
-            assert!(work.total_tokens() > 0);
-            busy += 1;
+        loop {
+            match e.step() {
+                StepOutcome::Busy { work, .. } => {
+                    assert!(work.total_tokens() > 0);
+                    busy += 1;
+                }
+                StepOutcome::BusySpan { work, steps, .. } => {
+                    assert!(work.total_tokens() > 0);
+                    assert!(steps >= 2);
+                    busy += steps;
+                }
+                _ => break,
+            }
             if busy > 200 {
                 break;
             }
@@ -740,6 +921,88 @@ mod tests {
             ff.finished_log[1].finish_s.to_bits(),
             quant.finished_log[1].finish_s.to_bits()
         );
+    }
+
+    #[test]
+    fn decode_span_is_bitwise_equal_to_per_step_and_fewer_steps() {
+        // Long homogeneous decode: one request generating 300 tokens
+        // alone. The span path must reproduce the per-step timeline,
+        // energy and busy accounting bit for bit, in far fewer engine
+        // steps (one span per run_until window instead of one step per
+        // token).
+        let cfg = default_cfg();
+        let mk = |span: bool| {
+            let reqs = vec![Request::new(0, 0.0, 64, 300, 0, 0)];
+            let mut e = Engine::new(&cfg, reqs);
+            e.set_decode_span(span);
+            let mut t_next = 0.8;
+            loop {
+                let alive = e.run_until(t_next);
+                if !alive {
+                    break;
+                }
+                t_next += 0.8;
+            }
+            e
+        };
+        let sp = mk(true);
+        let ps = mk(false);
+        assert_eq!(sp.finished_log.len(), 1);
+        assert_eq!(ps.finished_log.len(), 1);
+        assert_eq!(
+            sp.finished_log[0].finish_s.to_bits(),
+            ps.finished_log[0].finish_s.to_bits()
+        );
+        assert_eq!(
+            sp.finished_log[0].tpot.to_bits(),
+            ps.finished_log[0].tpot.to_bits()
+        );
+        assert_eq!(sp.gpu.energy_j().to_bits(), ps.gpu.energy_j().to_bits());
+        assert_eq!(
+            sp.counters.busy_time_s.to_bits(),
+            ps.counters.busy_time_s.to_bits()
+        );
+        assert_eq!(
+            sp.counters.busy_iterations,
+            ps.counters.busy_iterations
+        );
+        assert_eq!(sp.counters.decode_tokens, ps.counters.decode_tokens);
+        assert!(sp.counters.decode_spans > 0);
+        assert_eq!(ps.counters.decode_spans, 0);
+        assert!(
+            sp.counters.iterations * 5 < ps.counters.iterations,
+            "span {} vs per-step {} engine steps",
+            sp.counters.iterations,
+            ps.counters.iterations
+        );
+    }
+
+    #[test]
+    fn decode_span_stops_at_run_until_bound() {
+        // A span must not price iterations past the caller's horizon:
+        // per-step mode stops stepping once the clock reaches t_end, so
+        // the span has to break at the same comparison.
+        let cfg = default_cfg();
+        let mk = |span: bool| {
+            let reqs = vec![Request::new(0, 0.0, 64, 500, 0, 0)];
+            let mut e = Engine::new(&cfg, reqs);
+            e.set_decode_span(span);
+            e.run_until(2.0);
+            e
+        };
+        let sp = mk(true);
+        let ps = mk(false);
+        assert_eq!(sp.clock.now().to_bits(), ps.clock.now().to_bits());
+        assert_eq!(
+            sp.snapshot().decode_tokens_total,
+            ps.snapshot().decode_tokens_total
+        );
+        assert_eq!(
+            sp.gpu.energy_j().to_bits(),
+            ps.gpu.energy_j().to_bits()
+        );
+        // Both overshoot the bound by at most one iteration's dt.
+        assert!(sp.clock.now() >= 2.0 && sp.clock.now() < 2.1);
     }
 
     #[test]

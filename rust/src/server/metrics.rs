@@ -13,7 +13,15 @@ pub struct MetricsSnapshot {
     /// Virtual timestamp of the snapshot.
     pub time_s: f64,
     // --- counters (monotonic) ---
+    /// Engine steps taken. Deliberately mode-dependent (an idle gap or a
+    /// batched decode span counts once however many virtual iterations
+    /// it covers) — excluded from cross-mode bitwise comparisons and,
+    /// like `decode_spans_total`, banned from the feature context.
     pub iterations_total: u64,
+    /// Batched decode spans executed (0 in per-step mode). Telemetry
+    /// only — mode-dependent by design, same rules as
+    /// `iterations_total`.
+    pub decode_spans_total: u64,
     pub busy_iterations_total: u64,
     pub prefill_tokens_total: u64,
     pub decode_tokens_total: u64,
@@ -46,6 +54,8 @@ impl MetricsSnapshot {
         MetricsDelta {
             dt_s: self.time_s - earlier.time_s,
             iterations: self.iterations_total - earlier.iterations_total,
+            decode_spans: self.decode_spans_total
+                - earlier.decode_spans_total,
             busy_iterations: self.busy_iterations_total
                 - earlier.busy_iterations_total,
             prefill_tokens: self.prefill_tokens_total
@@ -71,6 +81,7 @@ impl MetricsSnapshot {
 pub struct MetricsDelta {
     pub dt_s: f64,
     pub iterations: u64,
+    pub decode_spans: u64,
     pub busy_iterations: u64,
     pub prefill_tokens: u64,
     pub decode_tokens: u64,
@@ -94,6 +105,11 @@ pub fn prometheus_text(s: &MetricsSnapshot) -> String {
         ));
     };
     counter("iterations_total", "engine iterations", s.iterations_total as f64);
+    counter(
+        "decode_spans_total",
+        "batched decode spans",
+        s.decode_spans_total as f64,
+    );
     counter(
         "prefill_tokens_total",
         "prompt tokens prefilled",

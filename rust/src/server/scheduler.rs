@@ -172,6 +172,124 @@ impl Scheduler {
         }
     }
 
+    /// Span-stability oracle for the batched decode fast-path: given the
+    /// plan just built, the number of consecutive iterations (including
+    /// the planned one) the plan provably stays *structurally identical*
+    /// — same sequence set, one decode token each, KV growing by one per
+    /// sequence — absent external events (arrivals and run bounds, which
+    /// the engine checks between span iterations). Returns 1 (no span)
+    /// unless all of:
+    ///
+    /// * the plan is decode-only (no prefill chunk, no prefill
+    ///   completion pending commit);
+    /// * the wait queue is empty — a waiting request would re-enter
+    ///   admission (and possibly the prefix cache, whose lookup stats
+    ///   are scrape-visible) at every per-step re-plan;
+    /// * every running sequence made it into the plan (none skipped by
+    ///   the token budget or a same-pass preemption).
+    ///
+    /// The span length is then `min` of (a) the fewest decode tokens any
+    /// running sequence still owes — the first finish invalidates the
+    /// plan at exactly that iteration, so the span may *include* it and
+    /// commit it at span end — and (b) the largest horizon whose
+    /// worst-case fresh-block demand fits the free pool, so
+    /// `ensure_blocks` can provably never fail (hence never preempt)
+    /// inside the span. KV exhaustion beyond that horizon falls back to
+    /// the per-step path and takes the normal preemption route there.
+    pub fn next_plan_invalidation(&self, plan: &IterationPlan) -> u64 {
+        if plan.work.prefill_tokens > 0
+            || plan.work.decode_seqs == 0
+            || !plan.completions.is_empty()
+            || !self.waiting.is_empty()
+            || plan.decode_ids.len() != self.running.len()
+        {
+            return 1;
+        }
+        let min_remaining = plan
+            .decode_ids
+            .iter()
+            .map(|&id| {
+                let r = &self.requests[id];
+                (r.target_output - r.generated) as u64
+            })
+            .min()
+            .expect("decode_seqs > 0");
+        // Worst-case fresh blocks a k-step span can demand: at span
+        // iteration i the planner grows sequence j to `kv_j + i + 1`
+        // tokens, so over k steps it needs `ceil((kv_j + k)/bs)` blocks.
+        let free = self.kv.free_blocks();
+        let need = |k: u64| -> usize {
+            plan.decode_ids
+                .iter()
+                .map(|&id| {
+                    let r = &self.requests[id];
+                    ((r.kv_tokens() as u64 + k) as usize)
+                        .div_ceil(self.block_size)
+                        .saturating_sub(r.blocks.len())
+                })
+                .sum()
+        };
+        if need(min_remaining) <= free {
+            return min_remaining;
+        }
+        // Binary search the largest safe horizon; k = 1 always fits
+        // (the planning pass that built `plan` already grew every
+        // sequence to cover its next token).
+        let (mut lo, mut hi) = (1u64, min_remaining);
+        while lo < hi {
+            let mid = lo + (hi - lo + 1) / 2;
+            if need(mid) <= free {
+                lo = mid;
+            } else {
+                hi = mid - 1;
+            }
+        }
+        lo
+    }
+
+    /// Grow `id` by exactly one fresh KV block — the decode span's block
+    /// growth, fired at the same (iteration, sequence) instants
+    /// per-step planning would call `ensure_blocks`, so even the block
+    /// *ids* match the per-step reference. Infallible by construction:
+    /// [`Scheduler::next_plan_invalidation`] bounded the span below any
+    /// horizon that could exhaust the pool.
+    pub fn span_alloc_block(&mut self, id: usize) {
+        let mut fresh = self
+            .kv
+            .alloc(1)
+            .expect("span oracle guaranteed free blocks");
+        self.requests[id].blocks.append(&mut fresh);
+    }
+
+    /// Commit `steps` back-to-back decode iterations of a span plan at
+    /// the span's end time `now`. Equivalent to `steps` repetitions of
+    /// [`Scheduler::commit`]: intermediate `generated` values are
+    /// unobservable (nothing re-plans mid-span), and the span length
+    /// never exceeds any sequence's remaining budget, so finishes can
+    /// only land on the final iteration — whose end time is `now` in
+    /// per-step mode too.
+    pub fn commit_span(
+        &mut self,
+        plan: &IterationPlan,
+        steps: u64,
+        now: f64,
+    ) {
+        for &id in &plan.decode_ids {
+            debug_assert_eq!(self.requests[id].phase, Phase::Decode);
+            self.requests[id].generated += steps as u32;
+            debug_assert!(
+                self.requests[id].generated
+                    <= self.requests[id].target_output,
+                "span overshot a sequence's token budget"
+            );
+            if self.requests[id].generated
+                >= self.requests[id].target_output
+            {
+                self.finish(id, now);
+            }
+        }
+    }
+
     /// Admit waiting requests while capacity allows.
     fn admit(&mut self) {
         while self.running.len() < self.max_num_seqs {
@@ -692,6 +810,107 @@ mod tests {
         }
         assert_eq!(s.requests[id].phase, Phase::Finished);
         assert_eq!(s.kv.used_blocks(), 0);
+    }
+
+    #[test]
+    fn span_oracle_requires_stable_decode_only_plans() {
+        let mut s = Scheduler::new(&small_cfg());
+        // Prefill iteration → no span.
+        s.submit(Request::new(0, 0.0, 32, 10, 0, 0));
+        let plan = s.plan();
+        assert!(plan.work.prefill_tokens > 0);
+        assert_eq!(s.next_plan_invalidation(&plan), 1);
+        s.commit(&plan, 0.01);
+        // Pure decode, nothing waiting: span = remaining tokens (9).
+        let plan = s.plan();
+        assert_eq!(plan.work.decode_seqs, 1);
+        assert_eq!(s.next_plan_invalidation(&plan), 9);
+        // A waiting request pins the oracle back to per-step.
+        s.submit(Request::new(1, 0.0, 2000, 5, 1, 0)); // cannot admit: 2000 > 32*16 pool? fits? 2000 tokens = 125 blocks > 32 — stays waiting
+        let plan = s.plan();
+        if s.queue_depth() > 0 {
+            assert_eq!(s.next_plan_invalidation(&plan), 1);
+        }
+    }
+
+    #[test]
+    fn span_oracle_bounds_by_kv_capacity() {
+        // Tiny pool: two decode sequences must not be granted a span
+        // whose worst-case block demand exceeds the free list.
+        let cfg = ServerConfig {
+            kv_blocks: 8,
+            prefix_cache: false,
+            ..small_cfg()
+        };
+        let mut s = Scheduler::new(&cfg);
+        s.submit(Request::new(0, 0.0, 16, 200, 0, 0));
+        s.submit(Request::new(1, 0.0, 16, 200, 1, 0));
+        let p = s.plan(); // both prefill fully (32 ≤ 64 budget)
+        s.commit(&p, 0.01);
+        let plan = s.plan();
+        assert_eq!(plan.work.decode_seqs, 2);
+        let span = s.next_plan_invalidation(&plan);
+        assert!(span >= 2, "decode span expected, got {span}");
+        // Verify the bound is safe: worst-case demand at `span` fits,
+        // at `span + 1` it must not (otherwise the bound is not tight).
+        let need = |k: u64| -> usize {
+            plan.decode_ids
+                .iter()
+                .map(|&id| {
+                    let r = &s.requests[id];
+                    ((r.kv_tokens() as u64 + k) as usize)
+                        .div_ceil(16)
+                        .saturating_sub(r.blocks.len())
+                })
+                .sum()
+        };
+        assert!(need(span) <= s.kv.free_blocks());
+        assert!(
+            need(span + 1) > s.kv.free_blocks(),
+            "kv-bounded span {span} not tight"
+        );
+    }
+
+    #[test]
+    fn commit_span_equals_repeated_commits() {
+        let mk = || {
+            let mut s = Scheduler::new(&small_cfg());
+            s.submit(Request::new(0, 0.0, 16, 10, 0, 0));
+            s.submit(Request::new(1, 0.0, 16, 6, 1, 0));
+            let p = s.plan();
+            s.commit(&p, 0.01); // both prefills complete, 1 token each
+            s
+        };
+        // Reference: five per-step commits of the same decode plan
+        // shape (re-planned each time, as the engine does).
+        let mut a = mk();
+        let mut t = 0.01;
+        for _ in 0..5 {
+            let p = a.plan();
+            t += 0.01;
+            a.commit(&p, t);
+        }
+        // Span: one plan, blocks grown to cover the horizon, then one
+        // bulk commit at the same end time.
+        let mut b = mk();
+        let plan = b.plan();
+        assert!(b.next_plan_invalidation(&plan) >= 5);
+        for &id in &plan.decode_ids {
+            while (b.requests[id].blocks.len() * 16)
+                < (b.requests[id].kv_tokens() + 5) as usize
+            {
+                b.span_alloc_block(id);
+            }
+        }
+        b.commit_span(&plan, 5, 0.06);
+        for (ra, rb) in a.requests.iter().zip(&b.requests) {
+            assert_eq!(ra.generated, rb.generated);
+            assert_eq!(ra.phase, rb.phase);
+        }
+        // Request 1 finished exactly at the horizon in both paths.
+        assert_eq!(a.requests[1].phase, Phase::Finished);
+        assert_eq!(b.requests[1].finish_s, Some(0.06));
+        b.check_invariants().unwrap();
     }
 
     #[test]

@@ -27,6 +27,16 @@ impl Clock {
         self.now_s += dt;
     }
 
+    /// Whether the clock has reached the absolute timestamp `t`. This is
+    /// *the* continuation predicate shared by `run_until` and the
+    /// batched decode span's interior event checks: both must compare
+    /// the identical f64s with the identical `>=`, or the span could run
+    /// one iteration past (or short of) where per-step mode stops.
+    #[inline]
+    pub fn reached(&self, t: f64) -> bool {
+        self.now_s >= t
+    }
+
     /// Jump to the absolute timestamp `t` (the event-driven engine's
     /// primitive). Unlike summing `advance` deltas, landing on an
     /// absolute event timestamp is exact: every engine mode that targets
@@ -67,6 +77,15 @@ mod tests {
     #[should_panic(expected = "invalid dt")]
     fn rejects_nan() {
         Clock::new().advance(f64::NAN);
+    }
+
+    #[test]
+    fn reached_is_inclusive() {
+        let mut c = Clock::new();
+        c.advance_to(0.8);
+        assert!(c.reached(0.8), "boundary timestamps count as reached");
+        assert!(c.reached(0.5));
+        assert!(!c.reached(0.8 + f64::EPSILON));
     }
 
     #[test]

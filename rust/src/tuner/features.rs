@@ -21,9 +21,11 @@
 //! step counts: every feature derives from time-integrated counters
 //! (`queue_time_s`, `idle_time_s`, token totals) or *busy*-iteration
 //! counts, all of which are bitwise-identical between the event-driven
-//! and quantized engine modes. Total step count — the one counter the
-//! two modes disagree on, by design — must never leak into the context
-//! (guarded by `features_ignore_engine_step_count` below).
+//! and quantized engine modes *and* between the batched-decode and
+//! per-step busy modes. Total step count and the decode-span count —
+//! the only counters the modes disagree on, by design — must never
+//! leak into the context (guarded by
+//! `features_ignore_engine_step_count` below).
 
 use crate::server::metrics::MetricsSnapshot;
 
@@ -203,7 +205,9 @@ mod tests {
     #[test]
     fn features_ignore_engine_step_count() {
         // The event-driven engine crosses an idle gap in one step where
-        // quantized mode takes hundreds; `iterations_total` is therefore
+        // quantized mode takes hundreds, and the batched decode
+        // fast-path prices a whole decode stretch as one step;
+        // `iterations_total` and `decode_spans_total` are therefore
         // mode-dependent and must never influence the context vector.
         let base = MetricsSnapshot {
             time_s: 0.8,
@@ -221,7 +225,8 @@ mod tests {
         a.observe(&MetricsSnapshot::default());
         let xa = a
             .observe(&MetricsSnapshot {
-                iterations_total: 26, // event-driven: busy + 1 jump
+                iterations_total: 4, // batched: 3 spans + 1 jump
+                decode_spans_total: 3,
                 ..base
             })
             .unwrap();
@@ -229,7 +234,8 @@ mod tests {
         b.observe(&MetricsSnapshot::default());
         let xb = b
             .observe(&MetricsSnapshot {
-                iterations_total: 226, // quantized: busy + 200 ticks
+                iterations_total: 226, // per-step quantized: busy + ticks
+                decode_spans_total: 0,
                 ..base
             })
             .unwrap();

@@ -1,0 +1,436 @@
+//! Batched-decode fast-path semantics: span mode must be **bitwise**
+//! equivalent to the per-step reference — identical completion
+//! timelines, per-window metric scrapes, per-window feature vectors and
+//! energy totals — while taking strictly fewer engine steps wherever a
+//! span actually fires. The case matrix totals 205 randomized/preset
+//! cases (150 randomized + 5 workloads × 5 frequencies × 2 seeds = 50
+//! preset cases + 5 adversarial constructions), satisfying the ≥ 200
+//! bar with named coverage of the adversarial corners: an arrival
+//! landing mid-span, a sequence finishing exactly at span end, KV
+//! exhaustion inside a would-be span, and a window boundary coinciding
+//! with an event boundary.
+
+use std::sync::Arc;
+
+use agft::config::{ExperimentConfig, GovernorKind, WorkloadKind};
+use agft::experiment::harness::run_experiment;
+use agft::server::metrics::MetricsSnapshot;
+use agft::server::{Engine, Request};
+use agft::tuner::features::ContextVector;
+use agft::tuner::FeatureExtractor;
+use agft::util::check::forall;
+use agft::workload;
+
+fn proto(name: &str, duration: f64) -> ExperimentConfig {
+    ExperimentConfig {
+        duration_s: duration,
+        arrival_rps: 2.0,
+        workload: WorkloadKind::Prototype(name.to_string()),
+        governor: GovernorKind::Locked(1230),
+        ..ExperimentConfig::default()
+    }
+}
+
+type Scrape = (MetricsSnapshot, Option<ContextVector>);
+
+/// Drive an engine on the harness's 0.8 s window cadence, scraping the
+/// snapshot and feature vector at every window boundary.
+fn drive(
+    cfg: &ExperimentConfig,
+    requests: Arc<[Request]>,
+    decode_span: bool,
+) -> (Engine, Vec<Scrape>) {
+    let mut engine = Engine::with_shared(cfg, requests);
+    engine.set_decode_span(decode_span);
+    let mut fx = FeatureExtractor::new();
+    let mut scrapes = Vec::new();
+    let mut t_next = 0.8;
+    loop {
+        let alive = engine.run_until(t_next);
+        let snap = engine.snapshot();
+        let x = fx.observe(&snap);
+        scrapes.push((snap, x));
+        if !alive || snap.time_s >= cfg.duration_s {
+            break;
+        }
+        t_next += 0.8;
+    }
+    (engine, scrapes)
+}
+
+/// The bitwise-equivalence contract between a span-mode run (`sp`) and
+/// its per-step reference (`ps`). `iterations_total` and
+/// `decode_spans_total` are the only counters allowed to differ — and
+/// then only in the direction of fewer span-mode steps.
+fn check_equivalent(
+    sp: &(Engine, Vec<Scrape>),
+    ps: &(Engine, Vec<Scrape>),
+) -> Result<(), String> {
+    let (se, ss) = sp;
+    let (pe, pss) = ps;
+    if se.finished_log.len() != pe.finished_log.len() {
+        return Err(format!(
+            "finished {} vs {}",
+            se.finished_log.len(),
+            pe.finished_log.len()
+        ));
+    }
+    for (a, b) in se.finished_log.iter().zip(&pe.finished_log) {
+        if a.finish_s.to_bits() != b.finish_s.to_bits()
+            || a.first_token_s.to_bits() != b.first_token_s.to_bits()
+            || a.ttft.to_bits() != b.ttft.to_bits()
+            || a.tpot.to_bits() != b.tpot.to_bits()
+            || a.e2e.to_bits() != b.e2e.to_bits()
+            || a.output_tokens != b.output_tokens
+        {
+            return Err(format!(
+                "completion timeline diverged at arrival {}",
+                a.arrival_s
+            ));
+        }
+    }
+    if se.gpu.energy_j().to_bits() != pe.gpu.energy_j().to_bits() {
+        return Err(format!(
+            "energy {} vs {}",
+            se.gpu.energy_j(),
+            pe.gpu.energy_j()
+        ));
+    }
+    if se.counters.busy_time_s.to_bits()
+        != pe.counters.busy_time_s.to_bits()
+    {
+        return Err("busy time diverged".to_string());
+    }
+    if ss.len() != pss.len() {
+        return Err(format!("windows {} vs {}", ss.len(), pss.len()));
+    }
+    for (i, ((sa, xa), (sb, xb))) in ss.iter().zip(pss).enumerate() {
+        let same = sa.time_s.to_bits() == sb.time_s.to_bits()
+            && sa.energy_j_total.to_bits() == sb.energy_j_total.to_bits()
+            && sa.idle_time_s_total.to_bits()
+                == sb.idle_time_s_total.to_bits()
+            && sa.queue_time_s_total.to_bits()
+                == sb.queue_time_s_total.to_bits()
+            && sa.busy_iterations_total == sb.busy_iterations_total
+            && sa.prefill_tokens_total == sb.prefill_tokens_total
+            && sa.decode_tokens_total == sb.decode_tokens_total
+            && sa.batch_token_sum == sb.batch_token_sum
+            && sa.finished_total == sb.finished_total
+            && sa.preemptions_total == sb.preemptions_total
+            && sa.prefix_hit_tokens_total == sb.prefix_hit_tokens_total
+            && sa.prefix_lookup_tokens_total
+                == sb.prefix_lookup_tokens_total
+            && sa.requests_waiting == sb.requests_waiting
+            && sa.requests_running == sb.requests_running
+            && sa.kv_usage.to_bits() == sb.kv_usage.to_bits()
+            && sa.power_w.to_bits() == sb.power_w.to_bits()
+            && sa.clock_mhz == sb.clock_mhz;
+        if !same {
+            return Err(format!("window {i} scrape diverged"));
+        }
+        match (xa, xb) {
+            (None, None) => {}
+            (Some(a), Some(b)) => {
+                for (va, vb) in a.iter().zip(b) {
+                    if va.to_bits() != vb.to_bits() {
+                        return Err(format!("window {i} features diverged"));
+                    }
+                }
+            }
+            _ => return Err(format!("window {i} feature presence")),
+        }
+    }
+    // Exact step accounting: idle stepping is identical in both modes,
+    // so the saving is precisely Σ(span length − 1) — every span saves
+    // all of its steps but the one engine step it costs. Strictly fewer
+    // steps whenever any span covered ≥ 2 iterations, never more.
+    let saved = se.counters.span_steps - se.counters.decode_spans;
+    if pe.counters.iterations != se.counters.iterations + saved {
+        return Err(format!(
+            "step accounting broken: per-step {} vs span {} ({} spans \
+             over {} steps should save exactly {})",
+            pe.counters.iterations,
+            se.counters.iterations,
+            se.counters.decode_spans,
+            se.counters.span_steps,
+            saved
+        ));
+    }
+    if se.counters.busy_iterations != pe.counters.busy_iterations {
+        return Err(format!(
+            "busy iterations diverged: {} vs {}",
+            se.counters.busy_iterations, pe.counters.busy_iterations
+        ));
+    }
+    if pe.counters.decode_spans != 0 {
+        return Err("per-step reference recorded spans".to_string());
+    }
+    Ok(())
+}
+
+fn run_case(cfg: &ExperimentConfig) -> Result<(Engine, Engine), String> {
+    let requests: Arc<[Request]> = workload::realize(
+        &cfg.workload,
+        cfg.arrival_rps,
+        cfg.duration_s,
+        cfg.seed,
+    )?
+    .into();
+    let sp = drive(cfg, Arc::clone(&requests), true);
+    let ps = drive(cfg, requests, false);
+    check_equivalent(&sp, &ps)?;
+    Ok((sp.0, ps.0))
+}
+
+#[test]
+fn preset_matrix_is_bitwise_equivalent() {
+    // 5 workloads × 5 locked frequencies × 2 seeds = 50 deterministic
+    // cases over the paper's prototype presets.
+    let mut any_spans = false;
+    for name in [
+        "normal",
+        "long_context",
+        "long_generation",
+        "high_concurrency",
+        "high_cache_hit",
+    ] {
+        for f in [600, 900, 1230, 1500, 1800] {
+            for seed in [42, 77] {
+                let mut cfg = proto(name, 30.0);
+                cfg.governor = GovernorKind::Locked(f);
+                cfg.seed = seed;
+                let (sp, _) = run_case(&cfg).unwrap_or_else(|e| {
+                    panic!("{name} @ {f} MHz seed {seed}: {e}")
+                });
+                any_spans |= sp.counters.decode_spans > 0;
+            }
+        }
+    }
+    assert!(any_spans, "matrix never exercised the span fast-path");
+}
+
+#[test]
+fn property_randomized_decode_span_equivalence() {
+    // 150 randomized cases over workload shape, governor, batch width
+    // and KV-pool pressure (tight pools force preemption around —
+    // never inside — spans; the oracle must bound every span below the
+    // exhaustion horizon).
+    let names = [
+        "normal",
+        "long_context",
+        "long_generation",
+        "high_concurrency",
+        "high_cache_hit",
+    ];
+    let mut any_spans = false;
+    let mut any_preemption = false;
+    forall("batched ≡ per-step", 150, |rng| {
+        let name = names[rng.index(names.len())];
+        let mut cfg = proto(name, 16.0 + rng.f64() * 16.0);
+        cfg.seed = rng.next_u64();
+        cfg.arrival_rps = 0.5 + rng.f64() * 2.5;
+        cfg.governor = match rng.index(2) {
+            0 => GovernorKind::Default,
+            _ => GovernorKind::Locked(600 + 15 * rng.index(80) as u32),
+        };
+        cfg.server.max_num_seqs = 2 + rng.index(14);
+        let requests: Arc<[Request]> = workload::realize(
+            &cfg.workload,
+            cfg.arrival_rps,
+            cfg.duration_s,
+            cfg.seed,
+        )?
+        .into();
+        if requests.is_empty() {
+            return Ok(()); // nothing arrived inside a short horizon
+        }
+        if rng.f64() < 0.4 {
+            // Tight pool: just above the largest single request (the
+            // engine requires every request to fit), far below the
+            // batch's aggregate demand.
+            let max_tokens = requests
+                .iter()
+                .map(|r| (r.prompt_tokens + r.target_output) as usize)
+                .max()
+                .unwrap();
+            cfg.server.kv_blocks = max_tokens
+                .div_ceil(cfg.server.block_size)
+                + 2
+                + rng.index(24);
+            cfg.server.prefix_cache_blocks =
+                1 + rng.index(cfg.server.kv_blocks / 2);
+        }
+        let sp = drive(&cfg, Arc::clone(&requests), true);
+        let ps = drive(&cfg, requests, false);
+        any_spans |= sp.0.counters.decode_spans > 0;
+        any_preemption |= ps.0.sched.preemptions() > 0;
+        check_equivalent(&sp, &ps)
+    });
+    assert!(any_spans, "property never exercised the span fast-path");
+    assert!(
+        any_preemption,
+        "property never exercised KV preemption pressure"
+    );
+}
+
+#[test]
+fn arrival_landing_mid_span_splits_it_exactly() {
+    // One long decode running alone; a second request lands at an
+    // arbitrary (non-window-aligned) timestamp mid-decode. Per-step
+    // mode admits it at the first iteration starting at or after
+    // 2.345 s; the span must stop at the identical comparison.
+    let cfg = proto("normal", 60.0);
+    let reqs = vec![
+        Request::new(0, 0.0, 64, 400, 0, 0),
+        Request::new(1, 2.345, 128, 50, 1, 0),
+    ];
+    let requests: Arc<[Request]> = reqs.into();
+    let sp = drive(&cfg, Arc::clone(&requests), true);
+    let ps = drive(&cfg, requests, false);
+    assert_eq!(sp.0.finished_log.len(), 2);
+    assert!(sp.0.counters.decode_spans > 0, "no span before the arrival");
+    check_equivalent(&sp, &ps).unwrap();
+    assert!(sp.0.counters.iterations < ps.0.counters.iterations);
+}
+
+#[test]
+fn sequences_finishing_exactly_at_span_end_commit_once() {
+    // Two sequences with identical budgets decode in lock-step and
+    // finish on the same iteration — the span's final one. A third,
+    // longer sequence must keep decoding past that boundary.
+    let cfg = proto("normal", 60.0);
+    let reqs = vec![
+        Request::new(0, 0.0, 64, 200, 0, 0),
+        Request::new(1, 0.0, 64, 200, 1, 0),
+        Request::new(2, 0.0, 64, 320, 2, 0),
+    ];
+    let requests: Arc<[Request]> = reqs.into();
+    let sp = drive(&cfg, Arc::clone(&requests), true);
+    let ps = drive(&cfg, requests, false);
+    assert_eq!(sp.0.finished_log.len(), 3);
+    assert!(sp.0.counters.decode_spans > 0);
+    // The twins really did finish at the same instant.
+    let twins: Vec<_> = sp
+        .0
+        .finished_log
+        .iter()
+        .filter(|r| r.output_tokens == 200)
+        .collect();
+    assert_eq!(twins.len(), 2);
+    assert_eq!(
+        twins[0].finish_s.to_bits(),
+        twins[1].finish_s.to_bits()
+    );
+    check_equivalent(&sp, &ps).unwrap();
+}
+
+#[test]
+fn kv_exhaustion_lands_between_spans_not_inside() {
+    // A pool two growing sequences exhaust mid-decode: per-step mode
+    // preempts on the allocation failure; the span oracle must bound
+    // every span below that horizon so the preemption happens at the
+    // same iteration, through the same planner path, in both modes.
+    let mut cfg = proto("normal", 120.0);
+    // 40-block pool (640 tokens): each request peaks at 21 blocks
+    // (96 + 230 = 326 tokens), so the pair's 42-block demand exhausts
+    // the pool mid-decode while either request alone still fits.
+    cfg.server.kv_blocks = 40;
+    cfg.server.prefix_cache_blocks = 4;
+    cfg.server.max_num_seqs = 4;
+    let reqs = vec![
+        Request::new(0, 0.0, 96, 230, 0, 0),
+        Request::new(1, 0.1, 96, 230, 1, 0),
+    ];
+    let requests: Arc<[Request]> = reqs.into();
+    let sp = drive(&cfg, Arc::clone(&requests), true);
+    let ps = drive(&cfg, requests, false);
+    assert_eq!(sp.0.finished_log.len(), 2);
+    assert!(
+        ps.0.sched.preemptions() > 0,
+        "scenario must actually exhaust the pool"
+    );
+    assert!(sp.0.counters.decode_spans > 0);
+    check_equivalent(&sp, &ps).unwrap();
+}
+
+#[test]
+fn window_boundary_coinciding_with_arrival_event() {
+    // The adversarial alignment: an arrival at exactly a window
+    // boundary (1.6 = 2 × 0.8). The span breaks on the boundary, the
+    // next run_until pulls the arrival at the identical timestamp —
+    // both modes must see the same ordering.
+    let cfg = proto("normal", 60.0);
+    let reqs = vec![
+        Request::new(0, 0.0, 64, 400, 0, 0),
+        Request::new(1, 1.6, 96, 80, 1, 0),
+    ];
+    let requests: Arc<[Request]> = reqs.into();
+    let sp = drive(&cfg, Arc::clone(&requests), true);
+    let ps = drive(&cfg, requests, false);
+    assert_eq!(sp.0.finished_log.len(), 2);
+    check_equivalent(&sp, &ps).unwrap();
+}
+
+#[test]
+fn decode_heavy_workload_takes_strictly_fewer_steps() {
+    // The acceptance criterion's perf direction: on a long-generation
+    // workload the span engine must do materially fewer engine steps
+    // (same busy iterations, same physics — fewer planner entries).
+    let mut cfg = proto("long_generation", 90.0);
+    cfg.arrival_rps = 1.0;
+    let requests: Arc<[Request]> = workload::realize(
+        &cfg.workload,
+        cfg.arrival_rps,
+        cfg.duration_s,
+        cfg.seed,
+    )
+    .unwrap()
+    .into();
+    let sp = drive(&cfg, Arc::clone(&requests), true);
+    let ps = drive(&cfg, requests, false);
+    check_equivalent(&sp, &ps).unwrap();
+    assert!(sp.0.counters.decode_spans > 0);
+    assert_eq!(
+        sp.0.counters.busy_iterations,
+        ps.0.counters.busy_iterations
+    );
+    assert!(
+        sp.0.counters.iterations * 2 < ps.0.counters.iterations,
+        "expected ≥2x fewer engine steps: span {} vs per-step {}",
+        sp.0.counters.iterations,
+        ps.0.counters.iterations
+    );
+}
+
+#[test]
+fn full_agft_harness_is_bitwise_across_decode_span_modes() {
+    // End to end through the tuner: identical scrapes ⇒ identical
+    // contexts ⇒ identical LinUCB decisions ⇒ identical clock locks
+    // (whose pending latency the span entry consumes) ⇒ identical
+    // energy. One toggle, zero drift.
+    let mut cfg = proto("normal", 150.0);
+    cfg.governor = GovernorKind::Agft;
+    cfg.arrival_rps = 1.2;
+    let run = |decode_span: bool| {
+        let mut c = cfg.clone();
+        c.decode_span = decode_span;
+        run_experiment(&c).unwrap()
+    };
+    let sp = run(true);
+    let ps = run(false);
+    assert_eq!(
+        sp.total_energy_j.to_bits(),
+        ps.total_energy_j.to_bits()
+    );
+    assert_eq!(sp.finished.len(), ps.finished.len());
+    assert_eq!(sp.windows.len(), ps.windows.len());
+    for (a, b) in sp.windows.iter().zip(&ps.windows) {
+        assert_eq!(a.t_s.to_bits(), b.t_s.to_bits());
+        assert_eq!(a.energy_j.to_bits(), b.energy_j.to_bits());
+        assert_eq!(a.clock_mhz, b.clock_mhz);
+        assert_eq!(a.tokens, b.tokens);
+    }
+    let (ts, tp) = (sp.tuner.unwrap(), ps.tuner.unwrap());
+    assert_eq!(ts.freq_log, tp.freq_log);
+    assert_eq!(ts.converged_round, tp.converged_round);
+}

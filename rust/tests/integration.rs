@@ -231,6 +231,81 @@ fn hlo_scorer_decisions_match_native_tuner() {
 }
 
 #[test]
+fn golden_fingerprints_lock_simulated_physics() {
+    // Lock `analysis::fingerprint` raw outputs for every workload
+    // preset so future engine refactors can't silently drift the
+    // simulated physics: the 7-dim mean feature vectors fold together
+    // the roofline timing, the power integration, the scheduler's
+    // batching behaviour and the window accounting, so *any* physics
+    // drift moves at least one locked f64.
+    //
+    // Golden workflow (this repo is authored in toolchain-less
+    // containers, so goldens cannot be pre-baked): when
+    // tests/golden/fingerprints.tsv is absent, the test writes it and
+    // passes with a notice — CI uploads `rust/tests/golden/` as the
+    // `golden-fingerprints` artifact; commit that file to arm the lock.
+    // Once present, any bit-level drift fails. Values are formatted
+    // with Rust's shortest-roundtrip float formatting, so the string
+    // comparison is exactly a bitwise one. The lock is pinned to the
+    // enforcing platform (the Linux CI runner): the values flow
+    // through `f64::powf`, which may differ by an ulp across libm
+    // implementations — see tests/golden/README.md.
+    use agft::analysis::fingerprint::run_fingerprint;
+
+    let presets = [
+        "normal",
+        "long_context",
+        "long_generation",
+        "high_concurrency",
+        "high_cache_hit",
+    ];
+    let mut lines = vec![
+        "# golden fingerprints: <preset>\t<windows>\t<x1..x7 raw means>"
+            .to_string(),
+        "# regenerate by deleting this file and re-running \
+         `cargo test golden_fingerprints`"
+            .to_string(),
+    ];
+    for name in presets {
+        let cfg = ExperimentConfig {
+            duration_s: 120.0,
+            arrival_rps: 2.0,
+            governor: GovernorKind::Default,
+            workload: WorkloadKind::Prototype(name.to_string()),
+            ..ExperimentConfig::default()
+        };
+        let fp = run_fingerprint(&cfg).unwrap();
+        let mut row = format!("{name}\t{}", fp.windows);
+        for v in fp.mean {
+            row.push_str(&format!("\t{v:e}"));
+        }
+        lines.push(row);
+    }
+    let got = lines.join("\n") + "\n";
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/golden/fingerprints.tsv");
+    match std::fs::read_to_string(&path) {
+        Ok(want) => assert_eq!(
+            got, want,
+            "simulated physics drifted from the golden fingerprints; \
+             if the change is intentional, delete {} and commit the \
+             regenerated file",
+            path.display()
+        ),
+        Err(_) => {
+            std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+            std::fs::write(&path, &got).unwrap();
+            eprintln!(
+                "golden fingerprints created at {} — commit this file \
+                 (CI preserves it as the golden-fingerprints artifact):\n\
+                 {got}",
+                path.display()
+            );
+        }
+    }
+}
+
+#[test]
 fn property_service_conservation_across_governors() {
     // Property: for any prototype × governor, every admitted request is
     // eventually served exactly once with exactly its target tokens, and
