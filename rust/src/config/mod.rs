@@ -11,8 +11,9 @@ pub mod schema;
 pub mod toml;
 
 pub use schema::{
-    EngineKind, ExperimentConfig, GovernorKind, GpuConfig, ModelSpecConfig,
-    PruningConfig, RefinementConfig, ServerConfig, TunerConfig,
+    EngineKind, ExperimentConfig, GovernorKind, GovernorsConfig, GpuConfig,
+    ModelSpecConfig, OndemandConfig, PruningConfig, RefinementConfig,
+    ServerConfig, SloAwareConfig, SwitchingBanditConfig, TunerConfig,
     WorkloadKind,
 };
 

@@ -313,6 +313,148 @@ pub enum GovernorKind {
     Locked(u32),
     /// AGFT controls the clock.
     Agft,
+    /// Classic utilization-threshold rule-based DVFS (the Linux
+    /// `ondemand` strawman): boost on high busy fraction, creep down on
+    /// low. Knobs: [`OndemandConfig`].
+    Ondemand,
+    /// GreenLLM-style SLO-aware latency-feedback controller: step
+    /// frequency up on TTFT/TPOT SLO violations, down when comfortably
+    /// inside the SLO. Knobs: [`SloAwareConfig`].
+    SloAware,
+    /// ε-greedy bandit over the frequency table with a per-switch
+    /// reward penalty (the switching-aware bandit baseline). Knobs:
+    /// [`SwitchingBanditConfig`].
+    SwitchingBandit,
+}
+
+impl GovernorKind {
+    /// Stable short label used in comparison tables, CLI lists and CSV
+    /// columns (the inverse of [`parse_governor`] up to `locked:<mhz>`).
+    pub fn label(&self) -> String {
+        match self {
+            GovernorKind::Default => "default".to_string(),
+            GovernorKind::Locked(mhz) => format!("locked:{mhz}"),
+            GovernorKind::Agft => "agft".to_string(),
+            GovernorKind::Ondemand => "ondemand".to_string(),
+            GovernorKind::SloAware => "slo".to_string(),
+            GovernorKind::SwitchingBandit => "bandit".to_string(),
+        }
+    }
+}
+
+/// Knobs of the `ondemand` utilization-threshold governor
+/// (`[governor.ondemand]` in TOML). Utilization is the window's busy
+/// fraction `1 − idle_dt/dt` — derived from the same time-integrated
+/// counters as the feature context, so it is bitwise-identical across
+/// the engine's A/B modes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OndemandConfig {
+    /// Busy fraction at or above which the clock jumps straight to
+    /// `f_max` (classic ondemand's "sampling_up" behaviour).
+    pub up_threshold: f64,
+    /// Busy fraction at or below which the clock steps down.
+    pub down_threshold: f64,
+    /// Down-step size per window (MHz).
+    pub step_down_mhz: u32,
+    /// Starting clock (0 ⇒ `f_max`).
+    pub start_mhz: u32,
+}
+
+impl Default for OndemandConfig {
+    fn default() -> Self {
+        OndemandConfig {
+            up_threshold: 0.80,
+            down_threshold: 0.30,
+            step_down_mhz: 120,
+            start_mhz: 0,
+        }
+    }
+}
+
+/// Knobs of the SLO-aware latency-feedback governor (`[governor.slo]`
+/// in TOML) — a GreenLLM-style dual loop: a fast recovery loop stepping
+/// up on SLO violations and a slow energy loop stepping down while
+/// latencies sit comfortably inside the SLO.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SloAwareConfig {
+    /// TTFT SLO target (s); window means above it are violations.
+    pub ttft_slo_s: f64,
+    /// TPOT SLO target (s).
+    pub tpot_slo_s: f64,
+    /// Step-down is allowed only while both window latencies are below
+    /// `headroom × SLO` (hysteresis band).
+    pub headroom: f64,
+    /// Fast-loop up-step on violation (MHz).
+    pub step_up_mhz: u32,
+    /// Slow-loop down-step inside the headroom band (MHz).
+    pub step_down_mhz: u32,
+    /// Consecutive violation-free windows before the governor reports
+    /// itself as exploiting (steady state).
+    pub stable_windows: u64,
+    /// Starting clock (0 ⇒ `f_max`).
+    pub start_mhz: u32,
+}
+
+impl Default for SloAwareConfig {
+    fn default() -> Self {
+        SloAwareConfig {
+            ttft_slo_s: 0.15,
+            tpot_slo_s: 0.02,
+            headroom: 0.70,
+            step_up_mhz: 150,
+            step_down_mhz: 30,
+            stable_windows: 8,
+            start_mhz: 0,
+        }
+    }
+}
+
+/// Knobs of the switching-aware ε-greedy bandit governor
+/// (`[governor.bandit]` in TOML): a context-free bandit over a coarse
+/// frequency grid whose reward is the window's normalised −EDP minus a
+/// per-switch cost, so the greedy policy is biased against clock
+/// thrashing (per the switching-aware bandits baseline).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SwitchingBanditConfig {
+    /// Arm-grid step over the frequency table (MHz).
+    pub grid_step_mhz: u32,
+    /// Initial exploration probability; decays as
+    /// `ε_t = ε0 / (1 + t / epsilon_tau)`.
+    pub epsilon0: f64,
+    pub epsilon_tau: f64,
+    /// Reward penalty charged whenever the chosen arm differs from the
+    /// current clock (both when crediting and when scoring greedily).
+    pub switch_cost: f64,
+    /// Busy windows used to auto-calibrate the EDP normaliser before
+    /// any reward is credited.
+    pub edp_ref_windows: u64,
+    /// ε below which the governor reports itself as exploiting.
+    pub exploit_epsilon: f64,
+    /// Starting clock (0 ⇒ `f_max`).
+    pub start_mhz: u32,
+}
+
+impl Default for SwitchingBanditConfig {
+    fn default() -> Self {
+        SwitchingBanditConfig {
+            grid_step_mhz: 60,
+            epsilon0: 0.30,
+            epsilon_tau: 80.0,
+            switch_cost: 0.05,
+            edp_ref_windows: 8,
+            exploit_epsilon: 0.05,
+            start_mhz: 0,
+        }
+    }
+}
+
+/// Per-governor parameter sections (`[governor.<name>]` tables). The
+/// AGFT tuner keeps its historical top-level `[tuner]` section.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct GovernorsConfig {
+    pub ondemand: OndemandConfig,
+    pub slo: SloAwareConfig,
+    pub bandit: SwitchingBanditConfig,
 }
 
 /// Token-computation engine for the serving loop.
@@ -348,6 +490,9 @@ pub struct ExperimentConfig {
     pub tuner: TunerConfig,
     pub workload: WorkloadKind,
     pub governor: GovernorKind,
+    /// Per-governor parameter sections (inert unless the matching
+    /// governor is selected, so grid legs can share one config).
+    pub governors: GovernorsConfig,
     pub engine: EngineKind,
     /// Mean request arrival rate (req/s) before workload multipliers.
     pub arrival_rps: f64,
@@ -377,6 +522,7 @@ impl Default for ExperimentConfig {
             tuner: TunerConfig::default(),
             workload: WorkloadKind::Prototype("normal".to_string()),
             governor: GovernorKind::Agft,
+            governors: GovernorsConfig::default(),
             engine: EngineKind::Analytical,
             arrival_rps: 2.0,
             event_driven: true,
@@ -527,6 +673,100 @@ impl RefinementConfig {
     }
 }
 
+impl OndemandConfig {
+    pub fn from_toml(v: &Value) -> Result<OndemandConfig, String> {
+        let mut c = OndemandConfig::default();
+        override_field!(v, "up_threshold", c.up_threshold, as_f64);
+        override_field!(v, "down_threshold", c.down_threshold, as_f64);
+        override_field!(v, "step_down_mhz", c.step_down_mhz, as_u32);
+        override_field!(v, "start_mhz", c.start_mhz, as_u32);
+        if !(0.0..=1.0).contains(&c.up_threshold)
+            || !(0.0..=1.0).contains(&c.down_threshold)
+        {
+            return Err("ondemand thresholds outside [0,1]".to_string());
+        }
+        if c.down_threshold > c.up_threshold {
+            return Err(
+                "ondemand down_threshold > up_threshold".to_string()
+            );
+        }
+        if c.step_down_mhz == 0 {
+            return Err("ondemand step_down_mhz == 0".to_string());
+        }
+        Ok(c)
+    }
+}
+
+impl SloAwareConfig {
+    pub fn from_toml(v: &Value) -> Result<SloAwareConfig, String> {
+        let mut c = SloAwareConfig::default();
+        override_field!(v, "ttft_slo_s", c.ttft_slo_s, as_f64);
+        override_field!(v, "tpot_slo_s", c.tpot_slo_s, as_f64);
+        override_field!(v, "headroom", c.headroom, as_f64);
+        override_field!(v, "step_up_mhz", c.step_up_mhz, as_u32);
+        override_field!(v, "step_down_mhz", c.step_down_mhz, as_u32);
+        if let Some(x) = v.get("stable_windows") {
+            let n = x.as_i64().ok_or("bad stable_windows")?;
+            c.stable_windows = u64::try_from(n)
+                .map_err(|_| "slo stable_windows must be >= 0")?;
+        }
+        override_field!(v, "start_mhz", c.start_mhz, as_u32);
+        if c.ttft_slo_s <= 0.0 || c.tpot_slo_s <= 0.0 {
+            return Err("slo targets must be positive".to_string());
+        }
+        if !(0.0..=1.0).contains(&c.headroom) {
+            return Err("slo headroom outside [0,1]".to_string());
+        }
+        if c.step_up_mhz == 0 || c.step_down_mhz == 0 {
+            return Err("slo step sizes must be positive".to_string());
+        }
+        Ok(c)
+    }
+}
+
+impl SwitchingBanditConfig {
+    pub fn from_toml(v: &Value) -> Result<SwitchingBanditConfig, String> {
+        let mut c = SwitchingBanditConfig::default();
+        override_field!(v, "grid_step_mhz", c.grid_step_mhz, as_u32);
+        override_field!(v, "epsilon0", c.epsilon0, as_f64);
+        override_field!(v, "epsilon_tau", c.epsilon_tau, as_f64);
+        override_field!(v, "switch_cost", c.switch_cost, as_f64);
+        if let Some(x) = v.get("edp_ref_windows") {
+            let n = x.as_i64().ok_or("bad edp_ref_windows")?;
+            c.edp_ref_windows = u64::try_from(n)
+                .map_err(|_| "bandit edp_ref_windows must be >= 0")?;
+        }
+        override_field!(v, "exploit_epsilon", c.exploit_epsilon, as_f64);
+        override_field!(v, "start_mhz", c.start_mhz, as_u32);
+        if !(0.0..=1.0).contains(&c.epsilon0) {
+            return Err("bandit epsilon0 outside [0,1]".to_string());
+        }
+        if c.epsilon_tau <= 0.0 {
+            return Err("bandit epsilon_tau must be positive".to_string());
+        }
+        if c.switch_cost < 0.0 {
+            return Err("bandit switch_cost must be >= 0".to_string());
+        }
+        Ok(c)
+    }
+}
+
+impl GovernorsConfig {
+    pub fn from_toml(v: &Value) -> Result<GovernorsConfig, String> {
+        let mut c = GovernorsConfig::default();
+        if let Some(o) = v.get("ondemand") {
+            c.ondemand = OndemandConfig::from_toml(o)?;
+        }
+        if let Some(s) = v.get("slo") {
+            c.slo = SloAwareConfig::from_toml(s)?;
+        }
+        if let Some(b) = v.get("bandit") {
+            c.bandit = SwitchingBanditConfig::from_toml(b)?;
+        }
+        Ok(c)
+    }
+}
+
 impl TunerConfig {
     pub fn from_toml(v: &Value) -> Result<TunerConfig, String> {
         let mut c = TunerConfig::default();
@@ -607,6 +847,9 @@ impl ExperimentConfig {
         if let Some(t) = doc.get("tuner") {
             c.tuner = TunerConfig::from_toml(t)?;
         }
+        if let Some(g) = doc.get("governor") {
+            c.governors = GovernorsConfig::from_toml(g)?;
+        }
         Ok(c)
     }
 }
@@ -629,11 +872,15 @@ pub fn parse_workload(name: &str) -> Result<WorkloadKind, String> {
     }
 }
 
-/// Parse a governor name: `default`, `agft`, or `locked:<mhz>`.
+/// Parse a governor name: `default`, `agft`, `ondemand`, `slo`,
+/// `bandit`, or `locked:<mhz>`.
 pub fn parse_governor(name: &str) -> Result<GovernorKind, String> {
     match name {
         "default" => Ok(GovernorKind::Default),
         "agft" => Ok(GovernorKind::Agft),
+        "ondemand" => Ok(GovernorKind::Ondemand),
+        "slo" | "slo-aware" => Ok(GovernorKind::SloAware),
+        "bandit" | "switching-bandit" => Ok(GovernorKind::SwitchingBandit),
         other => {
             if let Some(mhz) = other.strip_prefix("locked:") {
                 let mhz = mhz
@@ -645,6 +892,28 @@ pub fn parse_governor(name: &str) -> Result<GovernorKind, String> {
             }
         }
     }
+}
+
+/// Parse a comma-separated governor list (`agft,ondemand,slo,bandit,
+/// default`), rejecting empties and duplicates — the `--governors`
+/// grid axis.
+pub fn parse_governor_list(list: &str) -> Result<Vec<GovernorKind>, String> {
+    let mut out = Vec::new();
+    for name in list.split(',') {
+        let name = name.trim();
+        if name.is_empty() {
+            return Err(format!("empty governor name in {list:?}"));
+        }
+        let kind = parse_governor(name)?;
+        if out.contains(&kind) {
+            return Err(format!("duplicate governor {name:?} in list"));
+        }
+        out.push(kind);
+    }
+    if out.is_empty() {
+        return Err("empty governor list".to_string());
+    }
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -723,6 +992,101 @@ step_mhz = 60
                    GovernorKind::Locked(1395));
         assert!(parse_governor("locked:abc").is_err());
         assert_eq!(parse_governor("default").unwrap(), GovernorKind::Default);
+        assert_eq!(parse_governor("ondemand").unwrap(),
+                   GovernorKind::Ondemand);
+        assert_eq!(parse_governor("slo").unwrap(), GovernorKind::SloAware);
+        assert_eq!(parse_governor("slo-aware").unwrap(),
+                   GovernorKind::SloAware);
+        assert_eq!(parse_governor("bandit").unwrap(),
+                   GovernorKind::SwitchingBandit);
+        assert_eq!(parse_governor("switching-bandit").unwrap(),
+                   GovernorKind::SwitchingBandit);
+    }
+
+    #[test]
+    fn governor_labels_roundtrip_through_parse() {
+        for kind in [
+            GovernorKind::Default,
+            GovernorKind::Locked(1230),
+            GovernorKind::Agft,
+            GovernorKind::Ondemand,
+            GovernorKind::SloAware,
+            GovernorKind::SwitchingBandit,
+        ] {
+            assert_eq!(parse_governor(&kind.label()).unwrap(), kind);
+        }
+    }
+
+    #[test]
+    fn governor_list_parses_and_rejects_duplicates() {
+        let kinds =
+            parse_governor_list("agft,ondemand,slo,bandit,default").unwrap();
+        assert_eq!(kinds.len(), 5);
+        assert_eq!(kinds[0], GovernorKind::Agft);
+        assert_eq!(kinds[4], GovernorKind::Default);
+        assert!(parse_governor_list("agft,agft").is_err());
+        assert!(parse_governor_list("agft,,default").is_err());
+        assert!(parse_governor_list("").is_err());
+        assert!(parse_governor_list("bogus").is_err());
+        // Spaces around names are tolerated (shell-quoted lists).
+        assert_eq!(
+            parse_governor_list("agft, default").unwrap().len(),
+            2
+        );
+    }
+
+    #[test]
+    fn governor_toml_sections_parse() {
+        let doc = toml::parse(
+            r#"
+[experiment]
+governor = "ondemand"
+
+[governor.ondemand]
+up_threshold = 0.9
+step_down_mhz = 60
+
+[governor.slo]
+ttft_slo_s = 0.2
+step_up_mhz = 300
+
+[governor.bandit]
+epsilon0 = 0.5
+switch_cost = 0.1
+"#,
+        )
+        .unwrap();
+        let c = ExperimentConfig::from_toml(&doc).unwrap();
+        assert_eq!(c.governor, GovernorKind::Ondemand);
+        assert_eq!(c.governors.ondemand.up_threshold, 0.9);
+        assert_eq!(c.governors.ondemand.step_down_mhz, 60);
+        // untouched knobs keep their defaults
+        assert_eq!(c.governors.ondemand.down_threshold, 0.30);
+        assert_eq!(c.governors.slo.ttft_slo_s, 0.2);
+        assert_eq!(c.governors.slo.step_up_mhz, 300);
+        assert_eq!(c.governors.slo.tpot_slo_s, 0.02);
+        assert_eq!(c.governors.bandit.epsilon0, 0.5);
+        assert_eq!(c.governors.bandit.switch_cost, 0.1);
+        assert_eq!(c.governors.bandit.grid_step_mhz, 60);
+    }
+
+    #[test]
+    fn governor_toml_sections_validate() {
+        let bad = toml::parse("[governor.ondemand]\nup_threshold = 1.5")
+            .unwrap();
+        assert!(ExperimentConfig::from_toml(&bad).is_err());
+        let bad = toml::parse("[governor.bandit]\nepsilon_tau = 0.0")
+            .unwrap();
+        assert!(ExperimentConfig::from_toml(&bad).is_err());
+        let bad = toml::parse("[governor.slo]\nheadroom = 2.0").unwrap();
+        assert!(ExperimentConfig::from_toml(&bad).is_err());
+        // Negative counts must be rejected, not wrapped to huge u64s.
+        let bad =
+            toml::parse("[governor.bandit]\nedp_ref_windows = -1").unwrap();
+        assert!(ExperimentConfig::from_toml(&bad).is_err());
+        let bad =
+            toml::parse("[governor.slo]\nstable_windows = -1").unwrap();
+        assert!(ExperimentConfig::from_toml(&bad).is_err());
     }
 
     #[test]

@@ -1,0 +1,194 @@
+//! [`GovernorDriver`] — the one window loop every clock policy runs
+//! behind.
+//!
+//! Extracted from the hand-rolled loop `run_shared` used to carry: the
+//! driver owns the 0.8 s window cadence (scrape → window bookkeeping →
+//! governor observation → clock actuation) while the policy itself
+//! lives behind [`Governor`]. For `GovernorKind::Agft` the composition
+//! is **bitwise-identical** to the pre-refactor loop — window
+//! timelines, features, energy totals and tuner telemetry — enforced
+//! by `tests/governor_semantics.rs` against the frozen
+//! [`super::harness::run_shared_legacy`] reference and by the
+//! pre-existing `perf_semantics` / `decode_span_semantics` /
+//! golden-fingerprint suites, which now run through this driver.
+//!
+//! One deliberate behavioural fix rides along:
+//! [`WindowRecord::exploiting`] is sampled from
+//! [`Governor::exploiting`] *every* window instead of being latched
+//! from the last emitted decision, so a policy whose phase moves on a
+//! decision-free window can no longer stamp the previous window's
+//! phase onto the current record. For the AGFT tuner the two agree on
+//! every window (its phase only moves inside decision-emitting steps),
+//! which is exactly why the fix preserves bitwise identity.
+
+use std::sync::Arc;
+
+use crate::config::ExperimentConfig;
+use crate::server::{Engine, Request};
+use crate::tuner::governors::{self, Governor};
+use crate::tuner::tuner::WindowObservation;
+
+use super::harness::{window_latency_means, RunResult, WindowRecord};
+
+/// The window-cadence experiment driver.
+pub struct GovernorDriver;
+
+impl GovernorDriver {
+    /// Run `cfg` to completion over a shared request stream with the
+    /// governor [`governors::build`] selects for it.
+    pub fn run(
+        cfg: &ExperimentConfig,
+        requests: Arc<[Request]>,
+    ) -> Result<RunResult, String> {
+        let engine = Engine::with_shared(cfg, requests);
+        let mut governor = governors::build(cfg);
+        Ok(Self::drive(cfg, engine, governor.as_mut()))
+    }
+
+    /// Drive an explicit engine + governor pair (the seam unit tests
+    /// and custom policies hook into).
+    pub fn drive(
+        cfg: &ExperimentConfig,
+        mut engine: Engine,
+        governor: &mut dyn Governor,
+    ) -> RunResult {
+        if let Some(mhz) = governor.initial_clock_mhz() {
+            engine.gpu.set_clock(mhz);
+        }
+
+        let window_s = cfg.tuner.window_s;
+        let mut windows = Vec::new();
+        let mut t_next = window_s;
+        let mut last_energy = 0.0;
+        let mut last_tokens = 0u64;
+        let mut last_finished_idx = 0usize;
+
+        loop {
+            let clock_before = engine.gpu.effective_mhz(true);
+            let alive = engine.run_until(t_next);
+            let snap = engine.snapshot();
+            let (ttft, tpot, e2e) =
+                window_latency_means(&engine.finished_log, last_finished_idx);
+            last_finished_idx = engine.finished_log.len();
+
+            let energy_j = snap.energy_j_total - last_energy;
+            last_energy = snap.energy_j_total;
+            let tokens_total =
+                snap.prefill_tokens_total + snap.decode_tokens_total;
+            let tokens = tokens_total - last_tokens;
+            last_tokens = tokens_total;
+            let edp = match e2e {
+                Some(d) if tokens > 0 => energy_j * d,
+                _ => 0.0,
+            };
+
+            let obs = WindowObservation {
+                snapshot: snap,
+                ttft_mean: ttft,
+                tpot_mean: tpot,
+                e2e_mean: e2e,
+            };
+            let mut reward = None;
+            if let Some(decision) = governor.observe_window(&obs) {
+                engine.gpu.set_clock(decision.freq_mhz);
+                reward = decision.reward;
+            }
+
+            windows.push(WindowRecord {
+                t_s: snap.time_s,
+                clock_mhz: clock_before,
+                energy_j,
+                tokens,
+                edp,
+                ttft_mean: ttft,
+                tpot_mean: tpot,
+                e2e_mean: e2e,
+                reward,
+                exploiting: governor.exploiting(),
+                requests_waiting: snap.requests_waiting,
+                requests_running: snap.requests_running,
+                kv_usage: snap.kv_usage,
+                power_w: snap.power_w,
+            });
+
+            if !alive || snap.time_s >= cfg.duration_s {
+                break;
+            }
+            t_next += window_s;
+        }
+
+        RunResult {
+            total_energy_j: engine.gpu.energy_j(),
+            duration_s: engine.clock.now(),
+            clock_changes: engine.gpu.clock_changes(),
+            windows,
+            finished: engine.finished_log,
+            tuner: governor.telemetry(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::WorkloadKind;
+    use crate::tuner::governors::ClockDecision;
+    use crate::workload;
+
+    /// A governor whose phase flips while it emits *no* decisions — the
+    /// stale-`exploiting` regression case: the legacy loop would have
+    /// recorded the phase of the last decision-carrying window forever.
+    struct PhaseOnly {
+        rounds: u64,
+        flip_at: u64,
+    }
+
+    impl Governor for PhaseOnly {
+        fn name(&self) -> &'static str {
+            "phase-only"
+        }
+
+        fn observe_window(
+            &mut self,
+            _obs: &WindowObservation,
+        ) -> Option<ClockDecision> {
+            self.rounds += 1;
+            None
+        }
+
+        fn exploiting(&self) -> bool {
+            self.rounds >= self.flip_at
+        }
+    }
+
+    #[test]
+    fn exploiting_tracks_the_governor_not_the_last_decision() {
+        let cfg = ExperimentConfig {
+            duration_s: 20.0,
+            arrival_rps: 2.0,
+            workload: WorkloadKind::Prototype("normal".to_string()),
+            ..ExperimentConfig::default()
+        };
+        let requests: Arc<[Request]> = workload::realize(
+            &cfg.workload,
+            cfg.arrival_rps,
+            cfg.duration_s,
+            cfg.seed,
+        )
+        .unwrap()
+        .into();
+        let engine = Engine::with_shared(&cfg, requests);
+        let mut gov = PhaseOnly {
+            rounds: 0,
+            flip_at: 5,
+        };
+        let r = GovernorDriver::drive(&cfg, engine, &mut gov);
+        assert!(r.windows.len() > 8, "windows = {}", r.windows.len());
+        // No decision was ever emitted, yet the record flips exactly
+        // when the governor's live phase does.
+        assert!(r.windows[..4].iter().all(|w| !w.exploiting));
+        assert!(r.windows[5..].iter().all(|w| w.exploiting));
+        assert!(r.windows.iter().all(|w| w.reward.is_none()));
+        assert!(r.tuner.is_none());
+    }
+}

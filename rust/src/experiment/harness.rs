@@ -1,5 +1,12 @@
-//! Drive a full experiment: workload → engine → (optionally) AGFT tuner,
+//! Drive a full experiment: workload → engine → governor policy,
 //! sampled at the paper's 0.8 s window cadence.
+//!
+//! The window loop itself lives in
+//! [`super::driver::GovernorDriver`]; [`run_shared`] wires it to the
+//! governor [`crate::tuner::governors::build`] selects. The
+//! pre-refactor hand-rolled loop survives verbatim as
+//! [`run_shared_legacy`] — the frozen A/B reference
+//! `tests/governor_semantics.rs` holds the driver bitwise against.
 //!
 //! Request streams are shared by `Arc` handle ([`run_shared`]) so
 //! grid-shaped callers (sweeps, pairs, ablations) replay the identical
@@ -14,6 +21,9 @@ use crate::tuner::tuner::{TunerPhase, WindowObservation};
 use crate::tuner::AgftTuner;
 use crate::workload;
 
+pub use crate::tuner::governors::TunerTelemetry;
+
+use super::driver::GovernorDriver;
 use super::executor::Executor;
 
 /// One sampling window's record (the row type behind Fig 13 and the
@@ -37,27 +47,16 @@ pub struct WindowRecord {
     pub tpot_mean: Option<f64>,
     /// Mean E2E over requests finishing in this window.
     pub e2e_mean: Option<f64>,
-    /// Reward credited this window (AGFT runs only).
+    /// Reward credited this window (learning governors only).
     pub reward: Option<f64>,
-    /// True once the tuner is in exploitation.
+    /// The governor's live phase at the window end (true once it
+    /// reports steady-state exploitation) — sampled every window, not
+    /// latched from the last decision.
     pub exploiting: bool,
     pub requests_waiting: usize,
     pub requests_running: usize,
     pub kv_usage: f64,
     pub power_w: f64,
-}
-
-/// Tuner telemetry surfaced after an AGFT run.
-#[derive(Debug, Clone, Default)]
-pub struct TunerTelemetry {
-    pub reward_log: Vec<(u64, f64)>,
-    pub freq_log: Vec<(u64, u32)>,
-    pub converged_round: Option<u64>,
-    pub pruned_extreme: usize,
-    pub pruned_historical: usize,
-    pub pruned_cascade: usize,
-    pub refinements: usize,
-    pub ph_alarms: u64,
 }
 
 /// Full result of one run.
@@ -114,7 +113,10 @@ fn mean(xs: impl Iterator<Item = f64>) -> f64 {
     }
 }
 
-fn window_latency_means(
+/// Mean TTFT/TPOT/E2E over the requests finishing since `from_idx`
+/// (shared by the driver and the legacy reference loop — one
+/// definition, zero drift).
+pub(crate) fn window_latency_means(
     finished: &[FinishedRecord],
     from_idx: usize,
 ) -> (Option<f64>, Option<f64>, Option<f64>) {
@@ -152,10 +154,43 @@ pub fn run_with_requests(
 
 /// Run over a *shared* pre-materialised request stream — the zero-clone
 /// path every parallel grid caller (sweeps, pairs, ablations) uses.
+/// The window loop is [`GovernorDriver`]; the policy is whatever
+/// [`crate::tuner::governors::build`] maps `cfg.governor` to.
 pub fn run_shared(
     cfg: &ExperimentConfig,
     requests: Arc<[Request]>,
 ) -> Result<RunResult, String> {
+    GovernorDriver::run(cfg, requests)
+}
+
+/// The **frozen pre-refactor window loop**, kept verbatim as the A/B
+/// reference for the governor-layer extraction: for the three
+/// pre-existing [`GovernorKind`]s it must stay bitwise-identical to
+/// [`run_shared`] on window timelines, finished logs, energy totals
+/// and tuner telemetry (`tests/governor_semantics.rs` enforces this
+/// over a randomized workload × frequency × seed matrix). It predates
+/// the pluggable governor layer, so the baseline-matrix kinds are
+/// rejected rather than silently run as no-ops.
+///
+/// Note the one divergence fixed in the driver, invisible to the AGFT
+/// tuner: this loop latches [`WindowRecord::exploiting`] from the last
+/// emitted decision, so a policy whose phase moves on a decision-free
+/// window records the *previous* window's phase.
+pub fn run_shared_legacy(
+    cfg: &ExperimentConfig,
+    requests: Arc<[Request]>,
+) -> Result<RunResult, String> {
+    match cfg.governor {
+        GovernorKind::Agft
+        | GovernorKind::Default
+        | GovernorKind::Locked(_) => {}
+        other => {
+            return Err(format!(
+                "run_shared_legacy predates the governor layer and only \
+                 supports agft/default/locked, not {other:?}"
+            ))
+        }
+    }
     let mut engine = Engine::with_shared(cfg, requests);
     let mut tuner = match cfg.governor {
         GovernorKind::Agft => {
@@ -356,6 +391,74 @@ mod tests {
         let r = run_experiment(&cfg).unwrap();
         assert!(r.tuner.is_none());
         assert!(r.windows.iter().all(|w| w.clock_mhz == 1230));
+    }
+
+    #[test]
+    fn baseline_governors_run_end_to_end() {
+        for kind in [
+            GovernorKind::Ondemand,
+            GovernorKind::SloAware,
+            GovernorKind::SwitchingBandit,
+        ] {
+            let cfg = ExperimentConfig {
+                governor: kind,
+                ..small_cfg()
+            };
+            let r = run_experiment(&cfg).unwrap();
+            assert!(!r.finished.is_empty(), "{kind:?}: nothing finished");
+            assert!(r.total_energy_j > 0.0);
+            let t = r.tuner.expect("baseline governor telemetry");
+            assert!(!t.freq_log.is_empty(), "{kind:?}: never decided");
+            let table = FreqTable::from_config(&cfg.gpu);
+            for &(round, f) in &t.freq_log {
+                assert!(
+                    table.contains(f),
+                    "{kind:?} round {round}: off-grid clock {f}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn legacy_reference_matches_driver_on_agft() {
+        // The thorough randomized matrix lives in
+        // tests/governor_semantics.rs; this is the in-crate smoke.
+        let cfg = small_cfg();
+        let requests: Arc<[Request]> = workload::realize(
+            &cfg.workload,
+            cfg.arrival_rps,
+            cfg.duration_s,
+            cfg.seed,
+        )
+        .unwrap()
+        .into();
+        let new = run_shared(&cfg, Arc::clone(&requests)).unwrap();
+        let old = run_shared_legacy(&cfg, requests).unwrap();
+        assert_eq!(
+            new.total_energy_j.to_bits(),
+            old.total_energy_j.to_bits()
+        );
+        assert_eq!(new.windows.len(), old.windows.len());
+        assert_eq!(new.clock_changes, old.clock_changes);
+        let (tn, to) = (new.tuner.unwrap(), old.tuner.unwrap());
+        assert_eq!(tn.freq_log, to.freq_log);
+    }
+
+    #[test]
+    fn legacy_reference_rejects_baseline_matrix_governors() {
+        let cfg = ExperimentConfig {
+            governor: GovernorKind::Ondemand,
+            ..small_cfg()
+        };
+        let requests: Arc<[Request]> = workload::realize(
+            &cfg.workload,
+            cfg.arrival_rps,
+            cfg.duration_s,
+            cfg.seed,
+        )
+        .unwrap()
+        .into();
+        assert!(run_shared_legacy(&cfg, requests).is_err());
     }
 
     #[test]

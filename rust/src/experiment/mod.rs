@@ -4,6 +4,8 @@
 //! * [`harness`] — run one [`crate::config::ExperimentConfig`] to a
 //!   window-level log ([`harness::RunResult`]); run AGFT-vs-baseline
 //!   pairs over the identical request stream.
+//! * [`driver`] — the [`driver::GovernorDriver`] window loop every
+//!   pluggable clock policy ([`crate::tuner::governors`]) runs behind.
 //! * [`executor`] — parallel experiment executor: independent jobs on a
 //!   scoped thread pool with deterministic, input-ordered results; every
 //!   grid-shaped caller (sweeps, pairs, ablations) routes through it.
@@ -15,20 +17,23 @@
 //! * [`report`] — plain-text table rendering + CSV emission shared by
 //!   all bench binaries.
 
+pub mod driver;
 pub mod executor;
 pub mod harness;
 pub mod phases;
 pub mod report;
 pub mod sweep;
 
+pub use driver::GovernorDriver;
 pub use executor::Executor;
 pub use harness::{
-    run_experiment, run_pair, run_pair_with, run_shared, RunResult,
-    WindowRecord,
+    run_experiment, run_pair, run_pair_with, run_shared,
+    run_shared_legacy, RunResult, WindowRecord,
 };
 pub use phases::{
-    compare_seed_grid, phase_metrics, run_compare_seeded, run_grid,
-    run_grid_with, split_at, stable_windows, PhaseComparison,
+    compare_seed_grid, governor_seed_grid, phase_metrics,
+    run_compare_seeded, run_governors_seeded, run_grid, run_grid_with,
+    split_at, stable_windows, PhaseComparison,
 };
 pub use sweep::{
     edp_sweep, edp_sweep_seeded, edp_sweep_with, SeededSweepPoint,

@@ -7,7 +7,7 @@
 
 use std::sync::Arc;
 
-use crate::config::ExperimentConfig;
+use crate::config::{ExperimentConfig, GovernorKind};
 use crate::server::Request;
 use crate::util::stats::pct_diff;
 use crate::util::RunningStats;
@@ -227,10 +227,13 @@ pub fn seed_grid(
     out
 }
 
-/// Group [`seed_grid`] results back by base label (first-appearance
-/// order) and aggregate each variant's stable-phase metrics across its
-/// seed replicas.
-pub fn summarize_seeds(results: &[(String, RunResult)]) -> Vec<SeedSummary> {
+/// Group seed-replicated results back by base label (first-appearance
+/// order), stripping the `#s<k>` suffix [`seed_grid`] appends. Shared
+/// by the stable-phase summary and the run-totals summary so the two
+/// tables can never group differently.
+fn group_seed_replicas(
+    results: &[(String, RunResult)],
+) -> Vec<(String, Vec<&RunResult>)> {
     let mut groups: Vec<(String, Vec<&RunResult>)> = Vec::new();
     for (label, run) in results {
         let base = match label.rfind("#s") {
@@ -245,6 +248,13 @@ pub fn summarize_seeds(results: &[(String, RunResult)]) -> Vec<SeedSummary> {
         }
     }
     groups
+}
+
+/// Group [`seed_grid`] results back by base label (first-appearance
+/// order) and aggregate each variant's stable-phase metrics across its
+/// seed replicas.
+pub fn summarize_seeds(results: &[(String, RunResult)]) -> Vec<SeedSummary> {
+    group_seed_replicas(results)
         .into_iter()
         .map(|(label, runs)| {
             let ms: Vec<PhaseMetrics> = runs
@@ -266,46 +276,67 @@ pub fn summarize_seeds(results: &[(String, RunResult)]) -> Vec<SeedSummary> {
         .collect()
 }
 
-/// The AGFT-vs-default comparison grid, seed-replicated: the two legs
-/// of `agft compare --seeds N` expanded through [`seed_grid`] so the
-/// whole governor × seed matrix fans out on the experiment executor at
-/// once and [`summarize_seeds`] can fold it back into mean ± 95 % CI
-/// columns (the across-seed row Tables 2–3 imply).
+/// One comparison leg per governor kind over an otherwise identical
+/// config, labelled by [`GovernorKind::label`] — the generalized
+/// baseline-matrix axis behind `agft compare --governors ...`.
+pub fn governor_grid(
+    base: &ExperimentConfig,
+    kinds: &[GovernorKind],
+) -> Vec<(String, ExperimentConfig)> {
+    kinds
+        .iter()
+        .map(|&kind| {
+            (
+                kind.label(),
+                ExperimentConfig {
+                    governor: kind,
+                    ..base.clone()
+                },
+            )
+        })
+        .collect()
+}
+
+/// [`governor_grid`] expanded through [`seed_grid`]: the whole
+/// governor × seed matrix fans out on the experiment executor at once
+/// and [`summarize_seeds`] folds it back into mean ± 95 % CI columns
+/// (the across-seed row Tables 2–3 imply, for an arbitrary policy set).
+pub fn governor_seed_grid(
+    base: &ExperimentConfig,
+    kinds: &[GovernorKind],
+    seeds: u64,
+) -> Vec<(String, ExperimentConfig)> {
+    seed_grid(&governor_grid(base, kinds), seeds)
+}
+
+/// The historical AGFT-vs-default pair, as a two-governor
+/// [`governor_seed_grid`].
 pub fn compare_seed_grid(
     base: &ExperimentConfig,
     seeds: u64,
 ) -> Vec<(String, ExperimentConfig)> {
-    let grid = vec![
-        (
-            "agft".to_string(),
-            ExperimentConfig {
-                governor: crate::config::GovernorKind::Agft,
-                ..base.clone()
-            },
-        ),
-        (
-            "default".to_string(),
-            ExperimentConfig {
-                governor: crate::config::GovernorKind::Default,
-                ..base.clone()
-            },
-        ),
-    ];
-    seed_grid(&grid, seeds)
+    governor_seed_grid(
+        base,
+        &[GovernorKind::Agft, GovernorKind::Default],
+        seeds,
+    )
 }
 
-/// Run the [`compare_seed_grid`] with per-seed stream sharing: each
+/// Run a [`governor_seed_grid`] with per-seed stream sharing: each
 /// seed's workload is realized exactly once and shared by `Arc` handle
-/// across both governor legs. (`run_grid_with`'s same-stream fast path
-/// only covers grids where *every* leg draws the identical seed, so
-/// routing the mixed-seed comparison grid through it would realize
-/// each stream twice — and re-parse trace-backed workloads twice.)
-pub fn run_compare_seeded(
+/// across *every* governor leg — the "identical shared request stream"
+/// contract of the baseline matrix. (`run_grid_with`'s same-stream
+/// fast path only covers grids where every leg draws the identical
+/// seed, so routing the mixed-seed matrix through it would realize
+/// each stream once per governor — and re-parse trace-backed workloads
+/// as many times.)
+pub fn run_governors_seeded(
     base: &ExperimentConfig,
+    kinds: &[GovernorKind],
     seeds: u64,
     exec: &Executor,
 ) -> Result<Vec<(String, RunResult)>, String> {
-    let grid = compare_seed_grid(base, seeds);
+    let grid = governor_seed_grid(base, kinds, seeds);
     let streams: Vec<Arc<[Request]>> = (0..seeds.max(1))
         .map(|s| {
             workload::realize(
@@ -322,6 +353,64 @@ pub fn run_compare_seeded(
         run_shared(cfg, Arc::clone(&streams[s]))
     })?;
     Ok(grid.into_iter().map(|(label, _)| label).zip(results).collect())
+}
+
+/// [`run_governors_seeded`] for the historical AGFT-vs-default pair.
+pub fn run_compare_seeded(
+    base: &ExperimentConfig,
+    seeds: u64,
+    exec: &Executor,
+) -> Result<Vec<(String, RunResult)>, String> {
+    run_governors_seeded(
+        base,
+        &[GovernorKind::Agft, GovernorKind::Default],
+        seeds,
+        exec,
+    )
+}
+
+/// Whole-run totals for one governor leg, aggregated across its seed
+/// replicas — the run-level companion of [`SeedSummary`]'s stable-phase
+/// window means (total EDP is the paper's `E × Σ e2e` sweep
+/// definition, and clock switches expose a policy's thrashing).
+#[derive(Debug, Clone)]
+pub struct RunTotals {
+    pub label: String,
+    pub seeds: u64,
+    pub total_energy_j: MeanCi,
+    pub total_edp: MeanCi,
+    pub mean_ttft: MeanCi,
+    pub mean_tpot: MeanCi,
+    pub clock_changes: MeanCi,
+}
+
+/// Aggregate run-level totals per base label (the second table of the
+/// governor-matrix report).
+pub fn summarize_run_totals(
+    results: &[(String, RunResult)],
+) -> Vec<RunTotals> {
+    group_seed_replicas(results)
+        .into_iter()
+        .map(|(label, runs)| RunTotals {
+            label,
+            seeds: runs.len() as u64,
+            total_energy_j: MeanCi::from_samples(
+                runs.iter().map(|r| r.total_energy_j),
+            ),
+            total_edp: MeanCi::from_samples(
+                runs.iter().map(|r| r.total_edp()),
+            ),
+            mean_ttft: MeanCi::from_samples(
+                runs.iter().map(|r| r.mean_ttft()),
+            ),
+            mean_tpot: MeanCi::from_samples(
+                runs.iter().map(|r| r.mean_tpot()),
+            ),
+            clock_changes: MeanCi::from_samples(
+                runs.iter().map(|r| r.clock_changes as f64),
+            ),
+        })
+        .collect()
 }
 
 /// The paper's "No-grain" ablation variant (Table 4): coarse-only
@@ -514,6 +603,66 @@ mod tests {
             );
             assert_eq!(ra.finished.len(), rb.finished.len());
         }
+    }
+
+    #[test]
+    fn governor_grid_labels_match_kinds() {
+        let base = ExperimentConfig::default();
+        let kinds = [
+            GovernorKind::Agft,
+            GovernorKind::Ondemand,
+            GovernorKind::SloAware,
+            GovernorKind::SwitchingBandit,
+            GovernorKind::Default,
+            GovernorKind::Locked(1230),
+        ];
+        let grid = governor_grid(&base, &kinds);
+        assert_eq!(grid.len(), 6);
+        let labels: Vec<&str> =
+            grid.iter().map(|(l, _)| l.as_str()).collect();
+        assert_eq!(
+            labels,
+            ["agft", "ondemand", "slo", "bandit", "default",
+             "locked:1230"]
+        );
+        for ((_, cfg), kind) in grid.iter().zip(&kinds) {
+            assert_eq!(cfg.governor, *kind);
+            assert_eq!(cfg.seed, base.seed);
+        }
+        // Seed expansion composes: 6 governors × 3 seeds.
+        let expanded = governor_seed_grid(&base, &kinds, 3);
+        assert_eq!(expanded.len(), 18);
+        assert_eq!(expanded[0].0, "agft#s0");
+        assert_eq!(expanded[17].0, "locked:1230#s2");
+        assert_eq!(expanded[17].1.seed, base.seed + 2);
+    }
+
+    #[test]
+    fn run_totals_aggregate_per_governor() {
+        let mk = |energy: f64, switches: u64| RunResult {
+            windows: (0..4).map(|_| window(energy, 2.0, 0.03)).collect(),
+            finished: Vec::new(),
+            total_energy_j: energy,
+            duration_s: 1.0,
+            clock_changes: switches,
+            tuner: None,
+        };
+        let results = vec![
+            ("agft#s0".to_string(), mk(100.0, 10)),
+            ("agft#s1".to_string(), mk(120.0, 14)),
+            ("default#s0".to_string(), mk(200.0, 0)),
+            ("default#s1".to_string(), mk(220.0, 0)),
+        ];
+        let totals = summarize_run_totals(&results);
+        assert_eq!(totals.len(), 2);
+        assert_eq!(totals[0].label, "agft");
+        assert_eq!(totals[0].seeds, 2);
+        assert!((totals[0].total_energy_j.mean - 110.0).abs() < 1e-9);
+        assert!((totals[0].clock_changes.mean - 12.0).abs() < 1e-9);
+        assert_eq!(totals[1].label, "default");
+        assert!((totals[1].clock_changes.mean - 0.0).abs() < 1e-9);
+        // No finished requests → zero delay → zero total EDP.
+        assert_eq!(totals[0].total_edp.mean, 0.0);
     }
 
     #[test]

@@ -125,6 +125,45 @@ pub fn render_seed_summary(title: &str, summaries: &[SeedSummary]) -> String {
     render_table(title, &header_refs, &rows)
 }
 
+/// Render the run-level half of the governor-matrix report: one row
+/// per governor, whole-run totals (total energy, total EDP `E × Σ
+/// e2e`, run-mean latencies, clock switches) as `mean ± 95 % CI` over
+/// the seed replicas.
+pub fn render_run_totals(
+    title: &str,
+    totals: &[crate::experiment::phases::RunTotals],
+) -> String {
+    let cell = |c: &MeanCi| format!("{:.3e} ± {:.1e}", c.mean, c.half95);
+    let rows: Vec<Vec<String>> = totals
+        .iter()
+        .map(|t| {
+            vec![
+                format!("{} (n={})", t.label, t.seeds),
+                cell(&t.total_energy_j),
+                cell(&t.total_edp),
+                cell(&t.mean_ttft),
+                cell(&t.mean_tpot),
+                format!(
+                    "{:.1} ± {:.1}",
+                    t.clock_changes.mean, t.clock_changes.half95
+                ),
+            ]
+        })
+        .collect();
+    render_table(
+        title,
+        &[
+            "Governor",
+            "energy J",
+            "EDP",
+            "TTFT s",
+            "TPOT s",
+            "clock switches",
+        ],
+        &rows,
+    )
+}
+
 /// Render a seed-replicated sweep (`agft sweep --seeds N`): one row per
 /// frequency, each EDP/energy/delay/TTFT column a `mean ± 95 % CI` over
 /// the seed replicas.
@@ -260,6 +299,29 @@ mod tests {
         for metric in ["Energy (J)", "EDP", "TTFT", "TPOT", "E2E"] {
             assert!(text.contains(metric), "missing {metric}");
         }
+    }
+
+    #[test]
+    fn run_totals_render_one_row_per_governor() {
+        use crate::experiment::phases::{MeanCi, RunTotals};
+        let t = |label: &str, energy: f64| RunTotals {
+            label: label.to_string(),
+            seeds: 2,
+            total_energy_j: MeanCi { mean: energy, half95: 3.0, n: 2 },
+            total_edp: MeanCi { mean: 1e5, half95: 2e3, n: 2 },
+            mean_ttft: MeanCi { mean: 0.05, half95: 0.002, n: 2 },
+            mean_tpot: MeanCi { mean: 0.015, half95: 0.001, n: 2 },
+            clock_changes: MeanCi { mean: 12.5, half95: 1.5, n: 2 },
+        };
+        let text = render_run_totals(
+            "governor matrix (run totals)",
+            &[t("agft", 900.0), t("ondemand", 1100.0), t("default", 1500.0)],
+        );
+        for label in ["agft (n=2)", "ondemand (n=2)", "default (n=2)"] {
+            assert!(text.contains(label), "missing {label} in {text}");
+        }
+        assert!(text.contains("clock switches"));
+        assert!(text.contains("12.5 ± 1.5"), "{text}");
     }
 
     #[test]

@@ -224,6 +224,118 @@ pub fn edp_sweep_seeded(
     })
 }
 
+/// Parse a `--shard K/N` spec (1-based shard index `K` of `N` total).
+pub fn parse_shard(spec: &str) -> Result<(usize, usize), String> {
+    let (k, n) = spec
+        .split_once('/')
+        .ok_or_else(|| format!("--shard {spec:?}: want K/N, e.g. 1/4"))?;
+    let k = k
+        .trim()
+        .parse::<usize>()
+        .map_err(|e| format!("--shard {spec:?}: K: {e}"))?;
+    let n = n
+        .trim()
+        .parse::<usize>()
+        .map_err(|e| format!("--shard {spec:?}: N: {e}"))?;
+    if n == 0 || k == 0 || k > n {
+        return Err(format!("--shard {spec:?}: need 1 <= K <= N"));
+    }
+    Ok((k, n))
+}
+
+/// Deterministic round-robin partition of a frequency grid: shard `k`
+/// (1-based) of `n` takes the points whose index `i` satisfies
+/// `i % n == k - 1`. Round-robin — not contiguous chunks — because the
+/// per-point cost is wildly skewed (low clocks pay a far bigger
+/// latency bill), so striding balances wall-clock across shard
+/// processes. The union over `k = 1..=n` is exactly the input grid, so
+/// sharded + merged output is byte-identical to a single-process run.
+pub fn shard_freqs(freqs: &[u32], k: usize, n: usize) -> Vec<u32> {
+    freqs
+        .iter()
+        .enumerate()
+        .filter(|(i, _)| i % n == k - 1)
+        .map(|(_, &f)| f)
+        .collect()
+}
+
+/// CSV header of [`sweep_points_csv`].
+pub const SWEEP_CSV_HEADER: [&str; 6] =
+    ["mhz", "energy_j", "delay_s", "edp", "ttft_s", "tpot_s"];
+
+/// Render sweep points as CSV. Floats use Rust's shortest-roundtrip
+/// formatting, so the text is exactly as deterministic as the points
+/// themselves — the byte-identity contract of `--shard` + `merge-csv`.
+pub fn sweep_points_csv(points: &[SweepPoint]) -> String {
+    let (mut w, buf) = crate::util::csv::CsvWriter::in_memory(&SWEEP_CSV_HEADER)
+        .expect("in-memory csv");
+    for p in points {
+        w.row(&[
+            p.freq_mhz.to_string(),
+            p.energy_j.to_string(),
+            p.delay_s.to_string(),
+            p.edp.to_string(),
+            p.mean_ttft.to_string(),
+            p.mean_tpot.to_string(),
+        ])
+        .expect("in-memory csv row");
+    }
+    w.flush().expect("in-memory csv flush");
+    buf.contents()
+}
+
+/// Merge per-shard sweep CSVs back into one document ordered by
+/// ascending MHz (the order a single-process sweep over an ascending
+/// grid emits, hence byte-identical to it). Headers must agree across
+/// shards; the first column must be an integer MHz; duplicate
+/// frequencies are rejected — they mean two shards ran overlapping
+/// grids.
+pub fn merge_sweep_csv(texts: &[String]) -> Result<String, String> {
+    if texts.is_empty() {
+        return Err("merge-csv: no input files".to_string());
+    }
+    let mut header: Option<Vec<String>> = None;
+    let mut rows: Vec<(u32, Vec<String>)> = Vec::new();
+    for (i, text) in texts.iter().enumerate() {
+        let (hdr, shard_rows) = crate::util::csv::parse(text)
+            .map_err(|e| format!("merge-csv input {}: {e}", i + 1))?;
+        match &header {
+            None => header = Some(hdr),
+            Some(h) if *h == hdr => {}
+            Some(h) => {
+                return Err(format!(
+                    "merge-csv input {}: header {hdr:?} != {h:?}",
+                    i + 1
+                ))
+            }
+        }
+        for row in shard_rows {
+            let mhz = row[0].parse::<u32>().map_err(|e| {
+                format!("merge-csv input {}: bad mhz {:?}: {e}", i + 1, row[0])
+            })?;
+            if rows.iter().any(|(m, _)| *m == mhz) {
+                return Err(format!(
+                    "merge-csv: duplicate frequency {mhz} — overlapping \
+                     shards?"
+                ));
+            }
+            rows.push((mhz, row));
+        }
+    }
+    rows.sort_by_key(|(mhz, _)| *mhz);
+    let header = header.expect("non-empty input checked above");
+    let header_refs: Vec<&str> =
+        header.iter().map(|s| s.as_str()).collect();
+    let (mut w, buf) =
+        crate::util::csv::CsvWriter::in_memory(&header_refs)
+            .expect("in-memory csv");
+    for (_, row) in &rows {
+        w.row(row).expect("in-memory csv row");
+    }
+    w.flush().expect("in-memory csv flush");
+    Ok(buf.contents())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -322,6 +434,85 @@ mod tests {
         assert_eq!(one.points[0].edp.n, 1);
         assert_eq!(one.points[0].edp.half95, 0.0);
         assert!(edp_sweep_seeded(&base, &freqs, 0, &exec).is_err());
+    }
+
+    #[test]
+    fn shard_spec_parses_and_validates() {
+        assert_eq!(parse_shard("1/4").unwrap(), (1, 4));
+        assert_eq!(parse_shard("4/4").unwrap(), (4, 4));
+        assert_eq!(parse_shard(" 2 / 3 ").unwrap(), (2, 3));
+        for bad in ["0/4", "5/4", "1/0", "x/4", "1-4", "1", ""] {
+            assert!(parse_shard(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn shards_partition_the_grid_round_robin() {
+        let freqs: Vec<u32> = (0..11).map(|i| 210 + i * 150).collect();
+        let mut seen = Vec::new();
+        for k in 1..=3 {
+            let shard = shard_freqs(&freqs, k, 3);
+            // Round-robin stride: shard k holds indices k-1, k-1+3, ...
+            for (j, f) in shard.iter().enumerate() {
+                assert_eq!(*f, freqs[k - 1 + 3 * j]);
+            }
+            seen.extend(shard);
+        }
+        seen.sort_unstable();
+        assert_eq!(seen, freqs, "shards must partition exactly");
+        // Degenerate: one shard is the whole grid.
+        assert_eq!(shard_freqs(&freqs, 1, 1), freqs);
+    }
+
+    #[test]
+    fn sharded_sweep_merges_byte_identical_to_single_process() {
+        // The sweep-sharding contract: run shard K/N in separate
+        // processes, `merge-csv` the outputs, and the bytes equal the
+        // single-process sweep over the full grid.
+        let base = cfg("normal");
+        let freqs: Vec<u32> = vec![300, 600, 900, 1200, 1500, 1800];
+        let exec = Executor::new();
+        let full = edp_sweep_with(&base, &freqs, &exec).unwrap();
+        let full_csv = sweep_points_csv(&full.points);
+        let shard_csvs: Vec<String> = (1..=3)
+            .map(|k| {
+                let shard = shard_freqs(&freqs, k, 3);
+                let r = edp_sweep_with(&base, &shard, &exec).unwrap();
+                sweep_points_csv(&r.points)
+            })
+            .collect();
+        let merged = merge_sweep_csv(&shard_csvs).unwrap();
+        assert_eq!(merged, full_csv, "merged shards drifted bytewise");
+        // Sanity: the merged text round-trips through the CSV parser
+        // with one row per grid point.
+        let (hdr, rows) = crate::util::csv::parse(&merged).unwrap();
+        assert_eq!(hdr, SWEEP_CSV_HEADER.to_vec());
+        assert_eq!(rows.len(), freqs.len());
+    }
+
+    #[test]
+    fn merge_rejects_overlap_and_header_drift() {
+        let p = |f: u32| SweepPoint {
+            freq_mhz: f,
+            energy_j: 1.0,
+            delay_s: 2.0,
+            edp: 2.0,
+            mean_ttft: 0.05,
+            mean_tpot: 0.01,
+        };
+        let a = sweep_points_csv(&[p(300), p(900)]);
+        let b = sweep_points_csv(&[p(600)]);
+        let merged = merge_sweep_csv(&[a.clone(), b.clone()]).unwrap();
+        let (_, rows) = crate::util::csv::parse(&merged).unwrap();
+        let order: Vec<&str> =
+            rows.iter().map(|r| r[0].as_str()).collect();
+        assert_eq!(order, ["300", "600", "900"]);
+        // Overlapping shards are an operator error, not silent data.
+        assert!(merge_sweep_csv(&[a.clone(), a.clone()]).is_err());
+        // Header drift (different tool version) must not merge.
+        let alien = "mhz,other\n300,1\n".to_string();
+        assert!(merge_sweep_csv(&[a, alien]).is_err());
+        assert!(merge_sweep_csv(&[]).is_err());
     }
 
     // Parallel-vs-serial bitwise determinism is covered end-to-end by

@@ -57,7 +57,9 @@ impl SimGpu {
 
     /// The clock the next iteration will run at. Under the `Default`
     /// governor this is the boost clock whenever there is work (native
-    /// driver behaviour — the paper's baseline).
+    /// driver behaviour — the paper's baseline). Every other governor
+    /// (locked sweeps, AGFT, and the rule-based / bandit baselines)
+    /// drives the device through explicit clock locks.
     pub fn effective_mhz(&self, has_work: bool) -> u32 {
         match self.governor {
             GovernorKind::Default => {
@@ -67,9 +69,7 @@ impl SimGpu {
                     self.table.min_mhz()
                 }
             }
-            GovernorKind::Locked(_) | GovernorKind::Agft => self
-                .locked_mhz
-                .unwrap_or(self.boost_mhz),
+            _ => self.locked_mhz.unwrap_or(self.boost_mhz),
         }
     }
 

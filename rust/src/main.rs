@@ -2,7 +2,10 @@
 //!
 //! ```text
 //! agft serve       --workload normal --governor agft --duration 600
+//! agft compare     --governors agft,ondemand,slo,bandit,default --seeds 5
 //! agft sweep       --workload normal --step 45 --duration 240
+//! agft sweep       --shard 1/4 --out shard1.csv   (grid partitioning)
+//! agft merge-csv   shard1.csv shard2.csv --out merged.csv
 //! agft longrun     --hours 12 --rps 2.0
 //! agft fingerprint --duration 400
 //! agft ablation    --which grain|pruning
@@ -92,6 +95,54 @@ fn cmd_compare(args: &Args) -> Result<(), String> {
     if seeds == 0 {
         return Err("--seeds 0: need at least one replica".to_string());
     }
+    // `--governors a,b,c` runs the full baseline matrix: every listed
+    // policy replays the identical per-seed request stream and the
+    // report carries one column per governor (stable-phase window
+    // means) plus a run-totals table (total energy/EDP, latencies,
+    // clock switches).
+    if let Some(list) = args.get("governors") {
+        if args.get("governor").is_some() {
+            return Err(
+                "--governor conflicts with --governors (the list already \
+                 names every leg)"
+                    .to_string(),
+            );
+        }
+        let kinds = config::schema::parse_governor_list(list)?;
+        eprintln!(
+            "running {}-leg governor matrix ({} governors x {seeds} \
+             seeds) in parallel ...",
+            kinds.len() as u64 * seeds,
+            kinds.len(),
+        );
+        let results = agft::experiment::phases::run_governors_seeded(
+            &cfg,
+            &kinds,
+            seeds,
+            &executor_from(args)?,
+        )?;
+        let summary = summarize_seeds(&results);
+        println!(
+            "{}",
+            report::render_seed_summary(
+                &format!(
+                    "governor matrix (stable phase, {seeds} seeds, \
+                     mean ± 95 % CI)"
+                ),
+                &summary,
+            )
+        );
+        let totals =
+            agft::experiment::phases::summarize_run_totals(&results);
+        println!(
+            "{}",
+            report::render_run_totals(
+                &format!("governor matrix (run totals, {seeds} seeds)"),
+                &totals,
+            )
+        );
+        return Ok(());
+    }
     if seeds > 1 {
         eprintln!(
             "running {}-leg comparison grid (2 governors x {seeds} \
@@ -145,6 +196,31 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
         .into_iter()
         .filter(|f| (f - table.min_mhz()) % step == 0)
         .collect();
+    // `--shard K/N` deterministically takes every N-th grid point
+    // (round-robin, so slow low-clock legs spread across processes);
+    // `agft merge-csv` recombines the per-shard `--out` CSVs into a
+    // document byte-identical to the single-process sweep.
+    let sharded = args.get("shard").is_some();
+    let freqs = match args.get("shard") {
+        Some(spec) => {
+            let (k, n) = agft::experiment::sweep::parse_shard(spec)?;
+            let shard =
+                agft::experiment::sweep::shard_freqs(&freqs, k, n);
+            eprintln!(
+                "shard {k}/{n}: {} of {} grid points",
+                shard.len(),
+                freqs.len()
+            );
+            shard
+        }
+        None => freqs,
+    };
+    if freqs.is_empty() {
+        return Err(
+            "sweep shard holds no grid points (K exceeds the grid?)"
+                .to_string(),
+        );
+    }
     // `--seeds N`: every frequency is replicated across N consecutive
     // seeds and the EDP columns carry mean ± 95 % CI (the curve the
     // whole frequency × seed matrix fans out on the executor at once).
@@ -153,6 +229,13 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
         return Err("--seeds 0: need at least one replica".to_string());
     }
     if seeds > 1 {
+        if args.get("out").is_some() {
+            return Err(
+                "--out CSV sharding is single-seed (drop --seeds or \
+                 --out)"
+                    .to_string(),
+            );
+        }
         eprintln!(
             "sweeping {} locked-clock points x {seeds} seeds on {} \
              workers ...",
@@ -163,6 +246,12 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
             &cfg, &freqs, seeds, &exec,
         )?;
         println!("{}", report::render_seeded_sweep("EDP(f) sweep", &sweep));
+        if sharded {
+            eprintln!(
+                "note: this run swept only its shard's grid points, so \
+                 the optimum below is shard-local"
+            );
+        }
         println!(
             "optimum: {} MHz (seed-mean EDP {:.3e} ± {:.1e})",
             sweep.optimum.freq_mhz,
@@ -177,6 +266,11 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
         exec.workers()
     );
     let sweep = edp_sweep_with(&cfg, &freqs, &exec)?;
+    if let Some(out) = args.get("out") {
+        let csv = agft::experiment::sweep::sweep_points_csv(&sweep.points);
+        std::fs::write(out, &csv).map_err(|e| format!("{out}: {e}"))?;
+        eprintln!("wrote {} sweep rows to {out}", sweep.points.len());
+    }
     let rows: Vec<Vec<String>> = sweep
         .points
         .iter()
@@ -195,7 +289,48 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
         &["MHz", "energy J", "delay s", "EDP", "TTFT s"],
         &rows,
     ));
+    if sharded {
+        eprintln!(
+            "note: the optimum above is shard-local; merge the shard \
+             CSVs (agft merge-csv) for the global curve"
+        );
+    }
     println!("optimum: {} MHz (EDP {:.3e})", sweep.optimum.freq_mhz, sweep.optimum.edp);
+    Ok(())
+}
+
+fn cmd_merge_csv(args: &Args) -> Result<(), String> {
+    let out = args
+        .get("out")
+        .ok_or("merge-csv: --out <merged.csv> required")?
+        .to_string();
+    // The argument parser promotes the first bare argument to the
+    // subcommand slot, so the shard list is subcommand + positional.
+    let inputs: Vec<String> = args
+        .subcommand
+        .iter()
+        .cloned()
+        .chain(args.positional.iter().cloned())
+        .collect();
+    if inputs.is_empty() {
+        return Err(
+            "merge-csv: pass the per-shard CSV paths as arguments"
+                .to_string(),
+        );
+    }
+    let texts: Vec<String> = inputs
+        .iter()
+        .map(|p| {
+            std::fs::read_to_string(p).map_err(|e| format!("{p}: {e}"))
+        })
+        .collect::<Result<_, String>>()?;
+    let merged = agft::experiment::sweep::merge_sweep_csv(&texts)?;
+    std::fs::write(&out, &merged).map_err(|e| format!("{out}: {e}"))?;
+    println!(
+        "merged {} shard files ({} rows) into {out}",
+        texts.len(),
+        merged.lines().count().saturating_sub(1),
+    );
     Ok(())
 }
 
@@ -337,11 +472,15 @@ fn cmd_metrics(args: &Args) -> Result<(), String> {
 
 fn usage() -> ! {
     eprintln!(
-        "usage: agft <serve|compare|sweep|ablation|fingerprint|trace-gen|\
-         metrics|bench-all> [options]\n\
+        "usage: agft <serve|compare|sweep|merge-csv|ablation|fingerprint|\
+         trace-gen|metrics|bench-all> [options]\n\
          common options: --config <toml> --workload <name> --governor \
-         <default|agft|locked:MHZ> --duration S --rps R --seed N \
-         --workers N\n\
+         <default|agft|ondemand|slo|bandit|locked:MHZ> --duration S \
+         --rps R --seed N --workers N\n\
+         compare options: --governors a,b,c (baseline matrix, e.g. \
+         agft,ondemand,slo,bandit,default)\n\
+         sweep sharding: --shard K/N --out shard.csv, then \
+         agft merge-csv shard*.csv --out merged.csv\n\
          ablation options: --which grain|pruning\n\
          multi-seed: compare|sweep|ablation accept --seeds N (mean ± \
          95 % CI over N seed replicas)\n\
@@ -367,6 +506,7 @@ fn main() {
         "serve" => cmd_serve(&args),
         "compare" | "longrun" => cmd_compare(&args),
         "sweep" => cmd_sweep(&args),
+        "merge-csv" => cmd_merge_csv(&args),
         "ablation" => cmd_ablation(&args),
         "fingerprint" => cmd_fingerprint(&args),
         "trace-gen" => cmd_trace_gen(&args),

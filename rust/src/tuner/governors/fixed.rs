@@ -1,0 +1,70 @@
+//! The two decision-free policies: the native `Default` boost governor
+//! and the pre-locked sweep clock. Both are pure pass-throughs — the
+//! device itself implements their behaviour
+//! ([`crate::gpu::SimGpu::effective_mhz`] boosts for `Default`;
+//! `Locked` devices are constructed with the clock already pinned) —
+//! so the governor emits no decisions and carries no telemetry,
+//! exactly like the pre-refactor loop's non-AGFT arms.
+
+use crate::tuner::tuner::WindowObservation;
+
+use super::{ClockDecision, Governor};
+
+/// A governor that never issues a clock decision.
+pub struct NoopGovernor {
+    name: &'static str,
+}
+
+impl NoopGovernor {
+    /// The native boost-when-busy baseline.
+    pub fn default_governor() -> NoopGovernor {
+        NoopGovernor { name: "default" }
+    }
+
+    /// A fixed locked clock. The device is constructed pre-locked from
+    /// [`crate::config::GovernorKind::Locked`], so the governor itself
+    /// has nothing to actuate; the MHz parameter exists only for
+    /// symmetry with [`super::build`].
+    pub fn locked(_mhz: u32) -> NoopGovernor {
+        NoopGovernor { name: "locked" }
+    }
+}
+
+impl Governor for NoopGovernor {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn observe_window(
+        &mut self,
+        _obs: &WindowObservation,
+    ) -> Option<ClockDecision> {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::server::metrics::MetricsSnapshot;
+
+    #[test]
+    fn noop_governors_never_decide() {
+        let obs = WindowObservation {
+            snapshot: MetricsSnapshot::default(),
+            ttft_mean: Some(0.05),
+            tpot_mean: Some(0.01),
+            e2e_mean: Some(1.0),
+        };
+        for mut g in
+            [NoopGovernor::default_governor(), NoopGovernor::locked(1230)]
+        {
+            assert!(g.initial_clock_mhz().is_none());
+            for _ in 0..5 {
+                assert!(g.observe_window(&obs).is_none());
+            }
+            assert!(!g.exploiting());
+            assert!(g.telemetry().is_none());
+        }
+    }
+}

@@ -1,0 +1,185 @@
+//! The pluggable governor layer: every clock policy — AGFT itself, the
+//! paper's baselines and the strawmen it must beat — behind one trait.
+//!
+//! A [`Governor`] observes one [`WindowObservation`] per sampling
+//! window (the same 0.8 s cadence the AGFT tuner runs on) and may
+//! answer with a [`ClockDecision`]; the window loop itself lives in
+//! [`crate::experiment::driver::GovernorDriver`], which owns scraping,
+//! window bookkeeping and clock actuation for *all* policies. That is
+//! the refactor seam: adding a baseline is one new `impl Governor`,
+//! never another copy of the window loop.
+//!
+//! Shipped policies ([`build`] maps [`GovernorKind`] to them):
+//!
+//! | kind              | policy                                        |
+//! |-------------------|-----------------------------------------------|
+//! | `Default`         | no-op (device boosts natively)                |
+//! | `Locked(mhz)`     | no-op (device constructed pre-locked)         |
+//! | `Agft`            | [`agft::AgftGovernor`] wrapping [`AgftTuner`] |
+//! | `Ondemand`        | [`ondemand::OndemandGovernor`]                |
+//! | `SloAware`        | [`slo_aware::SloAwareGovernor`]               |
+//! | `SwitchingBandit` | [`bandit::SwitchingBanditGovernor`]           |
+//!
+//! [`AgftTuner`]: crate::tuner::AgftTuner
+
+pub mod agft;
+pub mod bandit;
+pub mod fixed;
+pub mod ondemand;
+pub mod slo_aware;
+
+use crate::config::{ExperimentConfig, GovernorKind};
+use crate::gpu::FreqTable;
+use crate::tuner::tuner::WindowObservation;
+
+/// A governor's answer for one window: the clock to lock for the next
+/// window plus the reward credited to the previous decision (learning
+/// policies only; rule-based governors report `None`).
+#[derive(Debug, Clone, Copy)]
+pub struct ClockDecision {
+    /// Frequency to lock for the next window (MHz).
+    pub freq_mhz: u32,
+    /// Reward credited this window, surfaced into
+    /// [`crate::experiment::harness::WindowRecord::reward`].
+    pub reward: Option<f64>,
+}
+
+/// End-of-run governor telemetry (historically the AGFT tuner's; the
+/// learning-free fields stay empty for rule-based policies).
+#[derive(Debug, Clone, Default)]
+pub struct TunerTelemetry {
+    pub reward_log: Vec<(u64, f64)>,
+    pub freq_log: Vec<(u64, u32)>,
+    pub converged_round: Option<u64>,
+    pub pruned_extreme: usize,
+    pub pruned_historical: usize,
+    pub pruned_cascade: usize,
+    pub refinements: usize,
+    pub ph_alarms: u64,
+}
+
+/// One pluggable clock policy driven on the window cadence.
+pub trait Governor {
+    /// Stable short name (matches [`GovernorKind::label`]).
+    fn name(&self) -> &'static str;
+
+    /// Clock to lock before the first window runs (`None` keeps the
+    /// device's constructed policy — the no-op governors).
+    fn initial_clock_mhz(&self) -> Option<u32> {
+        None
+    }
+
+    /// Observe one completed window; optionally emit a clock decision.
+    fn observe_window(
+        &mut self,
+        obs: &WindowObservation,
+    ) -> Option<ClockDecision>;
+
+    /// True once the policy considers itself in steady-state
+    /// exploitation. Queried *every* window (not only on decisions), so
+    /// [`crate::experiment::harness::WindowRecord::exploiting`] always
+    /// reflects the governor's current phase — the stale-flag fix the
+    /// legacy loop lacked.
+    fn exploiting(&self) -> bool {
+        false
+    }
+
+    /// End-of-run telemetry (`None` for the no-op governors).
+    fn telemetry(&self) -> Option<TunerTelemetry> {
+        None
+    }
+}
+
+/// Construct the governor for `cfg.governor` over the GPU's frequency
+/// table.
+pub fn build(cfg: &ExperimentConfig) -> Box<dyn Governor> {
+    let table = FreqTable::from_config(&cfg.gpu);
+    match cfg.governor {
+        GovernorKind::Default => Box::new(fixed::NoopGovernor::default_governor()),
+        GovernorKind::Locked(mhz) => Box::new(fixed::NoopGovernor::locked(mhz)),
+        GovernorKind::Agft => {
+            Box::new(agft::AgftGovernor::new(&cfg.tuner, table))
+        }
+        GovernorKind::Ondemand => Box::new(ondemand::OndemandGovernor::new(
+            &cfg.governors.ondemand,
+            table,
+        )),
+        GovernorKind::SloAware => Box::new(slo_aware::SloAwareGovernor::new(
+            &cfg.governors.slo,
+            table,
+        )),
+        GovernorKind::SwitchingBandit => {
+            Box::new(bandit::SwitchingBanditGovernor::new(
+                &cfg.governors.bandit,
+                table,
+                cfg.seed,
+            ))
+        }
+    }
+}
+
+/// Resolve a governor's start clock: explicit MHz, or the table top
+/// when 0 (the safe direction every adaptive policy here tunes down
+/// from, mirroring AGFT's top-clock start).
+pub(crate) fn start_clock(start_mhz: u32, table: &FreqTable) -> u32 {
+    if start_mhz == 0 {
+        table.max_mhz()
+    } else {
+        table.quantize(start_mhz)
+    }
+}
+
+/// Snap a configured step size onto the lockable grid: nearest
+/// multiple of the table step, never below one step. Without this, a
+/// step smaller than half the grid step (e.g. 7 MHz on the 15 MHz
+/// A6000 grid) would quantize every target back to the current clock
+/// and silently turn a rule-based governor into a no-op.
+pub(crate) fn snap_step(step_mhz: u32, table: &FreqTable) -> u32 {
+    let base = table.step_mhz();
+    let snapped = (step_mhz + base / 2) / base * base;
+    snapped.max(base)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GpuConfig;
+
+    #[test]
+    fn build_covers_every_kind() {
+        let mut cfg = ExperimentConfig::default();
+        for (kind, name) in [
+            (GovernorKind::Default, "default"),
+            (GovernorKind::Locked(1230), "locked"),
+            (GovernorKind::Agft, "agft"),
+            (GovernorKind::Ondemand, "ondemand"),
+            (GovernorKind::SloAware, "slo"),
+            (GovernorKind::SwitchingBandit, "bandit"),
+        ] {
+            cfg.governor = kind;
+            let g = build(&cfg);
+            assert_eq!(g.name(), name);
+        }
+    }
+
+    #[test]
+    fn start_clock_defaults_to_table_top() {
+        let table = FreqTable::from_config(&GpuConfig::default());
+        assert_eq!(start_clock(0, &table), 1800);
+        assert_eq!(start_clock(1234, &table), 1230);
+    }
+
+    #[test]
+    fn steps_snap_to_the_lockable_grid() {
+        let table = FreqTable::from_config(&GpuConfig::default());
+        // Sub-grid steps round up to one grid step instead of
+        // degenerating to a no-op.
+        assert_eq!(snap_step(1, &table), 15);
+        assert_eq!(snap_step(7, &table), 15);
+        assert_eq!(snap_step(8, &table), 15);
+        assert_eq!(snap_step(15, &table), 15);
+        assert_eq!(snap_step(20, &table), 15);
+        assert_eq!(snap_step(23, &table), 30);
+        assert_eq!(snap_step(120, &table), 120);
+    }
+}

@@ -1,0 +1,188 @@
+//! [`OndemandGovernor`] — the classic utilization-threshold DVFS rule
+//! (the Linux `ondemand` cpufreq strawman, ported to the window
+//! cadence): jump to the top clock when the window's busy fraction
+//! crosses `up_threshold`, creep down by `step_down_mhz` while it sits
+//! below `down_threshold`, hold in between.
+//!
+//! Utilization is `1 − idle_dt/dt` from the snapshot's time-integrated
+//! idle counter — the same event-boundary accounting the feature
+//! context uses, so the signal (and hence the whole policy trajectory)
+//! is bitwise-identical across the engine's event-driven / quantized /
+//! decode-span A/B modes.
+
+use crate::config::OndemandConfig;
+use crate::gpu::FreqTable;
+use crate::server::metrics::MetricsSnapshot;
+use crate::tuner::tuner::WindowObservation;
+
+use super::{snap_step, start_clock, ClockDecision, Governor, TunerTelemetry};
+
+/// Rule-based utilization-threshold governor.
+pub struct OndemandGovernor {
+    cfg: OndemandConfig,
+    table: FreqTable,
+    cur_mhz: u32,
+    last_snap: Option<MetricsSnapshot>,
+    round: u64,
+    freq_log: Vec<(u64, u32)>,
+}
+
+impl OndemandGovernor {
+    pub fn new(cfg: &OndemandConfig, table: FreqTable) -> OndemandGovernor {
+        let cur_mhz = start_clock(cfg.start_mhz, &table);
+        let mut cfg = cfg.clone();
+        // A sub-grid step would quantize every down-target back to the
+        // current clock and freeze the governor at f_max.
+        cfg.step_down_mhz = snap_step(cfg.step_down_mhz, &table);
+        OndemandGovernor {
+            cfg,
+            table,
+            cur_mhz,
+            last_snap: None,
+            round: 0,
+            freq_log: Vec::new(),
+        }
+    }
+
+    /// The window's busy fraction in `[0, 1]`.
+    fn utilization(delta_idle_s: f64, dt_s: f64) -> f64 {
+        if dt_s <= 0.0 {
+            return 0.0;
+        }
+        (1.0 - delta_idle_s / dt_s).clamp(0.0, 1.0)
+    }
+}
+
+impl Governor for OndemandGovernor {
+    fn name(&self) -> &'static str {
+        "ondemand"
+    }
+
+    fn initial_clock_mhz(&self) -> Option<u32> {
+        Some(self.cur_mhz)
+    }
+
+    fn observe_window(
+        &mut self,
+        obs: &WindowObservation,
+    ) -> Option<ClockDecision> {
+        let prev = self.last_snap.replace(obs.snapshot)?;
+        let d = obs.snapshot.delta(&prev);
+        let util = Self::utilization(d.idle_time_s, d.dt_s);
+        let target = if util >= self.cfg.up_threshold {
+            self.table.max_mhz()
+        } else if util <= self.cfg.down_threshold {
+            self.table.quantize(
+                self.cur_mhz.saturating_sub(self.cfg.step_down_mhz),
+            )
+        } else {
+            self.cur_mhz
+        };
+        self.cur_mhz = target;
+        self.freq_log.push((self.round, target));
+        self.round += 1;
+        Some(ClockDecision {
+            freq_mhz: target,
+            reward: None,
+        })
+    }
+
+    fn telemetry(&self) -> Option<TunerTelemetry> {
+        Some(TunerTelemetry {
+            freq_log: self.freq_log.clone(),
+            ..TunerTelemetry::default()
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GpuConfig;
+
+    fn governor() -> OndemandGovernor {
+        OndemandGovernor::new(
+            &OndemandConfig::default(),
+            FreqTable::from_config(&GpuConfig::default()),
+        )
+    }
+
+    /// Window with `busy` busy fraction appended to the running
+    /// snapshot.
+    fn window(
+        snap: &mut MetricsSnapshot,
+        busy: f64,
+    ) -> WindowObservation {
+        snap.time_s += 0.8;
+        snap.idle_time_s_total += 0.8 * (1.0 - busy);
+        WindowObservation {
+            snapshot: *snap,
+            ttft_mean: None,
+            tpot_mean: None,
+            e2e_mean: None,
+        }
+    }
+
+    #[test]
+    fn first_window_has_no_delta() {
+        let mut g = governor();
+        let mut snap = MetricsSnapshot::default();
+        assert!(g.observe_window(&window(&mut snap, 0.5)).is_none());
+        assert!(g.observe_window(&window(&mut snap, 0.5)).is_some());
+    }
+
+    #[test]
+    fn idle_windows_step_down_busy_windows_boost() {
+        let mut g = governor();
+        let mut snap = MetricsSnapshot::default();
+        let _ = g.observe_window(&window(&mut snap, 0.0));
+        // Idle stretch: the clock creeps down one step per window.
+        let d1 = g.observe_window(&window(&mut snap, 0.0)).unwrap();
+        assert_eq!(d1.freq_mhz, 1800 - 120);
+        let d2 = g.observe_window(&window(&mut snap, 0.0)).unwrap();
+        assert_eq!(d2.freq_mhz, 1800 - 240);
+        // Mid-band utilization holds.
+        let d3 = g.observe_window(&window(&mut snap, 0.5)).unwrap();
+        assert_eq!(d3.freq_mhz, d2.freq_mhz);
+        // Saturation jumps straight back to the top clock.
+        let d4 = g.observe_window(&window(&mut snap, 1.0)).unwrap();
+        assert_eq!(d4.freq_mhz, 1800);
+        assert!(d4.reward.is_none());
+    }
+
+    #[test]
+    fn sub_grid_step_still_moves_the_clock() {
+        // A 7 MHz step on the 15 MHz grid must not quantize back to
+        // the current clock (the silent-no-op regression).
+        let mut g = OndemandGovernor::new(
+            &OndemandConfig {
+                step_down_mhz: 7,
+                ..OndemandConfig::default()
+            },
+            FreqTable::from_config(&GpuConfig::default()),
+        );
+        let mut snap = MetricsSnapshot::default();
+        let _ = g.observe_window(&window(&mut snap, 0.0));
+        let d = g.observe_window(&window(&mut snap, 0.0)).unwrap();
+        assert_eq!(d.freq_mhz, 1800 - 15);
+    }
+
+    #[test]
+    fn clock_floors_at_table_min() {
+        let mut g = governor();
+        let mut snap = MetricsSnapshot::default();
+        let _ = g.observe_window(&window(&mut snap, 0.0));
+        let mut last = 1800;
+        for _ in 0..40 {
+            last = g
+                .observe_window(&window(&mut snap, 0.0))
+                .unwrap()
+                .freq_mhz;
+        }
+        assert_eq!(last, g.table.min_mhz());
+        // First window carries no delta, so 40 decisions were logged.
+        let tel = g.telemetry().unwrap();
+        assert_eq!(tel.freq_log.len(), 40);
+        assert!(tel.reward_log.is_empty());
+    }
+}

@@ -1,0 +1,204 @@
+//! [`SloAwareGovernor`] — a GreenLLM-style SLO-aware latency-feedback
+//! controller. Two loops on one knob: a *fast recovery loop* that
+//! steps the clock up by `step_up_mhz` the moment a window's mean TTFT
+//! or TPOT breaches its SLO, and a *slow energy loop* that steps down
+//! by `step_down_mhz` while both latencies sit below `headroom × SLO`.
+//! The band between headroom and the SLO is hysteresis: hold.
+//!
+//! Windows with no completions carry no latency signal and hold the
+//! clock — a rule-based governor must not react to silence (the queue
+//! may simply be empty).
+
+use crate::config::SloAwareConfig;
+use crate::gpu::FreqTable;
+use crate::tuner::tuner::WindowObservation;
+
+use super::{snap_step, start_clock, ClockDecision, Governor, TunerTelemetry};
+
+/// SLO-feedback frequency controller.
+pub struct SloAwareGovernor {
+    cfg: SloAwareConfig,
+    table: FreqTable,
+    cur_mhz: u32,
+    /// Consecutive windows (with a latency signal) without a violation.
+    stable_run: u64,
+    round: u64,
+    freq_log: Vec<(u64, u32)>,
+    violations: u64,
+}
+
+impl SloAwareGovernor {
+    pub fn new(cfg: &SloAwareConfig, table: FreqTable) -> SloAwareGovernor {
+        let cur_mhz = start_clock(cfg.start_mhz, &table);
+        let mut cfg = cfg.clone();
+        // Sub-grid steps would quantize every target back to the
+        // current clock and freeze both feedback loops.
+        cfg.step_up_mhz = snap_step(cfg.step_up_mhz, &table);
+        cfg.step_down_mhz = snap_step(cfg.step_down_mhz, &table);
+        SloAwareGovernor {
+            cfg,
+            table,
+            cur_mhz,
+            stable_run: 0,
+            round: 0,
+            freq_log: Vec::new(),
+            violations: 0,
+        }
+    }
+
+    /// SLO violations observed so far (telemetry).
+    pub fn violations(&self) -> u64 {
+        self.violations
+    }
+}
+
+impl Governor for SloAwareGovernor {
+    fn name(&self) -> &'static str {
+        "slo"
+    }
+
+    fn initial_clock_mhz(&self) -> Option<u32> {
+        Some(self.cur_mhz)
+    }
+
+    fn observe_window(
+        &mut self,
+        obs: &WindowObservation,
+    ) -> Option<ClockDecision> {
+        let (Some(ttft), Some(tpot)) = (obs.ttft_mean, obs.tpot_mean)
+        else {
+            // No completions this window — no signal, hold the clock.
+            return None;
+        };
+        let violated =
+            ttft > self.cfg.ttft_slo_s || tpot > self.cfg.tpot_slo_s;
+        let comfortable = ttft < self.cfg.headroom * self.cfg.ttft_slo_s
+            && tpot < self.cfg.headroom * self.cfg.tpot_slo_s;
+        let target = if violated {
+            self.violations += 1;
+            self.stable_run = 0;
+            self.table.quantize(
+                self.cur_mhz.saturating_add(self.cfg.step_up_mhz),
+            )
+        } else {
+            self.stable_run += 1;
+            if comfortable {
+                self.table.quantize(
+                    self.cur_mhz.saturating_sub(self.cfg.step_down_mhz),
+                )
+            } else {
+                self.cur_mhz
+            }
+        };
+        self.cur_mhz = target;
+        self.freq_log.push((self.round, target));
+        self.round += 1;
+        Some(ClockDecision {
+            freq_mhz: target,
+            reward: None,
+        })
+    }
+
+    fn exploiting(&self) -> bool {
+        self.stable_run >= self.cfg.stable_windows
+    }
+
+    fn telemetry(&self) -> Option<TunerTelemetry> {
+        Some(TunerTelemetry {
+            freq_log: self.freq_log.clone(),
+            ..TunerTelemetry::default()
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GpuConfig;
+    use crate::server::metrics::MetricsSnapshot;
+
+    fn governor() -> SloAwareGovernor {
+        SloAwareGovernor::new(
+            &SloAwareConfig::default(),
+            FreqTable::from_config(&GpuConfig::default()),
+        )
+    }
+
+    fn obs(ttft: Option<f64>, tpot: Option<f64>) -> WindowObservation {
+        WindowObservation {
+            snapshot: MetricsSnapshot::default(),
+            ttft_mean: ttft,
+            tpot_mean: tpot,
+            e2e_mean: ttft.map(|t| t * 10.0),
+        }
+    }
+
+    #[test]
+    fn violations_step_up_comfort_steps_down() {
+        let mut g = governor();
+        assert_eq!(g.initial_clock_mhz(), Some(1800));
+        // Comfortable latencies: slow loop steps down 30 MHz/window.
+        for i in 1..=8 {
+            let d =
+                g.observe_window(&obs(Some(0.03), Some(0.005))).unwrap();
+            assert_eq!(d.freq_mhz, 1800 - 30 * i);
+        }
+        // Hysteresis band (above headroom, below SLO): hold.
+        let d = g.observe_window(&obs(Some(0.12), Some(0.015))).unwrap();
+        assert_eq!(d.freq_mhz, 1800 - 240);
+        // TTFT violation: fast loop jumps up a big step.
+        let d = g.observe_window(&obs(Some(0.30), Some(0.005))).unwrap();
+        assert_eq!(d.freq_mhz, 1800 - 240 + 150);
+        assert_eq!(g.violations(), 1);
+        // TPOT violation alone also triggers the fast loop; the step
+        // clamps at the table top.
+        let d = g.observe_window(&obs(Some(0.03), Some(0.50))).unwrap();
+        assert_eq!(d.freq_mhz, 1800);
+    }
+
+    #[test]
+    fn empty_windows_hold_and_exploiting_needs_a_stable_run() {
+        let mut g = governor();
+        assert!(g.observe_window(&obs(None, None)).is_none());
+        assert!(!g.exploiting());
+        for _ in 0..SloAwareConfig::default().stable_windows {
+            g.observe_window(&obs(Some(0.12), Some(0.015))).unwrap();
+        }
+        assert!(g.exploiting());
+        // A violation resets the stable run.
+        g.observe_window(&obs(Some(0.9), Some(0.015))).unwrap();
+        assert!(!g.exploiting());
+    }
+
+    #[test]
+    fn sub_grid_steps_still_move_the_clock() {
+        // 7 MHz loops on the 15 MHz grid must not quantize back to the
+        // current clock (the silent-no-op regression).
+        let mut g = SloAwareGovernor::new(
+            &SloAwareConfig {
+                step_up_mhz: 7,
+                step_down_mhz: 7,
+                ..SloAwareConfig::default()
+            },
+            FreqTable::from_config(&GpuConfig::default()),
+        );
+        let d = g.observe_window(&obs(Some(0.03), Some(0.005))).unwrap();
+        assert_eq!(d.freq_mhz, 1800 - 15);
+        let d = g.observe_window(&obs(Some(0.30), Some(0.005))).unwrap();
+        assert_eq!(d.freq_mhz, 1800);
+    }
+
+    #[test]
+    fn clock_stays_on_the_lockable_grid() {
+        let mut g = governor();
+        for i in 0..200 {
+            let (t, p) = if i % 3 == 0 {
+                (0.5, 0.05) // violation
+            } else {
+                (0.01, 0.001) // comfort
+            };
+            let d = g.observe_window(&obs(Some(t), Some(p))).unwrap();
+            assert!(g.table.contains(d.freq_mhz), "{} off grid", d.freq_mhz);
+        }
+    }
+}

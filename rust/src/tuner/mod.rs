@@ -20,9 +20,15 @@
 //!
 //! [`AgftTuner`] orchestrates all of it; [`action_space`] owns the arm
 //! bookkeeping shared by the bandit, pruning and refinement.
+//!
+//! [`governors`] is the pluggable policy layer above the tuner: the
+//! [`governors::Governor`] trait plus the baseline matrix (AGFT,
+//! default boost, locked, ondemand, SLO-aware, switching-aware bandit)
+//! the experiment driver runs behind one window loop.
 
 pub mod action_space;
 pub mod features;
+pub mod governors;
 pub mod linucb;
 pub mod page_hinkley;
 pub mod pruning;
@@ -33,6 +39,7 @@ pub mod tuner;
 
 pub use action_space::ActionSpace;
 pub use features::{ContextVector, FeatureExtractor, FEATURE_DIM};
+pub use governors::{ClockDecision, Governor, TunerTelemetry};
 pub use linucb::{LinUcb, PaddedExportCache};
 pub use page_hinkley::PageHinkley;
 pub use reward::RewardCalculator;
