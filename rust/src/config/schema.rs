@@ -478,6 +478,18 @@ pub enum WorkloadKind {
     TraceFile(String),
 }
 
+impl WorkloadKind {
+    /// Stable textual form, the inverse of [`parse_workload`] — used by
+    /// grid manifests and CLI round-trips.
+    pub fn label(&self) -> String {
+        match self {
+            WorkloadKind::Prototype(name) => name.clone(),
+            WorkloadKind::AzureLike { year } => format!("azure{year}"),
+            WorkloadKind::TraceFile(path) => format!("trace:{path}"),
+        }
+    }
+}
+
 /// Top-level experiment description.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ExperimentConfig {
@@ -1001,6 +1013,18 @@ step_mhz = 60
                    GovernorKind::SwitchingBandit);
         assert_eq!(parse_governor("switching-bandit").unwrap(),
                    GovernorKind::SwitchingBandit);
+    }
+
+    #[test]
+    fn workload_labels_roundtrip_through_parse() {
+        for w in [
+            WorkloadKind::Prototype("normal".to_string()),
+            WorkloadKind::Prototype("high_cache_hit".to_string()),
+            WorkloadKind::AzureLike { year: 2024 },
+            WorkloadKind::TraceFile("/tmp/x.csv".to_string()),
+        ] {
+            assert_eq!(parse_workload(&w.label()).unwrap(), w);
+        }
     }
 
     #[test]

@@ -28,18 +28,54 @@ use crate::workload;
 
 use super::harness::{run_shared, RunResult};
 
-/// Default worker count: `AGFT_WORKERS` when set (and > 0), otherwise
-/// the host's available parallelism.
+/// Parse a worker-count value (the `AGFT_WORKERS` env var, the
+/// orchestrator's `--workers` flag): a positive integer. One
+/// validation rule for every entry point, so a zero or typo'd count
+/// can never silently mean something else.
+pub fn parse_workers(v: &str) -> Result<usize, String> {
+    let n = v
+        .trim()
+        .parse::<usize>()
+        .map_err(|e| format!("worker count {v:?}: {e}"))?;
+    if n == 0 {
+        return Err(
+            "worker count 0: need at least one worker".to_string()
+        );
+    }
+    Ok(n)
+}
+
+/// Default worker count: `AGFT_WORKERS` when set and valid, otherwise
+/// the host's available parallelism. An unparsable or zero
+/// `AGFT_WORKERS` used to be *silently* ignored — a typo'd
+/// `AGFT_WORKERS=04x` quietly ran on every core; it now warns on
+/// stderr (via [`parse_workers`]) before falling back.
 pub fn default_workers() -> usize {
-    std::env::var("AGFT_WORKERS")
-        .ok()
-        .and_then(|v| v.parse::<usize>().ok())
-        .filter(|&w| w > 0)
-        .unwrap_or_else(|| {
-            std::thread::available_parallelism()
-                .map(|n| n.get())
-                .unwrap_or(1)
-        })
+    let fallback = || {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+    };
+    match std::env::var("AGFT_WORKERS") {
+        Ok(v) => match parse_workers(&v) {
+            Ok(n) => n,
+            Err(e) => {
+                eprintln!(
+                    "warning: ignoring AGFT_WORKERS ({e}); using \
+                     available parallelism"
+                );
+                fallback()
+            }
+        },
+        Err(std::env::VarError::NotPresent) => fallback(),
+        Err(e) => {
+            eprintln!(
+                "warning: ignoring unreadable AGFT_WORKERS ({e}); using \
+                 available parallelism"
+            );
+            fallback()
+        }
+    }
 }
 
 /// Per-job outcome inside [`Executor::try_map`] — a dedicated variant
@@ -274,6 +310,25 @@ mod tests {
     fn worker_count_floors_at_one() {
         assert_eq!(Executor::with_workers(0).workers(), 1);
         assert!(Executor::new().workers() >= 1);
+    }
+
+    #[test]
+    fn workers_env_values_parse_or_error() {
+        // The pure parser behind AGFT_WORKERS handling (the env-var
+        // path itself is covered by default_workers' fallback contract
+        // below; tests must not mutate process-global env in a
+        // parallel harness).
+        assert_eq!(parse_workers("4").unwrap(), 4);
+        assert_eq!(parse_workers(" 8 ").unwrap(), 8);
+        // Zero and unparsable values are *errors*, no longer silently
+        // ignored.
+        assert!(parse_workers("0").is_err());
+        assert!(parse_workers("abc").is_err());
+        assert!(parse_workers("04x").is_err());
+        assert!(parse_workers("-2").is_err());
+        assert!(parse_workers("").is_err());
+        // Whatever the environment, the resolved default is usable.
+        assert!(default_workers() >= 1);
     }
 
     #[test]

@@ -14,18 +14,26 @@
 //!   locked-clock point.
 //! * [`phases`] — learning vs post-convergence splits and the Table-2/3
 //!   metric comparisons, plus the parallel ablation-grid runner.
+//! * [`orchestrator`] — generic grid sharding (round-robin legs keyed
+//!   by full-grid index, deterministic manifests) and the
+//!   shard-process supervisor behind `agft orchestrate` (bounded
+//!   concurrency, one retry per failed shard, byte-identical merge).
 //! * [`report`] — plain-text table rendering + CSV emission shared by
 //!   all bench binaries.
 
 pub mod driver;
 pub mod executor;
 pub mod harness;
+pub mod orchestrator;
 pub mod phases;
 pub mod report;
 pub mod sweep;
 
 pub use driver::GovernorDriver;
 pub use executor::Executor;
+pub use orchestrator::{
+    index_grid, merge_grid_csv, run_legs, shard_grid, GridLeg, ShardJob,
+};
 pub use harness::{
     run_experiment, run_pair, run_pair_with, run_shared,
     run_shared_legacy, RunResult, WindowRecord,

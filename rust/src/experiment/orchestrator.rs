@@ -1,0 +1,528 @@
+//! Grid sharding + shard-process orchestration — the ROADMAP
+//! "job-server" item, end to end.
+//!
+//! PR 4 taught the frequency sweep to shard (`agft sweep --shard K/N
+//! --out` + `agft merge-csv`); this module generalizes that contract
+//! to *any* labelled experiment grid and adds the process layer that
+//! was still missing:
+//!
+//! * [`GridLeg`] / [`index_grid`] — pin every `(label,
+//!   ExperimentConfig)` leg to its position in the full grid; the
+//!   index is the shard/merge key.
+//! * [`shard_grid`] — the one deterministic round-robin partition
+//!   every shardable grid in the repo uses (`sweep::shard_freqs` is a
+//!   typed wrapper over it; `sweep::parse_shard` parses the `K/N`
+//!   spec for both).
+//! * [`grid_manifest_csv`] / [`parse_grid_manifest`] — a deterministic
+//!   CSV job list of the grid axes (leg, label, governor, workload,
+//!   seed, duration, arrival rate) for remote launchers and audit.
+//! * [`run_legs`] / [`legs_results_csv`] / [`merge_grid_csv`] — run a
+//!   shard's legs and emit per-leg results rows whose merged document
+//!   is **byte-identical** to the single-process
+//!   `run_governors_seeded` / `run_grid` run, mirroring the
+//!   `merge_sweep_csv` contract.
+//! * [`supervise`] — spawn the `agft compare|ablation|sweep --shard
+//!   k/n --out ...` children (`agft orchestrate`), bounded
+//!   concurrency, status streamed to stderr, one automatic retry per
+//!   failed (or killed) shard, shard CSVs read back for the merge.
+//!
+//! Byte-identity holds because every leg is an independent
+//! virtual-clock replay: a leg realizes its workload deterministically
+//! from its own config, so whether it runs in-process behind a shared
+//! `Arc` stream or in a shard process that re-realizes the stream, the
+//! `RunResult` — and hence its CSV row — is bitwise the same
+//! (`tests/orchestrator.rs` holds both layers to that).
+
+use std::collections::VecDeque;
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::config::{schema, ExperimentConfig};
+use crate::server::Request;
+use crate::util::csv;
+use crate::workload;
+
+use super::executor::Executor;
+use super::harness::{run_shared, RunResult};
+use super::report::{grid_results_csv, GridCsvRow};
+
+/// One leg of a labelled experiment grid, pinned to its position in
+/// the *full* grid — the index keys shard CSV rows, so round-robin
+/// shards reassemble into the single-process document.
+#[derive(Debug, Clone)]
+pub struct GridLeg {
+    pub index: usize,
+    pub label: String,
+    pub cfg: ExperimentConfig,
+}
+
+/// Attach full-grid indices to a labelled grid (the output order of
+/// [`super::phases::governor_seed_grid`] / [`super::phases::seed_grid`]).
+pub fn index_grid(grid: &[(String, ExperimentConfig)]) -> Vec<GridLeg> {
+    grid.iter()
+        .enumerate()
+        .map(|(index, (label, cfg))| GridLeg {
+            index,
+            label: label.clone(),
+            cfg: cfg.clone(),
+        })
+        .collect()
+}
+
+/// Deterministic round-robin partition of any grid: shard `k` (1-based,
+/// as parsed by [`super::sweep::parse_shard`]) of `n` takes the items
+/// whose index `i` satisfies `i % n == k - 1`. Round-robin — not
+/// contiguous chunks — because per-leg cost is wildly skewed (low
+/// clocks and learning governors pay far bigger bills), so striding
+/// balances wall-clock across shard processes. The union over
+/// `k = 1..=n` is exactly the input, so sharded + merged output is
+/// byte-identical to a single-process run.
+pub fn shard_grid<T: Clone>(items: &[T], k: usize, n: usize) -> Vec<T> {
+    assert!(
+        (1..=n).contains(&k),
+        "shard {k}/{n}: want 1 <= K <= N (parse with sweep::parse_shard)"
+    );
+    items
+        .iter()
+        .enumerate()
+        .filter(|(i, _)| i % n == k - 1)
+        .map(|(_, x)| x.clone())
+        .collect()
+}
+
+/// Run a set of grid legs on the executor. Each leg realizes its own
+/// workload — deterministic from its config — and replays it through
+/// [`run_shared`], so a shard's per-leg results are **bitwise** equal
+/// to the same legs inside a single-process stream-shared grid run
+/// (stream sharing is a wall-clock optimisation, never a semantic
+/// one; `phases::tests::run_compare_seeded_matches_independent_grid_runs`
+/// and `tests/orchestrator.rs` both hold this).
+pub fn run_legs(
+    legs: &[GridLeg],
+    exec: &Executor,
+) -> Result<Vec<RunResult>, String> {
+    exec.try_map(legs, |_, leg| {
+        let requests: Arc<[Request]> = workload::realize(
+            &leg.cfg.workload,
+            leg.cfg.arrival_rps,
+            leg.cfg.duration_s,
+            leg.cfg.seed,
+        )?
+        .into();
+        run_shared(&leg.cfg, requests)
+    })
+}
+
+/// Per-leg results CSV for a (possibly sharded) set of grid legs —
+/// [`super::report::grid_results_csv`] rows keyed by full-grid index.
+pub fn legs_results_csv(legs: &[GridLeg], results: &[RunResult]) -> String {
+    assert_eq!(legs.len(), results.len(), "one result per leg");
+    let rows: Vec<GridCsvRow> = legs
+        .iter()
+        .zip(results)
+        .map(|(leg, run)| GridCsvRow {
+            index: leg.index,
+            label: &leg.label,
+            seed: leg.cfg.seed,
+            run,
+        })
+        .collect();
+    grid_results_csv(&rows)
+}
+
+/// Merge per-shard grid CSVs back into one document ordered by leg
+/// index — the grid twin of [`super::sweep::merge_sweep_csv`], built
+/// on the same hardened keyed merge (header drift, ragged rows and
+/// overlapping shards are errors, never panics or silent data).
+pub fn merge_grid_csv(texts: &[String]) -> Result<String, String> {
+    csv::merge_keyed(texts, "merge-grid")
+}
+
+/// CSV header of [`grid_manifest_csv`].
+pub const MANIFEST_CSV_HEADER: [&str; 7] = [
+    "leg",
+    "label",
+    "governor",
+    "workload",
+    "seed",
+    "duration_s",
+    "arrival_rps",
+];
+
+/// Serialize a grid to a deterministic job-list CSV — the manifest a
+/// remote launcher (or an auditor) reads to know exactly which legs a
+/// shard will run. It captures the grid *axes* (governor, workload,
+/// seed, duration, arrival rate); variant-specific tuner knobs
+/// (ablation grids) are reconstructed by the child command from the
+/// same CLI flags, exactly as the orchestrator's shard children do.
+pub fn grid_manifest_csv(legs: &[GridLeg]) -> String {
+    let (mut w, buf) = csv::CsvWriter::in_memory(&MANIFEST_CSV_HEADER)
+        .expect("in-memory csv");
+    for leg in legs {
+        w.row(&[
+            leg.index.to_string(),
+            leg.label.clone(),
+            leg.cfg.governor.label(),
+            leg.cfg.workload.label(),
+            leg.cfg.seed.to_string(),
+            leg.cfg.duration_s.to_string(),
+            leg.cfg.arrival_rps.to_string(),
+        ])
+        .expect("in-memory csv row");
+    }
+    w.flush().expect("in-memory csv flush");
+    buf.contents()
+}
+
+/// Parse a manifest back into grid legs over a base config (the
+/// manifest axes override the base per row). Round-trips
+/// [`grid_manifest_csv`] exactly for grids whose legs differ from the
+/// base only in those axes.
+pub fn parse_grid_manifest(
+    text: &str,
+    base: &ExperimentConfig,
+) -> Result<Vec<GridLeg>, String> {
+    let (hdr, rows) =
+        csv::parse(text).map_err(|e| format!("manifest: {e}"))?;
+    let hdr_refs: Vec<&str> = hdr.iter().map(|s| s.as_str()).collect();
+    if hdr_refs != MANIFEST_CSV_HEADER.to_vec() {
+        return Err(format!(
+            "manifest: header {hdr:?} != {MANIFEST_CSV_HEADER:?}"
+        ));
+    }
+    rows.into_iter()
+        .map(|row| {
+            let field = |what: &str, e: String| {
+                format!("manifest leg {:?}: bad {what}: {e}", row[0])
+            };
+            let index = row[0]
+                .parse::<usize>()
+                .map_err(|e| field("leg index", e.to_string()))?;
+            let mut cfg = base.clone();
+            cfg.governor = schema::parse_governor(&row[2])
+                .map_err(|e| field("governor", e))?;
+            cfg.workload = schema::parse_workload(&row[3])
+                .map_err(|e| field("workload", e))?;
+            cfg.seed = row[4]
+                .parse::<u64>()
+                .map_err(|e| field("seed", e.to_string()))?;
+            cfg.duration_s = row[5]
+                .parse::<f64>()
+                .map_err(|e| field("duration_s", e.to_string()))?;
+            cfg.arrival_rps = row[6]
+                .parse::<f64>()
+                .map_err(|e| field("arrival_rps", e.to_string()))?;
+            Ok(GridLeg {
+                index,
+                label: row[1].clone(),
+                cfg,
+            })
+        })
+        .collect()
+}
+
+/// Spec of one shard child process.
+#[derive(Debug, Clone)]
+pub struct ShardJob {
+    /// 1-based shard index (the K of `--shard K/N`).
+    pub k: usize,
+    /// Full child argv, program first — typically `agft <cmd> ...
+    /// --shard K/N --out <out>`, optionally behind a launcher prefix
+    /// (`ssh worker3 agft ...`).
+    pub argv: Vec<String>,
+    /// CSV file the child writes; read back by the merge step.
+    pub out: PathBuf,
+}
+
+struct RunningShard {
+    job: usize,
+    attempt: u32,
+    started: Instant,
+    child: Child,
+}
+
+/// Supervise shard children: at most `procs` run concurrently, status
+/// streams to stderr as shards start/finish, and a failed (or killed
+/// — any non-success exit) shard is retried **once** before the grid
+/// is declared failed. Surviving shards are driven to completion even
+/// after another gives up, and completed shard CSVs stay on disk, so
+/// a failed grid resumes by rerunning only the broken shard by hand
+/// and merging with `agft merge-csv`. On success, returns the
+/// per-shard CSV texts in `jobs` order.
+pub fn supervise(
+    jobs: &[ShardJob],
+    procs: usize,
+) -> Result<Vec<String>, String> {
+    const MAX_ATTEMPTS: u32 = 2;
+    let procs = procs.max(1);
+    let total = jobs.len();
+    let mut pending: VecDeque<(usize, u32)> =
+        (0..jobs.len()).map(|i| (i, 1)).collect();
+    let mut running: Vec<RunningShard> = Vec::new();
+    let mut failures: Vec<String> = Vec::new();
+    while !pending.is_empty() || !running.is_empty() {
+        // Top up the process pool.
+        while running.len() < procs {
+            let Some((job, attempt)) = pending.pop_front() else {
+                break;
+            };
+            let spec = &jobs[job];
+            match Command::new(&spec.argv[0])
+                .args(&spec.argv[1..])
+                .stdin(Stdio::null())
+                // The child's tables would interleave unreadably;
+                // its CSV lands in `spec.out`. stderr stays inherited
+                // so shard progress/errors stream through live.
+                .stdout(Stdio::null())
+                .stderr(Stdio::inherit())
+                .spawn()
+            {
+                Ok(child) => {
+                    eprintln!(
+                        "orchestrate: shard {}/{total} started \
+                         (attempt {attempt}, pid {})",
+                        spec.k,
+                        child.id()
+                    );
+                    running.push(RunningShard {
+                        job,
+                        attempt,
+                        started: Instant::now(),
+                        child,
+                    });
+                }
+                Err(e) => {
+                    let msg = format!(
+                        "shard {}/{total}: spawn {:?}: {e}",
+                        spec.k, spec.argv[0]
+                    );
+                    if attempt < MAX_ATTEMPTS {
+                        eprintln!("orchestrate: {msg} — retrying once");
+                        pending.push_back((job, attempt + 1));
+                        // Don't burn the retry in this same top-up
+                        // pass: a transient spawn failure (fork
+                        // pressure, fd limits while other shards
+                        // launch) needs at least one poll cycle to
+                        // clear.
+                        std::thread::sleep(Duration::from_millis(30));
+                        break;
+                    }
+                    eprintln!("orchestrate: {msg} — giving up");
+                    failures.push(msg);
+                }
+            }
+        }
+        // Reap whatever exited; sleep briefly only if nothing did.
+        let mut reaped = false;
+        let mut i = 0;
+        while i < running.len() {
+            match running[i].child.try_wait() {
+                Ok(Some(status)) => {
+                    let shard = running.swap_remove(i);
+                    reaped = true;
+                    let spec = &jobs[shard.job];
+                    let secs = shard.started.elapsed().as_secs_f64();
+                    if status.success() {
+                        eprintln!(
+                            "orchestrate: shard {}/{total} finished in \
+                             {secs:.1}s",
+                            spec.k
+                        );
+                    } else if shard.attempt < MAX_ATTEMPTS {
+                        eprintln!(
+                            "orchestrate: shard {}/{total} failed \
+                             ({status}) after {secs:.1}s — retrying once",
+                            spec.k
+                        );
+                        pending.push_back((shard.job, shard.attempt + 1));
+                    } else {
+                        let msg = format!(
+                            "shard {}/{total}: failed twice (last: \
+                             {status})",
+                            spec.k
+                        );
+                        eprintln!("orchestrate: {msg} — giving up");
+                        failures.push(msg);
+                    }
+                }
+                Ok(None) => i += 1,
+                Err(e) => {
+                    let shard = running.swap_remove(i);
+                    reaped = true;
+                    let msg = format!(
+                        "shard {}/{total}: wait: {e}",
+                        jobs[shard.job].k
+                    );
+                    eprintln!("orchestrate: {msg}");
+                    failures.push(msg);
+                }
+            }
+        }
+        if !reaped && !running.is_empty() {
+            std::thread::sleep(Duration::from_millis(30));
+        }
+    }
+    if !failures.is_empty() {
+        return Err(format!(
+            "orchestrate: {} shard(s) failed: {}",
+            failures.len(),
+            failures.join("; ")
+        ));
+    }
+    jobs.iter()
+        .map(|job| {
+            std::fs::read_to_string(&job.out).map_err(|e| {
+                format!(
+                    "orchestrate: shard {} output {}: {e}",
+                    job.k,
+                    job.out.display()
+                )
+            })
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GovernorKind;
+    use crate::experiment::harness::WindowRecord;
+    use crate::experiment::phases::governor_seed_grid;
+
+    #[test]
+    fn shard_grid_partitions_any_item_type_round_robin() {
+        let items: Vec<String> =
+            (0..7).map(|i| format!("leg{i}")).collect();
+        let mut seen = Vec::new();
+        for k in 1..=3 {
+            let shard = shard_grid(&items, k, 3);
+            for (j, item) in shard.iter().enumerate() {
+                assert_eq!(*item, items[k - 1 + 3 * j]);
+            }
+            seen.extend(shard);
+        }
+        seen.sort();
+        let mut want = items.clone();
+        want.sort();
+        assert_eq!(seen, want, "shards must partition exactly");
+        assert_eq!(shard_grid(&items, 1, 1), items);
+        // A shard beyond a short grid is empty, not an error.
+        assert!(shard_grid(&items[..2], 3, 3).is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "shard 0/3")]
+    fn shard_grid_rejects_zero_k() {
+        let _ = shard_grid(&[1u32, 2, 3], 0, 3);
+    }
+
+    #[test]
+    fn index_grid_pins_full_grid_positions() {
+        let base = ExperimentConfig::default();
+        let grid = governor_seed_grid(
+            &base,
+            &[GovernorKind::Agft, GovernorKind::Default],
+            2,
+        );
+        let legs = index_grid(&grid);
+        assert_eq!(legs.len(), 4);
+        for (i, leg) in legs.iter().enumerate() {
+            assert_eq!(leg.index, i);
+            assert_eq!(leg.label, grid[i].0);
+            assert_eq!(leg.cfg, grid[i].1);
+        }
+        // Sharding preserves the full-grid indices (the merge keys).
+        let shard2 = shard_grid(&legs, 2, 2);
+        assert_eq!(shard2.len(), 2);
+        assert_eq!(shard2[0].index, 1);
+        assert_eq!(shard2[1].index, 3);
+    }
+
+    #[test]
+    fn manifest_roundtrips_grid_axes() {
+        let base = ExperimentConfig {
+            duration_s: 120.0,
+            ..ExperimentConfig::default()
+        };
+        let grid = governor_seed_grid(
+            &base,
+            &[GovernorKind::Agft, GovernorKind::Locked(1230)],
+            2,
+        );
+        let legs = index_grid(&grid);
+        let manifest = grid_manifest_csv(&legs);
+        let parsed = parse_grid_manifest(&manifest, &base).unwrap();
+        assert_eq!(parsed.len(), legs.len());
+        for (a, b) in legs.iter().zip(&parsed) {
+            assert_eq!(a.index, b.index);
+            assert_eq!(a.label, b.label);
+            assert_eq!(a.cfg, b.cfg, "leg {} drifted", a.label);
+        }
+        // Serializing the parsed legs reproduces the manifest bytes.
+        assert_eq!(grid_manifest_csv(&parsed), manifest);
+        // Header drift and garbage rows are errors.
+        assert!(parse_grid_manifest("a,b\n1,2\n", &base).is_err());
+        let bad = manifest.replace("agft", "bogus-governor");
+        assert!(parse_grid_manifest(&bad, &base).is_err());
+    }
+
+    fn synthetic_run(energy: f64) -> RunResult {
+        let window = |e: f64| WindowRecord {
+            t_s: 0.8,
+            clock_mhz: 1230,
+            energy_j: e,
+            tokens: 100,
+            edp: e * 0.01,
+            ttft_mean: Some(0.04),
+            tpot_mean: Some(0.02),
+            e2e_mean: Some(1.0),
+            reward: None,
+            exploiting: false,
+            requests_waiting: 0,
+            requests_running: 1,
+            kv_usage: 0.1,
+            power_w: 150.0,
+        };
+        RunResult {
+            windows: (0..4).map(|_| window(energy)).collect(),
+            finished: Vec::new(),
+            total_energy_j: 4.0 * energy,
+            duration_s: 3.2,
+            clock_changes: 2,
+            tuner: None,
+        }
+    }
+
+    #[test]
+    fn sharded_results_csv_merges_back_to_full_document() {
+        // Pure CSV-layer identity (no simulation): shard rows keyed by
+        // full-grid index reassemble bytewise.
+        let base = ExperimentConfig::default();
+        let grid = governor_seed_grid(
+            &base,
+            &[GovernorKind::Agft, GovernorKind::Default],
+            2,
+        );
+        let legs = index_grid(&grid);
+        let results: Vec<RunResult> = (0..legs.len())
+            .map(|i| synthetic_run(100.0 + i as f64))
+            .collect();
+        let full_csv = legs_results_csv(&legs, &results);
+        let shard_csvs: Vec<String> = (1..=3)
+            .map(|k| {
+                let shard_legs = shard_grid(&legs, k, 3);
+                let shard_results: Vec<RunResult> = shard_legs
+                    .iter()
+                    .map(|leg| synthetic_run(100.0 + leg.index as f64))
+                    .collect();
+                legs_results_csv(&shard_legs, &shard_results)
+            })
+            .collect();
+        let merged = merge_grid_csv(&shard_csvs).unwrap();
+        assert_eq!(merged, full_csv, "grid shards drifted bytewise");
+        // Overlapping shards are rejected, like the sweep merge.
+        assert!(merge_grid_csv(&[full_csv.clone(), full_csv]).is_err());
+    }
+}

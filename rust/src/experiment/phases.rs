@@ -9,7 +9,7 @@ use std::sync::Arc;
 
 use crate::config::{ExperimentConfig, GovernorKind};
 use crate::server::Request;
-use crate::util::stats::pct_diff;
+use crate::util::stats::{pct_diff, t_critical_95};
 use crate::util::RunningStats;
 use crate::workload;
 
@@ -163,8 +163,14 @@ pub fn run_grid_with(
         .collect())
 }
 
-/// Mean with a 95 % normal-approximation confidence half-width (the
-/// across-seed column the paper's Tables 2–5 imply but never print).
+/// Mean with a 95 % Student-t confidence half-width (the across-seed
+/// column the paper's Tables 2–5 imply but never print).
+///
+/// The critical value is t-based ([`t_critical_95`], normal z = 1.96
+/// beyond n = 31) because the CLI-typical replica counts are tiny: at
+/// `--seeds 2` the old normal approximation's 1.96 stood in for the
+/// true t = 12.706, so the printed intervals covered far less than
+/// 95 %.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct MeanCi {
     pub mean: f64,
@@ -180,7 +186,7 @@ impl MeanCi {
         }
         let n = s.count();
         let half95 = if n >= 2 {
-            1.96 * s.std() / (n as f64).sqrt()
+            t_critical_95(n - 1) * s.std() / (n as f64).sqrt()
         } else {
             0.0
         };
@@ -435,13 +441,35 @@ pub fn pruning_ablation_variant(base: &ExperimentConfig) -> ExperimentConfig {
 /// The stable (post-convergence) window slice of a run; when a noisy
 /// run never formally converges, the second half of the horizon stands
 /// in (the convention every ablation table uses).
+///
+/// The fallback indexes the window log directly: feeding `len/2`
+/// through [`split_at`] (which maps a *round* to window `round + 1`)
+/// over-advanced the split by one, so a 2-window never-converged run
+/// got an *empty* stable slice — and [`phase_metrics`] over it returned
+/// all-zero means that silently poisoned every [`summarize_seeds`] row.
 pub fn stable_windows(r: &RunResult) -> &[WindowRecord] {
-    let converged = r
-        .tuner
-        .as_ref()
-        .and_then(|t| t.converged_round)
-        .unwrap_or(r.windows.len() as u64 / 2);
-    split_at(&r.windows, converged).1
+    let idx = stable_start_idx(
+        r.tuner.as_ref().and_then(|t| t.converged_round),
+        r.windows.len(),
+    );
+    &r.windows[idx..]
+}
+
+/// The window index a run's stable phase starts at — [`split_at`]'s
+/// round mapping when converged, the literal second half otherwise.
+/// Single source of truth for [`stable_windows`] and the aligned
+/// baseline split in [`learning_and_stable`].
+///
+/// Convergence on (or beyond) the final window leaves no
+/// post-convergence windows at all, so the never-converged fallback
+/// stands in there too — an *empty* stable slice would feed all-zero
+/// means into the seed summaries, the same poisoning mode as the
+/// short-run bug.
+fn stable_start_idx(converged: Option<u64>, len: usize) -> usize {
+    match converged {
+        Some(round) if (round as usize) + 1 < len => round as usize + 1,
+        _ => len / 2,
+    }
 }
 
 /// Split an AGFT run + aligned baseline at convergence and produce the
@@ -450,15 +478,12 @@ pub fn learning_and_stable(
     agft: &RunResult,
     base: &RunResult,
 ) -> (PhaseComparison, PhaseComparison) {
-    let converged = agft
-        .tuner
-        .as_ref()
-        .and_then(|t| t.converged_round)
-        .unwrap_or(agft.windows.len() as u64 / 2);
-    let (a_learn, a_stable) = split_at(&agft.windows, converged);
+    let converged = agft.tuner.as_ref().and_then(|t| t.converged_round);
+    let idx = stable_start_idx(converged, agft.windows.len());
+    let (a_learn, a_stable) = agft.windows.split_at(idx);
     // The baseline has no rounds; align by window count.
-    let idx = (converged as usize + 1).min(base.windows.len());
-    let (b_learn, b_stable) = base.windows.split_at(idx);
+    let (b_learn, b_stable) =
+        base.windows.split_at(idx.min(base.windows.len()));
     (
         PhaseComparison::build(&phase_metrics(a_learn), &phase_metrics(b_learn)),
         PhaseComparison::build(&phase_metrics(a_stable), &phase_metrics(b_stable)),
@@ -527,10 +552,87 @@ mod tests {
         let c = MeanCi::from_samples([1.0, 2.0, 3.0].into_iter());
         assert_eq!(c.n, 3);
         assert!((c.mean - 2.0).abs() < 1e-12);
-        // std = 1, half-width = 1.96/√3.
-        assert!((c.half95 - 1.96 / 3f64.sqrt()).abs() < 1e-12);
+        // std = 1, half-width = t_{0.975, df=2}/√3 = 4.303/√3.
+        assert!((c.half95 - 4.303 / 3f64.sqrt()).abs() < 1e-12);
+        // n = 2 (the CLI-typical --seeds 2): df = 1 needs t = 12.706,
+        // not the normal 1.96 that undercovered by 6.5×. Samples
+        // {1, 3}: std = √2, half-width = 12.706·√2/√2 = 12.706.
+        let two = MeanCi::from_samples([1.0, 3.0].into_iter());
+        assert_eq!(two.n, 2);
+        assert!((two.half95 - 12.706).abs() < 1e-12);
+        // Mid-size n rides the coarse t rows (df = 39 → 2.021), large
+        // n reaches the normal z.
+        let many = MeanCi::from_samples((0..40).map(|i| i as f64));
+        let mut s = RunningStats::new();
+        (0..40).for_each(|i| s.push(i as f64));
+        assert!(
+            (many.half95 - 2.021 * s.std() / 40f64.sqrt()).abs() < 1e-12
+        );
+        let huge = MeanCi::from_samples((0..200).map(|i| i as f64));
+        let mut s2 = RunningStats::new();
+        (0..200).for_each(|i| s2.push(i as f64));
+        assert!(
+            (huge.half95 - 1.96 * s2.std() / 200f64.sqrt()).abs() < 1e-12
+        );
         let single = MeanCi::from_samples([5.0].into_iter());
         assert_eq!(single.half95, 0.0);
+    }
+
+    #[test]
+    fn short_never_converged_run_keeps_a_stable_slice() {
+        // Regression: a 2-window never-converged run used to round
+        // len/2 through split_at's round→window mapping and get an
+        // *empty* stable slice — all-zero phase metrics silently
+        // poisoning summarize_seeds.
+        let mk = |n: usize| RunResult {
+            windows: (0..n).map(|_| window(50.0, 2.0, 0.03)).collect(),
+            finished: Vec::new(),
+            total_energy_j: 50.0 * n as f64,
+            duration_s: 1.0,
+            clock_changes: 0,
+            tuner: None,
+        };
+        for n in 1..=5 {
+            let r = mk(n);
+            let s = stable_windows(&r);
+            assert_eq!(
+                s.len(),
+                n - n / 2,
+                "stable slice of a {n}-window run must be the second half"
+            );
+            let m = phase_metrics(s);
+            assert!(
+                (m.energy_j.mean - 50.0).abs() < 1e-9,
+                "{n}-window run: stable metrics must not be zeroed"
+            );
+        }
+        // And summarize_seeds over 2-window runs carries real means.
+        let results = vec![
+            ("v#s0".to_string(), mk(2)),
+            ("v#s1".to_string(), mk(2)),
+        ];
+        let summary = summarize_seeds(&results);
+        assert!((summary[0].energy_j.mean - 50.0).abs() < 1e-9);
+        // A converged run still splits at the tuner's round.
+        let telemetry = |round: u64| {
+            Some(crate::tuner::governors::TunerTelemetry {
+                converged_round: Some(round),
+                ..Default::default()
+            })
+        };
+        let mut conv = mk(10);
+        conv.tuner = telemetry(3);
+        assert_eq!(stable_windows(&conv).len(), 6);
+        // Convergence on the final window leaves no post-convergence
+        // windows — the second-half fallback stands in, never an
+        // empty (all-zero-metrics) slice.
+        let mut late = mk(10);
+        late.tuner = telemetry(9);
+        assert_eq!(stable_windows(&late).len(), 5);
+        assert!(phase_metrics(stable_windows(&late)).energy_j.mean > 0.0);
+        let mut past = mk(4);
+        past.tuner = telemetry(40);
+        assert_eq!(stable_windows(&past).len(), 2);
     }
 
     #[test]

@@ -7,7 +7,10 @@ use std::path::{Path, PathBuf};
 
 use crate::util::csv::CsvWriter;
 
-use super::phases::{MeanCi, PhaseComparison, SeedSummary};
+use super::harness::RunResult;
+use super::phases::{
+    phase_metrics, stable_windows, MeanCi, PhaseComparison, SeedSummary,
+};
 
 /// Render a fixed-width text table.
 pub fn render_table(title: &str, header: &[&str], rows: &[Vec<String>]) -> String {
@@ -192,6 +195,68 @@ pub fn render_seeded_sweep(
     )
 }
 
+/// CSV header of [`grid_results_csv`]: one row per grid leg, keyed by
+/// the leg's position in the *full* grid so round-robin shard files
+/// merge back (`util::csv::merge_keyed`) into the single-process
+/// document. Carries both halves of the governor-matrix report —
+/// stable-phase window means and whole-run totals — so every `--seeds`
+/// table can be rebuilt from the merged file alone.
+pub const GRID_CSV_HEADER: [&str; 13] = [
+    "leg",
+    "label",
+    "seed",
+    "stable_energy_j",
+    "stable_edp",
+    "stable_ttft_s",
+    "stable_tpot_s",
+    "stable_e2e_s",
+    "total_energy_j",
+    "total_edp",
+    "mean_ttft_s",
+    "mean_tpot_s",
+    "clock_changes",
+];
+
+/// One row of [`grid_results_csv`]: a leg's position in the full grid
+/// (the merge key), its label, its seed, and its run.
+pub struct GridCsvRow<'a> {
+    pub index: usize,
+    pub label: &'a str,
+    pub seed: u64,
+    pub run: &'a RunResult,
+}
+
+/// Render per-leg grid results as CSV. Floats use Rust's
+/// shortest-roundtrip formatting, so the text is exactly as
+/// deterministic as the runs themselves — the byte-identity contract
+/// of `--shard` + merge for compare/ablation grids, mirroring
+/// [`crate::experiment::sweep::sweep_points_csv`].
+pub fn grid_results_csv(rows: &[GridCsvRow]) -> String {
+    let (mut w, buf) = CsvWriter::in_memory(&GRID_CSV_HEADER)
+        .expect("in-memory csv");
+    for r in rows {
+        let m = phase_metrics(stable_windows(r.run));
+        w.row(&[
+            r.index.to_string(),
+            r.label.to_string(),
+            r.seed.to_string(),
+            m.energy_j.mean.to_string(),
+            m.edp.mean.to_string(),
+            m.ttft.mean.to_string(),
+            m.tpot.mean.to_string(),
+            m.e2e.mean.to_string(),
+            r.run.total_energy_j.to_string(),
+            r.run.total_edp().to_string(),
+            r.run.mean_ttft().to_string(),
+            r.run.mean_tpot().to_string(),
+            r.run.clock_changes.to_string(),
+        ])
+        .expect("in-memory csv row");
+    }
+    w.flush().expect("in-memory csv flush");
+    buf.contents()
+}
+
 /// Ensure `results/` exists and return the CSV path for a bench.
 pub fn results_path(name: &str) -> PathBuf {
     let dir = Path::new("results");
@@ -344,6 +409,34 @@ mod tests {
         assert!(text.contains("900"));
         assert!(text.contains("±"), "{text}");
         assert!(text.contains("1.000e3 ± 3.0e1"), "{text}");
+    }
+
+    #[test]
+    fn grid_csv_rows_carry_stable_and_total_columns() {
+        let run = RunResult {
+            windows: (0..4).map(|_| window(100.0)).collect(),
+            finished: Vec::new(),
+            total_energy_j: 400.0,
+            duration_s: 3.2,
+            clock_changes: 7,
+            tuner: None,
+        };
+        let rows = [GridCsvRow {
+            index: 3,
+            label: "agft#s1",
+            seed: 43,
+            run: &run,
+        }];
+        let text = grid_results_csv(&rows);
+        let (hdr, parsed) = crate::util::csv::parse(&text).unwrap();
+        assert_eq!(hdr, GRID_CSV_HEADER.to_vec());
+        assert_eq!(parsed.len(), 1);
+        assert_eq!(parsed[0][0], "3");
+        assert_eq!(parsed[0][1], "agft#s1");
+        assert_eq!(parsed[0][2], "43");
+        assert_eq!(parsed[0][3].parse::<f64>().unwrap(), 100.0);
+        assert_eq!(parsed[0][8].parse::<f64>().unwrap(), 400.0);
+        assert_eq!(parsed[0][12], "7");
     }
 
     #[test]

@@ -250,13 +250,12 @@ pub fn parse_shard(spec: &str) -> Result<(usize, usize), String> {
 /// latency bill), so striding balances wall-clock across shard
 /// processes. The union over `k = 1..=n` is exactly the input grid, so
 /// sharded + merged output is byte-identical to a single-process run.
+///
+/// Thin frequency-typed wrapper over the generic grid partition
+/// [`super::orchestrator::shard_grid`] — one striding rule for every
+/// shardable grid in the repo.
 pub fn shard_freqs(freqs: &[u32], k: usize, n: usize) -> Vec<u32> {
-    freqs
-        .iter()
-        .enumerate()
-        .filter(|(i, _)| i % n == k - 1)
-        .map(|(_, &f)| f)
-        .collect()
+    super::orchestrator::shard_grid(freqs, k, n)
 }
 
 /// CSV header of [`sweep_points_csv`].
@@ -284,56 +283,62 @@ pub fn sweep_points_csv(points: &[SweepPoint]) -> String {
     buf.contents()
 }
 
+/// CSV header of [`seeded_sweep_points_csv`].
+pub const SEEDED_SWEEP_CSV_HEADER: [&str; 10] = [
+    "mhz",
+    "seeds",
+    "energy_j_mean",
+    "energy_j_half95",
+    "delay_s_mean",
+    "delay_s_half95",
+    "edp_mean",
+    "edp_half95",
+    "ttft_s_mean",
+    "ttft_s_half95",
+];
+
+/// Render a seeded sweep's per-frequency `mean ± 95 % CI` columns as
+/// CSV (shortest-roundtrip floats, like [`sweep_points_csv`]). Each
+/// frequency's statistics are computed from that frequency's seed
+/// replicas alone, so per-frequency shards emit byte-identical rows
+/// and `--shard K/N --out` + `merge-csv` reconstructs the
+/// single-process document exactly — `--out` no longer rejects
+/// `--seeds`.
+pub fn seeded_sweep_points_csv(points: &[SeededSweepPoint]) -> String {
+    let (mut w, buf) =
+        crate::util::csv::CsvWriter::in_memory(&SEEDED_SWEEP_CSV_HEADER)
+            .expect("in-memory csv");
+    for p in points {
+        w.row(&[
+            p.freq_mhz.to_string(),
+            p.edp.n.to_string(),
+            p.energy_j.mean.to_string(),
+            p.energy_j.half95.to_string(),
+            p.delay_s.mean.to_string(),
+            p.delay_s.half95.to_string(),
+            p.edp.mean.to_string(),
+            p.edp.half95.to_string(),
+            p.mean_ttft.mean.to_string(),
+            p.mean_ttft.half95.to_string(),
+        ])
+        .expect("in-memory csv row");
+    }
+    w.flush().expect("in-memory csv flush");
+    buf.contents()
+}
+
 /// Merge per-shard sweep CSVs back into one document ordered by
 /// ascending MHz (the order a single-process sweep over an ascending
 /// grid emits, hence byte-identical to it). Headers must agree across
 /// shards; the first column must be an integer MHz; duplicate
 /// frequencies are rejected — they mean two shards ran overlapping
-/// grids.
+/// grids. Delegates to the hardened keyed merge
+/// ([`crate::util::csv::merge_keyed`]) shared with the
+/// experiment-grid CSV path: ragged or truncated shard files are a
+/// proper error (the old in-line merge indexed `row[0]` unchecked) and
+/// duplicate detection is a `HashSet` probe instead of an O(n²) scan.
 pub fn merge_sweep_csv(texts: &[String]) -> Result<String, String> {
-    if texts.is_empty() {
-        return Err("merge-csv: no input files".to_string());
-    }
-    let mut header: Option<Vec<String>> = None;
-    let mut rows: Vec<(u32, Vec<String>)> = Vec::new();
-    for (i, text) in texts.iter().enumerate() {
-        let (hdr, shard_rows) = crate::util::csv::parse(text)
-            .map_err(|e| format!("merge-csv input {}: {e}", i + 1))?;
-        match &header {
-            None => header = Some(hdr),
-            Some(h) if *h == hdr => {}
-            Some(h) => {
-                return Err(format!(
-                    "merge-csv input {}: header {hdr:?} != {h:?}",
-                    i + 1
-                ))
-            }
-        }
-        for row in shard_rows {
-            let mhz = row[0].parse::<u32>().map_err(|e| {
-                format!("merge-csv input {}: bad mhz {:?}: {e}", i + 1, row[0])
-            })?;
-            if rows.iter().any(|(m, _)| *m == mhz) {
-                return Err(format!(
-                    "merge-csv: duplicate frequency {mhz} — overlapping \
-                     shards?"
-                ));
-            }
-            rows.push((mhz, row));
-        }
-    }
-    rows.sort_by_key(|(mhz, _)| *mhz);
-    let header = header.expect("non-empty input checked above");
-    let header_refs: Vec<&str> =
-        header.iter().map(|s| s.as_str()).collect();
-    let (mut w, buf) =
-        crate::util::csv::CsvWriter::in_memory(&header_refs)
-            .expect("in-memory csv");
-    for (_, row) in &rows {
-        w.row(row).expect("in-memory csv row");
-    }
-    w.flush().expect("in-memory csv flush");
-    Ok(buf.contents())
+    crate::util::csv::merge_keyed(texts, "merge-csv")
 }
 
 #[cfg(test)]
@@ -488,6 +493,56 @@ mod tests {
         let (hdr, rows) = crate::util::csv::parse(&merged).unwrap();
         assert_eq!(hdr, SWEEP_CSV_HEADER.to_vec());
         assert_eq!(rows.len(), freqs.len());
+    }
+
+    #[test]
+    fn seeded_sharded_sweep_merges_byte_identical() {
+        // --out no longer rejects --seeds: per-frequency MeanCi rows
+        // shard cleanly because each is computed from that frequency's
+        // seed replicas alone.
+        let base = cfg("normal");
+        let freqs = [600u32, 1200, 1800];
+        let exec = Executor::new();
+        let full =
+            edp_sweep_seeded(&base, &freqs, 2, &exec).unwrap();
+        let full_csv = seeded_sweep_points_csv(&full.points);
+        let shard_csvs: Vec<String> = (1..=2)
+            .map(|k| {
+                let shard = shard_freqs(&freqs, k, 2);
+                let r =
+                    edp_sweep_seeded(&base, &shard, 2, &exec).unwrap();
+                seeded_sweep_points_csv(&r.points)
+            })
+            .collect();
+        let merged = merge_sweep_csv(&shard_csvs).unwrap();
+        assert_eq!(merged, full_csv, "seeded shards drifted bytewise");
+        let (hdr, rows) = crate::util::csv::parse(&merged).unwrap();
+        assert_eq!(hdr, SEEDED_SWEEP_CSV_HEADER.to_vec());
+        assert_eq!(rows.len(), freqs.len());
+        assert_eq!(rows[0][1], "2", "seeds column");
+    }
+
+    #[test]
+    fn merge_rejects_ragged_and_truncated_shards() {
+        // Regression: a truncated/ragged shard file used to panic
+        // inside the merge (`row[0]` on mismatched rows); it must be a
+        // clean error naming the input.
+        let good = sweep_points_csv(&[SweepPoint {
+            freq_mhz: 300,
+            energy_j: 1.0,
+            delay_s: 2.0,
+            edp: 2.0,
+            mean_ttft: 0.05,
+            mean_tpot: 0.01,
+        }]);
+        let truncated =
+            "mhz,energy_j,delay_s,edp,ttft_s,tpot_s\n600,1,2\n"
+                .to_string();
+        let err =
+            merge_sweep_csv(&[good.clone(), truncated]).unwrap_err();
+        assert!(err.contains("input 2"), "{err}");
+        // Entirely empty shard file.
+        assert!(merge_sweep_csv(&[good, String::new()]).is_err());
     }
 
     #[test]

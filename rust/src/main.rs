@@ -3,9 +3,12 @@
 //! ```text
 //! agft serve       --workload normal --governor agft --duration 600
 //! agft compare     --governors agft,ondemand,slo,bandit,default --seeds 5
+//! agft compare     --shard 1/4 --out shard1.csv    (grid partitioning)
 //! agft sweep       --workload normal --step 45 --duration 240
 //! agft sweep       --shard 1/4 --out shard1.csv   (grid partitioning)
 //! agft merge-csv   shard1.csv shard2.csv --out merged.csv
+//! agft orchestrate --cmd compare --governors agft,default --seeds 2 \
+//!                  --procs 2 --out merged.csv     (shard supervisor)
 //! agft longrun     --hours 12 --rps 2.0
 //! agft fingerprint --duration 400
 //! agft ablation    --which grain|pruning
@@ -21,23 +24,30 @@ use agft::config::{
     self, ExperimentConfig, GovernorKind, WorkloadKind,
 };
 use agft::experiment::executor::Executor;
-use agft::experiment::harness::{run_experiment, run_pair_with};
+use agft::experiment::harness::{run_experiment, RunResult};
+use agft::experiment::orchestrator;
 use agft::experiment::phases::{
-    grain_ablation_variant, learning_and_stable, phase_metrics,
-    pruning_ablation_variant, run_grid_with, seed_grid, stable_windows,
+    governor_seed_grid, grain_ablation_variant, learning_and_stable,
+    phase_metrics, pruning_ablation_variant, run_governors_seeded,
+    run_grid_with, seed_grid, stable_windows, summarize_run_totals,
     summarize_seeds, PhaseComparison,
 };
 use agft::experiment::report::{self, render_comparison};
-use agft::experiment::sweep::edp_sweep_with;
+use agft::experiment::sweep::{edp_sweep_with, parse_shard};
 use agft::gpu::FreqTable;
 use agft::util::cli::Args;
 use agft::workload::{self, trace};
 
 /// `--workers N` (default: AGFT_WORKERS env or available parallelism).
+/// Validated by the same rule as AGFT_WORKERS — zero or garbage is a
+/// typed error, never a silent clamp to one worker.
 fn executor_from(args: &Args) -> Result<Executor, String> {
     Ok(match args.get("workers") {
         None => Executor::new(),
-        Some(_) => Executor::with_workers(args.get_usize("workers", 0)?),
+        Some(w) => Executor::with_workers(
+            agft::experiment::executor::parse_workers(w)
+                .map_err(|e| format!("--workers: {e}"))?,
+        ),
     })
 }
 
@@ -85,43 +95,151 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
+/// The governor axis of a compare grid: `--governors a,b,c` (the full
+/// baseline matrix), or the historical AGFT-vs-default pair.
+fn compare_kinds(args: &Args) -> Result<Vec<GovernorKind>, String> {
+    match args.get("governors") {
+        Some(list) => {
+            if args.get("governor").is_some() {
+                return Err(
+                    "--governor conflicts with --governors (the list \
+                     already names every leg)"
+                        .to_string(),
+                );
+            }
+            config::schema::parse_governor_list(list)
+        }
+        None => Ok(vec![GovernorKind::Agft, GovernorKind::Default]),
+    }
+}
+
+/// A sharded grid run's product: which shard ran (if any) and the
+/// labelled per-leg results.
+struct GridRun {
+    shard: Option<(usize, usize)>,
+    labeled: Vec<(String, RunResult)>,
+}
+
+/// The shard/run/CSV plumbing shared by `cmd_compare` and
+/// `cmd_ablation`: apply `--shard K/N` (round-robin legs keyed by
+/// full-grid index), run the legs (`run_full` is the full-grid
+/// stream-shared fast path; shards realize per leg — bitwise the same
+/// results), and write the `--out` per-leg results CSV, whose merged
+/// shards are byte-identical to the single-process document.
+///
+/// Returns `None` when an empty shard was satisfied with a header-only
+/// CSV: the orchestrator may over-shard a small grid (`--shards` >
+/// legs), and an empty shard whose product is a CSV is a valid no-op
+/// that merges cleanly — only a shard with no `--out` to write has
+/// nothing useful to do and errors.
+fn run_sharded_grid(
+    args: &Args,
+    grid: &[(String, ExperimentConfig)],
+    what: &str,
+    detail: &str,
+    run_full: impl FnOnce(&Executor) -> Result<Vec<RunResult>, String>,
+) -> Result<Option<GridRun>, String> {
+    let shard = args.get("shard").map(parse_shard).transpose()?;
+    let mut legs = orchestrator::index_grid(grid);
+    if let Some((k, n)) = shard {
+        legs = orchestrator::shard_grid(&legs, k, n);
+        if legs.is_empty() {
+            let Some(out) = args.get("out") else {
+                return Err(format!(
+                    "{what} shard holds no grid legs (K exceeds the \
+                     grid?)"
+                ));
+            };
+            let csv = orchestrator::legs_results_csv(&[], &[]);
+            std::fs::write(out, &csv)
+                .map_err(|e| format!("{out}: {e}"))?;
+            eprintln!(
+                "shard {k}/{n} holds no {what} legs (grid has only {}); \
+                 wrote a header-only CSV to {out}",
+                grid.len(),
+            );
+            return Ok(None);
+        }
+    }
+    let exec = executor_from(args)?;
+    eprintln!(
+        "running {} of {} {what} legs ({detail}) in parallel ...",
+        legs.len(),
+        grid.len(),
+    );
+    let results: Vec<RunResult> = if shard.is_none() {
+        run_full(&exec)?
+    } else {
+        orchestrator::run_legs(&legs, &exec)?
+    };
+    if let Some(out) = args.get("out") {
+        let csv = orchestrator::legs_results_csv(&legs, &results);
+        std::fs::write(out, &csv).map_err(|e| format!("{out}: {e}"))?;
+        eprintln!("wrote {} grid rows to {out}", legs.len());
+    }
+    let labeled = legs
+        .iter()
+        .map(|l| l.label.clone())
+        .zip(results)
+        .collect();
+    Ok(Some(GridRun { shard, labeled }))
+}
+
 fn cmd_compare(args: &Args) -> Result<(), String> {
     let cfg = base_config(args)?;
-    // `--seeds N` replicates the AGFT/default pair across N consecutive
+    // `--seeds N` replicates every governor leg across N consecutive
     // seeds (whole governor × seed grid fanned out at once) and reports
     // stable-phase mean ± 95 % CI columns instead of the single-seed
-    // learning/stable tables.
+    // learning/stable tables. `--governors a,b,c` widens the axis to
+    // the full baseline matrix and adds the run-totals table.
     let seeds = args.get_u64("seeds", 1)?;
     if seeds == 0 {
         return Err("--seeds 0: need at least one replica".to_string());
     }
-    // `--governors a,b,c` runs the full baseline matrix: every listed
-    // policy replays the identical per-seed request stream and the
-    // report carries one column per governor (stable-phase window
-    // means) plus a run-totals table (total energy/EDP, latencies,
-    // clock switches).
-    if let Some(list) = args.get("governors") {
-        if args.get("governor").is_some() {
-            return Err(
-                "--governor conflicts with --governors (the list already \
-                 names every leg)"
-                    .to_string(),
+    let matrix = args.get("governors").is_some();
+    let kinds = compare_kinds(args)?;
+    let grid = governor_seed_grid(&cfg, &kinds, seeds);
+    let Some(GridRun { shard, labeled }) = run_sharded_grid(
+        args,
+        &grid,
+        "compare",
+        &format!("{} governors x {seeds} seeds", kinds.len()),
+        // Full grid: the stream-shared fast path (one realized stream
+        // per seed across every governor leg).
+        |exec| {
+            Ok(run_governors_seeded(&cfg, &kinds, seeds, exec)?
+                .into_iter()
+                .map(|(_, r)| r)
+                .collect())
+        },
+    )?
+    else {
+        return Ok(());
+    };
+    if shard.is_some() {
+        eprintln!(
+            "note: tables below cover only this shard's legs; merge the \
+             shard CSVs (agft merge-csv) for the full grid"
+        );
+        println!(
+            "{}",
+            report::render_seed_summary(
+                "compare shard (stable phase, mean ± 95 % CI)",
+                &summarize_seeds(&labeled),
+            )
+        );
+        if matrix {
+            println!(
+                "{}",
+                report::render_run_totals(
+                    "compare shard (run totals)",
+                    &summarize_run_totals(&labeled),
+                )
             );
         }
-        let kinds = config::schema::parse_governor_list(list)?;
-        eprintln!(
-            "running {}-leg governor matrix ({} governors x {seeds} \
-             seeds) in parallel ...",
-            kinds.len() as u64 * seeds,
-            kinds.len(),
-        );
-        let results = agft::experiment::phases::run_governors_seeded(
-            &cfg,
-            &kinds,
-            seeds,
-            &executor_from(args)?,
-        )?;
-        let summary = summarize_seeds(&results);
+        return Ok(());
+    }
+    if matrix {
         println!(
             "{}",
             report::render_seed_summary(
@@ -129,32 +247,19 @@ fn cmd_compare(args: &Args) -> Result<(), String> {
                     "governor matrix (stable phase, {seeds} seeds, \
                      mean ± 95 % CI)"
                 ),
-                &summary,
+                &summarize_seeds(&labeled),
             )
         );
-        let totals =
-            agft::experiment::phases::summarize_run_totals(&results);
         println!(
             "{}",
             report::render_run_totals(
                 &format!("governor matrix (run totals, {seeds} seeds)"),
-                &totals,
+                &summarize_run_totals(&labeled),
             )
         );
         return Ok(());
     }
     if seeds > 1 {
-        eprintln!(
-            "running {}-leg comparison grid (2 governors x {seeds} \
-             seeds) in parallel ...",
-            2 * seeds,
-        );
-        let results = agft::experiment::phases::run_compare_seeded(
-            &cfg,
-            seeds,
-            &executor_from(args)?,
-        )?;
-        let summary = summarize_seeds(&results);
         println!(
             "{}",
             report::render_seed_summary(
@@ -162,19 +267,21 @@ fn cmd_compare(args: &Args) -> Result<(), String> {
                     "AGFT vs default (stable phase, {seeds} seeds, \
                      mean ± 95 % CI)"
                 ),
-                &summary,
+                &summarize_seeds(&labeled),
             )
         );
         return Ok(());
     }
-    let (agft, base) = run_pair_with(&cfg, &executor_from(args)?)?;
+    // Single-seed pair: legs are [agft, default] in grid order.
+    let agft_run = &labeled[0].1;
+    let base = &labeled[1].1;
     println!(
         "energy: AGFT {:.0} J vs default {:.0} J ({:+.1} %)",
-        agft.total_energy_j,
+        agft_run.total_energy_j,
         base.total_energy_j,
-        (agft.total_energy_j / base.total_energy_j - 1.0) * 100.0
+        (agft_run.total_energy_j / base.total_energy_j - 1.0) * 100.0
     );
-    let (learning, stable) = learning_and_stable(&agft, &base);
+    let (learning, stable) = learning_and_stable(agft_run, base);
     println!("{}", render_comparison("learning phase", &learning));
     println!("{}", render_comparison("stable phase", &stable));
     Ok(())
@@ -203,7 +310,7 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
     let sharded = args.get("shard").is_some();
     let freqs = match args.get("shard") {
         Some(spec) => {
-            let (k, n) = agft::experiment::sweep::parse_shard(spec)?;
+            let (k, n) = parse_shard(spec)?;
             let shard =
                 agft::experiment::sweep::shard_freqs(&freqs, k, n);
             eprintln!(
@@ -215,12 +322,6 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
         }
         None => freqs,
     };
-    if freqs.is_empty() {
-        return Err(
-            "sweep shard holds no grid points (K exceeds the grid?)"
-                .to_string(),
-        );
-    }
     // `--seeds N`: every frequency is replicated across N consecutive
     // seeds and the EDP columns carry mean ± 95 % CI (the curve the
     // whole frequency × seed matrix fans out on the executor at once).
@@ -228,14 +329,31 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
     if seeds == 0 {
         return Err("--seeds 0: need at least one replica".to_string());
     }
-    if seeds > 1 {
-        if args.get("out").is_some() {
-            return Err(
-                "--out CSV sharding is single-seed (drop --seeds or \
-                 --out)"
-                    .to_string(),
+    if freqs.is_empty() {
+        // The orchestrator may over-shard a short grid; an empty shard
+        // whose product is a CSV is a valid no-op — emit a header-only
+        // document that merges cleanly. Without --out there is nothing
+        // useful to do.
+        if let (true, Some(out)) = (sharded, args.get("out")) {
+            let csv = if seeds > 1 {
+                agft::experiment::sweep::seeded_sweep_points_csv(&[])
+            } else {
+                agft::experiment::sweep::sweep_points_csv(&[])
+            };
+            std::fs::write(out, &csv)
+                .map_err(|e| format!("{out}: {e}"))?;
+            eprintln!(
+                "shard holds no grid points; wrote a header-only CSV \
+                 to {out}"
             );
+            return Ok(());
         }
+        return Err(
+            "sweep shard holds no grid points (K exceeds the grid?)"
+                .to_string(),
+        );
+    }
+    if seeds > 1 {
         eprintln!(
             "sweeping {} locked-clock points x {seeds} seeds on {} \
              workers ...",
@@ -245,6 +363,20 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
         let sweep = agft::experiment::sweep::edp_sweep_seeded(
             &cfg, &freqs, seeds, &exec,
         )?;
+        // Per-frequency mean ± CI rows shard cleanly (each is computed
+        // from that frequency's seed replicas alone), so --out works
+        // with --seeds and shard CSVs merge byte-identically.
+        if let Some(out) = args.get("out") {
+            let csv = agft::experiment::sweep::seeded_sweep_points_csv(
+                &sweep.points,
+            );
+            std::fs::write(out, &csv)
+                .map_err(|e| format!("{out}: {e}"))?;
+            eprintln!(
+                "wrote {} seeded sweep rows to {out}",
+                sweep.points.len()
+            );
+        }
         println!("{}", report::render_seeded_sweep("EDP(f) sweep", &sweep));
         if sharded {
             eprintln!(
@@ -324,7 +456,10 @@ fn cmd_merge_csv(args: &Args) -> Result<(), String> {
             std::fs::read_to_string(p).map_err(|e| format!("{p}: {e}"))
         })
         .collect::<Result<_, String>>()?;
-    let merged = agft::experiment::sweep::merge_sweep_csv(&texts)?;
+    // The keyed merge covers every shardable CSV in the repo: sweep
+    // points (mhz-keyed), seeded sweep points, and compare/ablation
+    // grid rows (leg-index-keyed).
+    let merged = agft::util::csv::merge_keyed(&texts, "merge-csv")?;
     std::fs::write(&out, &merged).map_err(|e| format!("{out}: {e}"))?;
     println!(
         "merged {} shard files ({} rows) into {out}",
@@ -364,7 +499,12 @@ fn cmd_fingerprint(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
-fn cmd_ablation(args: &Args) -> Result<(), String> {
+/// The labelled variant grid of an `agft ablation` run (`full` + the
+/// `--which` variant) — shared by `cmd_ablation` and the
+/// orchestrator's manifest writer.
+fn ablation_grid(
+    args: &Args,
+) -> Result<Vec<(String, ExperimentConfig)>, String> {
     let which = args.get_str("which", "grain");
     let mut base = base_config(args)?;
     // The ablation compares AGFT tuner variants, so the governor is not
@@ -394,6 +534,12 @@ fn cmd_ablation(args: &Args) -> Result<(), String> {
             ))
         }
     }
+    Ok(grid)
+}
+
+fn cmd_ablation(args: &Args) -> Result<(), String> {
+    let which = args.get_str("which", "grain");
+    let grid = ablation_grid(args)?;
     // `--seeds N` replicates every variant across N consecutive seeds;
     // the whole variant × seed grid fans out on the executor at once and
     // the report gains mean ± 95 % CI columns.
@@ -402,16 +548,42 @@ fn cmd_ablation(args: &Args) -> Result<(), String> {
         return Err("--seeds 0: need at least one replica".to_string());
     }
     let run_grid_spec = seed_grid(&grid, seeds);
-    eprintln!(
-        "running {}-leg ablation grid ({} variants x {} seeds) in \
-         parallel ...",
-        run_grid_spec.len(),
-        grid.len(),
-        seeds,
-    );
-    let results = run_grid_with(&run_grid_spec, &executor_from(args)?)?;
+    // `--shard K/N` + `--out`: same grid-sharding contract as compare
+    // (round-robin legs keyed by full-grid index, byte-identical
+    // merge).
+    let Some(GridRun { shard, labeled }) = run_sharded_grid(
+        args,
+        &run_grid_spec,
+        "ablation",
+        &format!("{} variants x {seeds} seeds", grid.len()),
+        |exec| {
+            Ok(run_grid_with(&run_grid_spec, exec)?
+                .into_iter()
+                .map(|(_, r)| r)
+                .collect())
+        },
+    )?
+    else {
+        return Ok(());
+    };
+    if shard.is_some() {
+        eprintln!(
+            "note: the table below covers only this shard's legs; merge \
+             the shard CSVs (agft merge-csv) for the full grid"
+        );
+        println!(
+            "{}",
+            report::render_seed_summary(
+                &format!(
+                    "ablation shard: {which} (stable phase, mean ± \
+                     95 % CI)"
+                ),
+                &summarize_seeds(&labeled),
+            )
+        );
+        return Ok(());
+    }
     if seeds > 1 {
-        let summary = summarize_seeds(&results);
         println!(
             "{}",
             report::render_seed_summary(
@@ -419,14 +591,14 @@ fn cmd_ablation(args: &Args) -> Result<(), String> {
                     "ablation: {which} (stable phase, {seeds} seeds, \
                      mean ± 95 % CI)"
                 ),
-                &summary,
+                &summarize_seeds(&labeled),
             )
         );
         return Ok(());
     }
-    let (_, full) = &results[0];
+    let (_, full) = &labeled[0];
     let m_full = phase_metrics(stable_windows(full));
-    for (name, run) in &results[1..] {
+    for (name, run) in &labeled[1..] {
         let m_var = phase_metrics(stable_windows(run));
         let cmp = PhaseComparison::build(&m_var, &m_full);
         println!(
@@ -438,6 +610,149 @@ fn cmd_ablation(args: &Args) -> Result<(), String> {
             )
         );
     }
+    Ok(())
+}
+
+/// `agft orchestrate` — run a sharded grid as supervised `agft
+/// compare|ablation|sweep --shard k/n --out ...` child processes and
+/// merge their CSVs: the multi-process half of the job-server story
+/// (the ROADMAP item PR 4's in-process sharding left open). At most
+/// `--procs` children run concurrently, a failed or killed shard is
+/// retried once, status streams to stderr, and the merged document is
+/// byte-identical to the single-process run.
+fn cmd_orchestrate(args: &Args) -> Result<(), String> {
+    let cmd = args.get_str("cmd", "compare");
+    if !["compare", "ablation", "sweep"].contains(&cmd.as_str()) {
+        return Err(format!(
+            "orchestrate --cmd {cmd:?}: want compare|ablation|sweep"
+        ));
+    }
+    let procs = args.get_usize("procs", 2)?;
+    if procs == 0 {
+        return Err("--procs 0: need at least one process".to_string());
+    }
+    let shards = args.get_usize("shards", procs)?;
+    if shards == 0 {
+        return Err("--shards 0: need at least one shard".to_string());
+    }
+    let out = args
+        .get("out")
+        .ok_or("orchestrate: --out <merged.csv> required")?
+        .to_string();
+    let seeds = args.get_u64("seeds", 1)?;
+    if seeds == 0 {
+        return Err("--seeds 0: need at least one replica".to_string());
+    }
+    // `--manifest <file.csv>`: write the deterministic job list of the
+    // labelled grid (leg index, label, governor, workload, seed,
+    // duration, rps) for remote launchers and audit.
+    if let Some(path) = args.get("manifest") {
+        let grid = match cmd.as_str() {
+            "compare" => {
+                let cfg = base_config(args)?;
+                governor_seed_grid(&cfg, &compare_kinds(args)?, seeds)
+            }
+            "ablation" => seed_grid(&ablation_grid(args)?, seeds),
+            _ => {
+                return Err(
+                    "--manifest describes labelled grids \
+                     (compare|ablation), not sweep"
+                        .to_string(),
+                )
+            }
+        };
+        let legs = orchestrator::index_grid(&grid);
+        std::fs::write(path, orchestrator::grid_manifest_csv(&legs))
+            .map_err(|e| format!("{path}: {e}"))?;
+        eprintln!("wrote {}-leg manifest to {path}", legs.len());
+    }
+    // Child worker budget: an explicit --workers is forwarded verbatim
+    // (validated by the same rule as AGFT_WORKERS — zero or garbage is
+    // an error, not a silent clamp); otherwise the host's parallelism
+    // is split across the concurrent children so P shards don't
+    // oversubscribe the machine P-fold.
+    let workers = match args.get("workers") {
+        Some(w) => agft::experiment::executor::parse_workers(w)
+            .map_err(|e| format!("--workers: {e}"))?,
+        None => {
+            let cores = std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1);
+            // At most min(procs, shards) children ever run at once —
+            // dividing by a larger --procs would leave cores idle.
+            (cores / procs.min(shards)).max(1)
+        }
+    };
+    // `--agft-bin <path>` overrides the child binary (tests, remote
+    // images whose path differs); default is this very binary.
+    let exe = match args.get("agft-bin") {
+        Some(p) => p.to_string(),
+        None => std::env::current_exe()
+            .map_err(|e| format!("current_exe: {e}"))?
+            .to_str()
+            .ok_or("current_exe: non-UTF-8 path")?
+            .to_string(),
+    };
+    // `--launcher "ssh worker{k}"`: whitespace-split prefix prepended
+    // to every child argv, with {k}/{n} substituted — the configurable
+    // command template for remote shard launchers. The merge step
+    // reads each shard's --out from *this* host's filesystem, so
+    // remote launchers need shared storage mounted at the same path
+    // (and an absolute --out); see EXPERIMENTS.md §Orchestrated grids.
+    let prefix: Vec<String> = args
+        .get("launcher")
+        .map(|t| t.split_whitespace().map(String::from).collect())
+        .unwrap_or_default();
+    let mut forwarded: Vec<String> = Vec::new();
+    for key in [
+        "config", "workload", "governor", "governors", "seeds", "seed",
+        "duration", "rps", "step", "which",
+    ] {
+        if let Some(v) = args.get(key) {
+            forwarded.push(format!("--{key}"));
+            forwarded.push(v.to_string());
+        }
+    }
+    let jobs: Vec<orchestrator::ShardJob> = (1..=shards)
+        .map(|k| {
+            let shard_out = format!("{out}.shard{k}");
+            let mut argv: Vec<String> = prefix
+                .iter()
+                .map(|t| {
+                    t.replace("{k}", &k.to_string())
+                        .replace("{n}", &shards.to_string())
+                })
+                .collect();
+            argv.push(exe.clone());
+            argv.push(cmd.clone());
+            argv.extend(forwarded.iter().cloned());
+            argv.extend([
+                "--workers".to_string(),
+                workers.to_string(),
+                "--shard".to_string(),
+                format!("{k}/{shards}"),
+                "--out".to_string(),
+                shard_out.clone(),
+            ]);
+            orchestrator::ShardJob {
+                k,
+                argv,
+                out: shard_out.into(),
+            }
+        })
+        .collect();
+    eprintln!(
+        "orchestrate: {shards} `agft {cmd}` shard(s), {procs} \
+         concurrent, {workers} worker(s) each"
+    );
+    let texts = orchestrator::supervise(&jobs, procs)?;
+    let merged = agft::util::csv::merge_keyed(&texts, "orchestrate")?;
+    std::fs::write(&out, &merged).map_err(|e| format!("{out}: {e}"))?;
+    println!(
+        "orchestrate: merged {} shard(s) ({} rows) into {out}",
+        texts.len(),
+        merged.lines().count().saturating_sub(1),
+    );
     Ok(())
 }
 
@@ -472,15 +787,21 @@ fn cmd_metrics(args: &Args) -> Result<(), String> {
 
 fn usage() -> ! {
     eprintln!(
-        "usage: agft <serve|compare|sweep|merge-csv|ablation|fingerprint|\
-         trace-gen|metrics|bench-all> [options]\n\
+        "usage: agft <serve|compare|sweep|merge-csv|orchestrate|ablation|\
+         fingerprint|trace-gen|metrics|bench-all> [options]\n\
          common options: --config <toml> --workload <name> --governor \
          <default|agft|ondemand|slo|bandit|locked:MHZ> --duration S \
          --rps R --seed N --workers N\n\
          compare options: --governors a,b,c (baseline matrix, e.g. \
          agft,ondemand,slo,bandit,default)\n\
-         sweep sharding: --shard K/N --out shard.csv, then \
-         agft merge-csv shard*.csv --out merged.csv\n\
+         grid sharding: compare|ablation|sweep accept --shard K/N \
+         --out shard.csv, then agft merge-csv shard*.csv --out \
+         merged.csv\n\
+         orchestrate options: --cmd compare|ablation|sweep --procs P \
+         --shards N --out merged.csv [--manifest legs.csv] [--launcher \
+         \"ssh worker{{k}}\"] [--agft-bin path] + the sharded command's \
+         own flags (spawns the shard processes, retries a failed shard \
+         once, merges on completion)\n\
          ablation options: --which grain|pruning\n\
          multi-seed: compare|sweep|ablation accept --seeds N (mean ± \
          95 % CI over N seed replicas)\n\
@@ -507,6 +828,7 @@ fn main() {
         "compare" | "longrun" => cmd_compare(&args),
         "sweep" => cmd_sweep(&args),
         "merge-csv" => cmd_merge_csv(&args),
+        "orchestrate" => cmd_orchestrate(&args),
         "ablation" => cmd_ablation(&args),
         "fingerprint" => cmd_fingerprint(&args),
         "trace-gen" => cmd_trace_gen(&args),

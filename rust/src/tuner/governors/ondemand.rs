@@ -44,12 +44,18 @@ impl OndemandGovernor {
         }
     }
 
-    /// The window's busy fraction in `[0, 1]`.
-    fn utilization(delta_idle_s: f64, dt_s: f64) -> f64 {
+    /// The window's busy fraction in `[0, 1]`, or `None` for a
+    /// zero-width window (a run ending exactly on a window boundary
+    /// scrapes twice at the same instant). A signal-free window must
+    /// *hold* the clock — mapping it to utilization 0 used to read as
+    /// "idle" and spuriously step the clock down, the same
+    /// no-signal-no-decision convention the SLO governor applies to
+    /// completion-free windows.
+    fn utilization(delta_idle_s: f64, dt_s: f64) -> Option<f64> {
         if dt_s <= 0.0 {
-            return 0.0;
+            return None;
         }
-        (1.0 - delta_idle_s / dt_s).clamp(0.0, 1.0)
+        Some((1.0 - delta_idle_s / dt_s).clamp(0.0, 1.0))
     }
 }
 
@@ -68,7 +74,7 @@ impl Governor for OndemandGovernor {
     ) -> Option<ClockDecision> {
         let prev = self.last_snap.replace(obs.snapshot)?;
         let d = obs.snapshot.delta(&prev);
-        let util = Self::utilization(d.idle_time_s, d.dt_s);
+        let util = Self::utilization(d.idle_time_s, d.dt_s)?;
         let target = if util >= self.cfg.up_threshold {
             self.table.max_mhz()
         } else if util <= self.cfg.down_threshold {
@@ -165,6 +171,36 @@ mod tests {
         let _ = g.observe_window(&window(&mut snap, 0.0));
         let d = g.observe_window(&window(&mut snap, 0.0)).unwrap();
         assert_eq!(d.freq_mhz, 1800 - 15);
+    }
+
+    #[test]
+    fn zero_width_window_holds_instead_of_stepping_down() {
+        // Regression: a run ending exactly on a window boundary scrapes
+        // a zero-width final window; utilization 0 used to read as
+        // "idle" and spuriously step the clock down. No signal → no
+        // decision, matching the SLO governor's convention.
+        let mut g = governor();
+        let mut snap = MetricsSnapshot::default();
+        let _ = g.observe_window(&window(&mut snap, 0.5));
+        let held = g
+            .observe_window(&window(&mut snap, 0.5))
+            .unwrap()
+            .freq_mhz;
+        // Zero-width window: the snapshot does not advance at all.
+        let frozen = WindowObservation {
+            snapshot: snap,
+            ttft_mean: None,
+            tpot_mean: None,
+            e2e_mean: None,
+        };
+        assert!(
+            g.observe_window(&frozen).is_none(),
+            "zero-width window must hold, not decide"
+        );
+        assert_eq!(g.telemetry().unwrap().freq_log.len(), 1);
+        // The governor keeps working on the next real window.
+        let d = g.observe_window(&window(&mut snap, 0.5)).unwrap();
+        assert_eq!(d.freq_mhz, held);
     }
 
     #[test]

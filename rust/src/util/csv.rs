@@ -138,6 +138,89 @@ fn split_row(line: &str) -> Result<Vec<String>, String> {
     Ok(cells)
 }
 
+/// Merge several CSV documents sharing one header and a unique integer
+/// key in the first column into a single document sorted by ascending
+/// key — the shard-merge primitive behind both the frequency-sweep and
+/// the experiment-grid CSV contracts (`agft merge-csv` /
+/// `agft orchestrate`). Guarantees:
+///
+/// * headers must agree bytewise across inputs (tool-version drift is
+///   an error, not silent data corruption);
+/// * every row's width is validated against the header, so ragged or
+///   truncated shard files surface as errors instead of panics;
+/// * duplicate keys are rejected (two shards ran overlapping grids),
+///   detected via a `HashSet` in O(rows) rather than a quadratic scan;
+/// * output rows are re-emitted through [`CsvWriter`] with the same
+///   escaping the shards used, so merging shard files produced by this
+///   crate is byte-identical to the single-process document.
+///
+/// `ctx` prefixes every error (e.g. `"merge-csv"`, `"orchestrate"`).
+pub fn merge_keyed(texts: &[String], ctx: &str) -> Result<String, String> {
+    if texts.is_empty() {
+        return Err(format!("{ctx}: no input files"));
+    }
+    let mut header: Option<Vec<String>> = None;
+    let mut rows: Vec<(u64, Vec<String>)> = Vec::new();
+    let mut seen: std::collections::HashSet<u64> =
+        std::collections::HashSet::new();
+    for (i, text) in texts.iter().enumerate() {
+        let (hdr, shard_rows) = parse(text)
+            .map_err(|e| format!("{ctx} input {}: {e}", i + 1))?;
+        if hdr.iter().all(|c| c.trim().is_empty()) {
+            return Err(format!("{ctx} input {}: empty header", i + 1));
+        }
+        match &header {
+            None => header = Some(hdr),
+            Some(h) if *h == hdr => {}
+            Some(h) => {
+                return Err(format!(
+                    "{ctx} input {}: header {hdr:?} != {h:?}",
+                    i + 1
+                ))
+            }
+        }
+        let width = header.as_ref().expect("just set").len();
+        for (j, row) in shard_rows.into_iter().enumerate() {
+            // `parse` validates widths already; re-check so this helper
+            // stays panic-free whatever parser fed it.
+            if row.is_empty() || row.len() != width {
+                return Err(format!(
+                    "{ctx} input {}: row {} has {} cells, header has \
+                     {width}",
+                    i + 1,
+                    j + 2,
+                    row.len(),
+                ));
+            }
+            let key = row[0].parse::<u64>().map_err(|e| {
+                format!("{ctx} input {}: bad key {:?}: {e}", i + 1, row[0])
+            })?;
+            if !seen.insert(key) {
+                return Err(format!(
+                    "{ctx}: duplicate key {key} — overlapping shards?"
+                ));
+            }
+            rows.push((key, row));
+        }
+    }
+    rows.sort_by_key(|(key, _)| *key);
+    let header = header.expect("non-empty input checked above");
+    // `CsvWriter` joins the header verbatim (its callers pass literal
+    // column names), but this header was *parsed* — re-escape cells so
+    // a quoted header cell round-trips instead of silently widening
+    // the merged header.
+    let escaped: Vec<String> = header.iter().map(|s| escape(s)).collect();
+    let header_refs: Vec<&str> =
+        escaped.iter().map(|s| s.as_str()).collect();
+    let (mut w, buf) = CsvWriter::in_memory(&header_refs)
+        .map_err(|e| format!("{ctx}: {e}"))?;
+    for (_, row) in &rows {
+        w.row(row).map_err(|e| format!("{ctx}: {e}"))?;
+    }
+    w.flush().map_err(|e| format!("{ctx}: {e}"))?;
+    Ok(buf.contents())
+}
+
 /// A shared in-memory byte buffer implementing `Write` (test sink).
 #[derive(Clone, Default)]
 pub struct SharedBuf(std::sync::Arc<std::sync::Mutex<Vec<u8>>>);
@@ -185,6 +268,53 @@ mod tests {
     fn parse_rejects_ragged() {
         assert!(parse("a,b\n1,2,3\n").is_err());
         assert!(parse("a,b\n\"unterminated\n").is_err());
+    }
+
+    #[test]
+    fn merge_keyed_sorts_and_roundtrips() {
+        let a = "k,v\n30,x\n10,\"a,b\"\n".to_string();
+        let b = "k,v\n20,y\n".to_string();
+        let merged = merge_keyed(&[a, b], "test").unwrap();
+        assert_eq!(merged, "k,v\n10,\"a,b\"\n20,y\n30,x\n");
+        // A single input round-trips bytewise (quoting preserved).
+        let one = "k,v\n10,\"a,b\"\n20,y\n".to_string();
+        assert_eq!(merge_keyed(&[one.clone()], "test").unwrap(), one);
+        // A *quoted header cell* round-trips too: the parsed header is
+        // re-escaped on emit, so the merged document never widens to a
+        // ragged header/row mismatch.
+        let quoted_hdr = "k,\"a,b\"\n10,x\n".to_string();
+        assert_eq!(
+            merge_keyed(&[quoted_hdr.clone()], "test").unwrap(),
+            quoted_hdr
+        );
+    }
+
+    #[test]
+    fn merge_keyed_rejects_ragged_and_truncated_input() {
+        // Ragged row (the historical `row[0]` panic class): a clean
+        // error naming the offending input, never a panic.
+        let ragged = "k,v\n10,x,extra\n".to_string();
+        let err = merge_keyed(&[ragged], "test").unwrap_err();
+        assert!(err.contains("test input 1"), "{err}");
+        // Truncated final row (partial shard write).
+        let truncated = "k,v,w\n10,x\n".to_string();
+        assert!(merge_keyed(&[truncated], "test").is_err());
+        // Empty file and empty header.
+        assert!(merge_keyed(&[String::new()], "test").is_err());
+        assert!(merge_keyed(&["\nx\n".to_string()], "test").is_err());
+        assert!(merge_keyed(&[], "test").is_err());
+    }
+
+    #[test]
+    fn merge_keyed_rejects_duplicates_header_drift_and_bad_keys() {
+        let a = "k,v\n10,x\n".to_string();
+        let dup = merge_keyed(&[a.clone(), a.clone()], "test").unwrap_err();
+        assert!(dup.contains("duplicate key 10"), "{dup}");
+        let drift = "k,other\n20,y\n".to_string();
+        assert!(merge_keyed(&[a.clone(), drift], "test").is_err());
+        let bad_key = "k,v\nnope,y\n".to_string();
+        let err = merge_keyed(&[a, bad_key], "test").unwrap_err();
+        assert!(err.contains("bad key"), "{err}");
     }
 
     #[test]

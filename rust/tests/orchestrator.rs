@@ -1,0 +1,267 @@
+//! Orchestrator end-to-end: generic grid sharding, the shard-process
+//! supervisor (including the one-retry contract for failed/killed
+//! shards), and the merged-CSV byte-identity guarantee against
+//! single-process grid runs — at both the library layer and through
+//! the real `agft orchestrate` CLI.
+
+use std::path::PathBuf;
+use std::process::Command;
+
+use agft::config::{ExperimentConfig, GovernorKind, WorkloadKind};
+use agft::experiment::executor::Executor;
+use agft::experiment::orchestrator::{
+    index_grid, legs_results_csv, merge_grid_csv, run_legs, shard_grid,
+    supervise, ShardJob,
+};
+use agft::experiment::phases::{governor_seed_grid, run_governors_seeded};
+
+fn base() -> ExperimentConfig {
+    ExperimentConfig {
+        duration_s: 40.0,
+        arrival_rps: 2.0,
+        workload: WorkloadKind::Prototype("normal".to_string()),
+        ..ExperimentConfig::default()
+    }
+}
+
+/// A scratch dir unique to this test process, removed on drop.
+struct Scratch(PathBuf);
+
+impl Scratch {
+    fn new(tag: &str) -> Scratch {
+        let dir = std::env::temp_dir()
+            .join(format!("agft-orch-{tag}-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).expect("scratch dir");
+        Scratch(dir)
+    }
+
+    fn path(&self, name: &str) -> PathBuf {
+        self.0.join(name)
+    }
+}
+
+impl Drop for Scratch {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.0);
+    }
+}
+
+#[test]
+fn sharded_grid_run_merges_byte_identical_to_single_process() {
+    // The grid generalization of the PR-4 sweep-sharding contract: run
+    // the 2-governor × 2-seed compare grid as two shard "processes"
+    // (independent leg runs realizing their own streams), merge the
+    // per-shard CSVs, and the bytes equal the single-process
+    // stream-shared `run_governors_seeded` document.
+    let cfg = base();
+    let kinds = [GovernorKind::Agft, GovernorKind::Default];
+    let exec = Executor::new();
+    let grid = governor_seed_grid(&cfg, &kinds, 2);
+    let legs = index_grid(&grid);
+    let full = run_governors_seeded(&cfg, &kinds, 2, &exec).unwrap();
+    let full_results: Vec<_> = full.into_iter().map(|(_, r)| r).collect();
+    let full_csv = legs_results_csv(&legs, &full_results);
+    let shard_csvs: Vec<String> = (1..=2)
+        .map(|k| {
+            let shard = shard_grid(&legs, k, 2);
+            let results = run_legs(&shard, &exec).unwrap();
+            legs_results_csv(&shard, &results)
+        })
+        .collect();
+    let merged = merge_grid_csv(&shard_csvs).unwrap();
+    assert_eq!(merged, full_csv, "merged grid shards drifted bytewise");
+    let (hdr, rows) = agft::util::csv::parse(&merged).unwrap();
+    assert_eq!(hdr[0], "leg");
+    assert_eq!(rows.len(), 4);
+    // Every leg present once, in full-grid order, with real metrics.
+    for (i, row) in rows.iter().enumerate() {
+        assert_eq!(row[0], i.to_string());
+        assert!(row[8].parse::<f64>().unwrap() > 0.0, "leg {i} energy");
+    }
+    assert_eq!(rows[0][1], "agft#s0");
+    assert_eq!(rows[3][1], "default#s1");
+}
+
+#[cfg(unix)]
+#[test]
+fn supervisor_retries_a_killed_shard_once() {
+    // The retry contract: a shard killed mid-run (SIGKILL — any
+    // non-success exit) is relaunched exactly once; the second attempt
+    // writes the CSV and the grid succeeds.
+    let scratch = Scratch::new("retry");
+    let marker = scratch.path("attempted");
+    let out = scratch.path("shard1.csv");
+    let script = format!(
+        "if [ ! -e {m} ]; then : > {m}; kill -9 $$; fi; \
+         printf 'leg,v\\n0,1\\n' > {o}",
+        m = marker.display(),
+        o = out.display(),
+    );
+    let job = ShardJob {
+        k: 1,
+        argv: vec!["sh".to_string(), "-c".to_string(), script],
+        out: out.clone(),
+    };
+    let texts = supervise(std::slice::from_ref(&job), 2).unwrap();
+    assert_eq!(texts, vec!["leg,v\n0,1\n".to_string()]);
+    assert!(marker.exists(), "first attempt must have run (and died)");
+}
+
+#[cfg(unix)]
+#[test]
+fn supervisor_gives_up_after_second_failure() {
+    let scratch = Scratch::new("fail");
+    let job = ShardJob {
+        k: 1,
+        argv: vec![
+            "sh".to_string(),
+            "-c".to_string(),
+            "exit 3".to_string(),
+        ],
+        out: scratch.path("never-written.csv"),
+    };
+    let err = supervise(&[job], 1).unwrap_err();
+    assert!(err.contains("failed"), "{err}");
+    assert!(err.contains("shard 1"), "{err}");
+}
+
+#[cfg(unix)]
+#[test]
+fn supervisor_bounds_concurrency_and_orders_outputs() {
+    // Three trivial shards on a 2-process pool: outputs come back in
+    // job order regardless of completion order.
+    let scratch = Scratch::new("order");
+    let jobs: Vec<ShardJob> = (1..=3)
+        .map(|k| {
+            let out = scratch.path(&format!("shard{k}.csv"));
+            ShardJob {
+                k,
+                argv: vec![
+                    "sh".to_string(),
+                    "-c".to_string(),
+                    format!("printf 'k,v\\n{k},{k}\\n' > {}", out.display()),
+                ],
+                out,
+            }
+        })
+        .collect();
+    let texts = supervise(&jobs, 2).unwrap();
+    for (k, text) in (1..=3).zip(&texts) {
+        assert_eq!(*text, format!("k,v\n{k},{k}\n"));
+    }
+}
+
+#[test]
+fn orchestrate_tolerates_more_shards_than_grid_legs() {
+    // Over-sharding a small grid must not fail the run: the empty
+    // shard writes a header-only CSV and the merge sees zero rows
+    // from it — merged output still equals the single-process run.
+    let bin = env!("CARGO_BIN_EXE_agft");
+    let scratch = Scratch::new("oversharded");
+    let merged = scratch.path("merged.csv");
+    let full = scratch.path("full.csv");
+    let common =
+        ["--governors", "agft,default", "--duration", "30", "--rps", "2"];
+    let orch = Command::new(bin)
+        .args([
+            "orchestrate",
+            "--cmd",
+            "compare",
+            "--procs",
+            "2",
+            "--shards",
+            "3",
+            "--out",
+            merged.to_str().unwrap(),
+        ])
+        .args(common)
+        .output()
+        .expect("spawn orchestrate");
+    assert!(
+        orch.status.success(),
+        "over-sharded orchestrate failed: {}",
+        String::from_utf8_lossy(&orch.stderr)
+    );
+    let single = Command::new(bin)
+        .args(["compare", "--out", full.to_str().unwrap(), "--workers", "2"])
+        .args(common)
+        .output()
+        .expect("spawn compare");
+    assert!(single.status.success());
+    assert_eq!(
+        std::fs::read_to_string(&merged).unwrap(),
+        std::fs::read_to_string(&full).unwrap(),
+    );
+    // The third shard really was a header-only no-op.
+    let shard3 =
+        std::fs::read_to_string(scratch.path("merged.csv.shard3"))
+            .unwrap();
+    assert_eq!(shard3.lines().count(), 1, "header-only: {shard3}");
+}
+
+#[test]
+fn orchestrate_cli_matches_single_process_compare() {
+    // The acceptance flow end-to-end through the real binary:
+    // `agft orchestrate --procs 2` over a 2-governor × 2-seed compare
+    // grid vs the single-process `agft compare --out`.
+    let bin = env!("CARGO_BIN_EXE_agft");
+    let scratch = Scratch::new("cli");
+    let merged = scratch.path("merged.csv");
+    let manifest = scratch.path("legs.csv");
+    let full = scratch.path("full.csv");
+    let common = [
+        "--governors",
+        "agft,default",
+        "--seeds",
+        "2",
+        "--duration",
+        "60",
+        "--rps",
+        "2",
+    ];
+    let orch = Command::new(bin)
+        .args([
+            "orchestrate",
+            "--cmd",
+            "compare",
+            "--procs",
+            "2",
+            "--out",
+            merged.to_str().unwrap(),
+            "--manifest",
+            manifest.to_str().unwrap(),
+        ])
+        .args(common)
+        .output()
+        .expect("spawn orchestrate");
+    assert!(
+        orch.status.success(),
+        "orchestrate failed: {}",
+        String::from_utf8_lossy(&orch.stderr)
+    );
+    let single = Command::new(bin)
+        .args(["compare", "--out", full.to_str().unwrap(), "--workers", "2"])
+        .args(common)
+        .output()
+        .expect("spawn compare");
+    assert!(
+        single.status.success(),
+        "compare failed: {}",
+        String::from_utf8_lossy(&single.stderr)
+    );
+    let merged_text = std::fs::read_to_string(&merged).unwrap();
+    let full_text = std::fs::read_to_string(&full).unwrap();
+    assert_eq!(
+        merged_text, full_text,
+        "orchestrated grid drifted from the single-process run"
+    );
+    let (_, rows) = agft::util::csv::parse(&merged_text).unwrap();
+    assert_eq!(rows.len(), 4, "2 governors × 2 seeds");
+    // The manifest lists the same legs the shards ran.
+    let manifest_text = std::fs::read_to_string(&manifest).unwrap();
+    let (mhdr, mrows) = agft::util::csv::parse(&manifest_text).unwrap();
+    assert_eq!(mhdr[0], "leg");
+    assert_eq!(mrows.len(), 4);
+    assert_eq!(mrows[0][2], "agft");
+    assert_eq!(mrows[3][2], "default");
+}
