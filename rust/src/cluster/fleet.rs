@@ -1,0 +1,611 @@
+//! The fleet co-simulation loop: global next-event heap vs. the naive
+//! per-tick reference.
+//!
+//! Both entry points drive the identical per-GPU window step
+//! ([`Fleet::advance_one`]: route the shared stream up to the GPU's
+//! horizon → `run_until` the window boundary →
+//! [`WindowTracker::record_window`] → optional power-cap bookkeeping),
+//! so their per-engine timelines are bitwise-identical **by
+//! construction** — they differ only in how they decide which engine
+//! to touch next:
+//!
+//! * [`run_cluster`] keys a `BinaryHeap<Reverse<(window, gpu)>>` on
+//!   each engine's next window boundary. Pop the earliest, advance one
+//!   window, re-insert unless done. Engines that drain early leave the
+//!   heap and are never looked at again; the heap itself is sized once
+//!   (N entries) and each dispatch is a pop + push — no per-dispatch
+//!   allocation, O(events · log N) total.
+//! * [`run_cluster_reference`] sweeps GPU 0..N every window tick,
+//!   polling finished engines' [`next_event_time`] oracles just to
+//!   learn they still have nothing to do — the naive cost the heap
+//!   avoids, asserted strictly higher in `benches/perf_hotpath.rs`.
+//!
+//! **Engine polls** counts every touch of an engine made to decide or
+//! advance fleet time: each `run_until` call and each oracle check of
+//! an already-finished engine.
+//!
+//! Window boundaries accumulate per-GPU as `t_next += window_s` — the
+//! identical f64 recurrence [`GovernorDriver::drive`] uses — and each
+//! GPU's routing horizon is `max(t_next, engine.now())` so arrivals
+//! landing inside a `run_until` overshoot (a busy iteration can carry
+//! the clock past the boundary) are already enqueued when the next
+//! window pulls them, exactly as a standalone engine would see them on
+//! its own stream. Together with per-GPU [`WindowTracker`]s this makes
+//! the N=1 cluster bitwise-identical to
+//! [`crate::experiment::harness::run_shared`].
+//!
+//! [`GovernorDriver::drive`]: crate::experiment::GovernorDriver::drive
+//! [`next_event_time`]: Engine::next_event_time
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::sync::Arc;
+
+use crate::config::ExperimentConfig;
+use crate::experiment::harness::RunResult;
+use crate::experiment::WindowTracker;
+use crate::server::{validate_stream, Engine, Request};
+use crate::tuner::governors::{self, Governor};
+
+use super::power_cap::{CapInput, CapTelemetry, PowerCapCoordinator};
+use super::router::{RoutePolicy, Router};
+
+/// Fleet shape and policy for one cluster run.
+#[derive(Debug, Clone, Copy)]
+pub struct ClusterSpec {
+    /// Number of embedded engines (each one simulated GPU + server).
+    pub gpus: usize,
+    /// Shared-stream routing policy.
+    pub route: RoutePolicy,
+    /// Optional datacenter power budget (W) enforced by the
+    /// [`PowerCapCoordinator`]; `None` leaves every governor
+    /// uncoordinated.
+    pub power_cap_w: Option<f64>,
+}
+
+/// One cluster run's full output.
+#[derive(Debug, Clone)]
+pub struct ClusterResult {
+    /// Per-GPU window-level results, exactly what a standalone
+    /// [`crate::experiment::harness::run_shared`] would emit for that
+    /// GPU's routed share of the stream.
+    pub per_gpu: Vec<RunResult>,
+    /// Requests dispatched to each GPU.
+    pub routed: Vec<u64>,
+    /// Engine touches made to advance fleet time (see module docs).
+    pub engine_polls: u64,
+    /// Power-cap coordinator telemetry (`None` when uncapped).
+    pub cap: Option<CapTelemetry>,
+}
+
+impl ClusterResult {
+    pub fn fleet_energy_j(&self) -> f64 {
+        self.per_gpu.iter().map(|r| r.total_energy_j).sum()
+    }
+
+    pub fn fleet_finished(&self) -> usize {
+        self.per_gpu.iter().map(|r| r.finished.len()).sum()
+    }
+
+    pub fn fleet_clock_changes(&self) -> u64 {
+        self.per_gpu.iter().map(|r| r.clock_changes).sum()
+    }
+
+    /// Fleet-wide mean TTFT over every completion (request-weighted,
+    /// not per-GPU-averaged).
+    pub fn fleet_mean_ttft(&self) -> f64 {
+        self.fleet_latency_mean(|r| r.ttft)
+    }
+
+    pub fn fleet_mean_e2e(&self) -> f64 {
+        self.fleet_latency_mean(|r| r.e2e)
+    }
+
+    fn fleet_latency_mean(
+        &self,
+        f: impl Fn(&crate::server::FinishedRecord) -> f64,
+    ) -> f64 {
+        let n = self.fleet_finished();
+        if n == 0 {
+            return 0.0;
+        }
+        let sum: f64 = self
+            .per_gpu
+            .iter()
+            .flat_map(|r| r.finished.iter().map(&f))
+            .sum();
+        sum / n as f64
+    }
+
+    /// Peak fleet average power over aligned window indices: for each
+    /// window index k, sum `energy_j / dt` across the GPUs that
+    /// recorded a window k, and take the maximum over k. This is the
+    /// realized number a datacenter cap is judged against.
+    pub fn peak_fleet_window_w(&self) -> f64 {
+        let max_windows = self
+            .per_gpu
+            .iter()
+            .map(|r| r.windows.len())
+            .max()
+            .unwrap_or(0);
+        let mut peak = 0.0f64;
+        for k in 0..max_windows {
+            let mut fleet_w = 0.0;
+            for r in &self.per_gpu {
+                let Some(w) = r.windows.get(k) else { continue };
+                let prev =
+                    if k == 0 { 0.0 } else { r.windows[k - 1].t_s };
+                let dt = w.t_s - prev;
+                if dt > 0.0 {
+                    fleet_w += w.energy_j / dt;
+                }
+            }
+            peak = peak.max(fleet_w);
+        }
+        peak
+    }
+}
+
+/// Per-GPU loop state alongside its engine.
+struct GpuSlot {
+    governor: Box<dyn Governor>,
+    tracker: WindowTracker,
+    /// Next window boundary (the standalone driver's `t_next += w`
+    /// recurrence, kept per GPU).
+    t_next: f64,
+    /// Window index of `t_next` (the heap key; u64 so ordering is
+    /// exact where accumulated f64 boundaries might tie).
+    window: u64,
+    done: bool,
+    /// End timestamp of the previously recorded window (average-power
+    /// measurement baseline for the cap coordinator).
+    prev_t_s: f64,
+}
+
+/// Shared co-simulation state both loop shapes drive.
+struct Fleet<'a> {
+    cfg: &'a ExperimentConfig,
+    window_s: f64,
+    engines: Vec<Engine>,
+    slots: Vec<GpuSlot>,
+    router: Router,
+    coordinator: Option<PowerCapCoordinator>,
+    /// Live GPUs' measurements for the current boundary group.
+    group: Vec<CapInput>,
+    requests: Arc<[Request]>,
+    cursor: usize,
+    feeds_open: bool,
+    polls: u64,
+}
+
+impl<'a> Fleet<'a> {
+    fn new(
+        cfg: &'a ExperimentConfig,
+        spec: &ClusterSpec,
+        requests: Arc<[Request]>,
+    ) -> Result<Fleet<'a>, String> {
+        if spec.gpus == 0 {
+            return Err("cluster needs at least one GPU".to_string());
+        }
+        if let Some(cap) = spec.power_cap_w {
+            if !cap.is_finite() || cap <= 0.0 {
+                return Err(format!(
+                    "power cap must be positive, got {cap}"
+                ));
+            }
+        }
+        validate_stream(cfg, &requests)?;
+        let sorted = requests
+            .windows(2)
+            .all(|w| w[0].arrival_s <= w[1].arrival_s);
+        let requests = if sorted {
+            requests
+        } else {
+            let mut v: Vec<Request> = requests.to_vec();
+            v.sort_by(|a, b| a.arrival_s.total_cmp(&b.arrival_s));
+            v.into()
+        };
+
+        let empty: Arc<[Request]> = Vec::new().into();
+        let mut engines = Vec::with_capacity(spec.gpus);
+        let mut slots = Vec::with_capacity(spec.gpus);
+        for _ in 0..spec.gpus {
+            let mut engine = Engine::try_with_shared(cfg, empty.clone())?;
+            engine.open_feed();
+            let governor = governors::build(cfg);
+            if let Some(mhz) = governor.initial_clock_mhz() {
+                engine.gpu.set_clock(mhz);
+            }
+            engines.push(engine);
+            slots.push(GpuSlot {
+                governor,
+                tracker: WindowTracker::new(),
+                t_next: cfg.tuner.window_s,
+                window: 1,
+                done: false,
+                prev_t_s: 0.0,
+            });
+        }
+        let feeds_open = !requests.is_empty();
+        let mut fleet = Fleet {
+            cfg,
+            window_s: cfg.tuner.window_s,
+            engines,
+            slots,
+            router: Router::new(spec.route, spec.gpus),
+            coordinator: spec
+                .power_cap_w
+                .map(|w| PowerCapCoordinator::new(cfg, w)),
+            group: Vec::with_capacity(spec.gpus),
+            requests,
+            cursor: 0,
+            feeds_open,
+            polls: 0,
+        };
+        if !fleet.feeds_open {
+            fleet.close_feeds();
+        }
+        Ok(fleet)
+    }
+
+    fn gpus(&self) -> usize {
+        self.engines.len()
+    }
+
+    fn close_feeds(&mut self) {
+        for e in self.engines.iter_mut() {
+            e.close_feed();
+        }
+        self.feeds_open = false;
+    }
+
+    /// Route every shared-stream arrival up to `horizon` to its GPU.
+    fn route_until(&mut self, horizon: f64) -> Result<(), String> {
+        while self.cursor < self.requests.len()
+            && self.requests[self.cursor].arrival_s <= horizon
+        {
+            let req = &self.requests[self.cursor];
+            let gpu = self.router.pick(&self.engines, req);
+            self.engines[gpu].enqueue_arrival(req.clone())?;
+            self.cursor += 1;
+        }
+        if self.cursor == self.requests.len() && self.feeds_open {
+            self.close_feeds();
+        }
+        Ok(())
+    }
+
+    /// Advance GPU `i` one window through the standalone window
+    /// machinery. Increments the poll count; flips the slot to done (or
+    /// bumps its boundary) and records its cap-coordinator measurement.
+    fn advance_one(&mut self, i: usize) -> Result<(), String> {
+        debug_assert!(!self.slots[i].done);
+        let t_next = self.slots[i].t_next;
+        // Cover the run_until overshoot: arrivals inside it must be
+        // enqueued now, since a standalone engine would pull them from
+        // its own stream at the next window's first step.
+        self.route_until(t_next.max(self.engines[i].clock.now()))?;
+
+        let clock_before = self.engines[i].gpu.effective_mhz(true);
+        let alive = self.engines[i].run_until(t_next);
+        self.polls += 1;
+
+        let slot = &mut self.slots[i];
+        let done = slot.tracker.record_window(
+            self.cfg,
+            &mut self.engines[i],
+            slot.governor.as_mut(),
+            clock_before,
+            alive,
+        );
+        let rec = slot
+            .tracker
+            .last_window()
+            .expect("window just recorded");
+        let (t_s, energy_j, clock_mhz) =
+            (rec.t_s, rec.energy_j, rec.clock_mhz);
+        let dt = t_s - slot.prev_t_s;
+        slot.prev_t_s = t_s;
+        if done {
+            slot.done = true;
+        } else {
+            slot.t_next += self.window_s;
+            slot.window += 1;
+            if self.coordinator.is_some() {
+                self.group.push(CapInput {
+                    gpu: i,
+                    avg_power_w: if dt > 0.0 { energy_j / dt } else { 0.0 },
+                    clock_mhz,
+                });
+            }
+        }
+        Ok(())
+    }
+
+    /// End of a boundary group: every live GPU has recorded the current
+    /// window and none has run past it — the aligned point where the
+    /// power-cap coordinator renegotiates the budget.
+    fn coordinate_boundary(&mut self) {
+        if let Some(c) = self.coordinator.as_mut() {
+            c.coordinate(&mut self.engines, &self.group);
+        }
+        self.group.clear();
+    }
+
+    fn finish(self) -> ClusterResult {
+        let routed = self.router.routed().to_vec();
+        let per_gpu = self
+            .slots
+            .into_iter()
+            .zip(self.engines)
+            .map(|(slot, engine)| {
+                let GpuSlot { governor, tracker, .. } = slot;
+                tracker.finish(engine, governor.as_ref())
+            })
+            .collect();
+        ClusterResult {
+            per_gpu,
+            routed,
+            engine_polls: self.polls,
+            cap: self.coordinator.map(|c| c.telemetry().clone()),
+        }
+    }
+}
+
+/// Run a cluster co-simulation with the global next-event heap.
+pub fn run_cluster(
+    cfg: &ExperimentConfig,
+    spec: &ClusterSpec,
+    requests: Arc<[Request]>,
+) -> Result<ClusterResult, String> {
+    let mut fleet = Fleet::new(cfg, spec, requests)?;
+    let n = fleet.gpus();
+
+    // Min-heap of (window index, gpu): pop order is "earliest boundary
+    // first, lowest GPU on ties" — the deterministic total order the
+    // reference sweep reproduces. Sized once; the loop only pops and
+    // re-pushes, so steady-state dispatch allocates nothing.
+    let mut heap: BinaryHeap<Reverse<(u64, usize)>> =
+        BinaryHeap::with_capacity(n);
+    for i in 0..n {
+        heap.push(Reverse((1, i)));
+    }
+
+    let mut current_window = 1u64;
+    while let Some(Reverse((window, i))) = heap.pop() {
+        if window != current_window {
+            // The previous boundary group is complete: every live GPU
+            // recorded that window, none has run the next one yet.
+            fleet.coordinate_boundary();
+            current_window = window;
+        }
+        fleet.advance_one(i)?;
+        let slot = &fleet.slots[i];
+        if !slot.done {
+            heap.push(Reverse((slot.window, i)));
+        }
+    }
+    Ok(fleet.finish())
+}
+
+/// The naive per-tick reference loop: every window boundary, sweep all
+/// N GPUs in index order — polling finished engines' oracles just to
+/// re-learn they have nothing to do. Kept as the A/B baseline the heap
+/// loop must beat on engine polls while matching bitwise on every
+/// per-engine timeline.
+pub fn run_cluster_reference(
+    cfg: &ExperimentConfig,
+    spec: &ClusterSpec,
+    requests: Arc<[Request]>,
+) -> Result<ClusterResult, String> {
+    let mut fleet = Fleet::new(cfg, spec, requests)?;
+    let n = fleet.gpus();
+
+    loop {
+        let mut any_live = false;
+        for i in 0..n {
+            if fleet.slots[i].done {
+                // The naive cost: touch the engine anyway.
+                let _ = fleet.engines[i].next_event_time();
+                fleet.polls += 1;
+                continue;
+            }
+            any_live = true;
+            fleet.advance_one(i)?;
+        }
+        fleet.coordinate_boundary();
+        if !any_live {
+            break;
+        }
+    }
+    Ok(fleet.finish())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GovernorKind;
+
+    fn base_cfg() -> ExperimentConfig {
+        ExperimentConfig {
+            governor: GovernorKind::Locked(1230),
+            duration_s: 40.0,
+            ..ExperimentConfig::default()
+        }
+    }
+
+    /// Arrivals early, heterogeneous decode lengths: engines drain at
+    /// staggered times, which is where the heap's poll saving lives.
+    fn staggered_stream(n_req: u64) -> Arc<[Request]> {
+        (0..n_req)
+            .map(|i| {
+                Request::new(
+                    i,
+                    0.05 * i as f64,
+                    128,
+                    24 + (i % 5) as u32 * 120,
+                    i as u32,
+                    0,
+                )
+            })
+            .collect::<Vec<_>>()
+            .into()
+    }
+
+    #[test]
+    fn heap_and_reference_agree_bitwise_with_fewer_polls() {
+        let cfg = base_cfg();
+        let spec = ClusterSpec {
+            gpus: 8,
+            route: RoutePolicy::RoundRobin,
+            power_cap_w: None,
+        };
+        let reqs = staggered_stream(24);
+        let heap = run_cluster(&cfg, &spec, reqs.clone()).unwrap();
+        let naive =
+            run_cluster_reference(&cfg, &spec, reqs).unwrap();
+
+        assert_eq!(heap.routed, naive.routed);
+        assert_eq!(heap.per_gpu.len(), naive.per_gpu.len());
+        for (a, b) in heap.per_gpu.iter().zip(&naive.per_gpu) {
+            assert_eq!(a.windows.len(), b.windows.len());
+            for (wa, wb) in a.windows.iter().zip(&b.windows) {
+                assert_eq!(wa.t_s.to_bits(), wb.t_s.to_bits());
+                assert_eq!(
+                    wa.energy_j.to_bits(),
+                    wb.energy_j.to_bits()
+                );
+                assert_eq!(wa.clock_mhz, wb.clock_mhz);
+                assert_eq!(wa.tokens, wb.tokens);
+            }
+            assert_eq!(
+                a.total_energy_j.to_bits(),
+                b.total_energy_j.to_bits()
+            );
+            assert_eq!(a.finished.len(), b.finished.len());
+            for (fa, fb) in a.finished.iter().zip(&b.finished) {
+                assert_eq!(fa.finish_s.to_bits(), fb.finish_s.to_bits());
+            }
+        }
+        assert!(
+            heap.engine_polls < naive.engine_polls,
+            "heap {} vs naive {}",
+            heap.engine_polls,
+            naive.engine_polls
+        );
+    }
+
+    #[test]
+    fn empty_stream_terminates_at_duration() {
+        let cfg = ExperimentConfig {
+            duration_s: 5.0,
+            ..base_cfg()
+        };
+        let spec = ClusterSpec {
+            gpus: 3,
+            route: RoutePolicy::LeastLoaded,
+            power_cap_w: None,
+        };
+        let empty: Arc<[Request]> = Vec::new().into();
+        let r = run_cluster(&cfg, &spec, empty).unwrap();
+        assert_eq!(r.fleet_finished(), 0);
+        for g in &r.per_gpu {
+            assert!(!g.windows.is_empty());
+            // Stops at the first window boundary at/after duration_s,
+            // exactly like the standalone driver.
+            assert!(g.duration_s >= 5.0, "{}", g.duration_s);
+            assert!(g.duration_s < 5.0 + 2.0 * 0.8, "{}", g.duration_s);
+        }
+    }
+
+    #[test]
+    fn rejects_degenerate_specs() {
+        let cfg = base_cfg();
+        let empty: Arc<[Request]> = Vec::new().into();
+        let r = run_cluster(
+            &cfg,
+            &ClusterSpec {
+                gpus: 0,
+                route: RoutePolicy::RoundRobin,
+                power_cap_w: None,
+            },
+            empty.clone(),
+        );
+        assert!(r.is_err());
+        let r = run_cluster(
+            &cfg,
+            &ClusterSpec {
+                gpus: 2,
+                route: RoutePolicy::RoundRobin,
+                power_cap_w: Some(-5.0),
+            },
+            empty.clone(),
+        );
+        assert!(r.is_err());
+        // Invalid streams surface the engine's validation error.
+        let bad: Arc<[Request]> =
+            vec![Request::new(9, f64::NAN, 64, 4, 0, 0)].into();
+        let err = run_cluster(
+            &cfg,
+            &ClusterSpec {
+                gpus: 2,
+                route: RoutePolicy::RoundRobin,
+                power_cap_w: None,
+            },
+            bad,
+        )
+        .err()
+        .unwrap();
+        assert!(err.contains("request 9"), "{err}");
+    }
+
+    #[test]
+    fn power_cap_clamps_and_saves_energy() {
+        let cfg = ExperimentConfig {
+            governor: GovernorKind::Locked(1800),
+            duration_s: 30.0,
+            ..ExperimentConfig::default()
+        };
+        // Enough early arrivals to keep 4 GPUs busy for a while.
+        let reqs: Arc<[Request]> = (0..64u64)
+            .map(|i| {
+                Request::new(i, 0.02 * i as f64, 512, 256, i as u32, 0)
+            })
+            .collect::<Vec<_>>()
+            .into();
+        let mk = |cap: Option<f64>| {
+            run_cluster(
+                &cfg,
+                &ClusterSpec {
+                    gpus: 4,
+                    route: RoutePolicy::RoundRobin,
+                    power_cap_w: cap,
+                },
+                reqs.clone(),
+            )
+            .unwrap()
+        };
+        let free = mk(None);
+        let capped = mk(Some(600.0));
+        assert!(free.cap.is_none());
+        let telemetry = capped.cap.as_ref().unwrap();
+        assert!(telemetry.rounds > 0);
+        assert!(
+            telemetry.clamps > 0,
+            "cap never actuated: {telemetry:?}"
+        );
+        assert!(telemetry.peak_demand_w > 600.0);
+        assert!(capped.fleet_energy_j() < free.fleet_energy_j());
+        // The first window precedes the first negotiation (its
+        // telemetry is the coordinator's input), so the two runs share
+        // it bitwise; clamping can only lower everything after it.
+        assert!(
+            capped.peak_fleet_window_w()
+                <= free.peak_fleet_window_w() + 1e-6
+        );
+        // Clamps show up as extra clock actuations on the devices.
+        assert!(
+            capped.fleet_clock_changes() > free.fleet_clock_changes()
+        );
+    }
+}

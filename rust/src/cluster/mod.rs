@@ -1,0 +1,46 @@
+//! Fleet-scale cluster co-simulation: N embedded [`Engine`]s serving
+//! one shared arrival stream under per-GPU governors and an optional
+//! datacenter power cap.
+//!
+//! The paper evaluates AGFT on a single GPU, but its headline claim is
+//! about *clusters*; this module closes that gap by co-simulating a
+//! fleet of serving engines:
+//!
+//! * [`router`] — pluggable policies assigning each arrival of the
+//!   shared stream to one GPU (round-robin, least-loaded,
+//!   prefix-cache-affinity, SLO-class-aware).
+//! * [`power_cap`] — the datacenter coordinator: each window it
+//!   projects every GPU's next-window power demand onto the clock its
+//!   governor just locked ([`crate::gpu::PowerModel::rescale_w`]) and,
+//!   when the fleet would exceed the shared budget, scales every GPU's
+//!   dynamic headroom by a common factor and lowers clocks to fit.
+//! * [`fleet`] — the co-simulation loop itself. The fleet advances on
+//!   a **global next-event binary heap** keyed by each engine's next
+//!   window boundary: pop the earliest engine, route the shared stream
+//!   up to its horizon, run it one window through the *standalone*
+//!   window machinery ([`crate::experiment::WindowTracker`]), re-insert
+//!   unless done. Engines that drain early simply leave the heap —
+//!   O(events · log N) with no per-tick polling and no per-dispatch
+//!   allocation — while a naive per-tick reference loop
+//!   ([`fleet::run_cluster_reference`]) is kept as the A/B baseline
+//!   that must produce bitwise-identical per-engine timelines with
+//!   strictly more engine polls (`benches/perf_hotpath.rs` asserts
+//!   both at N=64 and N=256).
+//!
+//! Because each GPU's window sequence runs through the same
+//! [`crate::experiment::WindowTracker`] code path as a standalone run,
+//! an N=1 cluster (any routing policy, no cap) is bitwise-identical —
+//! window records, energy totals, completion timeline — to
+//! [`crate::experiment::harness::run_shared`] on the same stream.
+//!
+//! [`Engine`]: crate::server::Engine
+
+pub mod fleet;
+pub mod power_cap;
+pub mod router;
+
+pub use fleet::{
+    run_cluster, run_cluster_reference, ClusterResult, ClusterSpec,
+};
+pub use power_cap::{CapTelemetry, PowerCapCoordinator};
+pub use router::{RoutePolicy, Router, SLO_INTERACTIVE_MAX_OUTPUT};

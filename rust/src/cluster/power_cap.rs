@@ -1,0 +1,300 @@
+//! The datacenter power-cap coordinator: a shared fleet power budget
+//! redistributed across per-GPU governors every window.
+//!
+//! Protocol (one negotiation round per aligned window boundary — the
+//! fleet loop invokes it after every live GPU has recorded window `k`
+//! and before any runs window `k+1`):
+//!
+//! 1. **Measure** — each live GPU reports its last-window average board
+//!    power (window energy over window wall-clock) and the clock that
+//!    window ran at.
+//! 2. **Project** — the measurement is rescaled onto the clock the
+//!    GPU's governor just locked for the next window
+//!    ([`PowerModel::rescale_w`]): governor decisions are respected
+//!    first, the cap only overrides them when the fleet would not fit.
+//! 3. **Redistribute** — if the projected fleet demand exceeds the
+//!    cap, every GPU keeps its idle floor and the dynamic headroom
+//!    above it is scaled by the common factor that brings the fleet
+//!    back to the cap (proportional-headroom fairness: busier GPUs
+//!    keep proportionally more).
+//! 4. **Clamp** — each over-budget GPU's clock is lowered to the
+//!    highest table frequency whose projected power fits its budget
+//!    (never below the table minimum). GPUs under
+//!    [`GovernorKind::Default`] are skipped: the native-boost device
+//!    ignores clock locks, so their demand is uncontrollable and is
+//!    simply accounted against the budget.
+//!
+//! The coordinator is planning on a *model projection*, not a promise:
+//! realized power can still overshoot when utilisation rises inside
+//! the next window. The cap is re-negotiated every window, so
+//! overshoot is corrected one window later — matching how real
+//! datacenter power capping (per-window telemetry + clock actuation)
+//! behaves.
+
+use crate::config::{ExperimentConfig, GovernorKind};
+use crate::gpu::{FreqTable, PowerModel};
+use crate::server::Engine;
+
+/// One live GPU's input to a negotiation round.
+#[derive(Debug, Clone, Copy)]
+pub struct CapInput {
+    /// Fleet index of the GPU.
+    pub gpu: usize,
+    /// Measured average board power over its last window (W).
+    pub avg_power_w: f64,
+    /// Clock that window ran at (MHz).
+    pub clock_mhz: u32,
+}
+
+/// Coordinator telemetry over a whole run.
+#[derive(Debug, Clone, Default)]
+pub struct CapTelemetry {
+    /// Negotiation rounds evaluated.
+    pub rounds: u64,
+    /// Rounds in which at least one GPU's clock was clamped.
+    pub capped_windows: u64,
+    /// Total per-GPU clamp actuations.
+    pub clamps: u64,
+    /// Highest projected fleet demand seen before redistribution (W).
+    pub peak_demand_w: f64,
+}
+
+/// The fleet power-budget coordinator.
+pub struct PowerCapCoordinator {
+    cap_w: f64,
+    model: PowerModel,
+    /// Table frequencies, ascending (cached so a negotiation round
+    /// allocates nothing).
+    freqs: Vec<u32>,
+    min_mhz: u32,
+    /// Reusable projection scratch: (gpu, projected W, next clock MHz).
+    scratch: Vec<(usize, f64, u32)>,
+    telemetry: CapTelemetry,
+}
+
+impl PowerCapCoordinator {
+    pub fn new(cfg: &ExperimentConfig, cap_w: f64) -> PowerCapCoordinator {
+        assert!(
+            cap_w.is_finite() && cap_w > 0.0,
+            "power cap must be positive, got {cap_w}"
+        );
+        let table = FreqTable::from_config(&cfg.gpu);
+        PowerCapCoordinator {
+            cap_w,
+            model: PowerModel::new(&cfg.gpu),
+            freqs: table.all(),
+            min_mhz: table.min_mhz(),
+            scratch: Vec::new(),
+            telemetry: CapTelemetry::default(),
+        }
+    }
+
+    pub fn cap_w(&self) -> f64 {
+        self.cap_w
+    }
+
+    pub fn telemetry(&self) -> &CapTelemetry {
+        &self.telemetry
+    }
+
+    /// One negotiation round at an aligned window boundary. `live`
+    /// lists the GPUs that just recorded a window and will run another;
+    /// `engines` is the whole fleet (indexed by [`CapInput::gpu`]).
+    pub fn coordinate(&mut self, engines: &mut [Engine], live: &[CapInput]) {
+        if live.is_empty() {
+            return;
+        }
+        self.telemetry.rounds += 1;
+
+        // Project each live GPU's next-window demand onto the clock its
+        // governor just locked.
+        let mut scratch = std::mem::take(&mut self.scratch);
+        scratch.clear();
+        let mut demand_w = 0.0;
+        for inp in live {
+            let f_next = engines[inp.gpu].gpu.effective_mhz(true);
+            let p = self.model.rescale_w(
+                inp.avg_power_w,
+                inp.clock_mhz,
+                f_next,
+            );
+            demand_w += p;
+            scratch.push((inp.gpu, p, f_next));
+        }
+        if demand_w > self.telemetry.peak_demand_w {
+            self.telemetry.peak_demand_w = demand_w;
+        }
+        if demand_w <= self.cap_w {
+            self.scratch = scratch;
+            return;
+        }
+
+        // Over budget: scale every GPU's dynamic headroom by the common
+        // factor that fits the fleet under the cap.
+        let idle = self.model.idle_w();
+        let idle_total = idle * live.len() as f64;
+        let dyn_total = demand_w - idle_total;
+        let scale = if dyn_total > 0.0 {
+            ((self.cap_w - idle_total) / dyn_total).clamp(0.0, 1.0)
+        } else {
+            0.0
+        };
+
+        let mut clamped_any = false;
+        for &(gpu, p_next, f_next) in scratch.iter() {
+            if p_next <= idle {
+                continue; // idle GPU: nothing above the floor to scale
+            }
+            let budget = idle + (p_next - idle) * scale;
+            if p_next <= budget {
+                continue;
+            }
+            // Native-boost devices ignore clock locks: uncontrollable
+            // demand, accounted against the budget but never clamped.
+            if engines[gpu].gpu.governor() == GovernorKind::Default {
+                continue;
+            }
+            // Highest table clock whose projection fits the budget
+            // (ascending scan; the projection is monotone in f).
+            let mut pick = self.min_mhz;
+            for &f in &self.freqs {
+                if f >= f_next {
+                    break;
+                }
+                if self.model.rescale_w(p_next, f_next, f) <= budget {
+                    pick = f;
+                } else {
+                    break;
+                }
+            }
+            if pick < f_next {
+                engines[gpu].gpu.set_clock(pick);
+                self.telemetry.clamps += 1;
+                clamped_any = true;
+            }
+        }
+        if clamped_any {
+            self.telemetry.capped_windows += 1;
+        }
+        self.scratch = scratch;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+    use crate::server::Request;
+    use std::sync::Arc;
+
+    fn fleet(cfg: &ExperimentConfig, n: usize) -> Vec<Engine> {
+        let empty: Arc<[Request]> = Vec::new().into();
+        (0..n)
+            .map(|_| {
+                let mut e =
+                    Engine::try_with_shared(cfg, empty.clone()).unwrap();
+                e.open_feed();
+                e
+            })
+            .collect()
+    }
+
+    fn locked_cfg(mhz: u32) -> ExperimentConfig {
+        ExperimentConfig {
+            governor: GovernorKind::Locked(mhz),
+            ..ExperimentConfig::default()
+        }
+    }
+
+    #[test]
+    fn under_budget_fleet_is_untouched() {
+        let cfg = locked_cfg(1800);
+        let mut engines = fleet(&cfg, 2);
+        let mut c = PowerCapCoordinator::new(&cfg, 10_000.0);
+        let live = [
+            CapInput { gpu: 0, avg_power_w: 250.0, clock_mhz: 1800 },
+            CapInput { gpu: 1, avg_power_w: 250.0, clock_mhz: 1800 },
+        ];
+        c.coordinate(&mut engines, &live);
+        assert_eq!(c.telemetry().rounds, 1);
+        assert_eq!(c.telemetry().clamps, 0);
+        assert!((c.telemetry().peak_demand_w - 500.0).abs() < 1e-9);
+        for e in &engines {
+            assert_eq!(e.gpu.effective_mhz(true), 1800);
+        }
+    }
+
+    #[test]
+    fn over_budget_fleet_is_clamped_under_the_cap() {
+        let cfg = locked_cfg(1800);
+        let mut engines = fleet(&cfg, 4);
+        let model = PowerModel::new(&cfg.gpu);
+        let busy_w = model.power_w(1800, 1.0, 0.5);
+        let cap = 2.0 * busy_w; // half of what 4 busy GPUs demand
+        let mut c = PowerCapCoordinator::new(&cfg, cap);
+        let live: Vec<CapInput> = (0..4)
+            .map(|gpu| CapInput {
+                gpu,
+                avg_power_w: busy_w,
+                clock_mhz: 1800,
+            })
+            .collect();
+        c.coordinate(&mut engines, &live);
+        assert_eq!(c.telemetry().capped_windows, 1);
+        assert_eq!(c.telemetry().clamps, 4);
+        // Each GPU got an equal headroom share; the projected fleet
+        // demand at the clamped clocks must fit the cap.
+        let projected: f64 = engines
+            .iter()
+            .map(|e| {
+                model.rescale_w(busy_w, 1800, e.gpu.effective_mhz(true))
+            })
+            .sum();
+        assert!(
+            projected <= cap * 1.0 + 1e-9,
+            "projected {projected} vs cap {cap}"
+        );
+        for e in &engines {
+            let f = e.gpu.effective_mhz(true);
+            assert!(f < 1800, "clock not lowered: {f}");
+            assert!(f >= 210);
+        }
+    }
+
+    #[test]
+    fn default_governed_gpus_are_never_clamped() {
+        let cfg = ExperimentConfig {
+            governor: GovernorKind::Default,
+            ..ExperimentConfig::default()
+        };
+        let mut engines = fleet(&cfg, 2);
+        let mut c = PowerCapCoordinator::new(&cfg, 100.0);
+        let live = [
+            CapInput { gpu: 0, avg_power_w: 280.0, clock_mhz: 1800 },
+            CapInput { gpu: 1, avg_power_w: 280.0, clock_mhz: 1800 },
+        ];
+        c.coordinate(&mut engines, &live);
+        assert_eq!(c.telemetry().clamps, 0);
+        assert_eq!(engines[0].gpu.clock_changes(), 0);
+    }
+
+    #[test]
+    fn idle_fleet_under_tiny_cap_clamps_to_nothing_below_floor() {
+        // All-idle measurements carry no dynamic headroom: nothing to
+        // scale, no clamps, no panic — even with a cap below the
+        // aggregate idle floor.
+        let cfg = locked_cfg(1800);
+        let mut engines = fleet(&cfg, 3);
+        let idle = PowerModel::new(&cfg.gpu).idle_w();
+        let mut c = PowerCapCoordinator::new(&cfg, idle);
+        let live: Vec<CapInput> = (0..3)
+            .map(|gpu| CapInput {
+                gpu,
+                avg_power_w: idle,
+                clock_mhz: 1800,
+            })
+            .collect();
+        c.coordinate(&mut engines, &live);
+        assert_eq!(c.telemetry().clamps, 0);
+    }
+}

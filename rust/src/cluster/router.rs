@@ -1,0 +1,255 @@
+//! Shared-stream routing: one arrival stream, N engines, a pluggable
+//! dispatch policy.
+//!
+//! Every policy is deterministic — same stream, same fleet state, same
+//! assignment — and allocation-free per dispatch (the router's state is
+//! a handful of counters sized once at construction), so routing stays
+//! off the co-simulation hot path's allocator. Ties always break toward
+//! the lowest GPU index. At N=1 every policy collapses to GPU 0, which
+//! is one half of the cluster-vs-standalone bitwise-identity guarantee.
+
+use crate::server::{Engine, Request};
+
+/// Output-length threshold separating the interactive SLO class from
+/// the throughput class for [`RoutePolicy::SloClass`]: requests
+/// expecting at most this many output tokens are treated as
+/// latency-sensitive (chat-style turns), longer generations as
+/// batch/throughput work — GreenLLM's two-class framing.
+pub const SLO_INTERACTIVE_MAX_OUTPUT: u32 = 64;
+
+/// Routing policy for the fleet's shared arrival stream.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutePolicy {
+    /// Strict rotation over the fleet, ignoring state.
+    RoundRobin,
+    /// Send each arrival to the GPU with the fewest outstanding
+    /// requests (waiting + running + un-admitted feed backlog) *as of
+    /// its last advance* — engines lag the router's virtual time by up
+    /// to one window, so this is exactly the one-window-stale load
+    /// view a real cluster dispatcher works from.
+    LeastLoaded,
+    /// Pin each prompt template to one GPU (`template_id mod N`) so
+    /// that GPU's prefix cache keeps serving the template's shared
+    /// prefix — the "High Cache Hit" prototype's win generalised to a
+    /// fleet.
+    PrefixAffinity,
+    /// Partition the fleet by SLO class: interactive requests
+    /// (`target_output <=` [`SLO_INTERACTIVE_MAX_OUTPUT`]) rotate over
+    /// the low half of the fleet, throughput requests over the high
+    /// half, so per-GPU governors see homogeneous traffic they can
+    /// specialise their clocks to.
+    SloClass,
+}
+
+impl RoutePolicy {
+    /// Parse a CLI spelling (`--route` accepts short or long forms).
+    pub fn parse(s: &str) -> Result<RoutePolicy, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "rr" | "round-robin" | "roundrobin" => {
+                Ok(RoutePolicy::RoundRobin)
+            }
+            "ll" | "least-loaded" | "leastloaded" => {
+                Ok(RoutePolicy::LeastLoaded)
+            }
+            "prefix" | "affinity" | "prefix-affinity" => {
+                Ok(RoutePolicy::PrefixAffinity)
+            }
+            "slo" | "slo-class" | "sloclass" => Ok(RoutePolicy::SloClass),
+            other => Err(format!(
+                "unknown routing policy '{other}' \
+                 (expected rr | ll | prefix | slo)"
+            )),
+        }
+    }
+
+    /// Stable short label (CLI echo, CSV columns).
+    pub fn label(&self) -> &'static str {
+        match self {
+            RoutePolicy::RoundRobin => "rr",
+            RoutePolicy::LeastLoaded => "ll",
+            RoutePolicy::PrefixAffinity => "prefix",
+            RoutePolicy::SloClass => "slo",
+        }
+    }
+
+    pub fn all() -> [RoutePolicy; 4] {
+        [
+            RoutePolicy::RoundRobin,
+            RoutePolicy::LeastLoaded,
+            RoutePolicy::PrefixAffinity,
+            RoutePolicy::SloClass,
+        ]
+    }
+}
+
+/// The dispatcher: assigns each arrival of the time-sorted shared
+/// stream to one GPU.
+pub struct Router {
+    policy: RoutePolicy,
+    rr_next: usize,
+    /// Per-SLO-class rotation counters ([interactive, batch]).
+    rr_class: [usize; 2],
+    /// Per-GPU routed-request counts (telemetry).
+    routed: Vec<u64>,
+}
+
+impl Router {
+    pub fn new(policy: RoutePolicy, gpus: usize) -> Router {
+        assert!(gpus >= 1, "router needs at least one GPU");
+        Router {
+            policy,
+            rr_next: 0,
+            rr_class: [0, 0],
+            routed: vec![0; gpus],
+        }
+    }
+
+    /// Requests dispatched to each GPU so far.
+    pub fn routed(&self) -> &[u64] {
+        &self.routed
+    }
+
+    /// Pick the target GPU for `req` given the fleet's engines.
+    pub fn pick(&mut self, engines: &[Engine], req: &Request) -> usize {
+        let n = engines.len();
+        debug_assert_eq!(n, self.routed.len());
+        let idx = match self.policy {
+            RoutePolicy::RoundRobin => {
+                let i = self.rr_next;
+                self.rr_next = (self.rr_next + 1) % n;
+                i
+            }
+            RoutePolicy::LeastLoaded => {
+                let mut best = 0usize;
+                let mut best_load = usize::MAX;
+                for (i, e) in engines.iter().enumerate() {
+                    let load = e.sched.queue_depth()
+                        + e.sched.running_count()
+                        + e.pending_arrivals();
+                    if load < best_load {
+                        best = i;
+                        best_load = load;
+                    }
+                }
+                best
+            }
+            RoutePolicy::PrefixAffinity => req.template_id as usize % n,
+            RoutePolicy::SloClass => {
+                let interactive =
+                    req.target_output <= SLO_INTERACTIVE_MAX_OUTPUT;
+                // Interactive class owns [0, ceil(N/2)), batch the
+                // rest; a class whose partition is empty (N=1) falls
+                // back to the whole fleet.
+                let split = n.div_ceil(2);
+                let (lo, hi) =
+                    if interactive { (0, split) } else { (split, n) };
+                let (lo, hi) = if lo >= hi { (0, n) } else { (lo, hi) };
+                let c = &mut self.rr_class[usize::from(interactive)];
+                let i = lo + *c % (hi - lo);
+                *c += 1;
+                i
+            }
+        };
+        self.routed[idx] += 1;
+        idx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+    use std::sync::Arc;
+
+    fn fleet(n: usize) -> Vec<Engine> {
+        let cfg = ExperimentConfig::default();
+        let empty: Arc<[Request]> = Vec::new().into();
+        (0..n)
+            .map(|_| {
+                let mut e =
+                    Engine::try_with_shared(&cfg, empty.clone()).unwrap();
+                e.open_feed();
+                e
+            })
+            .collect()
+    }
+
+    fn req(id: u64, template: u32, out: u32) -> Request {
+        Request::new(id, id as f64 * 0.1, 128, out, template, 0)
+    }
+
+    #[test]
+    fn parse_accepts_all_spellings() {
+        for (s, p) in [
+            ("rr", RoutePolicy::RoundRobin),
+            ("round-robin", RoutePolicy::RoundRobin),
+            ("LL", RoutePolicy::LeastLoaded),
+            ("least-loaded", RoutePolicy::LeastLoaded),
+            ("prefix", RoutePolicy::PrefixAffinity),
+            ("affinity", RoutePolicy::PrefixAffinity),
+            ("slo", RoutePolicy::SloClass),
+            ("slo-class", RoutePolicy::SloClass),
+        ] {
+            assert_eq!(RoutePolicy::parse(s).unwrap(), p, "{s}");
+        }
+        assert!(RoutePolicy::parse("nope").is_err());
+        for p in RoutePolicy::all() {
+            assert_eq!(RoutePolicy::parse(p.label()).unwrap(), p);
+        }
+    }
+
+    #[test]
+    fn round_robin_rotates() {
+        let engines = fleet(3);
+        let mut r = Router::new(RoutePolicy::RoundRobin, 3);
+        let picks: Vec<usize> = (0..7)
+            .map(|i| r.pick(&engines, &req(i, 0, 32)))
+            .collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2, 0]);
+        assert_eq!(r.routed(), &[3, 2, 2]);
+    }
+
+    #[test]
+    fn least_loaded_prefers_emptier_backlog_with_low_index_ties() {
+        let mut engines = fleet(3);
+        let mut r = Router::new(RoutePolicy::LeastLoaded, 3);
+        // All empty: tie breaks to GPU 0.
+        assert_eq!(r.pick(&engines, &req(0, 0, 32)), 0);
+        // Give GPU 0 and 1 a feed backlog; GPU 2 becomes least loaded.
+        engines[0].enqueue_arrival(req(1, 0, 32)).unwrap();
+        engines[0].enqueue_arrival(req(2, 0, 32)).unwrap();
+        engines[1].enqueue_arrival(req(3, 0, 32)).unwrap();
+        assert_eq!(r.pick(&engines, &req(4, 0, 32)), 2);
+    }
+
+    #[test]
+    fn prefix_affinity_pins_templates() {
+        let engines = fleet(4);
+        let mut r = Router::new(RoutePolicy::PrefixAffinity, 4);
+        for id in 0..12u64 {
+            let template = (id % 6) as u32;
+            let pick = r.pick(&engines, &req(id, template, 32));
+            assert_eq!(pick, template as usize % 4);
+        }
+    }
+
+    #[test]
+    fn slo_class_partitions_the_fleet() {
+        let engines = fleet(4);
+        let mut r = Router::new(RoutePolicy::SloClass, 4);
+        // Interactive (short output) stays in [0, 2), batch in [2, 4).
+        for id in 0..8u64 {
+            let p = r.pick(&engines, &req(id, 0, 16));
+            assert!(p < 2, "interactive routed to {p}");
+        }
+        for id in 8..16u64 {
+            let p = r.pick(&engines, &req(id, 0, 512));
+            assert!(p >= 2, "batch routed to {p}");
+        }
+        // N=1: both classes collapse to GPU 0.
+        let one = fleet(1);
+        let mut r1 = Router::new(RoutePolicy::SloClass, 1);
+        assert_eq!(r1.pick(&one, &req(0, 0, 16)), 0);
+        assert_eq!(r1.pick(&one, &req(1, 0, 512)), 0);
+    }
+}

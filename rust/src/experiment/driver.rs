@@ -33,6 +33,120 @@ use super::harness::{window_latency_means, RunResult, WindowRecord};
 /// The window-cadence experiment driver.
 pub struct GovernorDriver;
 
+/// Per-engine window bookkeeping for one governor-driven run: the exact
+/// scrape → delta → observe → actuate → record sequence
+/// [`GovernorDriver::drive`] runs each window, factored out so the
+/// fleet co-simulator ([`crate::cluster`]) drives *the same code* per
+/// GPU instead of re-implementing the loop — which is what makes an
+/// N=1 cluster window sequence bitwise-identical to a standalone run
+/// (`tests/cluster_semantics.rs` holds it to that).
+#[derive(Default)]
+pub struct WindowTracker {
+    windows: Vec<WindowRecord>,
+    last_energy: f64,
+    last_tokens: u64,
+    last_finished_idx: usize,
+}
+
+impl WindowTracker {
+    pub fn new() -> WindowTracker {
+        WindowTracker::default()
+    }
+
+    /// Record the window that just ran: `engine.run_until(boundary)`
+    /// returned `alive`, and `clock_before` was scraped
+    /// (`effective_mhz(true)`) before the run. Lets the governor
+    /// observe the window and actuates its clock decision. Returns true
+    /// when the run is over (engine drained or `cfg.duration_s`
+    /// reached) — the driver's loop-break predicate.
+    pub fn record_window(
+        &mut self,
+        cfg: &ExperimentConfig,
+        engine: &mut Engine,
+        governor: &mut dyn Governor,
+        clock_before: u32,
+        alive: bool,
+    ) -> bool {
+        let snap = engine.snapshot();
+        let (ttft, tpot, e2e) =
+            window_latency_means(&engine.finished_log, self.last_finished_idx);
+        self.last_finished_idx = engine.finished_log.len();
+
+        let energy_j = snap.energy_j_total - self.last_energy;
+        self.last_energy = snap.energy_j_total;
+        let tokens_total =
+            snap.prefill_tokens_total + snap.decode_tokens_total;
+        let tokens = tokens_total - self.last_tokens;
+        self.last_tokens = tokens_total;
+        let edp = match e2e {
+            Some(d) if tokens > 0 => energy_j * d,
+            _ => 0.0,
+        };
+
+        let time_s = snap.time_s;
+        let requests_waiting = snap.requests_waiting;
+        let requests_running = snap.requests_running;
+        let kv_usage = snap.kv_usage;
+        let power_w = snap.power_w;
+
+        let obs = WindowObservation {
+            snapshot: snap,
+            ttft_mean: ttft,
+            tpot_mean: tpot,
+            e2e_mean: e2e,
+        };
+        let mut reward = None;
+        if let Some(decision) = governor.observe_window(&obs) {
+            engine.gpu.set_clock(decision.freq_mhz);
+            reward = decision.reward;
+        }
+
+        self.windows.push(WindowRecord {
+            t_s: time_s,
+            clock_mhz: clock_before,
+            energy_j,
+            tokens,
+            edp,
+            ttft_mean: ttft,
+            tpot_mean: tpot,
+            e2e_mean: e2e,
+            reward,
+            exploiting: governor.exploiting(),
+            requests_waiting,
+            requests_running,
+            kv_usage,
+            power_w,
+        });
+
+        !alive || time_s >= cfg.duration_s
+    }
+
+    /// Windows recorded so far.
+    pub fn windows(&self) -> &[WindowRecord] {
+        &self.windows
+    }
+
+    pub fn last_window(&self) -> Option<&WindowRecord> {
+        self.windows.last()
+    }
+
+    /// Close out the run, consuming the engine into a [`RunResult`].
+    pub fn finish(
+        self,
+        engine: Engine,
+        governor: &dyn Governor,
+    ) -> RunResult {
+        RunResult {
+            total_energy_j: engine.gpu.energy_j(),
+            duration_s: engine.clock.now(),
+            clock_changes: engine.gpu.clock_changes(),
+            windows: self.windows,
+            finished: engine.finished_log,
+            tuner: governor.telemetry(),
+        }
+    }
+}
+
 impl GovernorDriver {
     /// Run `cfg` to completion over a shared request stream with the
     /// governor [`governors::build`] selects for it.
@@ -40,7 +154,7 @@ impl GovernorDriver {
         cfg: &ExperimentConfig,
         requests: Arc<[Request]>,
     ) -> Result<RunResult, String> {
-        let engine = Engine::with_shared(cfg, requests);
+        let engine = Engine::try_with_shared(cfg, requests)?;
         let mut governor = governors::build(cfg);
         Ok(Self::drive(cfg, engine, governor.as_mut()))
     }
@@ -57,74 +171,25 @@ impl GovernorDriver {
         }
 
         let window_s = cfg.tuner.window_s;
-        let mut windows = Vec::new();
+        let mut tracker = WindowTracker::new();
         let mut t_next = window_s;
-        let mut last_energy = 0.0;
-        let mut last_tokens = 0u64;
-        let mut last_finished_idx = 0usize;
 
         loop {
             let clock_before = engine.gpu.effective_mhz(true);
             let alive = engine.run_until(t_next);
-            let snap = engine.snapshot();
-            let (ttft, tpot, e2e) =
-                window_latency_means(&engine.finished_log, last_finished_idx);
-            last_finished_idx = engine.finished_log.len();
-
-            let energy_j = snap.energy_j_total - last_energy;
-            last_energy = snap.energy_j_total;
-            let tokens_total =
-                snap.prefill_tokens_total + snap.decode_tokens_total;
-            let tokens = tokens_total - last_tokens;
-            last_tokens = tokens_total;
-            let edp = match e2e {
-                Some(d) if tokens > 0 => energy_j * d,
-                _ => 0.0,
-            };
-
-            let obs = WindowObservation {
-                snapshot: snap,
-                ttft_mean: ttft,
-                tpot_mean: tpot,
-                e2e_mean: e2e,
-            };
-            let mut reward = None;
-            if let Some(decision) = governor.observe_window(&obs) {
-                engine.gpu.set_clock(decision.freq_mhz);
-                reward = decision.reward;
-            }
-
-            windows.push(WindowRecord {
-                t_s: snap.time_s,
-                clock_mhz: clock_before,
-                energy_j,
-                tokens,
-                edp,
-                ttft_mean: ttft,
-                tpot_mean: tpot,
-                e2e_mean: e2e,
-                reward,
-                exploiting: governor.exploiting(),
-                requests_waiting: snap.requests_waiting,
-                requests_running: snap.requests_running,
-                kv_usage: snap.kv_usage,
-                power_w: snap.power_w,
-            });
-
-            if !alive || snap.time_s >= cfg.duration_s {
+            if tracker.record_window(
+                cfg,
+                &mut engine,
+                governor,
+                clock_before,
+                alive,
+            ) {
                 break;
             }
             t_next += window_s;
         }
 
-        RunResult {
-            total_energy_j: engine.gpu.energy_j(),
-            duration_s: engine.clock.now(),
-            clock_changes: engine.gpu.clock_changes(),
-            windows,
-            finished: engine.finished_log,
-            tuner: governor.telemetry(),
-        }
+        tracker.finish(engine, governor)
     }
 }
 

@@ -29,7 +29,7 @@ pub mod phases;
 pub mod report;
 pub mod sweep;
 
-pub use driver::GovernorDriver;
+pub use driver::{GovernorDriver, WindowTracker};
 pub use executor::Executor;
 pub use orchestrator::{
     index_grid, merge_grid_csv, run_legs, shard_grid, GridLeg, ShardJob,

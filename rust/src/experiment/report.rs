@@ -257,6 +257,86 @@ pub fn grid_results_csv(rows: &[GridCsvRow]) -> String {
     buf.contents()
 }
 
+/// CSV header of [`cluster_gpu_csv`]: one row per (seed, GPU) of an
+/// `agft cluster` run.
+pub const CLUSTER_CSV_HEADER: [&str; 9] = [
+    "seed",
+    "gpu",
+    "routed",
+    "finished",
+    "energy_j",
+    "mean_ttft_s",
+    "mean_e2e_s",
+    "windows",
+    "clock_changes",
+];
+
+/// Render per-GPU cluster results as CSV (one block per seed replica,
+/// deterministic shortest-roundtrip floats like [`grid_results_csv`]).
+pub fn cluster_gpu_csv(
+    runs: &[(u64, &crate::cluster::ClusterResult)],
+) -> String {
+    let (mut w, buf) = CsvWriter::in_memory(&CLUSTER_CSV_HEADER)
+        .expect("in-memory csv");
+    for (seed, r) in runs {
+        for (gpu, g) in r.per_gpu.iter().enumerate() {
+            w.row(&[
+                seed.to_string(),
+                gpu.to_string(),
+                r.routed[gpu].to_string(),
+                g.finished.len().to_string(),
+                g.total_energy_j.to_string(),
+                g.mean_ttft().to_string(),
+                g.mean_e2e().to_string(),
+                g.windows.len().to_string(),
+                g.clock_changes.to_string(),
+            ])
+            .expect("in-memory csv row");
+        }
+    }
+    w.flush().expect("in-memory csv flush");
+    buf.contents()
+}
+
+/// Render one cluster run's per-GPU table (the `agft cluster` report
+/// body; EXPERIMENTS.md §Cluster).
+pub fn render_cluster(
+    title: &str,
+    r: &crate::cluster::ClusterResult,
+) -> String {
+    let rows: Vec<Vec<String>> = r
+        .per_gpu
+        .iter()
+        .enumerate()
+        .map(|(gpu, g)| {
+            vec![
+                gpu.to_string(),
+                r.routed[gpu].to_string(),
+                g.finished.len().to_string(),
+                format!("{:.1}", g.total_energy_j),
+                format!("{:.4}", g.mean_ttft()),
+                format!("{:.3}", g.mean_e2e()),
+                g.windows.len().to_string(),
+                g.clock_changes.to_string(),
+            ]
+        })
+        .collect();
+    render_table(
+        title,
+        &[
+            "GPU",
+            "routed",
+            "finished",
+            "energy J",
+            "TTFT s",
+            "E2E s",
+            "windows",
+            "clock switches",
+        ],
+        &rows,
+    )
+}
+
 /// Ensure `results/` exists and return the CSV path for a bench.
 pub fn results_path(name: &str) -> PathBuf {
     let dir = Path::new("results");
@@ -437,6 +517,35 @@ mod tests {
         assert_eq!(parsed[0][3].parse::<f64>().unwrap(), 100.0);
         assert_eq!(parsed[0][8].parse::<f64>().unwrap(), 400.0);
         assert_eq!(parsed[0][12], "7");
+    }
+
+    #[test]
+    fn cluster_rows_render_per_gpu() {
+        let run = |energy: f64| RunResult {
+            windows: (0..3).map(|_| window(100.0)).collect(),
+            finished: Vec::new(),
+            total_energy_j: energy,
+            duration_s: 2.4,
+            clock_changes: 2,
+            tuner: None,
+        };
+        let cluster = crate::cluster::ClusterResult {
+            per_gpu: vec![run(300.0), run(450.0)],
+            routed: vec![5, 7],
+            engine_polls: 6,
+            cap: None,
+        };
+        let text = render_cluster("cluster (seed 1)", &cluster);
+        assert!(text.contains("== cluster (seed 1) =="));
+        assert!(text.contains("300.0"), "{text}");
+        assert!(text.contains("450.0"), "{text}");
+        let csv = cluster_gpu_csv(&[(1, &cluster)]);
+        let (hdr, rows) = crate::util::csv::parse(&csv).unwrap();
+        assert_eq!(hdr, CLUSTER_CSV_HEADER.to_vec());
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0][0], "1");
+        assert_eq!(rows[1][2], "7");
+        assert_eq!(rows[1][4].parse::<f64>().unwrap(), 450.0);
     }
 
     #[test]

@@ -96,6 +96,35 @@ impl PowerModel {
     pub fn idle_span_energy_j(&self, t0: f64, t1: f64) -> f64 {
         self.span_energy_j(self.idle_w, t0, t1)
     }
+
+    /// Project a *measured* average board power from one clock onto
+    /// another, holding utilisation fixed: the dynamic component above
+    /// the idle floor scales by the DVFS curve ratio
+    /// `dyn_curve(f_to/f_max) / dyn_curve(f_from/f_max)`. This is the
+    /// datacenter power-cap coordinator's planning primitive
+    /// ([`crate::cluster`]): given a GPU's last-window power at the
+    /// clock it actually ran, estimate its next-window demand at the
+    /// clock its governor just locked — or search the frequency table
+    /// for the highest clock whose projection fits a budget. Memory
+    /// power does not scale with the core clock, so treating the whole
+    /// dynamic share as clock-scaled slightly *over*-estimates the
+    /// saving of a down-clock; for a cap coordinator that bias is the
+    /// safe direction only at the margin and the cap is re-negotiated
+    /// every window anyway.
+    pub fn rescale_w(&self, p_meas_w: f64, f_from_mhz: u32, f_to_mhz: u32) -> f64 {
+        if f_from_mhz == f_to_mhz {
+            return p_meas_w;
+        }
+        let fr_from =
+            (f_from_mhz as f64 / self.f_max_mhz).clamp(0.0, 1.0);
+        let fr_to = (f_to_mhz as f64 / self.f_max_mhz).clamp(0.0, 1.0);
+        let d_from = self.dyn_curve(fr_from);
+        if d_from <= 0.0 {
+            return p_meas_w;
+        }
+        let dynamic = (p_meas_w - self.idle_w).max(0.0);
+        self.idle_w + dynamic * self.dyn_curve(fr_to) / d_from
+    }
 }
 
 #[cfg(test)]
@@ -199,6 +228,30 @@ mod tests {
         let m = model();
         let whole = m.idle_span_energy_j(2.5, 12.5);
         assert_eq!(whole.to_bits(), (m.idle_w() * 10.0).to_bits());
+    }
+
+    #[test]
+    fn rescale_projects_dynamic_power_along_the_dvfs_curve() {
+        let m = model();
+        // A fully-busy measurement at 1800 projected down to 1200 must
+        // match the model evaluated directly at 1200 (same utilisation).
+        let p_hi = m.power_w(1800, 1.0, 0.0);
+        let p_lo = m.power_w(1200, 1.0, 0.0);
+        let proj = m.rescale_w(p_hi, 1800, 1200);
+        assert!((proj - p_lo).abs() < 1e-9, "proj={proj} direct={p_lo}");
+        // Identity cases.
+        assert_eq!(m.rescale_w(p_hi, 1800, 1800), p_hi);
+        // At-or-below-idle measurements (idle windows; can't physically
+        // read below the floor) project to exactly the idle floor.
+        assert_eq!(m.rescale_w(m.idle_w() * 0.5, 1800, 210), m.idle_w());
+        assert_eq!(m.rescale_w(m.idle_w(), 1800, 210), m.idle_w());
+        // Down-clock projections are monotone in the target clock.
+        let mut prev = 0.0;
+        for f in (210..=1800).step_by(15) {
+            let p = m.rescale_w(p_hi, 1800, f);
+            assert!(p > prev, "not monotone at {f}");
+            prev = p;
+        }
     }
 
     #[test]

@@ -24,6 +24,7 @@
 #![allow(clippy::needless_range_loop, clippy::too_many_arguments)]
 
 pub mod analysis;
+pub mod cluster;
 pub mod config;
 pub mod experiment;
 pub mod gpu;

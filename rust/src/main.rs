@@ -2,6 +2,7 @@
 //!
 //! ```text
 //! agft serve       --workload normal --governor agft --duration 600
+//! agft cluster     --gpus 8 --route ll --power-cap 1200 --seeds 3
 //! agft compare     --governors agft,ondemand,slo,bandit,default --seeds 5
 //! agft compare     --shard 1/4 --out shard1.csv    (grid partitioning)
 //! agft sweep       --workload normal --step 45 --duration 240
@@ -20,6 +21,7 @@
 //! Every sub-command also accepts `--config <file.toml>` to start from a
 //! TOML experiment file instead of the defaults, plus `--seed N`.
 
+use agft::cluster::{run_cluster, ClusterResult, ClusterSpec, RoutePolicy};
 use agft::config::{
     self, ExperimentConfig, GovernorKind, WorkloadKind,
 };
@@ -30,7 +32,7 @@ use agft::experiment::phases::{
     governor_seed_grid, grain_ablation_variant, learning_and_stable,
     phase_metrics, pruning_ablation_variant, run_governors_seeded,
     run_grid_with, seed_grid, stable_windows, summarize_run_totals,
-    summarize_seeds, PhaseComparison,
+    summarize_seeds, MeanCi, PhaseComparison,
 };
 use agft::experiment::report::{self, render_comparison};
 use agft::experiment::sweep::{edp_sweep_with, parse_shard};
@@ -90,6 +92,131 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
             t.pruned_historical,
             t.pruned_cascade,
             t.refinements,
+        );
+    }
+    Ok(())
+}
+
+/// `agft cluster` — the fleet co-simulation: one shared arrival stream
+/// routed across `--gpus` embedded engines advanced on the global
+/// next-event heap, with per-GPU governors and an optional
+/// `--power-cap` coordinator. `--seeds N` replicates the whole cluster
+/// across N consecutive seeds on the executor and reports mean ± 95 %
+/// CI fleet aggregates.
+fn cmd_cluster(args: &Args) -> Result<(), String> {
+    let cfg = base_config(args)?;
+    let gpus = args.get_usize("gpus", 4)?;
+    if gpus == 0 {
+        return Err("--gpus 0: need at least one GPU".to_string());
+    }
+    let route = RoutePolicy::parse(&args.get_str("route", "rr"))?;
+    let power_cap_w = args
+        .get("power-cap")
+        .map(|v| {
+            v.parse::<f64>()
+                .map_err(|e| format!("--power-cap {v:?}: {e}"))
+        })
+        .transpose()?;
+    let seeds = args.get_u64("seeds", 1)?;
+    if seeds == 0 {
+        return Err("--seeds 0: need at least one replica".to_string());
+    }
+    let spec = ClusterSpec { gpus, route, power_cap_w };
+    let seed_list: Vec<u64> = (0..seeds).map(|k| cfg.seed + k).collect();
+    let exec = executor_from(args)?;
+    eprintln!(
+        "cluster: {gpus} GPUs, route {}, {} seed replica(s) on {} \
+         worker(s) ...",
+        route.label(),
+        seeds,
+        exec.workers(),
+    );
+    // Each seed replica realizes its own stream and runs the whole
+    // fleet; replicas are independent, so they fan out on the executor.
+    let results: Vec<ClusterResult> =
+        exec.try_map(&seed_list, |_, &seed| {
+            let mut c = cfg.clone();
+            c.seed = seed;
+            let requests = workload::realize(
+                &c.workload, c.arrival_rps, c.duration_s, seed,
+            )?;
+            run_cluster(&c, &spec, requests.into())
+        })?;
+
+    let first = &results[0];
+    println!(
+        "{}",
+        report::render_cluster(
+            &format!(
+                "cluster (seed {}, {gpus} GPUs, route {})",
+                seed_list[0],
+                route.label(),
+            ),
+            first,
+        )
+    );
+    if let Some(t) = &first.cap {
+        println!(
+            "power cap {:.0} W: {} rounds, {} capped windows, {} \
+             clamps, peak projected demand {:.0} W, realized peak \
+             window {:.0} W",
+            spec.power_cap_w.unwrap_or_default(),
+            t.rounds,
+            t.capped_windows,
+            t.clamps,
+            t.peak_demand_w,
+            first.peak_fleet_window_w(),
+        );
+    }
+    if seeds > 1 {
+        let energy = MeanCi::from_samples(
+            results.iter().map(|r| r.fleet_energy_j()),
+        );
+        let ttft = MeanCi::from_samples(
+            results.iter().map(|r| r.fleet_mean_ttft()),
+        );
+        let e2e = MeanCi::from_samples(
+            results.iter().map(|r| r.fleet_mean_e2e()),
+        );
+        let peak = MeanCi::from_samples(
+            results.iter().map(|r| r.peak_fleet_window_w()),
+        );
+        println!(
+            "fleet over {seeds} seeds: energy {:.0} ± {:.0} J | TTFT \
+             {:.3} ± {:.3} s | E2E {:.2} ± {:.2} s | peak window {:.0} \
+             ± {:.0} W",
+            energy.mean,
+            energy.half95,
+            ttft.mean,
+            ttft.half95,
+            e2e.mean,
+            e2e.half95,
+            peak.mean,
+            peak.half95,
+        );
+    } else {
+        println!(
+            "fleet: {} finished | {:.0} J | mean TTFT {:.3} s | mean \
+             E2E {:.2} s | peak window {:.0} W | {} engine polls",
+            first.fleet_finished(),
+            first.fleet_energy_j(),
+            first.fleet_mean_ttft(),
+            first.fleet_mean_e2e(),
+            first.peak_fleet_window_w(),
+            first.engine_polls,
+        );
+    }
+    if let Some(out) = args.get("out") {
+        let rows: Vec<(u64, &ClusterResult)> = seed_list
+            .iter()
+            .copied()
+            .zip(results.iter())
+            .collect();
+        let csv = report::cluster_gpu_csv(&rows);
+        std::fs::write(out, &csv).map_err(|e| format!("{out}: {e}"))?;
+        eprintln!(
+            "wrote {} per-GPU rows to {out}",
+            seeds as usize * gpus
         );
     }
     Ok(())
@@ -787,11 +914,14 @@ fn cmd_metrics(args: &Args) -> Result<(), String> {
 
 fn usage() -> ! {
     eprintln!(
-        "usage: agft <serve|compare|sweep|merge-csv|orchestrate|ablation|\
-         fingerprint|trace-gen|metrics|bench-all> [options]\n\
+        "usage: agft <serve|cluster|compare|sweep|merge-csv|orchestrate|\
+         ablation|fingerprint|trace-gen|metrics|bench-all> [options]\n\
          common options: --config <toml> --workload <name> --governor \
          <default|agft|ondemand|slo|bandit|locked:MHZ> --duration S \
          --rps R --seed N --workers N\n\
+         cluster options: --gpus N --route rr|ll|prefix|slo \
+         [--power-cap W] [--seeds K] [--out per_gpu.csv] (fleet \
+         co-simulation on the global next-event heap)\n\
          compare options: --governors a,b,c (baseline matrix, e.g. \
          agft,ondemand,slo,bandit,default)\n\
          grid sharding: compare|ablation|sweep accept --shard K/N \
@@ -825,6 +955,7 @@ fn main() {
     };
     let result = match cmd.as_str() {
         "serve" => cmd_serve(&args),
+        "cluster" => cmd_cluster(&args),
         "compare" | "longrun" => cmd_compare(&args),
         "sweep" => cmd_sweep(&args),
         "merge-csv" => cmd_merge_csv(&args),

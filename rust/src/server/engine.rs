@@ -45,7 +45,20 @@
 //! (`set_decode_span(false)`) while the span costs one engine step —
 //! `iterations_total` and `decode_spans_total` are the only
 //! deliberately mode-dependent counters.
+//!
+//! The engine is also **embeddable**: besides its owned arrival stream
+//! (the `Arc<[Request]>` cursor), a host — the fleet co-simulator in
+//! [`crate::cluster`] — can [`Engine::open_feed`] an external arrival
+//! feed and [`Engine::enqueue_arrival`] routed requests into it. Both
+//! sources merge by arrival timestamp at the same admission points, and
+//! the public [`Engine::next_event_time`] oracle exposes the earliest
+//! timestamp at which the engine can make progress, which is what lets
+//! a host advance a fleet with a global next-event heap instead of
+//! polling every engine every tick. A standalone engine (feed never
+//! opened, nothing injected) takes bitwise-identical paths to the
+//! pre-refactor code.
 
+use std::collections::VecDeque;
 use std::sync::Arc;
 
 use crate::config::ExperimentConfig;
@@ -129,6 +142,16 @@ pub struct Engine {
     /// cursor of the first not-yet-submitted request.
     arrivals: Arc<[Request]>,
     next_arrival: usize,
+    /// Externally routed arrivals (the cluster feed), kept
+    /// arrival-ordered by [`Engine::enqueue_arrival`]'s monotonicity
+    /// check. Empty for standalone engines.
+    injected: VecDeque<Request>,
+    /// While true, an empty arrival horizon means "awaiting feed", not
+    /// "drained": the host may still route future arrivals in.
+    feed_open: bool,
+    /// KV-pool capacity in tokens (constructor-cached so feed-time
+    /// admission validation mirrors the stream validation).
+    max_kv_tokens: usize,
     pub counters: EngineCounters,
     /// Completed-request latency log.
     pub finished_log: Vec<FinishedRecord>,
@@ -158,21 +181,75 @@ pub struct Engine {
     span_cross_scratch: Vec<u64>,
 }
 
+/// Validate a request stream against `cfg`: every arrival must be a
+/// finite timestamp (a NaN arrival would otherwise poison the arrival
+/// sort and every downstream clock comparison) and every request must
+/// be able to *ever* fit the KV pool. Shared by the engine constructors
+/// and by [`crate::cluster`], whose engines are built over empty owned
+/// streams and fed the validated stream through the router instead.
+pub fn validate_stream(
+    cfg: &ExperimentConfig,
+    requests: &[Request],
+) -> Result<(), String> {
+    let max_tokens = cfg.server.kv_blocks * cfg.server.block_size;
+    for r in requests {
+        if !r.arrival_s.is_finite() {
+            return Err(format!(
+                "request {}: non-finite arrival_s ({})",
+                r.id, r.arrival_s
+            ));
+        }
+        if ((r.prompt_tokens + r.target_output) as usize) >= max_tokens {
+            return Err(format!(
+                "request {} cannot ever fit in the KV pool \
+                 ({} prompt + {} output tokens vs {max_tokens} capacity)",
+                r.id, r.prompt_tokens, r.target_output
+            ));
+        }
+    }
+    Ok(())
+}
+
 impl Engine {
     /// Build an engine from an experiment config and a pre-generated
-    /// request stream (sorted here if needed).
+    /// request stream (sorted here if needed). Panics on an invalid
+    /// stream; [`Engine::try_new`] is the fallible variant.
     pub fn new(cfg: &ExperimentConfig, requests: Vec<Request>) -> Engine {
         Engine::with_shared(cfg, requests.into())
     }
 
-    /// Build an engine over a *shared* request stream. The stream is
-    /// re-sorted (into a private copy) only when it is not already
-    /// arrival-ordered, so sweep points sharing one realized workload
-    /// pay zero per-run clone cost.
+    /// Fallible [`Engine::new`]: a non-finite arrival timestamp or a
+    /// request that can never fit the KV pool is a clear `Err` naming
+    /// the offending request, instead of a context-free panic deep in
+    /// the arrival sort.
+    pub fn try_new(
+        cfg: &ExperimentConfig,
+        requests: Vec<Request>,
+    ) -> Result<Engine, String> {
+        Engine::try_with_shared(cfg, requests.into())
+    }
+
+    /// Build an engine over a *shared* request stream (panicking
+    /// variant of [`Engine::try_with_shared`], kept for callers whose
+    /// streams are validated by construction).
     pub fn with_shared(
         cfg: &ExperimentConfig,
         requests: Arc<[Request]>,
     ) -> Engine {
+        Engine::try_with_shared(cfg, requests)
+            .unwrap_or_else(|e| panic!("invalid request stream: {e}"))
+    }
+
+    /// Build an engine over a *shared* request stream. The stream is
+    /// validated ([`validate_stream`]) and re-sorted (into a private
+    /// copy) only when it is not already arrival-ordered, so sweep
+    /// points sharing one realized workload pay zero per-run clone
+    /// cost.
+    pub fn try_with_shared(
+        cfg: &ExperimentConfig,
+        requests: Arc<[Request]>,
+    ) -> Result<Engine, String> {
+        validate_stream(cfg, &requests)?;
         let sorted = requests
             .windows(2)
             .all(|w| w[0].arrival_s <= w[1].arrival_s);
@@ -180,26 +257,19 @@ impl Engine {
             requests
         } else {
             let mut v: Vec<Request> = requests.to_vec();
-            v.sort_by(|a, b| {
-                a.arrival_s.partial_cmp(&b.arrival_s).unwrap()
-            });
+            v.sort_by(|a, b| a.arrival_s.total_cmp(&b.arrival_s));
             v.into()
         };
-        let max_tokens = cfg.server.kv_blocks * cfg.server.block_size;
-        for r in requests.iter() {
-            assert!(
-                ((r.prompt_tokens + r.target_output) as usize) < max_tokens,
-                "request {} cannot ever fit in the KV pool",
-                r.id
-            );
-        }
-        Engine {
+        Ok(Engine {
             clock: Clock::new(),
             gpu: SimGpu::new(&cfg.gpu, cfg.governor),
             sched: Scheduler::new(&cfg.server),
             perf: PerfModel::new(&cfg.gpu, &cfg.model),
             arrivals: requests,
             next_arrival: 0,
+            injected: VecDeque::new(),
+            feed_open: false,
+            max_kv_tokens: cfg.server.kv_blocks * cfg.server.block_size,
             counters: EngineCounters::default(),
             finished_log: Vec::new(),
             plan_scratch: IterationPlan::default(),
@@ -211,7 +281,7 @@ impl Engine {
             decode_span: cfg.decode_span,
             idle_span_start: None,
             span_cross_scratch: Vec::new(),
-        }
+        })
     }
 
     /// Record an instantaneous power sample every `every_s` of virtual
@@ -247,18 +317,118 @@ impl Engine {
         self.power_trace.as_deref()
     }
 
+    /// Not-yet-admitted arrivals across both sources (owned stream
+    /// cursor remainder plus the external feed backlog).
     pub fn pending_arrivals(&self) -> usize {
-        self.arrivals.len() - self.next_arrival
+        self.arrivals.len() - self.next_arrival + self.injected.len()
+    }
+
+    /// Open the external arrival feed: an empty arrival horizon now
+    /// means "awaiting feed" rather than "drained", so `run_until`
+    /// idles to its bound instead of reporting the engine finished.
+    pub fn open_feed(&mut self) {
+        self.feed_open = true;
+    }
+
+    /// Close the external feed: no further [`Engine::enqueue_arrival`]
+    /// calls are expected, so once both arrival sources are empty the
+    /// engine drains exactly like a standalone one.
+    pub fn close_feed(&mut self) {
+        self.feed_open = false;
+    }
+
+    pub fn feed_open(&self) -> bool {
+        self.feed_open
+    }
+
+    /// Feed one externally routed request. The feed must stay
+    /// arrival-ordered (the host routes a time-sorted shared stream, so
+    /// out-of-order enqueues are host bugs) and each request is held to
+    /// the same validity rules as [`validate_stream`] — a bad routed
+    /// request fails loudly here, not deep inside the planner.
+    pub fn enqueue_arrival(&mut self, req: Request) -> Result<(), String> {
+        if !req.arrival_s.is_finite() {
+            return Err(format!(
+                "request {}: non-finite arrival_s ({})",
+                req.id, req.arrival_s
+            ));
+        }
+        if ((req.prompt_tokens + req.target_output) as usize)
+            >= self.max_kv_tokens
+        {
+            return Err(format!(
+                "request {} cannot ever fit in the KV pool \
+                 ({} prompt + {} output tokens vs {} capacity)",
+                req.id,
+                req.prompt_tokens,
+                req.target_output,
+                self.max_kv_tokens
+            ));
+        }
+        if let Some(last) = self.injected.back() {
+            if req.arrival_s < last.arrival_s {
+                return Err(format!(
+                    "request {}: feed arrivals must be time-ordered \
+                     ({} after {})",
+                    req.id, req.arrival_s, last.arrival_s
+                ));
+            }
+        }
+        self.injected.push_back(req);
+        Ok(())
+    }
+
+    /// The embeddable-engine next-event oracle: the earliest virtual
+    /// timestamp at which this engine can make progress. `Some(now)`
+    /// while runnable work exists, the earliest pending arrival (owned
+    /// stream or external feed) while idle, and `None` when fully
+    /// quiescent — which means *drained* if the feed is closed, and
+    /// *awaiting feed* otherwise. A fleet host keys its next-event heap
+    /// on this instead of polling every engine every tick.
+    pub fn next_event_time(&self) -> Option<f64> {
+        if self.sched.has_work() {
+            return Some(self.clock.now());
+        }
+        self.next_arrival_time()
+    }
+
+    /// Earliest pending arrival across both sources.
+    fn next_arrival_time(&self) -> Option<f64> {
+        let own = self.arrivals.get(self.next_arrival).map(|r| r.arrival_s);
+        let inj = self.injected.front().map(|r| r.arrival_s);
+        match (own, inj) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (own, None) => own,
+            (None, inj) => inj,
+        }
     }
 
     fn pull_arrivals(&mut self) {
         let now = self.clock.now();
-        while self.next_arrival < self.arrivals.len()
-            && self.arrivals[self.next_arrival].arrival_s <= now
-        {
-            let req = self.arrivals[self.next_arrival].clone();
-            self.sched.submit(req);
-            self.next_arrival += 1;
+        loop {
+            let own = self
+                .arrivals
+                .get(self.next_arrival)
+                .map(|r| r.arrival_s);
+            let inj = self.injected.front().map(|r| r.arrival_s);
+            // The owned stream wins timestamp ties: standalone engines
+            // have no feed, so the tie order is unobservable there, and
+            // fixing it keeps mixed-source engines deterministic.
+            match (own, inj) {
+                (Some(a), i) if a <= now && i.is_none_or(|b| a <= b) => {
+                    let req = self.arrivals[self.next_arrival].clone();
+                    self.sched.submit(req);
+                    self.next_arrival += 1;
+                }
+                (_, Some(b)) if b <= now => {
+                    let req = self
+                        .injected
+                        .pop_front()
+                        .expect("front checked above");
+                    self.sched.submit(req);
+                }
+                _ => break,
+            }
         }
     }
 
@@ -290,17 +460,24 @@ impl Engine {
         self.pull_arrivals();
 
         if !self.sched.has_work() {
-            let next_arrival_s = self
-                .arrivals
-                .get(self.next_arrival)
-                .map(|r| r.arrival_s);
-            return match next_arrival_s {
-                None => {
+            return match self.next_arrival_time() {
+                None if !self.feed_open => {
                     debug_assert!(self.idle_span_start.is_none());
                     StepOutcome::Drained
                 }
-                Some(arrival_s) => {
-                    self.idle_step_to(arrival_s.min(t_bound))
+                next => {
+                    // `None` with the feed open: idle to the caller's
+                    // bound awaiting routed arrivals.
+                    let event = next.map_or(t_bound, |a| a.min(t_bound));
+                    let event = if event.is_finite() {
+                        event
+                    } else {
+                        // No bounding event at all (open feed, unbounded
+                        // caller): keep the quantum so direct `step()`
+                        // callers still make observable progress.
+                        self.clock.now() + self.idle_tick_s
+                    };
+                    self.idle_step_to(event)
                 }
             };
         }
@@ -328,12 +505,9 @@ impl Engine {
                 self.sched.next_block_release(),
                 super::scheduler::BlockRelease::Decode { .. }
             ));
-            let next_arrival_s = self
-                .arrivals
-                .get(self.next_arrival)
-                .map(|r| r.arrival_s);
-            let event =
-                next_arrival_s.map_or(t_bound, |a| a.min(t_bound));
+            let event = self
+                .next_arrival_time()
+                .map_or(t_bound, |a| a.min(t_bound));
             let event = if event.is_finite() {
                 event
             } else {
@@ -415,10 +589,8 @@ impl Engine {
     ) -> StepOutcome {
         debug_assert!(max_steps >= 2);
         let t_enter = self.clock.now();
-        let next_arrival_s = self
-            .arrivals
-            .get(self.next_arrival)
-            .map_or(f64::INFINITY, |r| r.arrival_s);
+        let next_arrival_s =
+            self.next_arrival_time().unwrap_or(f64::INFINITY);
         // Per-sequence block-growth schedule: the span iteration index
         // at which each sequence's KV next crosses a block boundary
         // (sequence j crosses at iteration i when `kv_j + i + 1` first
@@ -1029,5 +1201,148 @@ mod tests {
             "open span share missing from the scrape"
         );
         assert!(snap.energy_j_total > expected_idle_j);
+    }
+
+    #[test]
+    fn try_constructors_reject_non_finite_arrivals() {
+        let cfg = default_cfg();
+        for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let reqs = vec![
+                Request::new(0, 0.0, 64, 4, 0, 0),
+                Request::new(7, bad, 64, 4, 1, 0),
+            ];
+            let err = Engine::try_new(&cfg, reqs).err().unwrap();
+            assert!(
+                err.contains("request 7") && err.contains("non-finite"),
+                "unhelpful error: {err}"
+            );
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid request stream: request 7")]
+    fn infallible_constructor_panics_with_context() {
+        // The pre-fix behaviour was a bare `Option::unwrap` panic inside
+        // the arrival sort's `partial_cmp` — no request id, no hint.
+        let cfg = default_cfg();
+        let reqs = vec![
+            Request::new(0, 0.0, 64, 4, 0, 0),
+            Request::new(7, f64::NAN, 64, 4, 1, 0),
+        ];
+        let _ = Engine::new(&cfg, reqs);
+    }
+
+    #[test]
+    fn try_constructors_reject_oversized_requests() {
+        let cfg = default_cfg();
+        let cap = cfg.server.kv_blocks * cfg.server.block_size;
+        let reqs =
+            vec![Request::new(3, 0.0, cap as u32, 1, 0, 0)];
+        let err = Engine::try_new(&cfg, reqs).err().unwrap();
+        assert!(
+            err.contains("request 3") && err.contains("KV pool"),
+            "unhelpful error: {err}"
+        );
+    }
+
+    #[test]
+    fn enqueue_arrival_validates_like_the_constructor() {
+        let cfg = default_cfg();
+        let mut e = Engine::new(&cfg, Vec::new());
+        e.open_feed();
+        let err = e
+            .enqueue_arrival(Request::new(1, f64::NAN, 64, 4, 0, 0))
+            .err()
+            .unwrap();
+        assert!(err.contains("non-finite"), "{err}");
+        e.enqueue_arrival(Request::new(2, 5.0, 64, 4, 0, 0)).unwrap();
+        let err = e
+            .enqueue_arrival(Request::new(3, 4.0, 64, 4, 0, 0))
+            .err()
+            .unwrap();
+        assert!(err.contains("time-ordered"), "{err}");
+        assert_eq!(e.pending_arrivals(), 1);
+    }
+
+    #[test]
+    fn next_event_time_oracle_states() {
+        let cfg = default_cfg();
+        // Owned-stream engine: idle → next arrival; drained → None.
+        let mut e = Engine::new(&cfg, vec![
+            Request::new(0, 1.5, 64, 4, 0, 0),
+        ]);
+        assert_eq!(e.next_event_time(), Some(1.5));
+        e.run_until(1e9);
+        assert_eq!(e.next_event_time(), None);
+
+        // Feed-driven engine: quiescent-but-open is None (awaiting
+        // feed), yet run_until idles to its bound instead of draining.
+        let mut f = Engine::new(&cfg, Vec::new());
+        f.open_feed();
+        assert_eq!(f.next_event_time(), None);
+        assert!(f.run_until(2.0), "open feed must not report drained");
+        assert_eq!(f.clock.now(), 2.0);
+        f.enqueue_arrival(Request::new(1, 3.0, 64, 4, 0, 0)).unwrap();
+        assert_eq!(f.next_event_time(), Some(3.0));
+        f.run_until(3.1);
+        // Work admitted: the oracle says "runnable now".
+        assert_eq!(f.next_event_time(), Some(f.clock.now()));
+        f.close_feed();
+        assert!(!f.run_until(1e9), "closed feed drains");
+        assert_eq!(f.next_event_time(), None);
+        assert_eq!(f.finished_log.len(), 1);
+    }
+
+    #[test]
+    fn external_feed_is_bitwise_identical_to_owned_stream() {
+        // The embeddable refactor's core guarantee: an engine fed the
+        // same requests through `enqueue_arrival` (routed ahead of each
+        // run horizon, the cluster loop's pattern) produces the bitwise
+        // timeline/energy of an engine that owns the stream.
+        let cfg = default_cfg();
+        let reqs = requests(30, 2.5, 256, 48);
+
+        let mut owned = Engine::new(&cfg, reqs.clone());
+        let mut fed = Engine::new(&cfg, Vec::new());
+        fed.open_feed();
+
+        let window_s = 0.8;
+        let mut t_next = window_s;
+        let mut cursor = 0usize;
+        loop {
+            while cursor < reqs.len()
+                && reqs[cursor].arrival_s
+                    <= t_next.max(fed.clock.now())
+            {
+                fed.enqueue_arrival(reqs[cursor].clone()).unwrap();
+                cursor += 1;
+                if cursor == reqs.len() {
+                    fed.close_feed();
+                }
+            }
+            let alive_owned = owned.run_until(t_next);
+            let alive_fed = fed.run_until(t_next);
+            assert_eq!(alive_owned, alive_fed);
+            assert_eq!(
+                owned.clock.now().to_bits(),
+                fed.clock.now().to_bits()
+            );
+            if !alive_fed {
+                break;
+            }
+            t_next += window_s;
+        }
+        assert_eq!(owned.finished_log.len(), 30);
+        assert_eq!(owned.finished_log.len(), fed.finished_log.len());
+        for (a, b) in owned.finished_log.iter().zip(&fed.finished_log) {
+            assert_eq!(a.finish_s.to_bits(), b.finish_s.to_bits());
+            assert_eq!(a.ttft.to_bits(), b.ttft.to_bits());
+            assert_eq!(a.e2e.to_bits(), b.e2e.to_bits());
+        }
+        assert_eq!(
+            owned.gpu.energy_j().to_bits(),
+            fed.gpu.energy_j().to_bits()
+        );
+        assert_eq!(owned.counters.iterations, fed.counters.iterations);
     }
 }

@@ -22,7 +22,9 @@ pub mod request;
 pub mod scheduler;
 pub mod static_batch;
 
-pub use engine::{Engine, EngineCounters, FinishedRecord};
+pub use engine::{
+    validate_stream, Engine, EngineCounters, FinishedRecord,
+};
 pub use kv_cache::KvCache;
 pub use prefix_cache::PrefixCache;
 pub use request::{Phase, Request};

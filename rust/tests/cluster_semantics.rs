@@ -1,0 +1,265 @@
+//! Cluster co-simulation semantics tests.
+//!
+//! The fleet loop's load-bearing guarantees, enforced end to end:
+//!
+//! * **N=1 collapse** — a one-GPU cluster must be *bitwise-identical*
+//!   to the standalone [`run_shared`] harness on window timelines,
+//!   energy totals and the completion log, for every routing policy
+//!   and across governor kinds. This is the composition of two seams
+//!   (external feed == owned stream; per-GPU [`WindowTracker`] == the
+//!   standalone driver loop) and the reason cluster results are
+//!   directly comparable to every single-GPU table in the repo.
+//! * **Determinism** — same stream, same spec, same fleet: every
+//!   routing policy reproduces the identical assignment and the
+//!   identical per-GPU results on a re-run (property over the policy ×
+//!   seed matrix).
+//! * **Power cap** — capping a busy fleet actuates clamps, never
+//!   increases fleet energy, and its telemetry is internally
+//!   consistent; an uncapped run reports no telemetry.
+//!
+//! [`WindowTracker`]: agft::experiment::WindowTracker
+//! [`run_shared`]: agft::experiment::harness::run_shared
+
+use std::sync::Arc;
+
+use agft::cluster::{run_cluster, ClusterResult, ClusterSpec, RoutePolicy};
+use agft::config::{ExperimentConfig, GovernorKind, WorkloadKind};
+use agft::experiment::harness::{run_shared, RunResult};
+use agft::server::Request;
+use agft::util::check::forall;
+use agft::workload;
+
+fn proto_cfg(governor: GovernorKind, seed: u64) -> ExperimentConfig {
+    ExperimentConfig {
+        duration_s: 30.0,
+        arrival_rps: 2.0,
+        governor,
+        workload: WorkloadKind::Prototype("normal".to_string()),
+        seed,
+        ..ExperimentConfig::default()
+    }
+}
+
+fn realized(cfg: &ExperimentConfig) -> Arc<[Request]> {
+    workload::realize(
+        &cfg.workload, cfg.arrival_rps, cfg.duration_s, cfg.seed,
+    )
+    .unwrap()
+    .into()
+}
+
+/// Bitwise comparison of a cluster GPU's result against a standalone
+/// run over the same stream.
+fn assert_gpu_matches(ctx: &str, got: &RunResult, want: &RunResult) {
+    assert_eq!(
+        got.windows.len(),
+        want.windows.len(),
+        "{ctx}: window count"
+    );
+    for (k, (a, b)) in
+        got.windows.iter().zip(&want.windows).enumerate()
+    {
+        assert_eq!(a.t_s.to_bits(), b.t_s.to_bits(), "{ctx}: w{k} t_s");
+        assert_eq!(
+            a.energy_j.to_bits(),
+            b.energy_j.to_bits(),
+            "{ctx}: w{k} energy"
+        );
+        assert_eq!(a.clock_mhz, b.clock_mhz, "{ctx}: w{k} clock");
+        assert_eq!(a.tokens, b.tokens, "{ctx}: w{k} tokens");
+        assert_eq!(a.edp.to_bits(), b.edp.to_bits(), "{ctx}: w{k} edp");
+        assert_eq!(a.exploiting, b.exploiting, "{ctx}: w{k} phase");
+    }
+    assert_eq!(
+        got.total_energy_j.to_bits(),
+        want.total_energy_j.to_bits(),
+        "{ctx}: total energy"
+    );
+    assert_eq!(
+        got.duration_s.to_bits(),
+        want.duration_s.to_bits(),
+        "{ctx}: duration"
+    );
+    assert_eq!(
+        got.clock_changes, want.clock_changes,
+        "{ctx}: clock changes"
+    );
+    assert_eq!(
+        got.finished.len(),
+        want.finished.len(),
+        "{ctx}: completions"
+    );
+    for (a, b) in got.finished.iter().zip(&want.finished) {
+        assert_eq!(
+            a.arrival_s.to_bits(),
+            b.arrival_s.to_bits(),
+            "{ctx}: completion order"
+        );
+        assert_eq!(
+            a.finish_s.to_bits(),
+            b.finish_s.to_bits(),
+            "{ctx}: finish time"
+        );
+        assert_eq!(a.ttft.to_bits(), b.ttft.to_bits(), "{ctx}: ttft");
+        assert_eq!(a.e2e.to_bits(), b.e2e.to_bits(), "{ctx}: e2e");
+    }
+}
+
+/// The tentpole identity: at N=1 every routing policy degenerates to
+/// GPU 0 and the cluster must reproduce the standalone harness bit for
+/// bit — learning governors (whose decisions compound window over
+/// window) included.
+#[test]
+fn n1_cluster_is_bitwise_identical_to_run_shared() {
+    let mut cases: Vec<(GovernorKind, RoutePolicy)> = Vec::new();
+    for route in RoutePolicy::all() {
+        cases.push((GovernorKind::Agft, route));
+        cases.push((GovernorKind::Ondemand, route));
+    }
+    cases.push((GovernorKind::Locked(1230), RoutePolicy::RoundRobin));
+    cases.push((GovernorKind::Default, RoutePolicy::RoundRobin));
+
+    for (governor, route) in cases {
+        let cfg = proto_cfg(governor, 11);
+        let requests = realized(&cfg);
+        let n_req = requests.len() as u64;
+        let standalone =
+            run_shared(&cfg, Arc::clone(&requests)).unwrap();
+        let spec = ClusterSpec { gpus: 1, route, power_cap_w: None };
+        let cluster = run_cluster(&cfg, &spec, requests).unwrap();
+        let ctx = format!("{governor:?}/{}", route.label());
+        assert_eq!(cluster.per_gpu.len(), 1);
+        assert_eq!(
+            cluster.routed,
+            vec![n_req],
+            "{ctx}: every request routed to GPU 0"
+        );
+        assert_gpu_matches(&ctx, &cluster.per_gpu[0], &standalone);
+    }
+}
+
+/// Every policy, every seed: rerunning the identical cluster spec
+/// reproduces the identical routing and per-GPU results (the property
+/// CI's smoke matrix relies on for reproducibility).
+#[test]
+fn routing_is_deterministic_per_seed() {
+    forall("cluster rerun is identical", 8, |rng| {
+        let policies = RoutePolicy::all();
+        let route = policies[(rng.next_u64() % 4) as usize];
+        let seed = 20 + rng.next_u64() % 50;
+        let gpus = 2 + (rng.next_u64() % 3) as usize;
+        let cfg = proto_cfg(GovernorKind::Ondemand, seed);
+        let requests = realized(&cfg);
+        let spec = ClusterSpec { gpus, route, power_cap_w: None };
+        let a =
+            run_cluster(&cfg, &spec, Arc::clone(&requests)).unwrap();
+        let b = run_cluster(&cfg, &spec, requests).unwrap();
+        let ctx = format!("{}/{seed}/{gpus}", route.label());
+        if a.routed != b.routed {
+            return Err(format!("{ctx}: routing diverged"));
+        }
+        let total: u64 = a.routed.iter().sum();
+        if total == 0 {
+            return Err(format!("{ctx}: nothing dispatched"));
+        }
+        if a.engine_polls != b.engine_polls {
+            return Err(format!("{ctx}: poll counts diverged"));
+        }
+        for (i, (ga, gb)) in
+            a.per_gpu.iter().zip(&b.per_gpu).enumerate()
+        {
+            if ga.total_energy_j.to_bits()
+                != gb.total_energy_j.to_bits()
+            {
+                return Err(format!("{ctx}: gpu {i} energy diverged"));
+            }
+            if ga.finished.len() != gb.finished.len() {
+                return Err(format!(
+                    "{ctx}: gpu {i} completions diverged"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Each policy routes by its documented shape: prefix affinity pins
+/// templates, SLO-class partitions by output length, round-robin
+/// spreads near-uniformly.
+#[test]
+fn policies_route_by_their_documented_shape() {
+    let cfg = proto_cfg(GovernorKind::Locked(1230), 7);
+    // Hand-built stream: 4 templates, alternating short/long outputs.
+    let reqs: Arc<[Request]> = (0..40u64)
+        .map(|i| {
+            let out = if i % 2 == 0 { 16 } else { 512 };
+            Request::new(i, 0.2 * i as f64, 64, out, (i % 4) as u32, 0)
+        })
+        .collect::<Vec<_>>()
+        .into();
+    let run = |route| {
+        run_cluster(
+            &cfg,
+            &ClusterSpec { gpus: 4, route, power_cap_w: None },
+            Arc::clone(&reqs),
+        )
+        .unwrap()
+    };
+    let rr = run(RoutePolicy::RoundRobin);
+    assert_eq!(rr.routed, vec![10, 10, 10, 10]);
+    // 4 templates on 4 GPUs: each GPU serves exactly one template's
+    // 10 requests.
+    let prefix = run(RoutePolicy::PrefixAffinity);
+    assert_eq!(prefix.routed, vec![10, 10, 10, 10]);
+    // Interactive (out=16) rotates over GPUs 0-1, batch over 2-3.
+    let slo = run(RoutePolicy::SloClass);
+    assert_eq!(slo.routed, vec![10, 10, 10, 10]);
+    let ll = run(RoutePolicy::LeastLoaded);
+    assert_eq!(ll.routed.iter().sum::<u64>(), 40);
+    assert!(
+        ll.routed.iter().all(|&n| n > 0),
+        "least-loaded starved a GPU: {:?}",
+        ll.routed
+    );
+}
+
+/// Power-cap integration across the governor layer: capping a busy
+/// Ondemand fleet actuates clamps without raising fleet energy, and
+/// the telemetry is internally consistent.
+#[test]
+fn power_cap_integrates_with_rule_governors() {
+    let cfg = ExperimentConfig {
+        duration_s: 25.0,
+        governor: GovernorKind::Ondemand,
+        ..ExperimentConfig::default()
+    };
+    let reqs: Arc<[Request]> = (0..48u64)
+        .map(|i| Request::new(i, 0.05 * i as f64, 384, 192, i as u32, 0))
+        .collect::<Vec<_>>()
+        .into();
+    let run = |cap: Option<f64>| -> ClusterResult {
+        run_cluster(
+            &cfg,
+            &ClusterSpec {
+                gpus: 3,
+                route: RoutePolicy::RoundRobin,
+                power_cap_w: cap,
+            },
+            Arc::clone(&reqs),
+        )
+        .unwrap()
+    };
+    let free = run(None);
+    assert!(free.cap.is_none());
+    let capped = run(Some(350.0));
+    let t = capped.cap.as_ref().expect("telemetry with a cap");
+    assert!(t.rounds > 0);
+    assert!(t.capped_windows <= t.rounds);
+    assert!(t.clamps >= t.capped_windows);
+    assert!(t.clamps > 0, "350 W over 3 busy GPUs must clamp: {t:?}");
+    assert!(t.peak_demand_w > 350.0);
+    assert!(capped.fleet_energy_j() <= free.fleet_energy_j());
+    // Same stream, same routing — the cap changes clocks, not
+    // assignments.
+    assert_eq!(capped.routed, free.routed);
+}
