@@ -44,6 +44,7 @@ use std::sync::Arc;
 use crate::config::ExperimentConfig;
 use crate::experiment::harness::RunResult;
 use crate::experiment::WindowTracker;
+use crate::faults::FaultPlane;
 use crate::server::{validate_stream, Engine, Request};
 use crate::tuner::governors::{self, Governor};
 
@@ -76,11 +77,20 @@ pub struct ClusterResult {
     pub engine_polls: u64,
     /// Power-cap coordinator telemetry (`None` when uncapped).
     pub cap: Option<CapTelemetry>,
+    /// Per-GPU survival flags: `false` for GPUs killed by an injected
+    /// permanent death ([`crate::faults::GpuFaultKind::Death`]); all
+    /// `true` on fault-free runs.
+    pub alive: Vec<bool>,
 }
 
 impl ClusterResult {
     pub fn fleet_energy_j(&self) -> f64 {
         self.per_gpu.iter().map(|r| r.total_energy_j).sum()
+    }
+
+    /// GPUs that survived the run.
+    pub fn survivors(&self) -> usize {
+        self.alive.iter().filter(|a| **a).count()
     }
 
     pub fn fleet_finished(&self) -> usize {
@@ -170,6 +180,12 @@ struct Fleet<'a> {
     slots: Vec<GpuSlot>,
     router: Router,
     coordinator: Option<PowerCapCoordinator>,
+    /// Per-GPU fault planes, `None` on fault-free runs so that path
+    /// never constructs (or consults) an injector. Each plane is
+    /// seeded from `(cfg.seed, gpu)` only, so fault sequences are
+    /// identical between the heap and reference loops regardless of
+    /// dispatch order — the bitwise A/B survives fault runs too.
+    planes: Option<Vec<FaultPlane>>,
     /// Live GPUs' measurements for the current boundary group.
     group: Vec<CapInput>,
     requests: Arc<[Request]>,
@@ -206,15 +222,34 @@ impl<'a> Fleet<'a> {
             v.into()
         };
 
+        let mut planes: Option<Vec<FaultPlane>> = if cfg.faults.is_inert()
+        {
+            None
+        } else {
+            cfg.faults.validate()?;
+            Some(
+                (0..spec.gpus)
+                    .map(|i| FaultPlane::for_gpu(&cfg.faults, cfg.seed, i))
+                    .collect(),
+            )
+        };
+
         let empty: Arc<[Request]> = Vec::new().into();
         let mut engines = Vec::with_capacity(spec.gpus);
         let mut slots = Vec::with_capacity(spec.gpus);
-        for _ in 0..spec.gpus {
+        for i in 0..spec.gpus {
             let mut engine = Engine::try_with_shared(cfg, empty.clone())?;
             engine.open_feed();
             let governor = governors::build(cfg);
             if let Some(mhz) = governor.initial_clock_mhz() {
-                engine.gpu.set_clock(mhz);
+                match planes.as_mut() {
+                    None => {
+                        engine.gpu.set_clock(mhz);
+                    }
+                    Some(p) => {
+                        p[i].actuate(&mut engine.gpu, mhz);
+                    }
+                }
             }
             engines.push(engine);
             slots.push(GpuSlot {
@@ -236,6 +271,7 @@ impl<'a> Fleet<'a> {
             coordinator: spec
                 .power_cap_w
                 .map(|w| PowerCapCoordinator::new(cfg, w)),
+            planes,
             group: Vec::with_capacity(spec.gpus),
             requests,
             cursor: 0,
@@ -291,13 +327,23 @@ impl<'a> Fleet<'a> {
         self.polls += 1;
 
         let slot = &mut self.slots[i];
-        let done = slot.tracker.record_window(
-            self.cfg,
-            &mut self.engines[i],
-            slot.governor.as_mut(),
-            clock_before,
-            alive,
-        );
+        let mut done = match self.planes.as_mut() {
+            None => slot.tracker.record_window(
+                self.cfg,
+                &mut self.engines[i],
+                slot.governor.as_mut(),
+                clock_before,
+                alive,
+            ),
+            Some(planes) => slot.tracker.record_window_faulty(
+                self.cfg,
+                &mut self.engines[i],
+                slot.governor.as_mut(),
+                clock_before,
+                alive,
+                &mut planes[i],
+            ),
+        };
         let rec = slot
             .tracker
             .last_window()
@@ -306,6 +352,28 @@ impl<'a> Fleet<'a> {
             (rec.t_s, rec.energy_j, rec.clock_mhz);
         let dt = t_s - slot.prev_t_s;
         slot.prev_t_s = t_s;
+
+        // Scheduled GPU fault events fire at the boundary the window
+        // closed on (matching the standalone fault driver): a death
+        // retires the GPU for good — drained from the router, dropped
+        // from the power budget; a transient reset drains it until its
+        // warm-up ends, after which the next boundary re-admits it.
+        if let Some(planes) = self.planes.as_mut() {
+            let plane = &mut planes[i];
+            if !done {
+                plane.apply_due_events(&mut self.engines[i].gpu, t_next);
+            }
+            if plane.dead() {
+                done = true;
+                self.router.set_healthy(i, false);
+                if let Some(c) = self.coordinator.as_mut() {
+                    c.note_retired(i);
+                }
+            } else {
+                self.router.set_healthy(i, plane.healthy_at(t_next));
+            }
+        }
+
         if done {
             slot.done = true;
         } else {
@@ -334,13 +402,26 @@ impl<'a> Fleet<'a> {
 
     fn finish(self) -> ClusterResult {
         let routed = self.router.routed().to_vec();
+        let planes = self.planes;
+        let alive: Vec<bool> = match &planes {
+            None => vec![true; self.slots.len()],
+            Some(p) => p.iter().map(|pl| !pl.dead()).collect(),
+        };
         let per_gpu = self
             .slots
             .into_iter()
             .zip(self.engines)
-            .map(|(slot, engine)| {
+            .enumerate()
+            .map(|(i, (slot, engine))| {
                 let GpuSlot { governor, tracker, .. } = slot;
-                tracker.finish(engine, governor.as_ref())
+                match planes.as_ref() {
+                    None => tracker.finish(engine, governor.as_ref()),
+                    Some(p) => tracker.finish_with_faults(
+                        engine,
+                        governor.as_ref(),
+                        &p[i],
+                    ),
+                }
             })
             .collect();
         ClusterResult {
@@ -348,6 +429,7 @@ impl<'a> Fleet<'a> {
             routed,
             engine_polls: self.polls,
             cap: self.coordinator.map(|c| c.telemetry().clone()),
+            alive,
         }
     }
 }
@@ -557,6 +639,75 @@ mod tests {
         .err()
         .unwrap();
         assert!(err.contains("request 9"), "{err}");
+    }
+
+    #[test]
+    fn injected_death_retires_a_gpu_and_reroutes_its_stream() {
+        use crate::faults::parse_faults_spec;
+        let spec = ClusterSpec {
+            gpus: 3,
+            route: RoutePolicy::RoundRobin,
+            power_cap_w: None,
+        };
+        // Steady arrivals across the whole run so post-death traffic
+        // exists to re-route.
+        let reqs: Arc<[Request]> = (0..120u64)
+            .map(|i| {
+                Request::new(i, 0.3 * i as f64, 64, 32, i as u32, 0)
+            })
+            .collect::<Vec<_>>()
+            .into();
+        let free = run_cluster(&base_cfg(), &spec, reqs.clone()).unwrap();
+        assert_eq!(free.alive, vec![true; 3]);
+
+        let mut cfg = base_cfg();
+        cfg.faults = parse_faults_spec("event=gpu1@8:death").unwrap();
+        let r = run_cluster(&cfg, &spec, reqs).unwrap();
+        assert_eq!(r.alive, vec![true, false, true]);
+        assert_eq!(r.survivors(), 2);
+        // The dead GPU's share of the stream moved to the survivors.
+        assert!(
+            r.routed[1] < free.routed[1],
+            "dead GPU kept receiving: {:?} vs {:?}",
+            r.routed,
+            free.routed
+        );
+        assert!(r.routed[0] + r.routed[2] > free.routed[0] + free.routed[2]);
+        // Its telemetry carries the fault ledger.
+        let tel = r.per_gpu[1].tuner.as_ref().unwrap();
+        assert_eq!(tel.gpu_faults, 1);
+        assert_eq!(tel.faults_injected, 1);
+        // Survivors saw nothing.
+        assert_eq!(r.per_gpu[0].tuner.as_ref().unwrap().gpu_faults, 0);
+    }
+
+    #[test]
+    fn fault_runs_stay_bitwise_identical_between_loop_shapes() {
+        use crate::faults::parse_faults_spec;
+        let mut cfg = base_cfg();
+        cfg.faults = parse_faults_spec(
+            "standard,event=gpu0@8:reset:2,event=gpu2@16:ceiling:900",
+        )
+        .unwrap();
+        let spec = ClusterSpec {
+            gpus: 4,
+            route: RoutePolicy::RoundRobin,
+            power_cap_w: None,
+        };
+        let reqs = staggered_stream(24);
+        let heap = run_cluster(&cfg, &spec, reqs.clone()).unwrap();
+        let naive = run_cluster_reference(&cfg, &spec, reqs).unwrap();
+        assert_eq!(heap.routed, naive.routed);
+        assert_eq!(heap.alive, naive.alive);
+        for (a, b) in heap.per_gpu.iter().zip(&naive.per_gpu) {
+            assert_eq!(a.windows.len(), b.windows.len());
+            for (wa, wb) in a.windows.iter().zip(&b.windows) {
+                assert_eq!(wa.t_s.to_bits(), wb.t_s.to_bits());
+                assert_eq!(wa.energy_j.to_bits(), wb.energy_j.to_bits());
+                assert_eq!(wa.clock_mhz, wb.clock_mhz);
+            }
+            assert_eq!(a.tuner, b.tuner);
+        }
     }
 
     #[test]

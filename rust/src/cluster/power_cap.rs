@@ -57,6 +57,11 @@ pub struct CapTelemetry {
     pub clamps: u64,
     /// Highest projected fleet demand seen before redistribution (W).
     pub peak_demand_w: f64,
+    /// GPUs permanently retired from the budget (fault-injected
+    /// death). Their power share redistributes automatically: a
+    /// retired GPU stops appearing in `live`, so every remaining
+    /// GPU's proportional-headroom share of the unchanged cap grows.
+    pub retired_gpus: u64,
 }
 
 /// The fleet power-budget coordinator.
@@ -95,6 +100,15 @@ impl PowerCapCoordinator {
 
     pub fn telemetry(&self) -> &CapTelemetry {
         &self.telemetry
+    }
+
+    /// Record that `_gpu` died and left the budget for good. The
+    /// redistribution itself is emergent — the fleet loop stops
+    /// submitting [`CapInput`]s for dead GPUs, so from the next round
+    /// on the survivors split the whole cap — this only keeps the
+    /// ledger.
+    pub fn note_retired(&mut self, _gpu: usize) {
+        self.telemetry.retired_gpus += 1;
     }
 
     /// One negotiation round at an aligned window boundary. `live`

@@ -91,6 +91,13 @@ pub struct Router {
     rr_class: [usize; 2],
     /// Per-GPU routed-request counts (telemetry).
     routed: Vec<u64>,
+    /// Per-GPU health mask ([`crate::faults`] GPU events): unhealthy
+    /// GPUs are skipped by every policy and their traffic re-routes to
+    /// survivors. With all GPUs healthy (always, outside fault runs)
+    /// every arm reduces exactly to its mask-free logic.
+    healthy: Vec<bool>,
+    /// Arrivals that found the mask entirely unhealthy (telemetry).
+    unroutable: u64,
 }
 
 impl Router {
@@ -101,6 +108,8 @@ impl Router {
             rr_next: 0,
             rr_class: [0, 0],
             routed: vec![0; gpus],
+            healthy: vec![true; gpus],
+            unroutable: 0,
         }
     }
 
@@ -109,31 +118,81 @@ impl Router {
         &self.routed
     }
 
+    /// Mark one GPU healthy (re-admit) or unhealthy (drain: no new
+    /// traffic; in-flight work keeps running on the engine).
+    pub fn set_healthy(&mut self, gpu: usize, healthy: bool) {
+        self.healthy[gpu] = healthy;
+    }
+
+    pub fn healthy(&self) -> &[bool] {
+        &self.healthy
+    }
+
+    /// Arrivals picked while no GPU was healthy (routed to the policy's
+    /// raw choice as a last resort).
+    pub fn unroutable(&self) -> u64 {
+        self.unroutable
+    }
+
+    /// First healthy GPU at or after `start` (wrapping); `start` itself
+    /// when the whole mask is unhealthy.
+    fn next_healthy_from(&self, start: usize) -> usize {
+        let n = self.healthy.len();
+        for k in 0..n {
+            let i = (start + k) % n;
+            if self.healthy[i] {
+                return i;
+            }
+        }
+        start
+    }
+
+    /// First healthy GPU in `[lo, hi)` at or after `start` (wrapping
+    /// within the partition).
+    fn next_healthy_in(
+        &self,
+        lo: usize,
+        hi: usize,
+        start: usize,
+    ) -> Option<usize> {
+        let span = hi - lo;
+        for k in 0..span {
+            let i = lo + (start - lo + k) % span;
+            if self.healthy[i] {
+                return Some(i);
+            }
+        }
+        None
+    }
+
     /// Pick the target GPU for `req` given the fleet's engines.
     pub fn pick(&mut self, engines: &[Engine], req: &Request) -> usize {
         let n = engines.len();
         debug_assert_eq!(n, self.routed.len());
         let idx = match self.policy {
             RoutePolicy::RoundRobin => {
-                let i = self.rr_next;
-                self.rr_next = (self.rr_next + 1) % n;
+                let i = self.next_healthy_from(self.rr_next);
+                self.rr_next = (i + 1) % n;
                 i
             }
             RoutePolicy::LeastLoaded => {
-                let mut best = 0usize;
-                let mut best_load = usize::MAX;
+                let mut best: Option<(usize, usize)> = None;
                 for (i, e) in engines.iter().enumerate() {
+                    if !self.healthy[i] {
+                        continue;
+                    }
                     let load = e.sched.queue_depth()
                         + e.sched.running_count()
                         + e.pending_arrivals();
-                    if load < best_load {
-                        best = i;
-                        best_load = load;
+                    if best.is_none_or(|(_, bl)| load < bl) {
+                        best = Some((i, load));
                     }
                 }
-                best
+                best.map_or(0, |(i, _)| i)
             }
-            RoutePolicy::PrefixAffinity => req.template_id as usize % n,
+            RoutePolicy::PrefixAffinity => {
+                self.next_healthy_from(req.template_id as usize % n)
+            }
             RoutePolicy::SloClass => {
                 let interactive =
                     req.target_output <= SLO_INTERACTIVE_MAX_OUTPUT;
@@ -144,12 +203,20 @@ impl Router {
                 let (lo, hi) =
                     if interactive { (0, split) } else { (split, n) };
                 let (lo, hi) = if lo >= hi { (0, n) } else { (lo, hi) };
-                let c = &mut self.rr_class[usize::from(interactive)];
-                let i = lo + *c % (hi - lo);
-                *c += 1;
-                i
+                let ci = usize::from(interactive);
+                let i = lo + self.rr_class[ci] % (hi - lo);
+                self.rr_class[ci] += 1;
+                // Prefer a healthy GPU in the class partition; spill
+                // fleet-wide only when the whole partition is down.
+                match self.next_healthy_in(lo, hi, i) {
+                    Some(j) => j,
+                    None => self.next_healthy_from(i),
+                }
             }
         };
+        if !self.healthy[idx] {
+            self.unroutable += 1;
+        }
         self.routed[idx] += 1;
         idx
     }
@@ -251,5 +318,69 @@ mod tests {
         let mut r1 = Router::new(RoutePolicy::SloClass, 1);
         assert_eq!(r1.pick(&one, &req(0, 0, 16)), 0);
         assert_eq!(r1.pick(&one, &req(1, 0, 512)), 0);
+    }
+
+    #[test]
+    fn unhealthy_gpus_are_skipped_and_readmitted() {
+        let engines = fleet(3);
+        let mut r = Router::new(RoutePolicy::RoundRobin, 3);
+        r.set_healthy(1, false);
+        let picks: Vec<usize> = (0..4)
+            .map(|i| r.pick(&engines, &req(i, 0, 32)))
+            .collect();
+        assert_eq!(picks, vec![0, 2, 0, 2], "GPU 1 drained");
+        assert_eq!(r.routed()[1], 0);
+        assert_eq!(r.unroutable(), 0);
+        // Re-admit: GPU 1 rejoins the rotation.
+        r.set_healthy(1, true);
+        let picks: Vec<usize> = (4..10)
+            .map(|i| r.pick(&engines, &req(i, 0, 32)))
+            .collect();
+        assert!(picks.contains(&1), "re-admitted GPU never picked");
+    }
+
+    #[test]
+    fn least_loaded_and_prefix_reroute_around_unhealthy() {
+        let engines = fleet(4);
+        let mut ll = Router::new(RoutePolicy::LeastLoaded, 4);
+        ll.set_healthy(0, false);
+        // All equally empty: the low-index tie now lands on GPU 1.
+        assert_eq!(ll.pick(&engines, &req(0, 0, 32)), 1);
+
+        let mut pa = Router::new(RoutePolicy::PrefixAffinity, 4);
+        pa.set_healthy(2, false);
+        // Template 2's home GPU is down: probe forward to GPU 3.
+        assert_eq!(pa.pick(&engines, &req(0, 2, 32)), 3);
+        // Healthy homes are untouched.
+        assert_eq!(pa.pick(&engines, &req(1, 1, 32)), 1);
+    }
+
+    #[test]
+    fn slo_class_spills_when_its_partition_is_down() {
+        let engines = fleet(4);
+        let mut r = Router::new(RoutePolicy::SloClass, 4);
+        r.set_healthy(0, false);
+        r.set_healthy(1, false);
+        // Interactive partition [0, 2) fully dead: spill fleet-wide.
+        for id in 0..4u64 {
+            let p = r.pick(&engines, &req(id, 0, 16));
+            assert!(p >= 2, "spilled interactive routed to dead GPU {p}");
+        }
+        // Batch partition unaffected.
+        for id in 4..8u64 {
+            assert!(r.pick(&engines, &req(id, 0, 512)) >= 2);
+        }
+        assert_eq!(r.unroutable(), 0);
+    }
+
+    #[test]
+    fn all_dead_fleet_counts_unroutable() {
+        let engines = fleet(2);
+        let mut r = Router::new(RoutePolicy::RoundRobin, 2);
+        r.set_healthy(0, false);
+        r.set_healthy(1, false);
+        r.pick(&engines, &req(0, 0, 32));
+        r.pick(&engines, &req(1, 0, 32));
+        assert_eq!(r.unroutable(), 2);
     }
 }

@@ -6,6 +6,7 @@
 //! the keys present, so config files stay minimal.
 
 use super::toml::Value;
+use crate::faults::FaultsConfig;
 
 /// GPU DVFS device model parameters (defaults: NVIDIA A6000 class).
 #[derive(Debug, Clone, PartialEq)]
@@ -521,6 +522,11 @@ pub struct ExperimentConfig {
     /// `tests/decode_span_semantics.rs`), just more steps.
     pub decode_span: bool,
     pub results_dir: String,
+    /// Fault-injection schedule (`[faults]` section / `--faults` CLI).
+    /// Inert by default: with no schedule configured the fault plane is
+    /// never constructed and the run is bitwise-identical to a build
+    /// without the [`crate::faults`] subsystem.
+    pub faults: FaultsConfig,
 }
 
 impl Default for ExperimentConfig {
@@ -540,6 +546,7 @@ impl Default for ExperimentConfig {
             event_driven: true,
             decode_span: true,
             results_dir: "results".to_string(),
+            faults: FaultsConfig::default(),
         }
     }
 }
@@ -861,6 +868,9 @@ impl ExperimentConfig {
         }
         if let Some(g) = doc.get("governor") {
             c.governors = GovernorsConfig::from_toml(g)?;
+        }
+        if let Some(f) = doc.get("faults") {
+            c.faults = FaultsConfig::from_toml(f)?;
         }
         Ok(c)
     }

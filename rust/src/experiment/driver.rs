@@ -24,6 +24,7 @@
 use std::sync::Arc;
 
 use crate::config::ExperimentConfig;
+use crate::faults::FaultPlane;
 use crate::server::{Engine, Request};
 use crate::tuner::governors::{self, Governor};
 use crate::tuner::tuner::WindowObservation;
@@ -67,6 +68,44 @@ impl WindowTracker {
         clock_before: u32,
         alive: bool,
     ) -> bool {
+        self.record_window_impl(cfg, engine, governor, clock_before, alive, None)
+    }
+
+    /// [`Self::record_window`] with a fault plane interposed: the
+    /// governor observes a *copy* of the window observation that has
+    /// passed [`FaultPlane::filter_observation`] (possibly corrupted,
+    /// possibly withheld — sanitize-and-hold), and its clock decision
+    /// actuates through [`FaultPlane::actuate`] instead of writing the
+    /// device directly. The [`WindowRecord`] always keeps ground truth:
+    /// corruption targets the control plane, not the measurement.
+    pub fn record_window_faulty(
+        &mut self,
+        cfg: &ExperimentConfig,
+        engine: &mut Engine,
+        governor: &mut dyn Governor,
+        clock_before: u32,
+        alive: bool,
+        plane: &mut FaultPlane,
+    ) -> bool {
+        self.record_window_impl(
+            cfg,
+            engine,
+            governor,
+            clock_before,
+            alive,
+            Some(plane),
+        )
+    }
+
+    fn record_window_impl(
+        &mut self,
+        cfg: &ExperimentConfig,
+        engine: &mut Engine,
+        governor: &mut dyn Governor,
+        clock_before: u32,
+        alive: bool,
+        plane: Option<&mut FaultPlane>,
+    ) -> bool {
         let snap = engine.snapshot();
         let (ttft, tpot, e2e) =
             window_latency_means(&engine.finished_log, self.last_finished_idx);
@@ -96,9 +135,23 @@ impl WindowTracker {
             e2e_mean: e2e,
         };
         let mut reward = None;
-        if let Some(decision) = governor.observe_window(&obs) {
-            engine.gpu.set_clock(decision.freq_mhz);
-            reward = decision.reward;
+        match plane {
+            None => {
+                if let Some(decision) = governor.observe_window(&obs) {
+                    engine.gpu.set_clock(decision.freq_mhz);
+                    reward = decision.reward;
+                }
+            }
+            Some(plane) => {
+                let mut gov_obs = obs;
+                if plane.filter_observation(&mut gov_obs) {
+                    if let Some(decision) = governor.observe_window(&gov_obs)
+                    {
+                        plane.actuate(&mut engine.gpu, decision.freq_mhz);
+                        reward = decision.reward;
+                    }
+                }
+            }
         }
 
         self.windows.push(WindowRecord {
@@ -145,6 +198,22 @@ impl WindowTracker {
             tuner: governor.telemetry(),
         }
     }
+
+    /// [`Self::finish`] for a fault run: overlays both fault ledgers
+    /// onto the governor's telemetry (creating an otherwise-default
+    /// record for the no-op governors, which report `None`).
+    pub fn finish_with_faults(
+        self,
+        engine: Engine,
+        governor: &dyn Governor,
+        plane: &FaultPlane,
+    ) -> RunResult {
+        let mut r = self.finish(engine, governor);
+        let mut tel = r.tuner.take().unwrap_or_default();
+        plane.export_telemetry(&mut tel);
+        r.tuner = Some(tel);
+        r
+    }
 }
 
 impl GovernorDriver {
@@ -156,7 +225,15 @@ impl GovernorDriver {
     ) -> Result<RunResult, String> {
         let engine = Engine::try_with_shared(cfg, requests)?;
         let mut governor = governors::build(cfg);
-        Ok(Self::drive(cfg, engine, governor.as_mut()))
+        if cfg.faults.is_inert() {
+            // Fault-free: the plane is never constructed and this is
+            // the exact pre-fault code path, bitwise.
+            Ok(Self::drive(cfg, engine, governor.as_mut()))
+        } else {
+            cfg.faults.validate()?;
+            let plane = FaultPlane::for_single(&cfg.faults, cfg.seed);
+            Ok(Self::drive_with_faults(cfg, engine, governor.as_mut(), plane))
+        }
     }
 
     /// Drive an explicit engine + governor pair (the seam unit tests
@@ -190,6 +267,49 @@ impl GovernorDriver {
         }
 
         tracker.finish(engine, governor)
+    }
+
+    /// [`Self::drive`] with a [`FaultPlane`] interposed at every
+    /// governor↔device boundary: the initial clock and every window
+    /// decision actuate through [`FaultPlane::actuate`], observations
+    /// pass [`FaultPlane::filter_observation`], and scheduled GPU
+    /// events fire at window boundaries — a permanent death ends the
+    /// run at the first boundary past the event.
+    pub fn drive_with_faults(
+        cfg: &ExperimentConfig,
+        mut engine: Engine,
+        governor: &mut dyn Governor,
+        mut plane: FaultPlane,
+    ) -> RunResult {
+        if let Some(mhz) = governor.initial_clock_mhz() {
+            plane.actuate(&mut engine.gpu, mhz);
+        }
+
+        let window_s = cfg.tuner.window_s;
+        let mut tracker = WindowTracker::new();
+        let mut t_next = window_s;
+
+        loop {
+            let clock_before = engine.gpu.effective_mhz(true);
+            let alive = engine.run_until(t_next);
+            if tracker.record_window_faulty(
+                cfg,
+                &mut engine,
+                governor,
+                clock_before,
+                alive,
+                &mut plane,
+            ) {
+                break;
+            }
+            plane.apply_due_events(&mut engine.gpu, t_next);
+            if plane.dead() {
+                break;
+            }
+            t_next += window_s;
+        }
+
+        tracker.finish_with_faults(engine, governor, &plane)
     }
 }
 

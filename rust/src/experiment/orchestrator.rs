@@ -243,6 +243,38 @@ struct RunningShard {
     child: Child,
 }
 
+/// Supervision knobs ([`supervise`] runs with the defaults).
+#[derive(Debug, Clone, Copy)]
+pub struct SuperviseOpts {
+    /// Kill any shard still running after this much wall clock and
+    /// treat it as a failed attempt — the hung-child guard. `None`
+    /// waits forever.
+    pub timeout: Option<Duration>,
+    /// Delay before a failed attempt's retry, doubling per further
+    /// attempt (exponential backoff; transient failures — fd
+    /// pressure, contended storage — clear better with room than
+    /// with an immediate respawn).
+    pub backoff: Duration,
+    /// Total attempts per shard (first run + retries); min 1.
+    pub max_attempts: u32,
+}
+
+impl Default for SuperviseOpts {
+    fn default() -> Self {
+        SuperviseOpts {
+            timeout: None,
+            backoff: Duration::from_millis(100),
+            max_attempts: 2,
+        }
+    }
+}
+
+/// Backoff before the retry that follows `failed_attempt` (1-based):
+/// `backoff * 2^(failed_attempt - 1)`.
+fn retry_delay(opts: &SuperviseOpts, failed_attempt: u32) -> Duration {
+    opts.backoff * (1u32 << failed_attempt.saturating_sub(1).min(16))
+}
+
 /// Supervise shard children: at most `procs` run concurrently, status
 /// streams to stderr as shards start/finish, and a failed (or killed
 /// — any non-success exit) shard is retried **once** before the grid
@@ -255,19 +287,38 @@ pub fn supervise(
     jobs: &[ShardJob],
     procs: usize,
 ) -> Result<Vec<String>, String> {
-    const MAX_ATTEMPTS: u32 = 2;
+    supervise_with(jobs, procs, SuperviseOpts::default())
+}
+
+/// [`supervise`] with explicit [`SuperviseOpts`]: per-shard wall-clock
+/// timeout (kill + retry) and exponential backoff between a shard's
+/// attempts.
+pub fn supervise_with(
+    jobs: &[ShardJob],
+    procs: usize,
+    opts: SuperviseOpts,
+) -> Result<Vec<String>, String> {
+    let max_attempts = opts.max_attempts.max(1);
     let procs = procs.max(1);
     let total = jobs.len();
-    let mut pending: VecDeque<(usize, u32)> =
-        (0..jobs.len()).map(|i| (i, 1)).collect();
+    // (job index, attempt, not-before): backoff holds a retry out of
+    // the spawn pool until its delay elapses.
+    let mut pending: VecDeque<(usize, u32, Instant)> = (0..jobs.len())
+        .map(|i| (i, 1, Instant::now()))
+        .collect();
     let mut running: Vec<RunningShard> = Vec::new();
     let mut failures: Vec<String> = Vec::new();
     while !pending.is_empty() || !running.is_empty() {
-        // Top up the process pool.
+        // Top up the process pool with whatever is ready to (re)start.
         while running.len() < procs {
-            let Some((job, attempt)) = pending.pop_front() else {
+            let now = Instant::now();
+            let Some(p) = pending
+                .iter()
+                .position(|&(_, _, ready_at)| ready_at <= now)
+            else {
                 break;
             };
+            let (job, attempt, _) = pending.remove(p).expect("indexed");
             let spec = &jobs[job];
             match Command::new(&spec.argv[0])
                 .args(&spec.argv[1..])
@@ -298,15 +349,13 @@ pub fn supervise(
                         "shard {}/{total}: spawn {:?}: {e}",
                         spec.k, spec.argv[0]
                     );
-                    if attempt < MAX_ATTEMPTS {
-                        eprintln!("orchestrate: {msg} — retrying once");
-                        pending.push_back((job, attempt + 1));
-                        // Don't burn the retry in this same top-up
-                        // pass: a transient spawn failure (fork
-                        // pressure, fd limits while other shards
-                        // launch) needs at least one poll cycle to
-                        // clear.
-                        std::thread::sleep(Duration::from_millis(30));
+                    if attempt < max_attempts {
+                        eprintln!("orchestrate: {msg} — retrying");
+                        pending.push_back((
+                            job,
+                            attempt + 1,
+                            Instant::now() + retry_delay(&opts, attempt),
+                        ));
                         break;
                     }
                     eprintln!("orchestrate: {msg} — giving up");
@@ -314,10 +363,45 @@ pub fn supervise(
                 }
             }
         }
-        // Reap whatever exited; sleep briefly only if nothing did.
+        // Reap whatever exited (or overran the timeout); sleep briefly
+        // only if nothing did.
         let mut reaped = false;
         let mut i = 0;
         while i < running.len() {
+            // Hung-child guard: a shard past the wall-clock timeout is
+            // killed and charged a failed attempt.
+            if opts
+                .timeout
+                .is_some_and(|t| running[i].started.elapsed() >= t)
+            {
+                let mut shard = running.swap_remove(i);
+                reaped = true;
+                let _ = shard.child.kill();
+                let _ = shard.child.wait();
+                let spec = &jobs[shard.job];
+                let secs = shard.started.elapsed().as_secs_f64();
+                if shard.attempt < max_attempts {
+                    eprintln!(
+                        "orchestrate: shard {}/{total} timed out after \
+                         {secs:.1}s — killed, retrying",
+                        spec.k
+                    );
+                    pending.push_back((
+                        shard.job,
+                        shard.attempt + 1,
+                        Instant::now() + retry_delay(&opts, shard.attempt),
+                    ));
+                } else {
+                    let msg = format!(
+                        "shard {}/{total}: timed out on all \
+                         {max_attempts} attempt(s)",
+                        spec.k
+                    );
+                    eprintln!("orchestrate: {msg} — giving up");
+                    failures.push(msg);
+                }
+                continue;
+            }
             match running[i].child.try_wait() {
                 Ok(Some(status)) => {
                     let shard = running.swap_remove(i);
@@ -330,17 +414,22 @@ pub fn supervise(
                              {secs:.1}s",
                             spec.k
                         );
-                    } else if shard.attempt < MAX_ATTEMPTS {
+                    } else if shard.attempt < max_attempts {
                         eprintln!(
                             "orchestrate: shard {}/{total} failed \
-                             ({status}) after {secs:.1}s — retrying once",
+                             ({status}) after {secs:.1}s — retrying",
                             spec.k
                         );
-                        pending.push_back((shard.job, shard.attempt + 1));
+                        pending.push_back((
+                            shard.job,
+                            shard.attempt + 1,
+                            Instant::now()
+                                + retry_delay(&opts, shard.attempt),
+                        ));
                     } else {
                         let msg = format!(
-                            "shard {}/{total}: failed twice (last: \
-                             {status})",
+                            "shard {}/{total}: failed on all \
+                             {max_attempts} attempt(s) (last: {status})",
                             spec.k
                         );
                         eprintln!("orchestrate: {msg} — giving up");
@@ -360,7 +449,7 @@ pub fn supervise(
                 }
             }
         }
-        if !reaped && !running.is_empty() {
+        if !reaped && (!running.is_empty() || !pending.is_empty()) {
             std::thread::sleep(Duration::from_millis(30));
         }
     }

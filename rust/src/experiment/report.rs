@@ -259,7 +259,7 @@ pub fn grid_results_csv(rows: &[GridCsvRow]) -> String {
 
 /// CSV header of [`cluster_gpu_csv`]: one row per (seed, GPU) of an
 /// `agft cluster` run.
-pub const CLUSTER_CSV_HEADER: [&str; 9] = [
+pub const CLUSTER_CSV_HEADER: [&str; 10] = [
     "seed",
     "gpu",
     "routed",
@@ -269,6 +269,7 @@ pub const CLUSTER_CSV_HEADER: [&str; 9] = [
     "mean_e2e_s",
     "windows",
     "clock_changes",
+    "alive",
 ];
 
 /// Render per-GPU cluster results as CSV (one block per seed replica,
@@ -290,6 +291,7 @@ pub fn cluster_gpu_csv(
                 g.mean_e2e().to_string(),
                 g.windows.len().to_string(),
                 g.clock_changes.to_string(),
+                u8::from(r.alive[gpu]).to_string(),
             ])
             .expect("in-memory csv row");
         }
@@ -318,6 +320,7 @@ pub fn render_cluster(
                 format!("{:.3}", g.mean_e2e()),
                 g.windows.len().to_string(),
                 g.clock_changes.to_string(),
+                if r.alive[gpu] { "yes" } else { "DEAD" }.to_string(),
             ]
         })
         .collect();
@@ -332,6 +335,7 @@ pub fn render_cluster(
             "E2E s",
             "windows",
             "clock switches",
+            "alive",
         ],
         &rows,
     )
@@ -534,6 +538,7 @@ mod tests {
             routed: vec![5, 7],
             engine_polls: 6,
             cap: None,
+            alive: vec![true, false],
         };
         let text = render_cluster("cluster (seed 1)", &cluster);
         assert!(text.contains("== cluster (seed 1) =="));
@@ -546,6 +551,9 @@ mod tests {
         assert_eq!(rows[0][0], "1");
         assert_eq!(rows[1][2], "7");
         assert_eq!(rows[1][4].parse::<f64>().unwrap(), 450.0);
+        assert_eq!(rows[0][9], "1");
+        assert_eq!(rows[1][9], "0");
+        assert!(text.contains("DEAD"), "{text}");
     }
 
     #[test]

@@ -1,0 +1,404 @@
+//! Fault-schedule configuration: the `[faults]` TOML section and the
+//! `--faults <spec>` CLI syntax, both resolving to a [`FaultsConfig`].
+//!
+//! A spec is a comma-separated list of preset names and `key=value`
+//! overrides, applied left to right:
+//!
+//! ```text
+//! --faults standard                 # the stock mixed-fault preset
+//! --faults gpu-death                # fleet preset: GPUs 1 and 3 die
+//! --faults standard,nan=0.2         # preset + override
+//! --faults reject=0.1,event=gpu0@30:ceiling:900
+//! ```
+//!
+//! Keys: `reject`, `clamp`, `clamp-mhz`, `delay`, `delay-s`, `nan`,
+//! `stale`, `drop`, `safe-mhz`, `watchdog`, `retries`, `backoff-s`,
+//! and repeatable `event=gpu<N>@<t_s>:<kind>` where kind is `death`,
+//! `reset[:warmup_s]`, or `ceiling:<mhz>`. The TOML section uses the
+//! same keys with underscores (`clock_reject_p`, …) and an `events`
+//! string array.
+
+use crate::config::toml::Value;
+
+/// One scheduled GPU-level fault.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GpuFaultEvent {
+    /// Fleet index of the target GPU (0 for single-GPU runs).
+    pub gpu: usize,
+    /// Virtual time the event fires (applied at the GPU's next window
+    /// boundary at or after this instant).
+    pub t_s: f64,
+    pub kind: GpuFaultKind,
+}
+
+/// The GPU-level fault kinds.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum GpuFaultKind {
+    /// Transient reset: the GPU survives but pays a warm-up penalty
+    /// (charged as actuation latency at the next busy span) and is
+    /// marked unhealthy for routing until `warmup_s` has elapsed.
+    Reset { warmup_s: f64 },
+    /// Permanent death: the GPU stops advancing; the fleet drains it,
+    /// re-routes the stream to survivors and redistributes its power
+    /// budget.
+    Death,
+    /// Forced thermal ceiling: the effective clock is clamped to
+    /// `mhz` from the event onward, whatever the governor locks.
+    ThermalCeiling { mhz: u32 },
+}
+
+/// The full fault schedule for one run (inert by default).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultsConfig {
+    /// Probability a governor clock write is rejected outright.
+    pub clock_reject_p: f64,
+    /// Probability a clock write above [`Self::clock_clamp_mhz`] is
+    /// clamped to that ceiling.
+    pub clock_clamp_p: f64,
+    /// Ceiling applied by clamp faults (MHz).
+    pub clock_clamp_mhz: u32,
+    /// Probability a clock write is delayed by [`Self::clock_delay_s`]
+    /// of extra actuation latency.
+    pub clock_delay_p: f64,
+    /// Extra actuation latency per delay fault (seconds).
+    pub clock_delay_s: f64,
+    /// Probability a window's observation gets a NaN field.
+    pub telemetry_nan_p: f64,
+    /// Probability a window's observation is a stale replay of the
+    /// previous good one.
+    pub telemetry_stale_p: f64,
+    /// Probability a window's latency telemetry is dropped.
+    pub telemetry_drop_p: f64,
+    /// Scheduled GPU-level events.
+    pub events: Vec<GpuFaultEvent>,
+    /// Watchdog fallback frequency (MHz); 0 resolves to the frequency
+    /// table's minimum.
+    pub safe_mhz: u32,
+    /// Consecutive failed actuation windows before the watchdog forces
+    /// the safe frequency.
+    pub watchdog_failures: u32,
+    /// Retry attempts per rejected clock write.
+    pub retry_max: u32,
+    /// Base backoff charged (as virtual actuation latency) per retry;
+    /// doubles per attempt.
+    pub retry_backoff_s: f64,
+}
+
+impl Default for FaultsConfig {
+    fn default() -> Self {
+        FaultsConfig {
+            clock_reject_p: 0.0,
+            clock_clamp_p: 0.0,
+            clock_clamp_mhz: 900,
+            clock_delay_p: 0.0,
+            clock_delay_s: 0.05,
+            telemetry_nan_p: 0.0,
+            telemetry_stale_p: 0.0,
+            telemetry_drop_p: 0.0,
+            events: Vec::new(),
+            safe_mhz: 0,
+            watchdog_failures: 3,
+            retry_max: 2,
+            retry_backoff_s: 0.02,
+        }
+    }
+}
+
+impl FaultsConfig {
+    /// True when the schedule can never inject anything — the driver
+    /// and fleet then skip the fault plane entirely, keeping the
+    /// fault-free path bitwise-identical to a build without it.
+    pub fn is_inert(&self) -> bool {
+        self.clock_reject_p == 0.0
+            && self.clock_clamp_p == 0.0
+            && self.clock_delay_p == 0.0
+            && self.telemetry_nan_p == 0.0
+            && self.telemetry_stale_p == 0.0
+            && self.telemetry_drop_p == 0.0
+            && self.events.is_empty()
+    }
+
+    /// Validate ranges (probabilities in [0,1], finite times).
+    pub fn validate(&self) -> Result<(), String> {
+        let probs = [
+            ("clock_reject_p", self.clock_reject_p),
+            ("clock_clamp_p", self.clock_clamp_p),
+            ("clock_delay_p", self.clock_delay_p),
+            ("telemetry_nan_p", self.telemetry_nan_p),
+            ("telemetry_stale_p", self.telemetry_stale_p),
+            ("telemetry_drop_p", self.telemetry_drop_p),
+        ];
+        for (name, p) in probs {
+            if !(0.0..=1.0).contains(&p) {
+                return Err(format!("{name} must be in [0,1], got {p}"));
+            }
+        }
+        for (name, s) in [
+            ("clock_delay_s", self.clock_delay_s),
+            ("retry_backoff_s", self.retry_backoff_s),
+        ] {
+            if !s.is_finite() || s < 0.0 {
+                return Err(format!("{name} must be >= 0, got {s}"));
+            }
+        }
+        for e in &self.events {
+            if !e.t_s.is_finite() || e.t_s < 0.0 {
+                return Err(format!("event time must be >= 0, got {}", e.t_s));
+            }
+            if let GpuFaultKind::Reset { warmup_s } = e.kind {
+                if !warmup_s.is_finite() || warmup_s < 0.0 {
+                    return Err(format!(
+                        "reset warmup must be >= 0, got {warmup_s}"
+                    ));
+                }
+            }
+            if let GpuFaultKind::ThermalCeiling { mhz } = e.kind {
+                if mhz == 0 {
+                    return Err("ceiling mhz must be > 0".to_string());
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Parse the `[faults]` TOML section.
+    pub fn from_toml(v: &Value) -> Result<FaultsConfig, String> {
+        let mut c = FaultsConfig::default();
+        let f64_keys: [(&str, &mut f64); 8] = [
+            ("clock_reject_p", &mut c.clock_reject_p),
+            ("clock_clamp_p", &mut c.clock_clamp_p),
+            ("clock_delay_p", &mut c.clock_delay_p),
+            ("clock_delay_s", &mut c.clock_delay_s),
+            ("telemetry_nan_p", &mut c.telemetry_nan_p),
+            ("telemetry_stale_p", &mut c.telemetry_stale_p),
+            ("telemetry_drop_p", &mut c.telemetry_drop_p),
+            ("retry_backoff_s", &mut c.retry_backoff_s),
+        ];
+        for (key, field) in f64_keys {
+            if let Some(x) = v.get(key) {
+                *field = x.as_f64().ok_or_else(|| format!("bad {key}"))?;
+            }
+        }
+        let u32_keys: [(&str, &mut u32); 4] = [
+            ("clock_clamp_mhz", &mut c.clock_clamp_mhz),
+            ("safe_mhz", &mut c.safe_mhz),
+            ("watchdog_failures", &mut c.watchdog_failures),
+            ("retry_max", &mut c.retry_max),
+        ];
+        for (key, field) in u32_keys {
+            if let Some(x) = v.get(key) {
+                *field = x.as_u32().ok_or_else(|| format!("bad {key}"))?;
+            }
+        }
+        if let Some(arr) = v.get("events") {
+            let Value::Arr(items) = arr else {
+                return Err("faults.events must be a string array".to_string());
+            };
+            for item in items {
+                let s = item
+                    .as_str()
+                    .ok_or("faults.events entries must be strings")?;
+                c.events.push(parse_event(s)?);
+            }
+        }
+        c.events.sort_by(|a, b| a.t_s.total_cmp(&b.t_s));
+        c.validate()?;
+        Ok(c)
+    }
+}
+
+/// Parse one event spec: `gpu<N>@<t_s>:<kind>` with kind one of
+/// `death`, `reset[:warmup_s]`, `ceiling:<mhz>`.
+fn parse_event(s: &str) -> Result<GpuFaultEvent, String> {
+    let err = || format!("bad fault event {s:?} (want gpu<N>@<t>:<kind>)");
+    let rest = s.strip_prefix("gpu").ok_or_else(err)?;
+    let (gpu, rest) = rest.split_once('@').ok_or_else(err)?;
+    let gpu = gpu.parse::<usize>().map_err(|_| err())?;
+    let (t, kind) = rest.split_once(':').ok_or_else(err)?;
+    let t_s = t.parse::<f64>().map_err(|_| err())?;
+    let kind = match kind.split_once(':') {
+        None => match kind {
+            "death" => GpuFaultKind::Death,
+            "reset" => GpuFaultKind::Reset { warmup_s: 2.0 },
+            _ => return Err(err()),
+        },
+        Some(("reset", arg)) => GpuFaultKind::Reset {
+            warmup_s: arg.parse::<f64>().map_err(|_| err())?,
+        },
+        Some(("ceiling", arg)) => GpuFaultKind::ThermalCeiling {
+            mhz: arg.parse::<u32>().map_err(|_| err())?,
+        },
+        Some(_) => return Err(err()),
+    };
+    Ok(GpuFaultEvent { gpu, t_s, kind })
+}
+
+/// The `standard` mixed-fault preset: every injection class active at
+/// rates a resilient governor should shrug off (the CI chaos smoke and
+/// the EXPERIMENTS.md resilience table run under exactly this mix).
+fn apply_standard(c: &mut FaultsConfig) {
+    c.clock_reject_p = 0.05;
+    c.clock_clamp_p = 0.05;
+    c.clock_clamp_mhz = 900;
+    c.clock_delay_p = 0.10;
+    c.clock_delay_s = 0.05;
+    c.telemetry_nan_p = 0.05;
+    c.telemetry_stale_p = 0.05;
+    c.telemetry_drop_p = 0.05;
+}
+
+/// The `gpu-death` fleet preset: GPUs 1 and 3 die early in the run —
+/// the survivor-count smoke in CI asserts the fleet keeps serving on
+/// the remaining GPUs.
+fn apply_gpu_death(c: &mut FaultsConfig) {
+    c.events.push(GpuFaultEvent {
+        gpu: 1,
+        t_s: 20.0,
+        kind: GpuFaultKind::Death,
+    });
+    c.events.push(GpuFaultEvent {
+        gpu: 3,
+        t_s: 40.0,
+        kind: GpuFaultKind::Death,
+    });
+}
+
+/// Parse a `--faults` CLI spec (see the module docs for the grammar).
+pub fn parse_faults_spec(spec: &str) -> Result<FaultsConfig, String> {
+    let mut c = FaultsConfig::default();
+    for token in spec.split(',') {
+        let token = token.trim();
+        if token.is_empty() {
+            continue;
+        }
+        match token {
+            "none" | "off" => c = FaultsConfig::default(),
+            "standard" => apply_standard(&mut c),
+            "gpu-death" => apply_gpu_death(&mut c),
+            _ => {
+                let (key, val) = token.split_once('=').ok_or_else(|| {
+                    format!(
+                        "bad --faults token {token:?}: not a preset \
+                         (none|standard|gpu-death) or key=value"
+                    )
+                })?;
+                apply_kv(&mut c, key, val)?;
+            }
+        }
+    }
+    c.events.sort_by(|a, b| a.t_s.total_cmp(&b.t_s));
+    c.validate()?;
+    Ok(c)
+}
+
+fn apply_kv(c: &mut FaultsConfig, key: &str, val: &str) -> Result<(), String> {
+    let f = || {
+        val.parse::<f64>()
+            .map_err(|e| format!("--faults {key}={val}: {e}"))
+    };
+    let u = || {
+        val.parse::<u32>()
+            .map_err(|e| format!("--faults {key}={val}: {e}"))
+    };
+    match key {
+        "reject" => c.clock_reject_p = f()?,
+        "clamp" => c.clock_clamp_p = f()?,
+        "clamp-mhz" => c.clock_clamp_mhz = u()?,
+        "delay" => c.clock_delay_p = f()?,
+        "delay-s" => c.clock_delay_s = f()?,
+        "nan" => c.telemetry_nan_p = f()?,
+        "stale" => c.telemetry_stale_p = f()?,
+        "drop" => c.telemetry_drop_p = f()?,
+        "safe-mhz" => c.safe_mhz = u()?,
+        "watchdog" => c.watchdog_failures = u()?,
+        "retries" => c.retry_max = u()?,
+        "backoff-s" => c.retry_backoff_s = f()?,
+        "event" => c.events.push(parse_event(val)?),
+        _ => return Err(format!("unknown --faults key {key:?}")),
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::toml;
+
+    #[test]
+    fn default_is_inert_and_valid() {
+        let c = FaultsConfig::default();
+        assert!(c.is_inert());
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn presets_parse_and_are_active() {
+        let c = parse_faults_spec("standard").unwrap();
+        assert!(!c.is_inert());
+        assert_eq!(c.clock_clamp_mhz, 900);
+        assert!(c.telemetry_nan_p > 0.0);
+
+        let c = parse_faults_spec("gpu-death").unwrap();
+        assert!(!c.is_inert());
+        assert_eq!(c.events.len(), 2);
+        assert_eq!(c.events[0].gpu, 1);
+        assert_eq!(c.events[0].kind, GpuFaultKind::Death);
+        assert!(c.clock_reject_p == 0.0, "gpu-death is events-only");
+
+        assert!(parse_faults_spec("none").unwrap().is_inert());
+    }
+
+    #[test]
+    fn overrides_compose_left_to_right() {
+        let c = parse_faults_spec("standard,nan=0.2,retries=5").unwrap();
+        assert!((c.telemetry_nan_p - 0.2).abs() < 1e-12);
+        assert_eq!(c.retry_max, 5);
+        assert!((c.clock_reject_p - 0.05).abs() < 1e-12);
+    }
+
+    #[test]
+    fn event_specs_round_trip() {
+        let c = parse_faults_spec(
+            "event=gpu0@30:death,event=gpu2@10.5:reset:3.5,\
+             event=gpu1@5:ceiling:900",
+        )
+        .unwrap();
+        // Sorted by time.
+        assert_eq!(c.events[0].gpu, 1);
+        assert_eq!(c.events[0].kind, GpuFaultKind::ThermalCeiling { mhz: 900 });
+        assert_eq!(c.events[1].kind, GpuFaultKind::Reset { warmup_s: 3.5 });
+        assert_eq!(c.events[2].t_s, 30.0);
+        assert_eq!(c.events[2].kind, GpuFaultKind::Death);
+    }
+
+    #[test]
+    fn bad_specs_are_rejected() {
+        assert!(parse_faults_spec("bogus").is_err());
+        assert!(parse_faults_spec("nan=2.0").is_err());
+        assert!(parse_faults_spec("event=gpu@3:death").is_err());
+        assert!(parse_faults_spec("event=gpu0@3:melt").is_err());
+        assert!(parse_faults_spec("event=gpu0@-1:death").is_err());
+        assert!(parse_faults_spec("event=gpu0@3:ceiling:0").is_err());
+    }
+
+    #[test]
+    fn toml_section_parses() {
+        let doc = toml::parse(
+            r#"
+[faults]
+clock_reject_p = 0.1
+clock_clamp_mhz = 1200
+telemetry_nan_p = 0.05
+events = ["gpu1@20:death", "gpu0@5:reset:1.0"]
+"#,
+        )
+        .unwrap();
+        let c = FaultsConfig::from_toml(doc.get("faults").unwrap()).unwrap();
+        assert!((c.clock_reject_p - 0.1).abs() < 1e-12);
+        assert_eq!(c.clock_clamp_mhz, 1200);
+        assert_eq!(c.events.len(), 2);
+        // Sorted by time on parse.
+        assert_eq!(c.events[0].kind, GpuFaultKind::Reset { warmup_s: 1.0 });
+        assert!(!c.is_inert());
+    }
+}

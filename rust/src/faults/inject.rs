@@ -1,0 +1,652 @@
+//! The fault injector and the per-GPU fault plane: seeded draws, the
+//! `ClockActuator` boundary, telemetry corruption, and the scheduled
+//! GPU-event machinery (see the module docs in [`crate::faults`]).
+
+use crate::gpu::SimGpu;
+use crate::tuner::governors::TunerTelemetry;
+use crate::tuner::tuner::WindowObservation;
+use crate::util::rng::Pcg64;
+
+use super::config::{FaultsConfig, GpuFaultEvent, GpuFaultKind};
+use super::observation_is_finite;
+
+/// Tag folded into the fault RNG fork so the injector's draws live on a
+/// stream disjoint from the workload realization and every engine
+/// decision (which fork with their own tags off the same root seed).
+const FAULT_STREAM_TAG: u64 = 0xFA_0175_EED0_C10C;
+
+/// The injection-side ledger: what the injector actually did.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultStats {
+    pub clock_rejects: u64,
+    pub clock_clamps: u64,
+    pub clock_delays: u64,
+    pub telemetry_nan: u64,
+    pub telemetry_stale: u64,
+    pub telemetry_drop: u64,
+    pub gpu_resets: u64,
+    pub gpu_deaths: u64,
+    pub thermal_ceilings: u64,
+}
+
+impl FaultStats {
+    pub fn clock_total(&self) -> u64 {
+        self.clock_rejects + self.clock_clamps + self.clock_delays
+    }
+
+    pub fn telemetry_total(&self) -> u64 {
+        self.telemetry_nan + self.telemetry_stale + self.telemetry_drop
+    }
+
+    pub fn gpu_total(&self) -> u64 {
+        self.gpu_resets + self.gpu_deaths + self.thermal_ceilings
+    }
+
+    pub fn total(&self) -> u64 {
+        self.clock_total() + self.telemetry_total() + self.gpu_total()
+    }
+}
+
+/// The handler-side ledger: what the degraded-mode control plane saw
+/// and did about it. The chaos suite asserts this agrees exactly with
+/// [`FaultStats`] — a fault injected but unobserved (or vice versa) is
+/// a plumbing bug.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ObservedFaults {
+    /// Telemetry faults seen at the observation filter.
+    pub telemetry: u64,
+    /// Windows withheld from the governor (sanitize-and-hold).
+    pub sanitized_windows: u64,
+    /// Clock-write faults seen at the actuator (rejects incl. retried
+    /// attempts, clamps, delays).
+    pub clock: u64,
+    /// Retry attempts issued after rejected writes.
+    pub clock_retries: u64,
+    /// Writes that stayed rejected after all retries.
+    pub clock_write_failures: u64,
+    /// Watchdog fallbacks to the safe frequency.
+    pub watchdog_fallbacks: u64,
+    /// Scheduled GPU-level events handled.
+    pub gpu: u64,
+}
+
+/// What the injector did to one window's observation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TelemetryFault {
+    /// A field was poisoned with NaN.
+    Nan,
+    /// The observation was replaced with a stale replay of the last
+    /// good one.
+    Stale,
+    /// The latency means were dropped.
+    Drop,
+}
+
+/// The injector's verdict on one clock write.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ClockWrite {
+    /// Write goes through as requested.
+    Apply(u32),
+    /// Write lands, but clamped to the fault ceiling.
+    Clamped(u32),
+    /// Write lands after the given extra actuation latency.
+    Delayed(u32, f64),
+    /// Write is rejected outright.
+    Rejected,
+}
+
+/// Seeded fault source: rolls each injection channel against its
+/// configured probability on a private RNG stream. Draws only happen
+/// for channels with non-zero probability, and at most one fault is
+/// injected per clock write / per observation.
+#[derive(Debug, Clone)]
+pub struct FaultInjector {
+    cfg: FaultsConfig,
+    rng: Pcg64,
+    pub stats: FaultStats,
+}
+
+impl FaultInjector {
+    pub fn new(cfg: FaultsConfig, seed: u64, gpu: usize) -> FaultInjector {
+        let mut root = Pcg64::new(seed);
+        let rng = root.fork(FAULT_STREAM_TAG ^ gpu as u64);
+        FaultInjector {
+            cfg,
+            rng,
+            stats: FaultStats::default(),
+        }
+    }
+
+    /// Bernoulli draw; never touches the RNG when `p == 0`.
+    fn roll(&mut self, p: f64) -> bool {
+        p > 0.0 && self.rng.f64() < p
+    }
+
+    /// Pass one governor clock write through the fault channels
+    /// (reject, then clamp — only if the request exceeds the fault
+    /// ceiling — then delay).
+    pub fn filter_clock_write(&mut self, mhz: u32) -> ClockWrite {
+        if self.roll(self.cfg.clock_reject_p) {
+            self.stats.clock_rejects += 1;
+            return ClockWrite::Rejected;
+        }
+        if mhz > self.cfg.clock_clamp_mhz && self.roll(self.cfg.clock_clamp_p)
+        {
+            self.stats.clock_clamps += 1;
+            return ClockWrite::Clamped(self.cfg.clock_clamp_mhz);
+        }
+        if self.roll(self.cfg.clock_delay_p) {
+            self.stats.clock_delays += 1;
+            return ClockWrite::Delayed(mhz, self.cfg.clock_delay_s);
+        }
+        ClockWrite::Apply(mhz)
+    }
+
+    /// Corrupt (at most one way) the governor-facing copy of a window
+    /// observation. `prev` is the last observation delivered clean —
+    /// the payload a stale replay repeats.
+    pub fn corrupt(
+        &mut self,
+        obs: &mut WindowObservation,
+        prev: Option<&WindowObservation>,
+    ) -> Option<TelemetryFault> {
+        if self.roll(self.cfg.telemetry_drop_p) {
+            obs.ttft_mean = None;
+            obs.tpot_mean = None;
+            obs.e2e_mean = None;
+            self.stats.telemetry_drop += 1;
+            return Some(TelemetryFault::Drop);
+        }
+        if self.roll(self.cfg.telemetry_nan_p) {
+            match self.rng.index(4) {
+                0 => obs.snapshot.power_w = f64::NAN,
+                1 => obs.snapshot.kv_usage = f64::NAN,
+                2 => obs.ttft_mean = Some(f64::NAN),
+                _ => obs.snapshot.energy_j_total = f64::NAN,
+            }
+            self.stats.telemetry_nan += 1;
+            return Some(TelemetryFault::Nan);
+        }
+        if self.roll(self.cfg.telemetry_stale_p) {
+            self.stats.telemetry_stale += 1;
+            if let Some(p) = prev {
+                *obs = *p;
+            }
+            return Some(TelemetryFault::Stale);
+        }
+        None
+    }
+}
+
+/// One GPU's fault state: the injector plus the degraded-mode control
+/// plane the driver runs against it — retry-with-backoff and watchdog
+/// at the actuator, sanitize-and-hold at the observation filter, and
+/// the scheduled GPU-event cursor with its health window.
+#[derive(Debug, Clone)]
+pub struct FaultPlane {
+    injector: FaultInjector,
+    safe_mhz: u32,
+    watchdog_failures: u32,
+    retry_max: u32,
+    retry_backoff_s: f64,
+    consecutive_failures: u32,
+    /// This GPU's scheduled events, time-sorted.
+    events: Vec<GpuFaultEvent>,
+    next_event: usize,
+    /// Last observation delivered to the governor uncorrupted — the
+    /// stale-replay payload.
+    last_good: Option<WindowObservation>,
+    pub observed: ObservedFaults,
+    /// Routing-health horizon after a transient reset.
+    unhealthy_until: Option<f64>,
+    dead: bool,
+}
+
+impl FaultPlane {
+    /// Plane for fleet GPU `gpu`: keeps only that GPU's scheduled
+    /// events and forks a per-GPU RNG stream off `seed`.
+    pub fn for_gpu(cfg: &FaultsConfig, seed: u64, gpu: usize) -> FaultPlane {
+        let events: Vec<GpuFaultEvent> =
+            cfg.events.iter().copied().filter(|e| e.gpu == gpu).collect();
+        FaultPlane {
+            safe_mhz: cfg.safe_mhz,
+            watchdog_failures: cfg.watchdog_failures.max(1),
+            retry_max: cfg.retry_max,
+            retry_backoff_s: cfg.retry_backoff_s,
+            injector: FaultInjector::new(cfg.clone(), seed, gpu),
+            consecutive_failures: 0,
+            events,
+            next_event: 0,
+            last_good: None,
+            observed: ObservedFaults::default(),
+            unhealthy_until: None,
+            dead: false,
+        }
+    }
+
+    /// Plane for a single-GPU run (fleet index 0).
+    pub fn for_single(cfg: &FaultsConfig, seed: u64) -> FaultPlane {
+        FaultPlane::for_gpu(cfg, seed, 0)
+    }
+
+    /// The `ClockActuator`: carry one governor decision onto the
+    /// device through the fault channels. Rejected writes are retried
+    /// up to `retry_max` times, each retry charging exponentially
+    /// growing backoff as virtual actuation latency; a write that
+    /// stays rejected holds the current clock, and after
+    /// `watchdog_failures` consecutive held windows the watchdog
+    /// forces the safe frequency through a privileged write that
+    /// bypasses the injector. Returns the clock now in force.
+    pub fn actuate(&mut self, gpu: &mut SimGpu, mhz: u32) -> u32 {
+        let mut attempt: u32 = 0;
+        loop {
+            match self.injector.filter_clock_write(mhz) {
+                ClockWrite::Apply(f) => {
+                    self.consecutive_failures = 0;
+                    return gpu.set_clock(f);
+                }
+                ClockWrite::Clamped(c) => {
+                    self.observed.clock += 1;
+                    self.consecutive_failures = 0;
+                    return gpu.set_clock(c);
+                }
+                ClockWrite::Delayed(f, extra_s) => {
+                    self.observed.clock += 1;
+                    self.consecutive_failures = 0;
+                    let got = gpu.set_clock(f);
+                    gpu.inject_actuation_delay(extra_s);
+                    return got;
+                }
+                ClockWrite::Rejected => {
+                    self.observed.clock += 1;
+                    if attempt >= self.retry_max {
+                        self.observed.clock_write_failures += 1;
+                        self.consecutive_failures += 1;
+                        if self.consecutive_failures >= self.watchdog_failures
+                        {
+                            self.observed.watchdog_fallbacks += 1;
+                            self.consecutive_failures = 0;
+                            let safe = if self.safe_mhz == 0 {
+                                gpu.table().min_mhz()
+                            } else {
+                                self.safe_mhz
+                            };
+                            return gpu.set_clock(safe);
+                        }
+                        // Hold: the previous decision stays in force.
+                        return gpu.effective_mhz(true);
+                    }
+                    attempt += 1;
+                    self.observed.clock_retries += 1;
+                    let backoff = self.retry_backoff_s
+                        * (1u64 << (attempt - 1).min(16)) as f64;
+                    gpu.inject_actuation_delay(backoff);
+                }
+            }
+        }
+    }
+
+    /// Pass one window observation through the corruption channels and
+    /// decide whether the governor gets to see it. `false` means
+    /// sanitize-and-hold: the window is withheld and the previous
+    /// clock decision stays in force. Stale replays (finite by
+    /// construction) pass through — surviving them is the tuner
+    /// layer's job.
+    pub fn filter_observation(&mut self, obs: &mut WindowObservation) -> bool {
+        let fault = self.injector.corrupt(obs, self.last_good.as_ref());
+        if fault.is_some() {
+            self.observed.telemetry += 1;
+        }
+        let deliver = match fault {
+            Some(TelemetryFault::Drop) => false,
+            _ => observation_is_finite(obs),
+        };
+        if !deliver {
+            self.observed.sanitized_windows += 1;
+        }
+        if deliver && fault.is_none() {
+            self.last_good = Some(*obs);
+        }
+        deliver
+    }
+
+    /// Fire every scheduled event due at or before virtual time `t`
+    /// (the driver calls this once per window boundary). Death stops
+    /// processing — the GPU is gone and later events on it are moot.
+    pub fn apply_due_events(&mut self, gpu: &mut SimGpu, t: f64) {
+        while self.next_event < self.events.len()
+            && self.events[self.next_event].t_s <= t
+        {
+            let e = self.events[self.next_event];
+            self.next_event += 1;
+            self.observed.gpu += 1;
+            match e.kind {
+                GpuFaultKind::Death => {
+                    self.injector.stats.gpu_deaths += 1;
+                    self.dead = true;
+                    return;
+                }
+                GpuFaultKind::Reset { warmup_s } => {
+                    self.injector.stats.gpu_resets += 1;
+                    gpu.inject_actuation_delay(warmup_s);
+                    let until = e.t_s + warmup_s;
+                    self.unhealthy_until = Some(
+                        self.unhealthy_until.map_or(until, |u| u.max(until)),
+                    );
+                }
+                GpuFaultKind::ThermalCeiling { mhz } => {
+                    self.injector.stats.thermal_ceilings += 1;
+                    gpu.set_thermal_ceiling(Some(mhz));
+                }
+            }
+        }
+    }
+
+    /// Routing health at virtual time `t`: alive and past any reset
+    /// warm-up window.
+    pub fn healthy_at(&self, t: f64) -> bool {
+        !self.dead && self.unhealthy_until.is_none_or(|u| t >= u)
+    }
+
+    pub fn dead(&self) -> bool {
+        self.dead
+    }
+
+    pub fn stats(&self) -> &FaultStats {
+        &self.injector.stats
+    }
+
+    /// Export both ledgers into the run's tuner telemetry.
+    pub fn export_telemetry(&self, tel: &mut TunerTelemetry) {
+        tel.faults_injected = self.injector.stats.total();
+        tel.telemetry_faults = self.observed.telemetry;
+        tel.sanitized_windows = self.observed.sanitized_windows;
+        tel.clock_faults = self.observed.clock;
+        tel.clock_retries = self.observed.clock_retries;
+        tel.clock_write_failures = self.observed.clock_write_failures;
+        tel.watchdog_fallbacks = self.observed.watchdog_fallbacks;
+        tel.gpu_faults = self.observed.gpu;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{GovernorKind, GpuConfig};
+    use crate::server::metrics::MetricsSnapshot;
+
+    fn gpu() -> SimGpu {
+        SimGpu::new(&GpuConfig::default(), GovernorKind::Agft)
+    }
+
+    fn obs(t: f64) -> WindowObservation {
+        WindowObservation {
+            snapshot: MetricsSnapshot {
+                time_s: t,
+                ..Default::default()
+            },
+            ttft_mean: Some(0.05),
+            tpot_mean: Some(0.02),
+            e2e_mean: Some(1.0),
+        }
+    }
+
+    #[test]
+    fn zero_probability_plane_is_engine_inert() {
+        let cfg = FaultsConfig::default();
+        let mut plane = FaultPlane::for_single(&cfg, 7);
+        let mut g = gpu();
+        let mut reference = gpu();
+        assert_eq!(plane.actuate(&mut g, 1398), reference.set_clock(1398));
+        assert_eq!(g.current_lock(), reference.current_lock());
+        assert_eq!(g.clock_changes(), reference.clock_changes());
+        assert_eq!(
+            g.take_pending_lock_latency().to_bits(),
+            reference.take_pending_lock_latency().to_bits()
+        );
+        let mut o = obs(0.8);
+        assert!(plane.filter_observation(&mut o));
+        assert_eq!(o, obs(0.8));
+        assert_eq!(plane.stats().total(), 0);
+        assert_eq!(plane.observed, ObservedFaults::default());
+        assert!(plane.healthy_at(0.0));
+    }
+
+    #[test]
+    fn clamp_fault_lands_at_the_fault_ceiling() {
+        let cfg = FaultsConfig {
+            clock_clamp_p: 1.0,
+            clock_clamp_mhz: 900,
+            ..FaultsConfig::default()
+        };
+        let mut plane = FaultPlane::for_single(&cfg, 1);
+        let mut g = gpu();
+        assert_eq!(plane.actuate(&mut g, 1800), 900);
+        assert_eq!(plane.stats().clock_clamps, 1);
+        assert_eq!(plane.observed.clock, 1);
+        // A request at or below the ceiling is not clamp-eligible.
+        assert_eq!(plane.actuate(&mut g, 600), 600);
+        assert_eq!(plane.stats().clock_clamps, 1);
+    }
+
+    #[test]
+    fn delay_fault_charges_extra_actuation_latency() {
+        let cfg = FaultsConfig {
+            clock_delay_p: 1.0,
+            clock_delay_s: 0.25,
+            ..FaultsConfig::default()
+        };
+        let mut plane = FaultPlane::for_single(&cfg, 1);
+        let mut g = gpu();
+        assert_eq!(plane.actuate(&mut g, 900), 900);
+        let lat = g.take_pending_lock_latency();
+        let base = GpuConfig::default().set_clock_latency_s;
+        assert!((lat - (base + 0.25)).abs() < 1e-12, "lat={lat}");
+        assert_eq!(plane.stats().clock_delays, 1);
+    }
+
+    #[test]
+    fn rejects_retry_then_hold_then_watchdog() {
+        let cfg = FaultsConfig {
+            clock_reject_p: 1.0,
+            retry_max: 1,
+            retry_backoff_s: 0.1,
+            watchdog_failures: 2,
+            safe_mhz: 0,
+            ..FaultsConfig::default()
+        };
+        let mut plane = FaultPlane::for_single(&cfg, 3);
+        let mut g = gpu();
+        let held = g.set_clock(1395);
+        g.take_pending_lock_latency();
+
+        // Window 1: reject, one retry (also rejected), hold.
+        assert_eq!(plane.actuate(&mut g, 900), held);
+        assert_eq!(plane.observed.clock_retries, 1);
+        assert_eq!(plane.observed.clock_write_failures, 1);
+        assert_eq!(plane.observed.watchdog_fallbacks, 0);
+        // The retry backoff was charged even though the write failed.
+        assert!((g.take_pending_lock_latency() - 0.1).abs() < 1e-12);
+        assert_eq!(g.current_lock(), Some(held));
+
+        // Window 2: second consecutive failure trips the watchdog,
+        // which force-writes the table minimum past the injector.
+        let safe = g.table().min_mhz();
+        assert_eq!(plane.actuate(&mut g, 900), safe);
+        assert_eq!(plane.observed.watchdog_fallbacks, 1);
+        assert_eq!(g.current_lock(), Some(safe));
+        // Ledgers agree: every reject (incl. retries) observed.
+        assert_eq!(plane.stats().clock_total(), plane.observed.clock);
+        assert_eq!(plane.stats().clock_rejects, 4);
+    }
+
+    #[test]
+    fn corruption_channels_count_and_hold() {
+        // Drop everything: every window is sanitized-and-held.
+        let cfg = FaultsConfig {
+            telemetry_drop_p: 1.0,
+            ..FaultsConfig::default()
+        };
+        let mut plane = FaultPlane::for_single(&cfg, 5);
+        let mut o = obs(0.8);
+        assert!(!plane.filter_observation(&mut o));
+        assert_eq!(o.ttft_mean, None);
+        assert_eq!(plane.observed.telemetry, 1);
+        assert_eq!(plane.observed.sanitized_windows, 1);
+        assert_eq!(plane.stats().telemetry_drop, 1);
+
+        // NaN: corrupted field is caught by the finite gate.
+        let cfg = FaultsConfig {
+            telemetry_nan_p: 1.0,
+            ..FaultsConfig::default()
+        };
+        let mut plane = FaultPlane::for_single(&cfg, 5);
+        let mut o = obs(0.8);
+        assert!(!plane.filter_observation(&mut o));
+        assert!(!super::super::observation_is_finite(&o));
+        assert_eq!(plane.stats().telemetry_nan, 1);
+
+        // Stale: replays the last clean observation, passes through.
+        let cfg = FaultsConfig {
+            telemetry_stale_p: 1.0,
+            ..FaultsConfig::default()
+        };
+        let mut plane = FaultPlane::for_single(&cfg, 5);
+        let mut first = obs(0.8);
+        // No clean prior delivery yet: stale fires but has no payload.
+        assert!(plane.filter_observation(&mut first));
+        assert_eq!(first, obs(0.8));
+        assert_eq!(plane.stats().telemetry_stale, 1);
+        assert_eq!(plane.observed.telemetry, plane.stats().telemetry_total());
+    }
+
+    #[test]
+    fn stale_replays_last_clean_observation() {
+        // Fault only from the second window on, via a fresh plane fed
+        // a clean window first (probability flipped between calls is
+        // not possible, so emulate with two planes sharing last_good).
+        let cfg = FaultsConfig {
+            telemetry_stale_p: 1.0,
+            ..FaultsConfig::default()
+        };
+        let mut plane = FaultPlane::for_single(&cfg, 5);
+        plane.last_good = Some(obs(0.8));
+        let mut second = obs(1.6);
+        assert!(plane.filter_observation(&mut second));
+        assert_eq!(second, obs(0.8), "stale window replays the last good");
+    }
+
+    #[test]
+    fn scheduled_events_fire_once_in_order() {
+        let cfg = FaultsConfig {
+            events: vec![
+                GpuFaultEvent {
+                    gpu: 0,
+                    t_s: 5.0,
+                    kind: GpuFaultKind::ThermalCeiling { mhz: 903 },
+                },
+                GpuFaultEvent {
+                    gpu: 0,
+                    t_s: 10.0,
+                    kind: GpuFaultKind::Reset { warmup_s: 2.0 },
+                },
+                GpuFaultEvent {
+                    gpu: 1,
+                    t_s: 1.0,
+                    kind: GpuFaultKind::Death,
+                },
+            ],
+            ..FaultsConfig::default()
+        };
+        let mut plane = FaultPlane::for_gpu(&cfg, 9, 0);
+        let mut g = gpu();
+        // gpu1's death is not ours.
+        plane.apply_due_events(&mut g, 4.0);
+        assert_eq!(plane.observed.gpu, 0);
+        assert!(plane.healthy_at(4.0));
+
+        plane.apply_due_events(&mut g, 5.0);
+        assert_eq!(g.thermal_ceiling(), Some(900), "quantised ceiling");
+        assert_eq!(plane.stats().thermal_ceilings, 1);
+
+        plane.apply_due_events(&mut g, 11.0);
+        assert_eq!(plane.stats().gpu_resets, 1);
+        assert!(!plane.healthy_at(11.0), "warm-up until t=12");
+        assert!(plane.healthy_at(12.0));
+        assert!((g.take_pending_lock_latency() - 2.0).abs() < 1e-12);
+
+        // Re-poll: nothing fires twice.
+        plane.apply_due_events(&mut g, 20.0);
+        assert_eq!(plane.observed.gpu, 2);
+        assert_eq!(plane.stats().gpu_total(), 2);
+        assert!(!plane.dead());
+    }
+
+    #[test]
+    fn death_marks_plane_dead_and_unhealthy() {
+        let cfg = FaultsConfig {
+            events: vec![GpuFaultEvent {
+                gpu: 2,
+                t_s: 3.0,
+                kind: GpuFaultKind::Death,
+            }],
+            ..FaultsConfig::default()
+        };
+        let mut plane = FaultPlane::for_gpu(&cfg, 9, 2);
+        let mut g = gpu();
+        plane.apply_due_events(&mut g, 3.0);
+        assert!(plane.dead());
+        assert!(!plane.healthy_at(100.0));
+        assert_eq!(plane.stats().gpu_deaths, 1);
+        assert_eq!(plane.observed.gpu, 1);
+    }
+
+    #[test]
+    fn same_seed_same_fault_sequence() {
+        let cfg = FaultsConfig {
+            clock_reject_p: 0.3,
+            clock_delay_p: 0.3,
+            telemetry_nan_p: 0.3,
+            telemetry_stale_p: 0.2,
+            ..FaultsConfig::default()
+        };
+        let run = |seed: u64| {
+            let mut plane = FaultPlane::for_single(&cfg, seed);
+            let mut g = gpu();
+            let mut clocks = Vec::new();
+            for w in 0..40 {
+                let mut o = obs(w as f64 * 0.8);
+                let _ = plane.filter_observation(&mut o);
+                clocks.push(plane.actuate(&mut g, 900 + 15 * (w % 20)));
+            }
+            (clocks, plane.injector.stats)
+        };
+        assert_eq!(run(42), run(42));
+        assert_ne!(
+            run(42),
+            run(43),
+            "different seeds draw different fault sequences"
+        );
+    }
+
+    #[test]
+    fn export_telemetry_carries_both_ledgers() {
+        let cfg = FaultsConfig {
+            clock_reject_p: 1.0,
+            retry_max: 0,
+            watchdog_failures: 1,
+            ..FaultsConfig::default()
+        };
+        let mut plane = FaultPlane::for_single(&cfg, 11);
+        let mut g = gpu();
+        plane.actuate(&mut g, 900);
+        let mut tel = TunerTelemetry::default();
+        plane.export_telemetry(&mut tel);
+        assert_eq!(tel.faults_injected, 1);
+        assert_eq!(tel.clock_faults, 1);
+        assert_eq!(tel.clock_write_failures, 1);
+        assert_eq!(tel.watchdog_fallbacks, 1);
+        assert_eq!(tel.telemetry_faults, 0);
+        assert_eq!(tel.gpu_faults, 0);
+    }
+}

@@ -1,0 +1,120 @@
+//! Deterministic fault injection: the degraded-operation regime as a
+//! first-class, seeded, testable subsystem.
+//!
+//! AGFT's headline numbers assume actuation and observation are
+//! reliable; a real NVML/sysfs daemon hits rejected or clamped clock
+//! writes, stale or non-finite telemetry, and GPUs that throttle,
+//! reset, or disappear mid-run. This module makes every one of those
+//! failure modes injectable on a deterministic schedule so the control
+//! plane's hardening (sanitize-and-hold, retry-with-backoff, watchdog
+//! fallback, fleet re-routing) can be exercised and regression-tested.
+//!
+//! Three injection sites:
+//!
+//! 1. **Clock actuation** — [`FaultPlane::actuate`] is the
+//!    `ClockActuator` boundary between governors and
+//!    [`crate::gpu::SimGpu`]: a write can be rejected outright,
+//!    clamped to a fault ceiling, or charged extra actuation latency.
+//!    The driver answers with bounded retry-with-backoff and a
+//!    watchdog fallback to a safe frequency after N consecutive
+//!    window-level failures.
+//! 2. **Telemetry** — [`FaultPlane::filter_observation`] corrupts the
+//!    governor-facing [`WindowObservation`] (NaN fields, stale replay,
+//!    dropped latency means) *upstream* of the governor while the
+//!    harness's own [`crate::experiment::harness::WindowRecord`] keeps
+//!    ground truth. Non-finite or dropped observations are
+//!    sanitized-and-held (the governor is simply not fed that window);
+//!    stale replays pass through silently — surviving those is the
+//!    tuner layer's job (`features`/`linucb`/`page_hinkley` guards).
+//! 3. **GPU-level events** — a schedule of transient resets (warm-up
+//!    penalty), permanent deaths, and forced thermal ceilings
+//!    ([`GpuFaultEvent`]), applied at window boundaries and surfaced
+//!    to [`crate::cluster::fleet`] for health tracking, re-routing and
+//!    power-budget redistribution.
+//!
+//! **Determinism and inertness.** All randomness comes from a
+//! [`Pcg64`] stream forked off `cfg.seed` with a fault-private tag, so
+//! the workload realization and every engine decision are untouched by
+//! the injector's draws. With no schedule configured
+//! ([`FaultsConfig::is_inert`]) no [`FaultPlane`] is ever constructed
+//! and the driver/fleet take their original code paths — the fault-free
+//! run is bitwise-identical to a build without this module, and even a
+//! *constructed* plane whose probabilities are all zero performs no
+//! engine-visible action (held by `tests/chaos_semantics.rs`).
+//!
+//! The injector and the handler keep separate ledgers:
+//! [`FaultStats`] counts what was injected, the driver's
+//! [`ObservedFaults`] counts what was handled, and both are exported
+//! into [`crate::tuner::governors::TunerTelemetry`] at run end. The
+//! chaos property test asserts the two ledgers agree exactly — any
+//! fault lost between injection site and telemetry fails the suite.
+
+mod config;
+mod inject;
+
+pub use config::{
+    parse_faults_spec, FaultsConfig, GpuFaultEvent, GpuFaultKind,
+};
+pub use inject::{
+    ClockWrite, FaultInjector, FaultPlane, FaultStats, ObservedFaults,
+    TelemetryFault,
+};
+
+use crate::tuner::tuner::WindowObservation;
+
+/// True when every governor-consumable field of the observation is
+/// finite — the driver's sanitize gate: a `false` here means the
+/// observation is withheld from the governor (sanitize-and-hold) and
+/// the previous clock decision stays in force.
+pub fn observation_is_finite(obs: &WindowObservation) -> bool {
+    let s = &obs.snapshot;
+    let opts = [obs.ttft_mean, obs.tpot_mean, obs.e2e_mean];
+    s.time_s.is_finite()
+        && s.energy_j_total.is_finite()
+        && s.power_w.is_finite()
+        && s.kv_usage.is_finite()
+        && s.queue_time_s_total.is_finite()
+        && s.idle_time_s_total.is_finite()
+        && opts.iter().all(|o| o.is_none_or(f64::is_finite))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::server::metrics::MetricsSnapshot;
+
+    fn clean_obs() -> WindowObservation {
+        WindowObservation {
+            snapshot: MetricsSnapshot {
+                time_s: 0.8,
+                ..Default::default()
+            },
+            ttft_mean: Some(0.05),
+            tpot_mean: Some(0.02),
+            e2e_mean: Some(1.0),
+        }
+    }
+
+    #[test]
+    fn finite_gate_catches_each_poisoned_field() {
+        assert!(observation_is_finite(&clean_obs()));
+        let mut o = clean_obs();
+        o.snapshot.power_w = f64::NAN;
+        assert!(!observation_is_finite(&o));
+        let mut o = clean_obs();
+        o.snapshot.kv_usage = f64::INFINITY;
+        assert!(!observation_is_finite(&o));
+        let mut o = clean_obs();
+        o.snapshot.energy_j_total = f64::NAN;
+        assert!(!observation_is_finite(&o));
+        let mut o = clean_obs();
+        o.ttft_mean = Some(f64::NAN);
+        assert!(!observation_is_finite(&o));
+        // Absent latency means are a normal idle window, not a fault.
+        let mut o = clean_obs();
+        o.ttft_mean = None;
+        o.tpot_mean = None;
+        o.e2e_mean = None;
+        assert!(observation_is_finite(&o));
+    }
+}

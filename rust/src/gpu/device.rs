@@ -17,6 +17,10 @@ pub struct SimGpu {
     set_clock_latency_s: f64,
     /// Pending latency still to be charged for the last clock change.
     pending_lock_latency_s: f64,
+    /// Forced thermal ceiling ([`crate::faults`] GPU events): when set,
+    /// the effective clock never exceeds it, whatever is locked. `None`
+    /// (always, outside fault runs) leaves the clock path untouched.
+    thermal_ceiling_mhz: Option<u32>,
     energy_j: f64,
     busy_time_s: f64,
     total_time_s: f64,
@@ -39,6 +43,7 @@ impl SimGpu {
             locked_mhz: locked,
             set_clock_latency_s: cfg.set_clock_latency_s,
             pending_lock_latency_s: 0.0,
+            thermal_ceiling_mhz: None,
             energy_j: 0.0,
             busy_time_s: 0.0,
             total_time_s: 0.0,
@@ -61,7 +66,7 @@ impl SimGpu {
     /// (locked sweeps, AGFT, and the rule-based / bandit baselines)
     /// drives the device through explicit clock locks.
     pub fn effective_mhz(&self, has_work: bool) -> u32 {
-        match self.governor {
+        let f = match self.governor {
             GovernorKind::Default => {
                 if has_work {
                     self.boost_mhz
@@ -70,6 +75,10 @@ impl SimGpu {
                 }
             }
             _ => self.locked_mhz.unwrap_or(self.boost_mhz),
+        };
+        match self.thermal_ceiling_mhz {
+            Some(c) if f > c => c,
+            _ => f,
         }
     }
 
@@ -206,6 +215,29 @@ impl SimGpu {
 
     pub fn current_lock(&self) -> Option<u32> {
         self.locked_mhz
+    }
+
+    /// Charge extra actuation latency to the next iteration (fault
+    /// injection: delayed clock writes, retry backoff, reset warm-up).
+    /// Accumulates onto the same pending-latency channel a clock change
+    /// uses, so it is consumed exactly once by the existing accounting.
+    pub fn inject_actuation_delay(&mut self, extra_s: f64) {
+        debug_assert!(
+            extra_s.is_finite() && extra_s >= 0.0,
+            "bad injected delay {extra_s}"
+        );
+        self.pending_lock_latency_s += extra_s;
+    }
+
+    /// Force (or clear) a thermal ceiling on the effective clock
+    /// ([`crate::faults`] GPU events). Quantised onto the table grid,
+    /// never below the table minimum.
+    pub fn set_thermal_ceiling(&mut self, ceiling: Option<u32>) {
+        self.thermal_ceiling_mhz = ceiling.map(|c| self.table.quantize(c));
+    }
+
+    pub fn thermal_ceiling(&self) -> Option<u32> {
+        self.thermal_ceiling_mhz
     }
 }
 

@@ -27,6 +27,7 @@ pub mod analysis;
 pub mod cluster;
 pub mod config;
 pub mod experiment;
+pub mod faults;
 pub mod gpu;
 pub mod model;
 pub mod runtime;

@@ -67,6 +67,14 @@ fn base_config(args: &Args) -> Result<ExperimentConfig, String> {
     if let Some(g) = args.get("governor") {
         cfg.governor = config::schema::parse_governor(g)?;
     }
+    // `--faults none|standard|gpu-death|key=value,...` layers a fault
+    // schedule over the run; absent (and with no `[faults]` TOML
+    // section) the injector is never constructed and every code path
+    // is bitwise-identical to a fault-free build.
+    if let Some(spec) = args.get("faults") {
+        cfg.faults = agft::faults::parse_faults_spec(spec)
+            .map_err(|e| format!("--faults {spec:?}: {e}"))?;
+    }
     Ok(cfg)
 }
 
@@ -204,6 +212,13 @@ fn cmd_cluster(args: &Args) -> Result<(), String> {
             first.fleet_mean_e2e(),
             first.peak_fleet_window_w(),
             first.engine_polls,
+        );
+    }
+    if !cfg.faults.is_inert() {
+        println!(
+            "faults: {} of {gpus} GPUs survived seed {}",
+            first.survivors(),
+            seed_list[0],
         );
     }
     if let Some(out) = args.get("out") {
@@ -833,7 +848,7 @@ fn cmd_orchestrate(args: &Args) -> Result<(), String> {
     let mut forwarded: Vec<String> = Vec::new();
     for key in [
         "config", "workload", "governor", "governors", "seeds", "seed",
-        "duration", "rps", "step", "which",
+        "duration", "rps", "step", "which", "faults",
     ] {
         if let Some(v) = args.get(key) {
             forwarded.push(format!("--{key}"));
@@ -919,6 +934,10 @@ fn usage() -> ! {
          common options: --config <toml> --workload <name> --governor \
          <default|agft|ondemand|slo|bandit|locked:MHZ> --duration S \
          --rps R --seed N --workers N\n\
+         fault injection: --faults none|standard|gpu-death|spec \
+         (spec: comma list of presets, key=value probabilities, and \
+         event=gpu<N>@<t>:death|reset[:warmup]|ceiling:<mhz>; see \
+         EXPERIMENTS.md §Fault injection)\n\
          cluster options: --gpus N --route rr|ll|prefix|slo \
          [--power-cap W] [--seeds K] [--out per_gpu.csv] (fleet \
          co-simulation on the global next-event heap)\n\

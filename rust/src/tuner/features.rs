@@ -47,6 +47,9 @@ pub struct FeatureExtractor {
     /// Concurrent sequences mapping scale.
     pub concurrency_scale: f64,
     last: Option<MetricsSnapshot>,
+    /// Non-finite feature components zeroed before emission (corrupted
+    /// telemetry must not reach the LinUCB design matrix).
+    sanitized: u64,
 }
 
 impl Default for FeatureExtractor {
@@ -57,6 +60,7 @@ impl Default for FeatureExtractor {
             packing_scale: 256.0,
             concurrency_scale: 8.0,
             last: None,
+            sanitized: 0,
         }
     }
 }
@@ -101,7 +105,7 @@ impl FeatureExtractor {
         } else {
             queue_frac
         };
-        Some([
+        let mut x = [
             queue,
             squash(d.prefill_tokens as f64 / d.dt_s, self.prefill_tps_scale),
             squash(d.decode_tokens as f64 / d.dt_s, self.decode_tps_scale),
@@ -109,7 +113,22 @@ impl FeatureExtractor {
             squash(snap.requests_running as f64, self.concurrency_scale),
             snap.kv_usage.clamp(0.0, 1.0),
             hit_rate.clamp(0.0, 1.0),
-        ])
+        ];
+        // Sanitize: corrupted telemetry (NaN/Inf snapshot fields) maps
+        // to the neutral 0.0 instead of poisoning the design matrix.
+        // Finite components pass through bitwise-untouched.
+        for v in x.iter_mut() {
+            if !v.is_finite() {
+                *v = 0.0;
+                self.sanitized += 1;
+            }
+        }
+        Some(x)
+    }
+
+    /// Non-finite feature components zeroed so far.
+    pub fn sanitized(&self) -> u64 {
+        self.sanitized
     }
 
     /// Reset the delta base (e.g. across experiment phases).
@@ -242,6 +261,38 @@ mod tests {
         for (va, vb) in xa.iter().zip(&xb) {
             assert_eq!(va.to_bits(), vb.to_bits());
         }
+    }
+
+    #[test]
+    fn nonfinite_snapshot_fields_are_sanitized_to_zero() {
+        let mut fx = FeatureExtractor::new();
+        fx.observe(&snap(0.0));
+        let x = fx
+            .observe(&MetricsSnapshot {
+                time_s: 0.8,
+                prefill_tokens_total: 900,
+                requests_running: 3,
+                kv_usage: f64::NAN,
+                queue_time_s_total: f64::NAN,
+                ..Default::default()
+            })
+            .unwrap();
+        for (i, v) in x.iter().enumerate() {
+            assert!(v.is_finite(), "x{} not finite", i + 1);
+            assert!((0.0..=1.0).contains(v));
+        }
+        assert_eq!(x[5], 0.0, "NaN kv_usage → neutral 0");
+        assert!(fx.sanitized() >= 1);
+        // Clean windows sanitize nothing further.
+        let before = fx.sanitized();
+        fx.observe(&MetricsSnapshot {
+            time_s: 1.6,
+            prefill_tokens_total: 1_800,
+            requests_running: 3,
+            kv_usage: 0.4,
+            ..Default::default()
+        });
+        assert_eq!(fx.sanitized(), before);
     }
 
     #[test]

@@ -79,6 +79,9 @@ impl Governor for AgftGovernor {
             pruned_cascade: t.prune_total.cascade.len(),
             refinements: t.refine_log.len(),
             ph_alarms: t.ph_alarms(),
+            ph_resets: t.ph_resets(),
+            nonfinite_skipped: t.nonfinite_skipped(),
+            ..TunerTelemetry::default()
         })
     }
 }

@@ -46,7 +46,7 @@ pub struct ClockDecision {
 
 /// End-of-run governor telemetry (historically the AGFT tuner's; the
 /// learning-free fields stay empty for rule-based policies).
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct TunerTelemetry {
     pub reward_log: Vec<(u64, f64)>,
     pub freq_log: Vec<(u64, u32)>,
@@ -56,6 +56,28 @@ pub struct TunerTelemetry {
     pub pruned_cascade: usize,
     pub refinements: usize,
     pub ph_alarms: u64,
+    /// Page-Hinkley statistic resets (alarms + explicit resets).
+    pub ph_resets: u64,
+    /// Non-finite inputs the tuner layer sanitized or skipped
+    /// (feature components zeroed + LinUCB updates dropped).
+    pub nonfinite_skipped: u64,
+    /// Faults the [`crate::faults`] injector actually injected
+    /// (injection-side ledger; 0 on fault-free runs).
+    pub faults_injected: u64,
+    /// Telemetry faults seen at the driver's observation filter.
+    pub telemetry_faults: u64,
+    /// Windows withheld from the governor (sanitize-and-hold).
+    pub sanitized_windows: u64,
+    /// Clock-write faults seen at the actuator.
+    pub clock_faults: u64,
+    /// Retry attempts after rejected clock writes.
+    pub clock_retries: u64,
+    /// Clock writes that stayed rejected after all retries.
+    pub clock_write_failures: u64,
+    /// Watchdog fallbacks to the safe frequency.
+    pub watchdog_fallbacks: u64,
+    /// Scheduled GPU-level fault events handled.
+    pub gpu_faults: u64,
 }
 
 /// One pluggable clock policy driven on the window cadence.

@@ -212,6 +212,10 @@ fn mat_vec(m: &[[f64; D]; D], x: &[f64; D]) -> [f64; D] {
 pub struct LinUcb {
     ridge: f64,
     arms: Vec<(u32, ArmModel)>,
+    /// Updates dropped because the reward or a context component was
+    /// non-finite (a single NaN would otherwise poison θ and A⁻¹ of an
+    /// arm permanently through the Sherman-Morrison recursion).
+    skipped: u64,
 }
 
 impl LinUcb {
@@ -220,6 +224,7 @@ impl LinUcb {
         LinUcb {
             ridge,
             arms: Vec::new(),
+            skipped: 0,
         }
     }
 
@@ -290,9 +295,21 @@ impl LinUcb {
         self.arm_mut(freq);
     }
 
-    /// Eqs. 3–5.
+    /// Eqs. 3–5. Non-finite rewards or context components skip the
+    /// update entirely (counted in [`Self::nonfinite_skipped`]): the
+    /// arm's revision counter stays put, so downstream export caches
+    /// keyed on it stay coherent, and θ/A⁻¹ stay finite.
     pub fn update(&mut self, freq: u32, x: &ContextVector, reward: f64) {
+        if !reward.is_finite() || x.iter().any(|v| !v.is_finite()) {
+            self.skipped += 1;
+            return;
+        }
         self.arm_mut(freq).update(x, reward);
+    }
+
+    /// Updates dropped on non-finite input.
+    pub fn nonfinite_skipped(&self) -> u64 {
+        self.skipped
     }
 
     pub fn arm_count(&self) -> usize {
@@ -343,6 +360,42 @@ mod tests {
             let got = ucb.arm(900).unwrap().predict(&x);
             assert!((got - want).abs() < 0.02, "got {got} want {want}");
         }
+    }
+
+    #[test]
+    fn nonfinite_updates_leave_theta_and_ainv_untouched() {
+        let mut ucb = LinUcb::new(1.0);
+        let mut rng = Pcg64::new(13);
+        for _ in 0..40 {
+            let x = ctx(&mut rng);
+            ucb.update(1200, &x, 0.5 * x[0] - x[3]);
+        }
+        let before = ucb.arm(1200).unwrap().clone();
+
+        // A NaN reward, then a NaN context component: both skipped.
+        ucb.update(1200, &ctx(&mut rng), f64::NAN);
+        let mut poisoned = ctx(&mut rng);
+        poisoned[2] = f64::INFINITY;
+        ucb.update(1200, &poisoned, 0.1);
+        assert_eq!(ucb.nonfinite_skipped(), 2);
+
+        let after = ucb.arm(1200).unwrap();
+        assert_eq!(after.n, before.n, "skips must not bump the revision");
+        for i in 0..D {
+            assert!(after.theta[i].is_finite());
+            assert_eq!(after.theta[i].to_bits(), before.theta[i].to_bits());
+            for j in 0..D {
+                assert!(after.a_inv[i][j].is_finite());
+                assert_eq!(
+                    after.a_inv[i][j].to_bits(),
+                    before.a_inv[i][j].to_bits()
+                );
+            }
+        }
+        // The model keeps learning from clean samples afterwards.
+        let x = ctx(&mut rng);
+        ucb.update(1200, &x, 0.2);
+        assert_eq!(ucb.arm(1200).unwrap().n, before.n + 1);
     }
 
     #[test]

@@ -23,6 +23,10 @@ pub struct PageHinkley {
     m_dn_max: f64,
     alarms: u64,
     rounds_since_alarm: u64,
+    /// Statistic resets (alarm-triggered + explicit [`Self::reset`]).
+    resets: u64,
+    /// Non-finite samples ignored instead of corrupting the statistics.
+    skipped: u64,
 }
 
 impl PageHinkley {
@@ -39,12 +43,20 @@ impl PageHinkley {
             m_dn_max: 0.0,
             alarms: 0,
             rounds_since_alarm: 0,
+            resets: 0,
+            skipped: 0,
         }
     }
 
     /// Feed one sample; returns true if a change alarm fires (the
-    /// detector state resets on alarm).
+    /// detector state resets on alarm). Non-finite samples are ignored
+    /// (counted in [`Self::skipped_nonfinite`]) — a single NaN would
+    /// otherwise poison `mean` and both cumulative statistics forever.
     pub fn add(&mut self, x: f64) -> bool {
+        if !x.is_finite() {
+            self.skipped += 1;
+            return false;
+        }
         self.n += 1;
         self.mean += (x - self.mean) / self.n as f64;
         // Upward shift statistic.
@@ -68,6 +80,7 @@ impl PageHinkley {
     }
 
     fn reset_statistics(&mut self) {
+        self.resets += 1;
         self.n = 0;
         self.mean = 0.0;
         self.m_up = 0.0;
@@ -90,6 +103,17 @@ impl PageHinkley {
 
     pub fn alarms(&self) -> u64 {
         self.alarms
+    }
+
+    /// Statistic resets so far (each alarm resets once; explicit
+    /// [`Self::reset`] calls also count).
+    pub fn resets(&self) -> u64 {
+        self.resets
+    }
+
+    /// Non-finite samples ignored by [`Self::add`].
+    pub fn skipped_nonfinite(&self) -> u64 {
+        self.skipped
     }
 }
 
@@ -160,6 +184,48 @@ mod tests {
         }
         assert!(fired);
         assert!(ph.rounds_since_alarm() < 5);
+    }
+
+    #[test]
+    fn nan_samples_never_fire_a_spurious_reset() {
+        let mut ph = PageHinkley::new(0.02, 2.5);
+        let mut rng = Pcg64::new(3);
+        for _ in 0..200 {
+            assert!(!ph.add(-1.0 + 0.05 * rng.normal()));
+        }
+        let rounds = ph.rounds_since_alarm();
+        // A burst of non-finite samples: ignored, not integrated.
+        for _ in 0..50 {
+            assert!(!ph.add(f64::NAN));
+            assert!(!ph.add(f64::INFINITY));
+            assert!(!ph.add(f64::NEG_INFINITY));
+        }
+        assert_eq!(ph.alarms(), 0);
+        assert_eq!(ph.resets(), 0, "NaN stream fired a drift reset");
+        assert_eq!(ph.skipped_nonfinite(), 150);
+        assert_eq!(ph.rounds_since_alarm(), rounds, "skips don't count");
+        // The detector still works on clean samples afterwards.
+        for _ in 0..300 {
+            assert!(!ph.add(-1.0 + 0.05 * rng.normal()));
+        }
+        let mut fired = false;
+        for _ in 0..100 {
+            if ph.add(-0.3 + 0.05 * rng.normal()) {
+                fired = true;
+                break;
+            }
+        }
+        assert!(fired, "detector dead after NaN burst");
+        assert_eq!(ph.resets(), 1);
+    }
+
+    #[test]
+    fn explicit_reset_counts_as_reset() {
+        let mut ph = PageHinkley::new(0.02, 2.5);
+        ph.add(1.0);
+        ph.reset();
+        assert_eq!(ph.resets(), 1);
+        assert_eq!(ph.alarms(), 0);
     }
 
     #[test]

@@ -36,7 +36,7 @@ pub enum TunerPhase {
 }
 
 /// One sampling window's worth of monitor data.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct WindowObservation {
     /// Engine metric scrape at the window end.
     pub snapshot: MetricsSnapshot,
@@ -189,6 +189,20 @@ impl AgftTuner {
     /// Page-Hinkley alarms fired so far (telemetry).
     pub fn ph_alarms(&self) -> u64 {
         self.ph.alarms()
+    }
+
+    /// Page-Hinkley statistic resets so far (telemetry).
+    pub fn ph_resets(&self) -> u64 {
+        self.ph.resets()
+    }
+
+    /// Non-finite inputs the tuner layer refused to learn from:
+    /// sanitized feature components, skipped LinUCB updates, and
+    /// ignored Page-Hinkley samples (telemetry).
+    pub fn nonfinite_skipped(&self) -> u64 {
+        self.features.sanitized()
+            + self.linucb.nonfinite_skipped()
+            + self.ph.skipped_nonfinite()
     }
 
     /// Rolling reward statistics (mean, std) over the last 40 rewards.

@@ -1,0 +1,252 @@
+//! Chaos property suite for the fault-injection subsystem.
+//!
+//! Randomized (but fully deterministic — schedules derive from
+//! [`Pcg64`]) fault configurations crossed with every governor and
+//! every routing policy must never panic, must keep simulated time
+//! monotone, must run to completion, and must balance the two fault
+//! ledgers exactly: every fault the injector *injected* is also
+//! *observed* by exactly one control-plane handler
+//! (`faults_injected == telemetry_faults + clock_faults + gpu_faults`).
+//!
+//! A forced-but-silent fault configuration (probabilities all zero, one
+//! event scheduled past the horizon) must additionally be **bitwise**
+//! identical to the fault-free path — the engine-inertness half of the
+//! subsystem's contract, held end-to-end here rather than only at the
+//! injector unit level.
+
+use std::sync::Arc;
+
+use agft::config::{ExperimentConfig, GovernorKind, WorkloadKind};
+use agft::cluster::{run_cluster, ClusterSpec, RoutePolicy};
+use agft::experiment::harness::RunResult;
+use agft::experiment::GovernorDriver;
+use agft::faults::{FaultsConfig, GpuFaultEvent, GpuFaultKind};
+use agft::server::Request;
+use agft::tuner::governors::TunerTelemetry;
+use agft::util::Pcg64;
+use agft::workload;
+
+fn base_cfg(governor: GovernorKind) -> ExperimentConfig {
+    ExperimentConfig {
+        governor,
+        duration_s: 24.0,
+        arrival_rps: 2.0,
+        workload: WorkloadKind::Prototype("normal".to_string()),
+        ..ExperimentConfig::default()
+    }
+}
+
+fn realize(cfg: &ExperimentConfig) -> Arc<[Request]> {
+    workload::realize(
+        &cfg.workload,
+        cfg.arrival_rps,
+        cfg.duration_s,
+        cfg.seed,
+    )
+    .unwrap()
+    .into()
+}
+
+/// A randomized fault schedule: every probability drawn in [0, 0.3),
+/// plus (sometimes) a transient reset and a thermal ceiling, and
+/// (sometimes) one permanent death.
+fn chaos_faults(rng: &mut Pcg64, gpus: usize) -> FaultsConfig {
+    let mut f = FaultsConfig {
+        clock_reject_p: 0.3 * rng.f64(),
+        clock_clamp_p: 0.3 * rng.f64(),
+        clock_delay_p: 0.3 * rng.f64(),
+        telemetry_nan_p: 0.3 * rng.f64(),
+        telemetry_stale_p: 0.3 * rng.f64(),
+        telemetry_drop_p: 0.3 * rng.f64(),
+        ..FaultsConfig::default()
+    };
+    if rng.f64() < 0.5 {
+        f.events.push(GpuFaultEvent {
+            gpu: rng.index(gpus),
+            t_s: 4.0 + 8.0 * rng.f64(),
+            kind: GpuFaultKind::Reset { warmup_s: 1.5 },
+        });
+    }
+    if rng.f64() < 0.5 {
+        f.events.push(GpuFaultEvent {
+            gpu: rng.index(gpus),
+            t_s: 4.0 + 8.0 * rng.f64(),
+            kind: GpuFaultKind::ThermalCeiling { mhz: 900 },
+        });
+    }
+    if rng.f64() < 0.3 {
+        f.events.push(GpuFaultEvent {
+            gpu: rng.index(gpus),
+            t_s: 10.0 + 6.0 * rng.f64(),
+            kind: GpuFaultKind::Death,
+        });
+    }
+    f.events.sort_by(|a, b| a.t_s.total_cmp(&b.t_s));
+    f.validate().expect("chaos schedule must be valid");
+    f
+}
+
+/// The invariants every faulted run must keep, regardless of schedule.
+fn check_run(label: &str, r: &RunResult) {
+    assert!(
+        !r.windows.is_empty(),
+        "{label}: run recorded no windows"
+    );
+    let mut prev = 0.0f64;
+    for w in &r.windows {
+        assert!(
+            w.t_s.is_finite() && w.t_s >= prev,
+            "{label}: time went backwards ({prev} -> {})",
+            w.t_s
+        );
+        prev = w.t_s;
+        assert!(
+            w.energy_j.is_finite() && w.energy_j >= 0.0,
+            "{label}: window energy {}",
+            w.energy_j
+        );
+    }
+    assert!(r.total_energy_j.is_finite() && r.total_energy_j >= 0.0);
+    let tel = r
+        .tuner
+        .as_ref()
+        .expect("fault runs always carry telemetry");
+    check_ledgers(label, tel);
+}
+
+/// Injected-vs-observed ledger balance: every fault drawn by the
+/// injector was seen by exactly one control-plane handler.
+fn check_ledgers(label: &str, tel: &TunerTelemetry) {
+    assert_eq!(
+        tel.faults_injected,
+        tel.telemetry_faults + tel.clock_faults + tel.gpu_faults,
+        "{label}: fault ledgers diverged: {tel:?}"
+    );
+}
+
+fn governors() -> [GovernorKind; 5] {
+    [
+        GovernorKind::Agft,
+        GovernorKind::Ondemand,
+        GovernorKind::SloAware,
+        GovernorKind::SwitchingBandit,
+        GovernorKind::Locked(1230),
+    ]
+}
+
+#[test]
+fn chaos_schedules_never_break_any_governor() {
+    let mut rng = Pcg64::new(0xC4A05);
+    for (i, governor) in governors().into_iter().enumerate() {
+        let mut cfg = base_cfg(governor);
+        cfg.seed = 42 + i as u64;
+        cfg.faults = chaos_faults(&mut rng, 1);
+        let reqs = realize(&cfg);
+        let r = GovernorDriver::run(&cfg, reqs).unwrap();
+        check_run(&format!("governor {governor:?}"), &r);
+    }
+}
+
+#[test]
+fn chaos_schedules_never_break_any_routing_policy() {
+    let mut rng = Pcg64::new(0xC4A06);
+    for (i, route) in RoutePolicy::all().into_iter().enumerate() {
+        for gpus in [2usize, 8] {
+            let mut cfg = base_cfg(GovernorKind::Agft);
+            cfg.seed = 7 + i as u64;
+            cfg.arrival_rps = 4.0;
+            cfg.faults = chaos_faults(&mut rng, gpus);
+            let spec = ClusterSpec {
+                gpus,
+                route,
+                power_cap_w: None,
+            };
+            let reqs = realize(&cfg);
+            let r = run_cluster(&cfg, &spec, reqs).unwrap();
+            let label = format!("route {:?} x {gpus} GPUs", route);
+            assert_eq!(r.per_gpu.len(), gpus);
+            assert_eq!(r.alive.len(), gpus);
+            let deaths = cfg
+                .faults
+                .events
+                .iter()
+                .filter(|e| {
+                    e.gpu < gpus && e.kind == GpuFaultKind::Death
+                })
+                .count();
+            assert!(
+                r.survivors() + deaths >= gpus,
+                "{label}: more GPUs died than deaths scheduled"
+            );
+            for (gpu, g) in r.per_gpu.iter().enumerate() {
+                check_run(&format!("{label} gpu{gpu}"), g);
+            }
+        }
+    }
+}
+
+#[test]
+fn chaos_under_a_power_cap_keeps_the_coordinator_sane() {
+    let mut rng = Pcg64::new(0xC4A07);
+    let mut cfg = base_cfg(GovernorKind::Agft);
+    cfg.arrival_rps = 4.0;
+    let mut faults = chaos_faults(&mut rng, 4);
+    faults.events.push(GpuFaultEvent {
+        gpu: 1,
+        t_s: 8.0,
+        kind: GpuFaultKind::Death,
+    });
+    faults.events.sort_by(|a, b| a.t_s.total_cmp(&b.t_s));
+    cfg.faults = faults;
+    let spec = ClusterSpec {
+        gpus: 4,
+        route: RoutePolicy::LeastLoaded,
+        power_cap_w: Some(700.0),
+    };
+    let reqs = realize(&cfg);
+    let r = run_cluster(&cfg, &spec, reqs).unwrap();
+    assert!(!r.alive[1], "scheduled death did not land");
+    let cap = r.cap.as_ref().unwrap();
+    assert!(cap.retired_gpus >= 1, "{cap:?}");
+    assert!(cap.rounds > 0);
+    for (gpu, g) in r.per_gpu.iter().enumerate() {
+        check_run(&format!("capped gpu{gpu}"), g);
+    }
+}
+
+#[test]
+fn silent_fault_config_is_bitwise_identical_to_fault_free() {
+    // All probabilities zero, one event far past the horizon: the
+    // fault machinery is exercised end-to-end (plane constructed,
+    // every window filtered, every decision actuated through it) yet
+    // must reproduce the fault-free run bit for bit.
+    for governor in governors() {
+        let clean = base_cfg(governor);
+        let mut forced = clean.clone();
+        forced.faults.events.push(GpuFaultEvent {
+            gpu: 0,
+            t_s: 1.0e9,
+            kind: GpuFaultKind::Death,
+        });
+        assert!(clean.faults.is_inert());
+        assert!(!forced.faults.is_inert());
+        let a = GovernorDriver::run(&clean, realize(&clean)).unwrap();
+        let b = GovernorDriver::run(&forced, realize(&forced)).unwrap();
+        assert_eq!(a.windows.len(), b.windows.len());
+        for (wa, wb) in a.windows.iter().zip(&b.windows) {
+            assert_eq!(wa.t_s.to_bits(), wb.t_s.to_bits());
+            assert_eq!(wa.energy_j.to_bits(), wb.energy_j.to_bits());
+            assert_eq!(wa.clock_mhz, wb.clock_mhz);
+            assert_eq!(wa.tokens, wb.tokens);
+        }
+        assert_eq!(
+            a.total_energy_j.to_bits(),
+            b.total_energy_j.to_bits(),
+            "{governor:?} drifted under a silent fault config"
+        );
+        assert_eq!(a.clock_changes, b.clock_changes);
+        let tel = b.tuner.as_ref().unwrap();
+        assert_eq!(tel.faults_injected, 0, "{tel:?}");
+        check_ledgers("silent", tel);
+    }
+}

@@ -11,7 +11,7 @@ use agft::config::{ExperimentConfig, GovernorKind, WorkloadKind};
 use agft::experiment::executor::Executor;
 use agft::experiment::orchestrator::{
     index_grid, legs_results_csv, merge_grid_csv, run_legs, shard_grid,
-    supervise, ShardJob,
+    supervise, supervise_with, ShardJob, SuperviseOpts,
 };
 use agft::experiment::phases::{governor_seed_grid, run_governors_seeded};
 
@@ -123,6 +123,83 @@ fn supervisor_gives_up_after_second_failure() {
     let err = supervise(&[job], 1).unwrap_err();
     assert!(err.contains("failed"), "{err}");
     assert!(err.contains("shard 1"), "{err}");
+}
+
+#[cfg(unix)]
+#[test]
+fn supervisor_kills_a_hung_shard_and_retries_within_the_timeout() {
+    use std::time::{Duration, Instant};
+    // First attempt hangs (sleep far past the timeout); the supervisor
+    // must kill it, back off, and let the second attempt — which finds
+    // the marker and skips the sleep — write the CSV.
+    let scratch = Scratch::new("timeout");
+    let marker = scratch.path("attempted");
+    let out = scratch.path("shard1.csv");
+    let script = format!(
+        "if [ ! -e {m} ]; then : > {m}; sleep 600; fi; \
+         printf 'leg,v\\n0,1\\n' > {o}",
+        m = marker.display(),
+        o = out.display(),
+    );
+    let job = ShardJob {
+        k: 1,
+        argv: vec!["sh".to_string(), "-c".to_string(), script],
+        out: out.clone(),
+    };
+    let started = Instant::now();
+    let texts = supervise_with(
+        std::slice::from_ref(&job),
+        1,
+        SuperviseOpts {
+            timeout: Some(Duration::from_millis(600)),
+            backoff: Duration::from_millis(50),
+            max_attempts: 2,
+        },
+    )
+    .unwrap();
+    assert_eq!(texts, vec!["leg,v\n0,1\n".to_string()]);
+    assert!(marker.exists(), "first attempt must have run (and hung)");
+    let elapsed = started.elapsed();
+    assert!(
+        elapsed < Duration::from_secs(60),
+        "hung child was awaited, not killed: {elapsed:?}"
+    );
+}
+
+#[cfg(unix)]
+#[test]
+fn supervisor_backs_off_exponentially_between_retries() {
+    use std::time::{Duration, Instant};
+    // A shard that always fails, 3 attempts, 200 ms base backoff: the
+    // retry delays are 200 ms + 400 ms, so the run cannot finish in
+    // under ~600 ms even though each attempt exits instantly.
+    let scratch = Scratch::new("backoff");
+    let job = ShardJob {
+        k: 1,
+        argv: vec![
+            "sh".to_string(),
+            "-c".to_string(),
+            "exit 3".to_string(),
+        ],
+        out: scratch.path("never-written.csv"),
+    };
+    let started = Instant::now();
+    let err = supervise_with(
+        &[job],
+        1,
+        SuperviseOpts {
+            timeout: None,
+            backoff: Duration::from_millis(200),
+            max_attempts: 3,
+        },
+    )
+    .unwrap_err();
+    assert!(err.contains("shard 1"), "{err}");
+    assert!(
+        started.elapsed() >= Duration::from_millis(600),
+        "retries were not backed off: {:?}",
+        started.elapsed()
+    );
 }
 
 #[cfg(unix)]
