@@ -22,6 +22,10 @@
 //!   GPUs: the global next-event heap must replay the identical
 //!   cluster (bitwise per-engine timelines) in strictly fewer engine
 //!   polls than the naive round-robin-tick reference sweep.
+//! * `thermal jetson replay` — the jetson device profile under
+//!   sustained load in both thermal modes: the off leg must record no
+//!   temperatures or throttles, the on leg must trip the RC model and
+//!   throttle (counters land in the JSON's `thermal_jetson` block).
 //! * `hlo scorer` — the PJRT-executed Pallas kernel per decision (only
 //!   when `artifacts/` is built).
 //!
@@ -43,6 +47,7 @@ use agft::config::{ExperimentConfig, GovernorKind, TunerConfig, WorkloadKind};
 use agft::experiment::executor::Executor;
 use agft::experiment::phases::run_grid;
 use agft::experiment::sweep::edp_sweep_with;
+use agft::experiment::GovernorDriver;
 use agft::gpu::FreqTable;
 use agft::server::{Engine, Request};
 use agft::tuner::tuner::{AgftTuner, WindowObservation};
@@ -437,6 +442,57 @@ fn main() {
     let cluster_n64 = cluster_hotpath(64, 96);
     let cluster_n256 = cluster_hotpath(256, 384);
 
+    // --- device profile + RC thermal throttle replay ---
+    // The jetson-class board under sustained load, end to end through
+    // the governor driver: the RC die model must cross the trip point,
+    // walk the ceiling down, and land throttle telemetry in the window
+    // records — while the thermal-off leg of the identical workload
+    // holds the contract (no temps, no throttled windows).
+    let (th_windows, th_throttled, th_peak_c) = {
+        let mut cfg = ExperimentConfig {
+            duration_s: 240.0,
+            arrival_rps: 3.0,
+            governor: GovernorKind::Locked(1305),
+            workload: WorkloadKind::Prototype("normal".to_string()),
+            ..ExperimentConfig::default()
+        };
+        agft::gpu::apply_profile(&mut cfg, "jetson").unwrap();
+        // Shrink the thermal mass and trip band so the 240 s replay
+        // crosses the trip point well inside the horizon (the stock
+        // jetson τ ≈ 3.5 min trips too late for a smoke-sized run).
+        cfg.thermal.c_j_per_c = 60.0;
+        cfg.thermal.trip_c = 55.0;
+        cfg.thermal.clear_c = 48.0;
+        let requests: Arc<[Request]> = workload::realize(
+            &cfg.workload,
+            cfg.arrival_rps,
+            cfg.duration_s,
+            cfg.seed,
+        )
+        .unwrap()
+        .into();
+        let cold =
+            GovernorDriver::run(&cfg, Arc::clone(&requests)).unwrap();
+        assert_eq!(cold.throttle_windows(), 0);
+        assert!(cold.windows.iter().all(|w| w.temp_c.is_none()));
+        cfg.thermal.enabled = true;
+        let hot = GovernorDriver::run(&cfg, requests).unwrap();
+        let throttled = hot.throttle_windows();
+        let peak = hot.peak_temp_c().unwrap_or(f64::NAN);
+        assert!(
+            throttled > 0,
+            "jetson replay never throttled (peak {peak:.1} C)"
+        );
+        assert!(peak >= cfg.thermal.trip_c);
+        println!(
+            "thermal jetson 240 s replay       {throttled:>5} of {} \
+             windows throttled | peak {peak:5.1} C (trip {} C)",
+            hot.windows.len(),
+            cfg.thermal.trip_c
+        );
+        (hot.windows.len() as u64, throttled as u64, peak)
+    };
+
     // --- the same A/B end to end through run_grid + edp_sweep ---
     if std::env::var("AGFT_SKIP_SWEEP_BENCH").is_err() {
         let mut base = ExperimentConfig {
@@ -558,15 +614,20 @@ fn main() {
     sd.set("span_steps", sd_span_steps)
         .set("per_step_steps", sd_per_step_steps)
         .set("decode_spans", sd_decode_spans);
+    let mut th = Json::obj();
+    th.set("windows", th_windows)
+        .set("throttled_windows", th_throttled)
+        .set("peak_temp_c", th_peak_c);
     let mut counters = Json::obj();
     counters
         .set("kv_pressure", kv)
         .set("steady_decode", sd)
         .set("cluster_n64", cluster_n64)
-        .set("cluster_n256", cluster_n256);
+        .set("cluster_n256", cluster_n256)
+        .set("thermal_jetson", th);
     let mut doc = Json::obj();
     doc.set("bench", "perf_hotpath")
-        .set("schema", 6u64)
+        .set("schema", 7u64)
         .set("ns_per_op", ns_per_op)
         .set("counters", counters);
     emit_bench_json(&doc);

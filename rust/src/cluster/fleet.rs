@@ -127,6 +127,25 @@ impl ClusterResult {
         sum / n as f64
     }
 
+    /// Peak die temperature across the fleet (°C); `None` when no GPU
+    /// ran with the thermal model enabled.
+    pub fn fleet_peak_temp_c(&self) -> Option<f64> {
+        self.per_gpu
+            .iter()
+            .filter_map(|r| r.peak_temp_c())
+            .fold(None, |acc, t| {
+                Some(match acc {
+                    Some(a) if a >= t => a,
+                    _ => t,
+                })
+            })
+    }
+
+    /// Windows recorded under an active thermal throttle, fleet-wide.
+    pub fn fleet_throttle_windows(&self) -> usize {
+        self.per_gpu.iter().map(|r| r.throttle_windows()).sum()
+    }
+
     /// Peak fleet average power over aligned window indices: for each
     /// window index k, sum `energy_j / dt` across the GPUs that
     /// recorded a window k, and take the maximum over k. This is the
@@ -238,9 +257,27 @@ impl<'a> Fleet<'a> {
         let mut engines = Vec::with_capacity(spec.gpus);
         let mut slots = Vec::with_capacity(spec.gpus);
         for i in 0..spec.gpus {
-            let mut engine = Engine::try_with_shared(cfg, empty.clone())?;
+            // Heterogeneous fleets: `[gpu] profiles` / `--profiles`
+            // cycles device profiles across fleet indices. Each GPU's
+            // engine *and* governor are built from its own profiled
+            // config (table bounds, power model, thermal parameters);
+            // an empty list keeps today's homogeneous path untouched.
+            let profiled;
+            let gpu_cfg: &ExperimentConfig = if cfg.gpu_profiles.is_empty()
+            {
+                cfg
+            } else {
+                let name =
+                    &cfg.gpu_profiles[i % cfg.gpu_profiles.len()];
+                let mut c = cfg.clone();
+                crate::gpu::apply_profile(&mut c, name)?;
+                profiled = c;
+                &profiled
+            };
+            let mut engine =
+                Engine::try_with_shared(gpu_cfg, empty.clone())?;
             engine.open_feed();
-            let governor = governors::build(cfg);
+            let governor = governors::build(gpu_cfg);
             if let Some(mhz) = governor.initial_clock_mhz() {
                 match planes.as_mut() {
                     None => {
@@ -325,6 +362,12 @@ impl<'a> Fleet<'a> {
         let clock_before = self.engines[i].gpu.effective_mhz(true);
         let alive = self.engines[i].run_until(t_next);
         self.polls += 1;
+        if self.engines[i].thermal_enabled() {
+            // Same boundary sequencing as the standalone driver:
+            // integrate the open idle span, then let the hysteretic
+            // throttle move before the governor observes the window.
+            self.engines[i].thermal_window_boundary();
+        }
 
         let slot = &mut self.slots[i];
         let mut done = match self.planes.as_mut() {
@@ -707,6 +750,57 @@ mod tests {
                 assert_eq!(wa.clock_mhz, wb.clock_mhz);
             }
             assert_eq!(a.tuner, b.tuner);
+        }
+    }
+
+    #[test]
+    fn heterogeneous_thermal_fleet_cycles_profiles_and_reports_temps() {
+        let mut cfg = base_cfg();
+        cfg.gpu_profiles =
+            vec!["a100".to_string(), "jetson".to_string()];
+        cfg.thermal.enabled = true;
+        let spec = ClusterSpec {
+            gpus: 4,
+            route: RoutePolicy::RoundRobin,
+            power_cap_w: None,
+        };
+        let reqs = staggered_stream(24);
+        let heap = run_cluster(&cfg, &spec, reqs.clone()).unwrap();
+        let naive =
+            run_cluster_reference(&cfg, &spec, reqs).unwrap();
+
+        // Thermal on → every window carries a die temperature, and the
+        // fleet peak sits above the coolest profile's ambient.
+        for g in &heap.per_gpu {
+            assert!(g.windows.iter().all(|w| w.temp_c.is_some()));
+        }
+        let peak = heap.fleet_peak_temp_c().expect("thermal enabled");
+        assert!(peak > 30.0, "peak {peak}");
+
+        // Profiles cycle a100, jetson, a100, jetson: each engine's
+        // recorded clocks stay on its own class's table.
+        for (i, g) in heap.per_gpu.iter().enumerate() {
+            let cap = if i % 2 == 0 { 1410 } else { 1305 };
+            assert!(
+                g.windows.iter().all(|w| w.clock_mhz <= cap),
+                "gpu {i} ran past its class ceiling"
+            );
+        }
+
+        // The heap/reference bitwise contract survives heterogeneous
+        // profiles with the thermal model live.
+        for (a, b) in heap.per_gpu.iter().zip(&naive.per_gpu) {
+            assert_eq!(a.windows.len(), b.windows.len());
+            for (wa, wb) in a.windows.iter().zip(&b.windows) {
+                assert_eq!(wa.t_s.to_bits(), wb.t_s.to_bits());
+                assert_eq!(wa.energy_j.to_bits(), wb.energy_j.to_bits());
+                assert_eq!(wa.clock_mhz, wb.clock_mhz);
+                assert_eq!(
+                    wa.temp_c.map(f64::to_bits),
+                    wb.temp_c.map(f64::to_bits)
+                );
+                assert_eq!(wa.throttle_mhz, wb.throttle_mhz);
+            }
         }
     }
 

@@ -10,8 +10,9 @@
 //!    window ran at.
 //! 2. **Project** — the measurement is rescaled onto the clock the
 //!    GPU's governor just locked for the next window
-//!    ([`PowerModel::rescale_w`]): governor decisions are respected
-//!    first, the cap only overrides them when the fleet would not fit.
+//!    ([`crate::gpu::PowerModel::rescale_w`]): governor decisions are
+//!    respected first, the cap only overrides them when the fleet
+//!    would not fit.
 //! 3. **Redistribute** — if the projected fleet demand exceeds the
 //!    cap, every GPU keeps its idle floor and the dynamic headroom
 //!    above it is scaled by the common factor that brings the fleet
@@ -32,7 +33,6 @@
 //! behaves.
 
 use crate::config::{ExperimentConfig, GovernorKind};
-use crate::gpu::{FreqTable, PowerModel};
 use crate::server::Engine;
 
 /// One live GPU's input to a negotiation round.
@@ -65,30 +65,32 @@ pub struct CapTelemetry {
 }
 
 /// The fleet power-budget coordinator.
+///
+/// Holds **no** device model of its own: every projection and clamp
+/// consults the target GPU's embedded [`crate::gpu::PowerModel`] and
+/// [`crate::gpu::FreqTable`] through its engine. A fleet-wide cached
+/// model would silently
+/// misprice heterogeneous fleets (a Jetson measured against an A100's
+/// coefficients) and — the subtler bug — scan candidate clocks past a
+/// thermally throttled GPU's ceiling, "lowering" it to a clock the
+/// device cannot actually run, while the budget ledger books the
+/// un-runnable projection as fitting.
 pub struct PowerCapCoordinator {
     cap_w: f64,
-    model: PowerModel,
-    /// Table frequencies, ascending (cached so a negotiation round
-    /// allocates nothing).
-    freqs: Vec<u32>,
-    min_mhz: u32,
-    /// Reusable projection scratch: (gpu, projected W, next clock MHz).
-    scratch: Vec<(usize, f64, u32)>,
+    /// Reusable projection scratch:
+    /// (gpu, projected W, next clock MHz, idle floor W).
+    scratch: Vec<(usize, f64, u32, f64)>,
     telemetry: CapTelemetry,
 }
 
 impl PowerCapCoordinator {
-    pub fn new(cfg: &ExperimentConfig, cap_w: f64) -> PowerCapCoordinator {
+    pub fn new(_cfg: &ExperimentConfig, cap_w: f64) -> PowerCapCoordinator {
         assert!(
             cap_w.is_finite() && cap_w > 0.0,
             "power cap must be positive, got {cap_w}"
         );
-        let table = FreqTable::from_config(&cfg.gpu);
         PowerCapCoordinator {
             cap_w,
-            model: PowerModel::new(&cfg.gpu),
-            freqs: table.all(),
-            min_mhz: table.min_mhz(),
             scratch: Vec::new(),
             telemetry: CapTelemetry::default(),
         }
@@ -121,19 +123,26 @@ impl PowerCapCoordinator {
         self.telemetry.rounds += 1;
 
         // Project each live GPU's next-window demand onto the clock its
-        // governor just locked.
+        // governor just locked, through *that GPU's own* power model —
+        // `effective_mhz` is already ceiling-clamped, so a thermally
+        // throttled (or fault-capped) GPU is priced at the clock it
+        // will actually run, not the one its governor asked for.
         let mut scratch = std::mem::take(&mut self.scratch);
         scratch.clear();
         let mut demand_w = 0.0;
+        let mut idle_total = 0.0;
         for inp in live {
-            let f_next = engines[inp.gpu].gpu.effective_mhz(true);
-            let p = self.model.rescale_w(
+            let gpu = &engines[inp.gpu].gpu;
+            let f_next = gpu.effective_mhz(true);
+            let p = gpu.power_model().rescale_w(
                 inp.avg_power_w,
                 inp.clock_mhz,
                 f_next,
             );
             demand_w += p;
-            scratch.push((inp.gpu, p, f_next));
+            let idle = gpu.power_model().idle_w();
+            idle_total += idle;
+            scratch.push((inp.gpu, p, f_next, idle));
         }
         if demand_w > self.telemetry.peak_demand_w {
             self.telemetry.peak_demand_w = demand_w;
@@ -143,10 +152,9 @@ impl PowerCapCoordinator {
             return;
         }
 
-        // Over budget: scale every GPU's dynamic headroom by the common
-        // factor that fits the fleet under the cap.
-        let idle = self.model.idle_w();
-        let idle_total = idle * live.len() as f64;
+        // Over budget: scale every GPU's dynamic headroom (above its
+        // own idle floor) by the common factor that fits the fleet
+        // under the cap.
         let dyn_total = demand_w - idle_total;
         let scale = if dyn_total > 0.0 {
             ((self.cap_w - idle_total) / dyn_total).clamp(0.0, 1.0)
@@ -155,7 +163,7 @@ impl PowerCapCoordinator {
         };
 
         let mut clamped_any = false;
-        for &(gpu, p_next, f_next) in scratch.iter() {
+        for &(gpu, p_next, f_next, idle) in scratch.iter() {
             if p_next <= idle {
                 continue; // idle GPU: nothing above the floor to scale
             }
@@ -168,18 +176,24 @@ impl PowerCapCoordinator {
             if engines[gpu].gpu.governor() == GovernorKind::Default {
                 continue;
             }
-            // Highest table clock whose projection fits the budget
-            // (ascending scan; the projection is monotone in f).
-            let mut pick = self.min_mhz;
-            for &f in &self.freqs {
-                if f >= f_next {
-                    break;
-                }
-                if self.model.rescale_w(p_next, f_next, f) <= budget {
+            // Highest clock on *this GPU's* table whose projection fits
+            // the budget (ascending scan; the projection is monotone in
+            // f). The scan stops below `f_next`, which the ceiling
+            // already bounds, so a throttled GPU is never "lowered"
+            // onto a clock above what it can run.
+            let (table, model) = {
+                let g = &engines[gpu].gpu;
+                (g.table().clone(), g.power_model().clone())
+            };
+            let mut pick = table.min_mhz();
+            let mut f = table.min_mhz();
+            while f < f_next && f <= table.max_mhz() {
+                if model.rescale_w(p_next, f_next, f) <= budget {
                     pick = f;
                 } else {
                     break;
                 }
+                f += table.step_mhz();
             }
             if pick < f_next {
                 engines[gpu].gpu.set_clock(pick);
@@ -198,6 +212,7 @@ impl PowerCapCoordinator {
 mod tests {
     use super::*;
     use crate::config::ExperimentConfig;
+    use crate::gpu::PowerModel;
     use crate::server::Request;
     use std::sync::Arc;
 
@@ -290,6 +305,90 @@ mod tests {
         c.coordinate(&mut engines, &live);
         assert_eq!(c.telemetry().clamps, 0);
         assert_eq!(engines[0].gpu.clock_changes(), 0);
+    }
+
+    #[test]
+    fn throttled_gpu_is_budgeted_at_its_effective_clock() {
+        // 8-GPU capped fleet, one GPU under a 900 MHz ceiling: the
+        // coordinator must price that GPU at the clock it will actually
+        // run (the ceiling), not the 1800 MHz its governor requested —
+        // otherwise the ledger books phantom demand and over-clamps the
+        // healthy seven.
+        let cfg = locked_cfg(1800);
+        let mut engines = fleet(&cfg, 8);
+        engines[3].gpu.set_thermal_ceiling(Some(900));
+        assert_eq!(engines[3].gpu.effective_mhz(true), 900);
+        let model = PowerModel::new(&cfg.gpu);
+        let busy_w = model.power_w(1800, 1.0, 0.5);
+        let throttled_w = model.rescale_w(busy_w, 1800, 900);
+        let live: Vec<CapInput> = (0..8)
+            .map(|gpu| CapInput {
+                gpu,
+                avg_power_w: busy_w,
+                clock_mhz: 1800,
+            })
+            .collect();
+
+        // Generous cap: the fleet fits exactly because GPU 3 is priced
+        // throttled. A requested-clock projection (8 × busy) would
+        // overshoot and clamp.
+        let fits = 7.0 * busy_w + throttled_w + 1.0;
+        let mut c = PowerCapCoordinator::new(&cfg, fits);
+        c.coordinate(&mut engines, &live);
+        assert!(
+            (c.telemetry().peak_demand_w - (fits - 1.0)).abs() < 1e-6,
+            "demand {} vs expected {}",
+            c.telemetry().peak_demand_w,
+            fits - 1.0
+        );
+        assert_eq!(c.telemetry().clamps, 0, "phantom demand got clamped");
+
+        // Tight cap: clamps engage, and GPU 3's candidate scan stays
+        // below its ceiling — never "lowered" onto a clock above it.
+        let mut c = PowerCapCoordinator::new(&cfg, 4.0 * busy_w);
+        c.coordinate(&mut engines, &live);
+        assert!(c.telemetry().clamps > 0);
+        assert!(engines[3].gpu.effective_mhz(true) <= 900);
+    }
+
+    #[test]
+    fn heterogeneous_fleet_is_priced_per_gpu_model() {
+        use crate::gpu::apply_profile;
+        let empty: Arc<[Request]> = Vec::new().into();
+        let mut big = locked_cfg(1410);
+        apply_profile(&mut big, "a100").unwrap();
+        let mut small = locked_cfg(1305);
+        apply_profile(&mut small, "jetson").unwrap();
+        let mut engines: Vec<Engine> = [&big, &small]
+            .iter()
+            .map(|c| {
+                let mut e =
+                    Engine::try_with_shared(c, empty.clone()).unwrap();
+                e.open_feed();
+                e
+            })
+            .collect();
+        let a100_w = PowerModel::new(&big.gpu).power_w(1410, 1.0, 0.5);
+        let jetson_w =
+            PowerModel::new(&small.gpu).power_w(1305, 1.0, 0.5);
+        let live = [
+            CapInput { gpu: 0, avg_power_w: a100_w, clock_mhz: 1410 },
+            CapInput { gpu: 1, avg_power_w: jetson_w, clock_mhz: 1305 },
+        ];
+        // Cap midway: the A100 must shed real watts while the Jetson's
+        // single-digit envelope barely moves — feasible only when each
+        // is walked down its own table with its own coefficients.
+        let mut c =
+            PowerCapCoordinator::new(&big, (a100_w + jetson_w) * 0.7);
+        c.coordinate(&mut engines, &live);
+        assert!(c.telemetry().clamps >= 1);
+        let f_a100 = engines[0].gpu.effective_mhz(true);
+        let f_jet = engines[1].gpu.effective_mhz(true);
+        assert!(f_a100 < 1410, "A100 not clamped: {f_a100}");
+        assert!(f_jet <= 1305);
+        // Clamped clocks land on each GPU's own grid.
+        assert!(engines[0].gpu.table().contains(f_a100));
+        assert!(engines[1].gpu.table().contains(f_jet));
     }
 
     #[test]

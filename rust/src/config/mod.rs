@@ -13,8 +13,8 @@ pub mod toml;
 pub use schema::{
     EngineKind, ExperimentConfig, GovernorKind, GovernorsConfig, GpuConfig,
     ModelSpecConfig, OndemandConfig, PruningConfig, RefinementConfig,
-    ServerConfig, SloAwareConfig, SwitchingBanditConfig, TunerConfig,
-    WorkloadKind,
+    ServerConfig, SloAwareConfig, SwitchingBanditConfig, ThermalConfig,
+    TunerConfig, WorkloadKind,
 };
 
 use std::path::Path;

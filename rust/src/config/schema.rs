@@ -84,6 +84,76 @@ impl Default for GpuConfig {
     }
 }
 
+/// Lumped RC thermal model + throttle parameters (`[thermal]` section).
+/// Inert by default: with `enabled = false` no [`crate::gpu::thermal`]
+/// state is ever constructed and every run is bitwise-identical to a
+/// build without the thermal subsystem (the same contract the fault
+/// plane keeps for inert schedules).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ThermalConfig {
+    /// Master switch; everything below is ignored while false.
+    pub enabled: bool,
+    /// Ambient / coolant inlet temperature (°C).
+    pub ambient_c: f64,
+    /// Junction-to-ambient thermal resistance (°C/W).
+    pub r_c_per_w: f64,
+    /// Lumped heat capacity of die + heatsink (J/°C). `τ = R·C`.
+    pub c_j_per_c: f64,
+    /// Throttle engages at or above this temperature (°C).
+    pub trip_c: f64,
+    /// Throttle steps back up at or below this temperature (°C);
+    /// `clear_c < trip_c` is the hysteresis band.
+    pub clear_c: f64,
+    /// Ceiling step-down per tripped window (MHz).
+    pub step_down_mhz: u32,
+    /// Ceiling step-up per cooled window (MHz).
+    pub step_up_mhz: u32,
+    /// Lowest ceiling the throttle may impose (0 ⇒ table min).
+    pub floor_mhz: u32,
+}
+
+impl Default for ThermalConfig {
+    fn default() -> Self {
+        ThermalConfig {
+            enabled: false,
+            ambient_c: 25.0,
+            r_c_per_w: 0.12,
+            c_j_per_c: 5000.0,
+            trip_c: 85.0,
+            clear_c: 79.0,
+            step_down_mhz: 60,
+            step_up_mhz: 15,
+            floor_mhz: 0,
+        }
+    }
+}
+
+impl ThermalConfig {
+    /// True when the section can never influence a run.
+    pub fn is_inert(&self) -> bool {
+        !self.enabled
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if !self.enabled {
+            return Ok(());
+        }
+        if self.r_c_per_w <= 0.0 || self.c_j_per_c <= 0.0 {
+            return Err("thermal R and C must be positive".to_string());
+        }
+        if self.clear_c >= self.trip_c {
+            return Err("thermal clear_c must be below trip_c".to_string());
+        }
+        if self.ambient_c >= self.clear_c {
+            return Err("thermal ambient_c must be below clear_c".to_string());
+        }
+        if self.step_down_mhz == 0 || self.step_up_mhz == 0 {
+            return Err("thermal steps must be positive".to_string());
+        }
+        Ok(())
+    }
+}
+
 /// Analytical transformer spec used for timing/energy (paper: Llama-3-3B).
 #[derive(Debug, Clone, PartialEq)]
 pub struct ModelSpecConfig {
@@ -498,6 +568,15 @@ pub struct ExperimentConfig {
     /// Virtual duration of the run (seconds).
     pub duration_s: f64,
     pub gpu: GpuConfig,
+    /// Thermal model + throttle (`[thermal]` section / `--thermal` CLI).
+    /// Inert by default; device profiles pre-fill the parameters but
+    /// never flip `enabled` on their own.
+    pub thermal: ThermalConfig,
+    /// Per-GPU device profiles for heterogeneous fleets (`[gpu]
+    /// profiles = "a100,jetson"` / `--profiles`), cycled over the
+    /// cluster's GPU index. Empty ⇒ every GPU uses `gpu`/`thermal`
+    /// above. Single-GPU paths ignore it.
+    pub gpu_profiles: Vec<String>,
     pub model: ModelSpecConfig,
     pub server: ServerConfig,
     pub tuner: TunerConfig,
@@ -535,6 +614,8 @@ impl Default for ExperimentConfig {
             seed: 42,
             duration_s: 1200.0,
             gpu: GpuConfig::default(),
+            thermal: ThermalConfig::default(),
+            gpu_profiles: Vec::new(),
             model: ModelSpecConfig::default(),
             server: ServerConfig::default(),
             tuner: TunerConfig::default(),
@@ -574,7 +655,17 @@ macro_rules! override_string {
 
 impl GpuConfig {
     pub fn from_toml(v: &Value) -> Result<GpuConfig, String> {
-        let mut c = GpuConfig::default();
+        GpuConfig::from_toml_with_base(GpuConfig::default(), v)
+    }
+
+    /// Apply the `[gpu]` key overrides on top of an explicit base —
+    /// the base is a device profile when `profile = "..."` is present,
+    /// so individual keys can still fine-tune a named profile.
+    pub fn from_toml_with_base(
+        base: GpuConfig,
+        v: &Value,
+    ) -> Result<GpuConfig, String> {
+        let mut c = base;
         override_field!(v, "f_min_mhz", c.f_min_mhz, as_u32);
         override_field!(v, "f_max_mhz", c.f_max_mhz, as_u32);
         override_field!(v, "f_step_mhz", c.f_step_mhz, as_u32);
@@ -615,6 +706,29 @@ impl GpuConfig {
             return Err("negative power".to_string());
         }
         Ok(())
+    }
+}
+
+impl ThermalConfig {
+    /// Apply the `[thermal]` key overrides on top of an explicit base
+    /// (the base carries profile-supplied parameters when a device
+    /// profile was selected).
+    pub fn from_toml_with_base(
+        base: ThermalConfig,
+        v: &Value,
+    ) -> Result<ThermalConfig, String> {
+        let mut c = base;
+        override_field!(v, "enabled", c.enabled, as_bool);
+        override_field!(v, "ambient_c", c.ambient_c, as_f64);
+        override_field!(v, "r_c_per_w", c.r_c_per_w, as_f64);
+        override_field!(v, "c_j_per_c", c.c_j_per_c, as_f64);
+        override_field!(v, "trip_c", c.trip_c, as_f64);
+        override_field!(v, "clear_c", c.clear_c, as_f64);
+        override_field!(v, "step_down_mhz", c.step_down_mhz, as_u32);
+        override_field!(v, "step_up_mhz", c.step_up_mhz, as_u32);
+        override_field!(v, "floor_mhz", c.floor_mhz, as_u32);
+        c.validate()?;
+        Ok(c)
     }
 }
 
@@ -855,7 +969,26 @@ impl ExperimentConfig {
             }
         }
         if let Some(g) = doc.get("gpu") {
-            c.gpu = GpuConfig::from_toml(g)?;
+            let mut base = GpuConfig::default();
+            if let Some(p) = g.get("profile") {
+                let name = p.as_str().ok_or("bad gpu profile")?;
+                let prof = crate::gpu::profile::device_profile(name)?;
+                base = prof.gpu;
+                // Profile thermal parameters pre-fill the [thermal]
+                // base; the section itself (parsed below) still owns
+                // `enabled` and any explicit key.
+                let enabled = c.thermal.enabled;
+                c.thermal = prof.thermal;
+                c.thermal.enabled = enabled;
+            }
+            if let Some(p) = g.get("profiles") {
+                let list = p.as_str().ok_or("bad gpu profiles")?;
+                c.gpu_profiles = crate::gpu::profile::parse_profile_list(list)?;
+            }
+            c.gpu = GpuConfig::from_toml_with_base(base, g)?;
+        }
+        if let Some(t) = doc.get("thermal") {
+            c.thermal = ThermalConfig::from_toml_with_base(c.thermal.clone(), t)?;
         }
         if let Some(m) = doc.get("model") {
             c.model = ModelSpecConfig::from_toml(m)?;
@@ -1120,6 +1253,56 @@ switch_cost = 0.1
         assert!(ExperimentConfig::from_toml(&bad).is_err());
         let bad =
             toml::parse("[governor.slo]\nstable_windows = -1").unwrap();
+        assert!(ExperimentConfig::from_toml(&bad).is_err());
+    }
+
+    #[test]
+    fn thermal_section_parses_and_validates() {
+        let doc = toml::parse(
+            "[thermal]\nenabled = true\ntrip_c = 70.0\nclear_c = 62.0",
+        )
+        .unwrap();
+        let c = ExperimentConfig::from_toml(&doc).unwrap();
+        assert!(c.thermal.enabled);
+        assert_eq!(c.thermal.trip_c, 70.0);
+        // untouched knobs keep their defaults
+        assert_eq!(c.thermal.step_up_mhz, 15);
+        let bad =
+            toml::parse("[thermal]\nenabled = true\nclear_c = 90.0").unwrap();
+        assert!(ExperimentConfig::from_toml(&bad).is_err());
+        // A disabled section is inert: params are not validated.
+        let off = toml::parse("[thermal]\nclear_c = 90.0").unwrap();
+        assert!(ExperimentConfig::from_toml(&off).unwrap().thermal.is_inert());
+    }
+
+    #[test]
+    fn gpu_profile_key_sets_base_and_overrides_still_apply() {
+        let doc =
+            toml::parse("[gpu]\nprofile = \"jetson\"\nidle_w = 7.0").unwrap();
+        let c = ExperimentConfig::from_toml(&doc).unwrap();
+        assert!(c.gpu.f_max_mhz < 1800, "jetson table is shorter");
+        assert_eq!(c.gpu.idle_w, 7.0, "explicit keys override the profile");
+        assert!(
+            !c.thermal.enabled,
+            "profiles never enable thermal on their own"
+        );
+        assert!(
+            c.thermal.trip_c < 85.0,
+            "profile thermal params pre-filled"
+        );
+        let bad = toml::parse("[gpu]\nprofile = \"bogus\"").unwrap();
+        assert!(ExperimentConfig::from_toml(&bad).is_err());
+    }
+
+    #[test]
+    fn gpu_profiles_list_parses() {
+        let doc = toml::parse("[gpu]\nprofiles = \"a100,jetson\"").unwrap();
+        let c = ExperimentConfig::from_toml(&doc).unwrap();
+        assert_eq!(
+            c.gpu_profiles,
+            vec!["a100".to_string(), "jetson".to_string()]
+        );
+        let bad = toml::parse("[gpu]\nprofiles = \"a100,,jetson\"").unwrap();
         assert!(ExperimentConfig::from_toml(&bad).is_err());
     }
 

@@ -169,6 +169,8 @@ impl WindowTracker {
             requests_running,
             kv_usage,
             power_w,
+            temp_c: engine.gpu.temp_c(),
+            throttle_mhz: engine.gpu.throttle_mhz(),
         });
 
         !alive || time_s >= cfg.duration_s
@@ -254,6 +256,9 @@ impl GovernorDriver {
         loop {
             let clock_before = engine.gpu.effective_mhz(true);
             let alive = engine.run_until(t_next);
+            if engine.thermal_enabled() {
+                engine.thermal_window_boundary();
+            }
             if tracker.record_window(
                 cfg,
                 &mut engine,
@@ -292,6 +297,9 @@ impl GovernorDriver {
         loop {
             let clock_before = engine.gpu.effective_mhz(true);
             let alive = engine.run_until(t_next);
+            if engine.thermal_enabled() {
+                engine.thermal_window_boundary();
+            }
             if tracker.record_window_faulty(
                 cfg,
                 &mut engine,

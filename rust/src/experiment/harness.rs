@@ -57,6 +57,12 @@ pub struct WindowRecord {
     pub requests_running: usize,
     pub kv_usage: f64,
     pub power_w: f64,
+    /// Die temperature at the window boundary (°C); `None` when the
+    /// thermal model is disabled.
+    pub temp_c: Option<f64>,
+    /// Thermal-throttle ceiling active at the window boundary (MHz);
+    /// `None` when unthrottled or thermal is disabled.
+    pub throttle_mhz: Option<u32>,
 }
 
 /// Full result of one run.
@@ -97,6 +103,26 @@ impl RunResult {
         } else {
             0.0
         }
+    }
+
+    /// Peak die temperature over the run (°C); `None` when the thermal
+    /// model was disabled (no window ever carried a reading).
+    pub fn peak_temp_c(&self) -> Option<f64> {
+        self.windows
+            .iter()
+            .filter_map(|w| w.temp_c)
+            .fold(None, |acc, t| {
+                Some(match acc {
+                    Some(a) if a >= t => a,
+                    _ => t,
+                })
+            })
+    }
+
+    /// Number of windows that ended under an active thermal-throttle
+    /// ceiling.
+    pub fn throttle_windows(&self) -> usize {
+        self.windows.iter().filter(|w| w.throttle_mhz.is_some()).count()
     }
 }
 
@@ -260,6 +286,10 @@ pub fn run_shared_legacy(
             requests_running: snap.requests_running,
             kv_usage: snap.kv_usage,
             power_w: snap.power_w,
+            // The legacy loop predates the thermal model and is never
+            // run with it enabled (the A/B matrix is thermal-off).
+            temp_c: None,
+            throttle_mhz: None,
         });
 
         if !alive || snap.time_s >= cfg.duration_s {

@@ -573,6 +573,8 @@ mod tests {
             requests_running: 1,
             kv_usage: 0.1,
             power_w: 150.0,
+            temp_c: None,
+            throttle_mhz: None,
         };
         RunResult {
             windows: (0..4).map(|_| window(energy)).collect(),

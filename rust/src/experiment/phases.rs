@@ -510,6 +510,8 @@ mod tests {
             requests_running: 1,
             kv_usage: 0.1,
             power_w: 150.0,
+            temp_c: None,
+            throttle_mhz: None,
         }
     }
 

@@ -259,7 +259,7 @@ pub fn grid_results_csv(rows: &[GridCsvRow]) -> String {
 
 /// CSV header of [`cluster_gpu_csv`]: one row per (seed, GPU) of an
 /// `agft cluster` run.
-pub const CLUSTER_CSV_HEADER: [&str; 10] = [
+pub const CLUSTER_CSV_HEADER: [&str; 12] = [
     "seed",
     "gpu",
     "routed",
@@ -270,6 +270,11 @@ pub const CLUSTER_CSV_HEADER: [&str; 10] = [
     "windows",
     "clock_changes",
     "alive",
+    // Thermal columns ride at the end so positional consumers of the
+    // pre-thermal layout (CI's alive check reads $10) keep working;
+    // both are empty when the thermal model is disabled.
+    "peak_temp_c",
+    "throttle_windows",
 ];
 
 /// Render per-GPU cluster results as CSV (one block per seed replica,
@@ -292,6 +297,14 @@ pub fn cluster_gpu_csv(
                 g.windows.len().to_string(),
                 g.clock_changes.to_string(),
                 u8::from(r.alive[gpu]).to_string(),
+                g.peak_temp_c()
+                    .map(|t| t.to_string())
+                    .unwrap_or_default(),
+                if g.peak_temp_c().is_some() {
+                    g.throttle_windows().to_string()
+                } else {
+                    String::new()
+                },
             ])
             .expect("in-memory csv row");
         }
@@ -321,6 +334,14 @@ pub fn render_cluster(
                 g.windows.len().to_string(),
                 g.clock_changes.to_string(),
                 if r.alive[gpu] { "yes" } else { "DEAD" }.to_string(),
+                g.peak_temp_c()
+                    .map(|t| format!("{t:.1}"))
+                    .unwrap_or_else(|| "-".to_string()),
+                if g.peak_temp_c().is_some() {
+                    g.throttle_windows().to_string()
+                } else {
+                    "-".to_string()
+                },
             ]
         })
         .collect();
@@ -336,6 +357,8 @@ pub fn render_cluster(
             "windows",
             "clock switches",
             "alive",
+            "peak °C",
+            "throttled w",
         ],
         &rows,
     )
@@ -391,6 +414,8 @@ mod tests {
             requests_running: 1,
             kv_usage: 0.1,
             power_w: 150.0,
+            temp_c: None,
+            throttle_mhz: None,
         }
     }
 
@@ -553,7 +578,43 @@ mod tests {
         assert_eq!(rows[1][4].parse::<f64>().unwrap(), 450.0);
         assert_eq!(rows[0][9], "1");
         assert_eq!(rows[1][9], "0");
+        // Thermal-off runs leave the trailing thermal columns empty.
+        assert_eq!(rows[0][10], "");
+        assert_eq!(rows[0][11], "");
         assert!(text.contains("DEAD"), "{text}");
+    }
+
+    #[test]
+    fn cluster_rows_carry_thermal_columns_when_enabled() {
+        let mut hot = window(100.0);
+        hot.temp_c = Some(71.25);
+        hot.throttle_mhz = Some(1005);
+        let mut warm = window(100.0);
+        warm.temp_c = Some(55.0);
+        let run = RunResult {
+            windows: vec![warm, hot],
+            finished: Vec::new(),
+            total_energy_j: 200.0,
+            duration_s: 1.6,
+            clock_changes: 1,
+            tuner: None,
+        };
+        assert_eq!(run.peak_temp_c(), Some(71.25));
+        assert_eq!(run.throttle_windows(), 1);
+        let cluster = crate::cluster::ClusterResult {
+            per_gpu: vec![run],
+            routed: vec![3],
+            engine_polls: 2,
+            cap: None,
+            alive: vec![true],
+        };
+        let csv = cluster_gpu_csv(&[(7, &cluster)]);
+        let (hdr, rows) = crate::util::csv::parse(&csv).unwrap();
+        assert_eq!(hdr, CLUSTER_CSV_HEADER.to_vec());
+        assert_eq!(rows[0][10].parse::<f64>().unwrap(), 71.25);
+        assert_eq!(rows[0][11], "1");
+        let text = render_cluster("hot", &cluster);
+        assert!(text.contains("71.2"), "{text}");
     }
 
     #[test]

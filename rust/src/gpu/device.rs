@@ -1,10 +1,11 @@
 //! The stateful simulated GPU: clock locking (nvidia-smi equivalent),
 //! per-iteration energy integration (NVML equivalent) and telemetry.
 
-use crate::config::{GpuConfig, GovernorKind};
+use crate::config::{GovernorKind, GpuConfig, ThermalConfig};
 use crate::gpu::freq::FreqTable;
 use crate::gpu::perf::IterationCost;
 use crate::gpu::power::PowerModel;
+use crate::gpu::thermal::ThermalModel;
 
 /// Simulated DVFS-capable GPU device.
 #[derive(Debug, Clone)]
@@ -17,10 +18,16 @@ pub struct SimGpu {
     set_clock_latency_s: f64,
     /// Pending latency still to be charged for the last clock change.
     pending_lock_latency_s: f64,
-    /// Forced thermal ceiling ([`crate::faults`] GPU events): when set,
-    /// the effective clock never exceeds it, whatever is locked. `None`
-    /// (always, outside fault runs) leaves the clock path untouched.
-    thermal_ceiling_mhz: Option<u32>,
+    /// Externally forced ceiling ([`crate::faults`] GPU events): when
+    /// set, the effective clock never exceeds it, whatever is locked.
+    /// `None` (always, outside fault runs) leaves the clock path
+    /// untouched. Composes with the thermal throttle below: min wins.
+    forced_ceiling_mhz: Option<u32>,
+    /// Lumped RC die temperature + hysteretic throttle. `None` unless
+    /// `[thermal] enabled = true` — and while `None`, not one extra
+    /// float is touched anywhere in the accounting (the bitwise
+    /// thermal-off contract).
+    thermal: Option<ThermalModel>,
     energy_j: f64,
     busy_time_s: f64,
     total_time_s: f64,
@@ -43,13 +50,22 @@ impl SimGpu {
             locked_mhz: locked,
             set_clock_latency_s: cfg.set_clock_latency_s,
             pending_lock_latency_s: 0.0,
-            thermal_ceiling_mhz: None,
+            forced_ceiling_mhz: None,
+            thermal: None,
             energy_j: 0.0,
             busy_time_s: 0.0,
             total_time_s: 0.0,
             clock_changes: 0,
             last_power_w: cfg.idle_w,
         }
+    }
+
+    /// Arm the thermal model (constructed only when `[thermal]` is
+    /// enabled — the `None` path stays bitwise-identical to a build
+    /// without the thermal subsystem).
+    pub fn enable_thermal(&mut self, cfg: &ThermalConfig) {
+        debug_assert!(cfg.enabled, "enable_thermal on a disabled config");
+        self.thermal = Some(ThermalModel::new(cfg));
     }
 
     pub fn table(&self) -> &FreqTable {
@@ -76,9 +92,21 @@ impl SimGpu {
             }
             _ => self.locked_mhz.unwrap_or(self.boost_mhz),
         };
-        match self.thermal_ceiling_mhz {
+        match self.ceiling_mhz() {
             Some(c) if f > c => c,
             _ => f,
+        }
+    }
+
+    /// The ceiling currently clamping the effective clock, if any:
+    /// the minimum of the externally forced (fault) ceiling and the
+    /// thermal throttle.
+    pub fn ceiling_mhz(&self) -> Option<u32> {
+        let throttle = self.thermal.as_ref().and_then(|t| t.throttle_mhz());
+        match (self.forced_ceiling_mhz, throttle) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (Some(a), None) => Some(a),
+            (None, b) => b,
         }
     }
 
@@ -111,6 +139,9 @@ impl SimGpu {
             self.power.iteration_power_w(f_mhz, cost)
         };
         self.energy_j += p * cost.time_s;
+        if let Some(t) = self.thermal.as_mut() {
+            t.integrate(p, cost.time_s);
+        }
         self.last_power_w = p;
         if !idle {
             self.busy_time_s += cost.time_s;
@@ -118,6 +149,9 @@ impl SimGpu {
         if self.pending_lock_latency_s > 0.0 {
             let lat = self.pending_lock_latency_s;
             self.energy_j += self.power.idle_w() * lat;
+            if let Some(t) = self.thermal.as_mut() {
+                t.integrate(self.power.idle_w(), lat);
+            }
             dt += lat;
             self.pending_lock_latency_s = 0.0;
         }
@@ -144,6 +178,9 @@ impl SimGpu {
         );
         let p = self.power.iteration_power_w(f_mhz, cost);
         self.energy_j += p * cost.time_s;
+        if let Some(t) = self.thermal.as_mut() {
+            t.integrate(p, cost.time_s);
+        }
         self.last_power_w = p;
         self.busy_time_s += cost.time_s;
         self.total_time_s += cost.time_s;
@@ -161,6 +198,9 @@ impl SimGpu {
         debug_assert!(t1 >= t0, "negative idle span {t0}..{t1}");
         let dt = t1 - t0;
         self.energy_j += self.power.idle_span_energy_j(t0, t1);
+        if let Some(t) = self.thermal.as_mut() {
+            t.integrate(self.power.idle_w(), dt);
+        }
         self.last_power_w = self.power.idle_w();
         self.total_time_s += dt;
         dt
@@ -175,6 +215,9 @@ impl SimGpu {
         let lat = self.pending_lock_latency_s;
         if lat > 0.0 {
             self.energy_j += self.power.idle_w() * lat;
+            if let Some(t) = self.thermal.as_mut() {
+                t.integrate(self.power.idle_w(), lat);
+            }
             self.total_time_s += lat;
             self.pending_lock_latency_s = 0.0;
         }
@@ -229,15 +272,56 @@ impl SimGpu {
         self.pending_lock_latency_s += extra_s;
     }
 
-    /// Force (or clear) a thermal ceiling on the effective clock
-    /// ([`crate::faults`] GPU events). Quantised onto the table grid,
-    /// never below the table minimum.
+    /// Force (or clear) a ceiling on the effective clock
+    /// ([`crate::faults`] GPU events). Floor-quantised onto the table
+    /// grid — nearest-rounding could snap *upward* past the requested
+    /// limit — and clamped to the table minimum, so `ceiling:100` on a
+    /// 210 MHz-floor table means 210, the lowest enforceable ceiling.
+    /// Composes with the thermal throttle: the effective clock obeys
+    /// the minimum of the two.
     pub fn set_thermal_ceiling(&mut self, ceiling: Option<u32>) {
-        self.thermal_ceiling_mhz = ceiling.map(|c| self.table.quantize(c));
+        self.forced_ceiling_mhz = ceiling.map(|c| self.table.quantize_down(c));
     }
 
+    /// The externally forced (fault) ceiling, if any. The thermal
+    /// throttle's own ceiling is [`SimGpu::throttle_mhz`]; the combined
+    /// clamp is [`SimGpu::ceiling_mhz`].
     pub fn thermal_ceiling(&self) -> Option<u32> {
-        self.thermal_ceiling_mhz
+        self.forced_ceiling_mhz
+    }
+
+    /// Run one hysteretic throttle step off the current die
+    /// temperature. Called at window boundaries (deterministic,
+    /// mode-independent instants); a no-op while thermal is disabled.
+    pub fn update_thermal_throttle(&mut self) {
+        if let Some(t) = self.thermal.as_mut() {
+            t.update_throttle(&self.table);
+        }
+    }
+
+    /// True when the thermal model is armed.
+    pub fn thermal_enabled(&self) -> bool {
+        self.thermal.is_some()
+    }
+
+    /// Current die temperature (°C), when thermal is armed.
+    pub fn temp_c(&self) -> Option<f64> {
+        self.thermal.as_ref().map(|t| t.temp_c())
+    }
+
+    /// Hottest die temperature seen so far (°C), when armed.
+    pub fn peak_temp_c(&self) -> Option<f64> {
+        self.thermal.as_ref().map(|t| t.peak_temp_c())
+    }
+
+    /// The thermal throttle ceiling currently in force, if any.
+    pub fn throttle_mhz(&self) -> Option<u32> {
+        self.thermal.as_ref().and_then(|t| t.throttle_mhz())
+    }
+
+    /// Times the thermal throttle engaged from an unthrottled state.
+    pub fn thermal_trips(&self) -> u64 {
+        self.thermal.as_ref().map_or(0, |t| t.trips())
     }
 }
 
@@ -351,6 +435,106 @@ mod tests {
         assert_eq!(g.take_pending_lock_latency(), 0.0);
         let dt = g.account_iteration(900, &busy_cost(0.01), false);
         assert!((dt - 0.01).abs() < 1e-12);
+    }
+
+    #[test]
+    fn forced_ceiling_floor_quantizes_and_clamps_at_table_min() {
+        let mut g = SimGpu::new(&GpuConfig::default(), GovernorKind::Agft);
+        g.set_clock(1800);
+        // 913 floors to 900 — nearest-quantize would round up to 915,
+        // past the requested limit.
+        g.set_thermal_ceiling(Some(913));
+        assert_eq!(g.thermal_ceiling(), Some(900));
+        assert_eq!(g.effective_mhz(true), 900);
+        // At/below the table floor: clamp to min, no rounding surprise.
+        g.set_thermal_ceiling(Some(100));
+        assert_eq!(g.thermal_ceiling(), Some(210));
+        assert_eq!(g.effective_mhz(true), 210);
+        g.set_thermal_ceiling(None);
+        assert_eq!(g.effective_mhz(true), 1800);
+    }
+
+    #[test]
+    fn fault_and_thermal_ceilings_compose_min_wins() {
+        let thermal = ThermalConfig {
+            enabled: true,
+            ambient_c: 25.0,
+            r_c_per_w: 0.2,
+            c_j_per_c: 100.0,
+            trip_c: 60.0,
+            clear_c: 50.0,
+            step_down_mhz: 600,
+            step_up_mhz: 30,
+            floor_mhz: 0,
+        };
+        let mut g = SimGpu::new(&GpuConfig::default(), GovernorKind::Agft);
+        g.enable_thermal(&thermal);
+        g.set_clock(1800);
+        // Heat the die far past the trip point, then throttle once:
+        // ceiling steps down 600 from the table top to 1200.
+        g.account_iteration(1800, &busy_cost(1e9), false);
+        g.update_thermal_throttle();
+        assert_eq!(g.throttle_mhz(), Some(1200));
+        assert_eq!(g.effective_mhz(true), 1200);
+        // A forced fault ceiling below the throttle wins...
+        g.set_thermal_ceiling(Some(900));
+        assert_eq!(g.ceiling_mhz(), Some(900));
+        assert_eq!(g.effective_mhz(true), 900);
+        // ...and one above it loses to the throttle.
+        g.set_thermal_ceiling(Some(1500));
+        assert_eq!(g.ceiling_mhz(), Some(1200));
+        assert_eq!(g.effective_mhz(true), 1200);
+        assert_eq!(g.thermal_trips(), 1);
+    }
+
+    #[test]
+    fn disabled_thermal_changes_no_accounting_bits() {
+        let cfg = GpuConfig::default();
+        let mk = || SimGpu::new(&cfg, GovernorKind::Agft);
+        let mut a = mk();
+        let mut b = mk();
+        assert!(!b.thermal_enabled());
+        for g in [&mut a, &mut b] {
+            g.set_clock(1230);
+            g.account_iteration(1230, &busy_cost(0.01), false);
+            g.account_idle_span(0.5, 0.9);
+            g.update_thermal_throttle(); // no-op while disabled
+            g.account_span_iteration(1230, &busy_cost(0.02));
+        }
+        assert_eq!(a.energy_j().to_bits(), b.energy_j().to_bits());
+        assert_eq!(a.total_time_s().to_bits(), b.total_time_s().to_bits());
+        assert_eq!(b.temp_c(), None);
+        assert_eq!(b.throttle_mhz(), None);
+        assert_eq!(b.peak_temp_c(), None);
+    }
+
+    #[test]
+    fn thermal_integrates_every_accounting_path() {
+        let cfg = GpuConfig::default();
+        let thermal = ThermalConfig {
+            enabled: true,
+            ..ThermalConfig::default()
+        };
+        let mut g = SimGpu::new(&cfg, GovernorKind::Agft);
+        g.enable_thermal(&thermal);
+        let ambient = thermal.ambient_c;
+        assert_eq!(g.temp_c(), Some(ambient));
+        // Busy iteration heats the die.
+        g.account_iteration(1800, &busy_cost(5.0), false);
+        let t1 = g.temp_c().unwrap();
+        assert!(t1 > ambient);
+        // Span iterations keep heating it.
+        g.account_span_iteration(1800, &busy_cost(5.0));
+        let t2 = g.temp_c().unwrap();
+        assert!(t2 > t1);
+        // Idle spans cool it back toward ambient.
+        g.account_idle_span(0.0, 500.0);
+        let t3 = g.temp_c().unwrap();
+        assert!(t3 < t2 && t3 > ambient);
+        // Pending lock latency integrates at idle power too.
+        g.set_clock(900);
+        g.take_pending_lock_latency();
+        assert!(g.peak_temp_c().unwrap() >= t2);
     }
 
     #[test]

@@ -92,6 +92,24 @@ impl FreqTable {
         self.min_mhz + snapped
     }
 
+    /// Snap an arbitrary frequency onto the nearest lockable point
+    /// **at or below** it (clamped into the table). This is the
+    /// quantizer for *ceilings*: nearest-rounding may snap upward past
+    /// the requested limit (`quantize(913) = 915`), silently licensing
+    /// a clock the ceiling was meant to forbid. Requests at or below
+    /// the table floor clamp to `min_mhz` — the lowest enforceable
+    /// ceiling — rather than producing rounding surprises.
+    pub fn quantize_down(&self, mhz: u32) -> u32 {
+        if mhz <= self.min_mhz {
+            return self.min_mhz;
+        }
+        if mhz >= self.max_mhz {
+            return self.max_mhz;
+        }
+        let offset = mhz - self.min_mhz;
+        self.min_mhz + offset / self.step_mhz * self.step_mhz
+    }
+
     /// True if `mhz` is exactly a lockable point.
     pub fn contains(&self, mhz: u32) -> bool {
         mhz >= self.min_mhz
@@ -127,6 +145,28 @@ mod tests {
         assert_eq!(t.quantize(100), 210);
         assert_eq!(t.quantize(5000), 1800);
         assert_eq!(t.quantize(1230), 1230);
+    }
+
+    #[test]
+    fn quantize_down_never_rounds_up() {
+        let t = table();
+        // Nearest-quantize rounds 913 up to 915; a ceiling must floor.
+        assert_eq!(t.quantize(913), 915);
+        assert_eq!(t.quantize_down(913), 900);
+        assert_eq!(t.quantize_down(903), 900);
+        assert_eq!(t.quantize_down(900), 900);
+        // Bottom edge: anything at or below the floor clamps to it —
+        // `ceiling:100` on a 210 MHz-floor table means 210, not an
+        // underflow or a round-up.
+        assert_eq!(t.quantize_down(100), 210);
+        assert_eq!(t.quantize_down(0), 210);
+        assert_eq!(t.quantize_down(210), 210);
+        assert_eq!(t.quantize_down(224), 210);
+        // Top edge: clamps to the table max, and the last sub-step
+        // floors to the penultimate point.
+        assert_eq!(t.quantize_down(5000), 1800);
+        assert_eq!(t.quantize_down(1800), 1800);
+        assert_eq!(t.quantize_down(1798), 1785);
     }
 
     #[test]

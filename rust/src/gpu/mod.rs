@@ -7,13 +7,22 @@
 //! * [`power`] — idle + linear/cubic dynamic power, utilisation-weighted.
 //! * [`device`] — the stateful device: clock locking (with latency),
 //!   per-step energy integration, power/energy telemetry.
+//! * [`profile`] — named device classes (a6000/a100/consumer/jetson):
+//!   frequency table + power coefficients + thermal parameters per
+//!   board, selectable via `[gpu] profile` / `--profile`.
+//! * [`thermal`] — lumped RC die temperature integrated span-exactly
+//!   from the power trace, with a hysteretic throttle ceiling.
 
 pub mod device;
 pub mod freq;
 pub mod perf;
 pub mod power;
+pub mod profile;
+pub mod thermal;
 
 pub use device::SimGpu;
 pub use freq::FreqTable;
 pub use perf::{DecodeSpanPricer, IterationCost, IterationWork, PerfModel};
 pub use power::PowerModel;
+pub use profile::{apply_profile, device_profile, DeviceProfile, PROFILE_NAMES};
+pub use thermal::ThermalModel;

@@ -1,0 +1,240 @@
+//! Named device profiles: frequency table, power-model coefficients,
+//! idle floor and thermal parameters bundled per device class, so one
+//! `--profile jetson` (or `[gpu] profile = "jetson"`) swaps the whole
+//! simulated board instead of sixteen individual knobs.
+//!
+//! Three classes beyond the A6000 default, calibrated to the same
+//! coarse envelopes the related DVFS literature reports (Camel and the
+//! embedded-DVFS fine-tuning paper for the Jetson-class part):
+//!
+//! * `a6000` — the paper's testbed, identical to [`GpuConfig::default`].
+//! * `a100` — datacenter SXM class: tall power envelope, massive
+//!   heatsink (long thermal time constant), tight hysteresis.
+//! * `consumer` — desktop class: high boost clock, small cooler, the
+//!   classic boost-then-throttle sawtooth under sustained load.
+//! * `jetson` — embedded class: single-digit-watt envelope, passive
+//!   cooling (large R, tiny C), trips early and hard — the profile the
+//!   thermal non-stationarity tests lean on.
+//!
+//! Profiles pre-fill `[thermal]` parameters but never flip
+//! `thermal.enabled` — enabling stays an explicit act (`--thermal` /
+//! `[thermal] enabled = true`) so profile selection alone cannot break
+//! the bitwise thermal-off contract.
+
+use crate::config::{ExperimentConfig, GpuConfig, ThermalConfig};
+
+/// A named bundle of device parameters.
+#[derive(Debug, Clone)]
+pub struct DeviceProfile {
+    pub name: &'static str,
+    pub gpu: GpuConfig,
+    pub thermal: ThermalConfig,
+}
+
+/// The selectable profile names, in display order.
+pub const PROFILE_NAMES: [&str; 4] = ["a6000", "a100", "consumer", "jetson"];
+
+/// Look up a device profile by name.
+pub fn device_profile(name: &str) -> Result<DeviceProfile, String> {
+    match name {
+        "a6000" => Ok(DeviceProfile {
+            name: "a6000",
+            gpu: GpuConfig::default(),
+            thermal: ThermalConfig::default(),
+        }),
+        "a100" => Ok(DeviceProfile {
+            name: "a100",
+            gpu: GpuConfig {
+                f_min_mhz: 210,
+                f_max_mhz: 1410,
+                f_step_mhz: 15,
+                boost_mhz: 1410,
+                idle_w: 55.0,
+                compute_w: 330.0,
+                mem_w: 95.0,
+                v_floor: 0.76,
+                gate_leak_frac: 0.35,
+                peak_tflops: 78.0,
+                compute_exp: 0.62,
+                mem_bw_gbs: 1555.0,
+                bw_floor: 0.55,
+                bw_knee_mhz: 1095,
+                set_clock_latency_s: 0.010,
+                iter_overhead_s: 0.000_25,
+            },
+            thermal: ThermalConfig {
+                enabled: false,
+                ambient_c: 30.0,
+                r_c_per_w: 0.12,
+                c_j_per_c: 8000.0, // τ ≈ 16 min: datacenter heatsink
+                trip_c: 85.0,
+                clear_c: 79.0,
+                step_down_mhz: 60,
+                step_up_mhz: 15,
+                floor_mhz: 0,
+            },
+        }),
+        "consumer" => Ok(DeviceProfile {
+            name: "consumer",
+            gpu: GpuConfig {
+                f_min_mhz: 210,
+                f_max_mhz: 2520,
+                f_step_mhz: 15,
+                boost_mhz: 2520,
+                idle_w: 18.0,
+                compute_w: 280.0,
+                mem_w: 70.0,
+                v_floor: 0.70,
+                gate_leak_frac: 0.38,
+                peak_tflops: 65.0,
+                compute_exp: 0.62,
+                mem_bw_gbs: 717.0,
+                bw_floor: 0.50,
+                bw_knee_mhz: 1800,
+                set_clock_latency_s: 0.010,
+                iter_overhead_s: 0.000_25,
+            },
+            thermal: ThermalConfig {
+                enabled: false,
+                ambient_c: 28.0,
+                r_c_per_w: 0.20,
+                c_j_per_c: 2500.0, // τ ≈ 8 min: desktop air cooler
+                trip_c: 83.0,
+                clear_c: 75.0,
+                step_down_mhz: 105,
+                step_up_mhz: 30,
+                floor_mhz: 0,
+            },
+        }),
+        "jetson" => Ok(DeviceProfile {
+            name: "jetson",
+            gpu: GpuConfig {
+                f_min_mhz: 210,
+                f_max_mhz: 1305,
+                f_step_mhz: 15,
+                boost_mhz: 1305,
+                idle_w: 5.0,
+                compute_w: 30.0,
+                mem_w: 10.0,
+                v_floor: 0.65,
+                gate_leak_frac: 0.30,
+                peak_tflops: 10.0,
+                compute_exp: 0.62,
+                mem_bw_gbs: 204.0,
+                bw_floor: 0.55,
+                bw_knee_mhz: 1005,
+                set_clock_latency_s: 0.005,
+                iter_overhead_s: 0.000_40,
+            },
+            thermal: ThermalConfig {
+                enabled: false,
+                ambient_c: 35.0, // enclosure air, not room air
+                r_c_per_w: 1.4,  // passive heatsink
+                c_j_per_c: 150.0, // τ ≈ 3.5 min: tiny thermal mass
+                trip_c: 70.0,
+                clear_c: 62.0,
+                step_down_mhz: 150,
+                step_up_mhz: 45,
+                floor_mhz: 0,
+            },
+        }),
+        other => Err(format!(
+            "unknown device profile {other:?} (one of: {})",
+            PROFILE_NAMES.join(", ")
+        )),
+    }
+}
+
+/// Swap an experiment onto a device profile: replaces the GPU model
+/// and the thermal *parameters*, preserving whether thermal dynamics
+/// are enabled (that stays `--thermal` / `[thermal]`'s call).
+pub fn apply_profile(
+    cfg: &mut ExperimentConfig,
+    name: &str,
+) -> Result<(), String> {
+    let p = device_profile(name)?;
+    let enabled = cfg.thermal.enabled;
+    cfg.gpu = p.gpu;
+    cfg.thermal = p.thermal;
+    cfg.thermal.enabled = enabled;
+    Ok(())
+}
+
+/// Parse a comma-separated profile list (`a100,jetson`) — the
+/// heterogeneous-fleet axis. Every name must resolve; empties rejected.
+pub fn parse_profile_list(list: &str) -> Result<Vec<String>, String> {
+    let mut out = Vec::new();
+    for name in list.split(',') {
+        let name = name.trim();
+        if name.is_empty() {
+            return Err(format!("empty profile name in {list:?}"));
+        }
+        device_profile(name)?;
+        out.push(name.to_string());
+    }
+    if out.is_empty() {
+        return Err("empty profile list".to_string());
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_profile_is_internally_valid() {
+        for name in PROFILE_NAMES {
+            let p = device_profile(name).unwrap();
+            assert_eq!(p.name, name);
+            p.gpu.validate().unwrap_or_else(|e| {
+                panic!("{name}: invalid gpu config: {e}")
+            });
+            let mut armed = p.thermal.clone();
+            armed.enabled = true;
+            armed.validate().unwrap_or_else(|e| {
+                panic!("{name}: invalid thermal config: {e}")
+            });
+            assert!(
+                !p.thermal.enabled,
+                "{name}: profiles must not enable thermal themselves"
+            );
+            assert!(p.gpu.boost_mhz <= p.gpu.f_max_mhz);
+        }
+        assert!(device_profile("h100-duct-taped").is_err());
+    }
+
+    #[test]
+    fn a6000_profile_is_the_default_device() {
+        let p = device_profile("a6000").unwrap();
+        assert_eq!(p.gpu, GpuConfig::default());
+    }
+
+    #[test]
+    fn apply_profile_preserves_the_enabled_switch() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.thermal.enabled = true;
+        apply_profile(&mut cfg, "jetson").unwrap();
+        assert!(cfg.thermal.enabled);
+        assert_eq!(cfg.gpu.f_max_mhz, 1305);
+        assert_eq!(cfg.thermal.trip_c, 70.0);
+        let mut cfg = ExperimentConfig::default();
+        apply_profile(&mut cfg, "consumer").unwrap();
+        assert!(!cfg.thermal.enabled);
+        assert!(apply_profile(&mut cfg, "nope").is_err());
+    }
+
+    #[test]
+    fn profile_lists_parse_and_reject_junk() {
+        assert_eq!(
+            parse_profile_list("a100, jetson").unwrap(),
+            vec!["a100".to_string(), "jetson".to_string()]
+        );
+        // Repeats are fine — an 8-GPU fleet of one class is a list of
+        // one name, cycled.
+        assert_eq!(parse_profile_list("jetson").unwrap().len(), 1);
+        assert!(parse_profile_list("a100,,jetson").is_err());
+        assert!(parse_profile_list("").is_err());
+        assert!(parse_profile_list("a100,warp9").is_err());
+    }
+}

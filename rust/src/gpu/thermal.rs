@@ -1,0 +1,224 @@
+//! Lumped RC thermal model + hysteretic throttle (DESIGN.md §1).
+//!
+//! The die is one thermal mass `C` (J/°C) behind one resistance `R`
+//! (°C/W) to ambient. Over any span where electrical power is
+//! piecewise-constant — exactly the spans the energy accounting
+//! already integrates with one `p·dt` product each — the temperature
+//! has the closed form
+//!
+//! ```text
+//! T(t0+dt) = T∞ + (T(t0) − T∞)·exp(−dt/RC),   T∞ = T_amb + P·R
+//! ```
+//!
+//! so [`ThermalModel::integrate`] is called once per accounted span
+//! with the same `(power, dt)` pair the energy ledger uses. Because
+//! the engine's event-driven, quantized and decode-span modes emit the
+//! *identical* accounting-call sequence (the bitwise contract held by
+//! `perf_semantics`/`decode_span_semantics`), the temperature
+//! trajectory — and hence every throttle decision — is automatically
+//! bitwise-identical across modes too.
+//!
+//! Throttling is a hysteretic ceiling stepper evaluated only at window
+//! boundaries (deterministic, mode-independent instants): at or above
+//! `trip_c` the ceiling steps **down** by `step_down_mhz` per window;
+//! at or below `clear_c` it steps **up** by `step_up_mhz`, releasing
+//! entirely once it clears the table top. Between the two thresholds
+//! the ceiling holds (the hysteresis band).
+
+use crate::config::ThermalConfig;
+use crate::gpu::FreqTable;
+
+/// Lumped-RC die temperature with a hysteretic throttle ceiling.
+#[derive(Debug, Clone)]
+pub struct ThermalModel {
+    cfg: ThermalConfig,
+    temp_c: f64,
+    throttle_mhz: Option<u32>,
+    peak_temp_c: f64,
+    trips: u64,
+}
+
+impl ThermalModel {
+    pub fn new(cfg: &ThermalConfig) -> ThermalModel {
+        ThermalModel {
+            cfg: cfg.clone(),
+            temp_c: cfg.ambient_c,
+            throttle_mhz: None,
+            peak_temp_c: cfg.ambient_c,
+            trips: 0,
+        }
+    }
+
+    /// Advance the die temperature across a span of constant power.
+    /// One closed-form update per span — the thermal twin of
+    /// `PowerModel::span_energy_j`'s single `p·dt` product.
+    pub fn integrate(&mut self, power_w: f64, dt_s: f64) {
+        if dt_s <= 0.0 {
+            return;
+        }
+        let tau_s = self.cfg.r_c_per_w * self.cfg.c_j_per_c;
+        let t_inf = self.cfg.ambient_c + power_w * self.cfg.r_c_per_w;
+        self.temp_c = if tau_s > 0.0 {
+            t_inf + (self.temp_c - t_inf) * (-dt_s / tau_s).exp()
+        } else {
+            t_inf
+        };
+        if self.temp_c > self.peak_temp_c {
+            self.peak_temp_c = self.temp_c;
+        }
+    }
+
+    /// One hysteretic throttle step, evaluated at a window boundary.
+    /// Returns the ceiling now in force (`None` = unthrottled).
+    pub fn update_throttle(&mut self, table: &FreqTable) -> Option<u32> {
+        let floor = if self.cfg.floor_mhz == 0 {
+            table.min_mhz()
+        } else {
+            table.quantize_down(self.cfg.floor_mhz)
+        };
+        if self.temp_c >= self.cfg.trip_c {
+            if self.throttle_mhz.is_none() {
+                self.trips += 1;
+            }
+            let cur = self.throttle_mhz.unwrap_or_else(|| table.max_mhz());
+            let next = cur.saturating_sub(self.cfg.step_down_mhz).max(floor);
+            self.throttle_mhz = Some(table.quantize_down(next));
+        } else if self.temp_c <= self.cfg.clear_c {
+            if let Some(cur) = self.throttle_mhz {
+                let next = cur.saturating_add(self.cfg.step_up_mhz);
+                self.throttle_mhz = if next >= table.max_mhz() {
+                    None
+                } else {
+                    Some(table.quantize_down(next.max(floor)))
+                };
+            }
+        }
+        self.throttle_mhz
+    }
+
+    /// Current die temperature (°C).
+    pub fn temp_c(&self) -> f64 {
+        self.temp_c
+    }
+
+    /// Hottest temperature seen so far (°C).
+    pub fn peak_temp_c(&self) -> f64 {
+        self.peak_temp_c
+    }
+
+    /// The throttle ceiling currently in force, if any.
+    pub fn throttle_mhz(&self) -> Option<u32> {
+        self.throttle_mhz
+    }
+
+    /// Times the throttle engaged from a cold (unthrottled) state.
+    pub fn trips(&self) -> u64 {
+        self.trips
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GpuConfig;
+
+    fn cfg() -> ThermalConfig {
+        ThermalConfig {
+            enabled: true,
+            ambient_c: 25.0,
+            r_c_per_w: 0.1,
+            c_j_per_c: 100.0, // tau = 10 s
+            trip_c: 60.0,
+            clear_c: 50.0,
+            step_down_mhz: 150,
+            step_up_mhz: 30,
+            floor_mhz: 0,
+        }
+    }
+
+    fn table() -> FreqTable {
+        FreqTable::from_config(&GpuConfig::default())
+    }
+
+    #[test]
+    fn temperature_relaxes_toward_the_rc_fixed_point() {
+        let mut t = ThermalModel::new(&cfg());
+        assert_eq!(t.temp_c(), 25.0);
+        // 500 W through 0.1 °C/W → T∞ = 75 °C.
+        t.integrate(500.0, 1e9);
+        assert!((t.temp_c() - 75.0).abs() < 1e-6, "{}", t.temp_c());
+        // Cooling back at zero power relaxes to ambient.
+        t.integrate(0.0, 1e9);
+        assert!((t.temp_c() - 25.0).abs() < 1e-6);
+        assert!((t.peak_temp_c() - 75.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn split_spans_integrate_exactly_like_one_span() {
+        // The closed form composes: integrating 7 s then 3 s at the
+        // same power lands bitwise where one 10 s span lands. This is
+        // what keeps temperature bitwise across engine A/B modes that
+        // only differ in *where* they cut spans of equal power.
+        let mut a = ThermalModel::new(&cfg());
+        let mut b = ThermalModel::new(&cfg());
+        a.integrate(300.0, 10.0);
+        b.integrate(300.0, 7.0);
+        b.integrate(300.0, 3.0);
+        // exp(-10/τ) vs exp(-7/τ)·exp(-3/τ): equal to fp rounding.
+        assert!((a.temp_c() - b.temp_c()).abs() < 1e-9);
+        // Zero-width spans are no-ops, bit for bit.
+        let bits = b.temp_c().to_bits();
+        b.integrate(300.0, 0.0);
+        assert_eq!(b.temp_c().to_bits(), bits);
+    }
+
+    #[test]
+    fn throttle_trips_steps_down_and_clears_with_hysteresis() {
+        let mut t = ThermalModel::new(&cfg());
+        let tab = table();
+        // Cold: no throttle.
+        assert_eq!(t.update_throttle(&tab), None);
+        // Hot: first trip steps down from the table top.
+        t.integrate(600.0, 1e9); // 85 °C
+        assert_eq!(t.update_throttle(&tab), Some(1650));
+        assert_eq!(t.update_throttle(&tab), Some(1500));
+        assert_eq!(t.trips(), 1);
+        // Hysteresis band (between clear and trip): hold.
+        t.integrate(0.0, 1e9);
+        t.integrate(300.0, 1e9); // 55 °C
+        assert_eq!(t.update_throttle(&tab), Some(1500));
+        // Cool: step back up, then release past the table top.
+        t.integrate(0.0, 1e9); // 25 °C
+        assert_eq!(t.update_throttle(&tab), Some(1530));
+        for _ in 0..20 {
+            t.update_throttle(&tab);
+        }
+        assert_eq!(t.throttle_mhz(), None);
+        assert_eq!(t.trips(), 1);
+    }
+
+    #[test]
+    fn throttle_floors_at_the_table_min() {
+        let mut t = ThermalModel::new(&ThermalConfig {
+            step_down_mhz: 10_000,
+            ..cfg()
+        });
+        let tab = table();
+        t.integrate(600.0, 1e9);
+        assert_eq!(t.update_throttle(&tab), Some(tab.min_mhz()));
+        // Stays pinned at the floor while hot, never below it.
+        assert_eq!(t.update_throttle(&tab), Some(tab.min_mhz()));
+    }
+
+    #[test]
+    fn explicit_floor_is_quantized_onto_the_grid() {
+        let mut t = ThermalModel::new(&ThermalConfig {
+            step_down_mhz: 10_000,
+            floor_mhz: 608, // off-grid → floors to 600
+            ..cfg()
+        });
+        let tab = table();
+        t.integrate(600.0, 1e9);
+        assert_eq!(t.update_throttle(&tab), Some(600));
+    }
+}

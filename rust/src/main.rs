@@ -3,7 +3,9 @@
 //! ```text
 //! agft serve       --workload normal --governor agft --duration 600
 //! agft cluster     --gpus 8 --route ll --power-cap 1200 --seeds 3
+//! agft cluster     --gpus 4 --profiles a100,jetson --thermal
 //! agft compare     --governors agft,ondemand,slo,bandit,default --seeds 5
+//! agft compare     --profile jetson --thermal --seeds 3
 //! agft compare     --shard 1/4 --out shard1.csv    (grid partitioning)
 //! agft sweep       --workload normal --step 45 --duration 240
 //! agft sweep       --shard 1/4 --out shard1.csv   (grid partitioning)
@@ -66,6 +68,25 @@ fn base_config(args: &Args) -> Result<ExperimentConfig, String> {
     }
     if let Some(g) = args.get("governor") {
         cfg.governor = config::schema::parse_governor(g)?;
+    }
+    // `--profile <name>` swaps the whole simulated board — frequency
+    // table, power coefficients, idle floor, thermal parameters — in
+    // one flag (overriding any `[gpu]` TOML section). `--profiles
+    // a,b,...` cycles classes across a cluster's fleet indices. Neither
+    // arms thermal dynamics; that stays the explicit `--thermal`
+    // switch (or `[thermal] enabled = true`), so profile selection
+    // alone keeps every run bitwise-identical to a thermal-free build.
+    if let Some(p) = args.get("profile") {
+        agft::gpu::apply_profile(&mut cfg, p)
+            .map_err(|e| format!("--profile: {e}"))?;
+    }
+    if let Some(list) = args.get("profiles") {
+        cfg.gpu_profiles = agft::gpu::profile::parse_profile_list(list)
+            .map_err(|e| format!("--profiles: {e}"))?;
+    }
+    if args.has("thermal") {
+        cfg.thermal.enabled = true;
+        cfg.thermal.validate().map_err(|e| format!("--thermal: {e}"))?;
     }
     // `--faults none|standard|gpu-death|key=value,...` layers a fault
     // schedule over the run; absent (and with no `[faults]` TOML
@@ -218,6 +239,15 @@ fn cmd_cluster(args: &Args) -> Result<(), String> {
         println!(
             "faults: {} of {gpus} GPUs survived seed {}",
             first.survivors(),
+            seed_list[0],
+        );
+    }
+    if cfg.thermal.enabled {
+        println!(
+            "thermal: fleet peak {:.1} °C, {} throttled window(s) \
+             (seed {})",
+            first.fleet_peak_temp_c().unwrap_or(f64::NAN),
+            first.fleet_throttle_windows(),
             seed_list[0],
         );
     }
@@ -848,12 +878,16 @@ fn cmd_orchestrate(args: &Args) -> Result<(), String> {
     let mut forwarded: Vec<String> = Vec::new();
     for key in [
         "config", "workload", "governor", "governors", "seeds", "seed",
-        "duration", "rps", "step", "which", "faults",
+        "duration", "rps", "step", "which", "faults", "profile",
+        "profiles",
     ] {
         if let Some(v) = args.get(key) {
             forwarded.push(format!("--{key}"));
             forwarded.push(v.to_string());
         }
+    }
+    if args.has("thermal") {
+        forwarded.push("--thermal".to_string());
     }
     let jobs: Vec<orchestrator::ShardJob> = (1..=shards)
         .map(|k| {
@@ -938,8 +972,13 @@ fn usage() -> ! {
          (spec: comma list of presets, key=value probabilities, and \
          event=gpu<N>@<t>:death|reset[:warmup]|ceiling:<mhz>; see \
          EXPERIMENTS.md §Fault injection)\n\
+         device & thermal: --profile a6000|a100|consumer|jetson \
+         (swap the simulated board) --thermal (arm the RC thermal \
+         model + hysteretic throttle; see EXPERIMENTS.md §Devices & \
+         thermal)\n\
          cluster options: --gpus N --route rr|ll|prefix|slo \
-         [--power-cap W] [--seeds K] [--out per_gpu.csv] (fleet \
+         [--power-cap W] [--seeds K] [--profiles a,b,... \
+         (heterogeneous fleet, cycled)] [--out per_gpu.csv] (fleet \
          co-simulation on the global next-event heap)\n\
          compare options: --governors a,b,c (baseline matrix, e.g. \
          agft,ondemand,slo,bandit,default)\n\

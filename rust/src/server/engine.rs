@@ -260,9 +260,13 @@ impl Engine {
             v.sort_by(|a, b| a.arrival_s.total_cmp(&b.arrival_s));
             v.into()
         };
+        let mut gpu = SimGpu::new(&cfg.gpu, cfg.governor);
+        if cfg.thermal.enabled {
+            gpu.enable_thermal(&cfg.thermal);
+        }
         Ok(Engine {
             clock: Clock::new(),
-            gpu: SimGpu::new(&cfg.gpu, cfg.governor),
+            gpu,
             sched: Scheduler::new(&cfg.server),
             perf: PerfModel::new(&cfg.gpu, &cfg.model),
             arrivals: requests,
@@ -710,6 +714,33 @@ impl Engine {
             let dt = self.gpu.account_idle_span(start, self.clock.now());
             self.counters.idle_time_s += dt;
         }
+    }
+
+    /// Window-boundary thermal hook: bring the die temperature current
+    /// — closing and immediately reopening any open idle span so the
+    /// RC integration covers everything up to the boundary — then run
+    /// one hysteretic throttle step. Callers gate on
+    /// [`Engine::thermal_enabled`]: splitting an idle span re-orders
+    /// its float sums, which must never happen on the thermal-off path
+    /// (the bitwise contract). Window boundaries are mode-independent
+    /// instants, so both A/B engine modes split identically and stay
+    /// bitwise-equal to *each other* with thermal on.
+    pub fn thermal_window_boundary(&mut self) {
+        debug_assert!(
+            self.gpu.thermal_enabled(),
+            "thermal boundary hook on a thermal-off engine"
+        );
+        if let Some(start) = self.idle_span_start.take() {
+            let dt = self.gpu.account_idle_span(start, self.clock.now());
+            self.counters.idle_time_s += dt;
+            self.idle_span_start = Some(self.clock.now());
+        }
+        self.gpu.update_thermal_throttle();
+    }
+
+    /// True when the thermal model is armed on this engine's GPU.
+    pub fn thermal_enabled(&self) -> bool {
+        self.gpu.thermal_enabled()
     }
 
     fn harvest_finished(&mut self) {

@@ -170,6 +170,20 @@ impl Governor for SwitchingBanditGovernor {
         &mut self,
         obs: &WindowObservation,
     ) -> Option<ClockDecision> {
+        // Re-sync to the effective clock the device reports, snapped to
+        // the nearest *arm* (a ceiling-quantized reading sits on the
+        // fine device grid, not the coarse arm grid): the switch-cost
+        // accounting and the stay-put greedy fallback both key off
+        // `cur_mhz`, so a stale requested clock would misprice every
+        // decision under a throttle. Zero = fixture snapshot, skip.
+        let seen = obs.snapshot.clock_mhz;
+        if seen != 0 && seen != self.cur_mhz {
+            self.cur_mhz = *self
+                .arms
+                .iter()
+                .min_by_key(|&&f| (f.abs_diff(seen), f))
+                .expect("coarse grid is never empty");
+        }
         let prev = self.last_snap.replace(obs.snapshot)?;
         let d = obs.snapshot.delta(&prev);
         let tokens = d.prefill_tokens + d.decode_tokens;
@@ -273,6 +287,27 @@ mod tests {
             1,
         );
         assert_eq!(g.initial_clock_mhz(), Some(1230));
+        assert!(g.arms.contains(&g.cur_mhz));
+    }
+
+    #[test]
+    fn off_arm_effective_clock_snaps_to_nearest_arm() {
+        // A ceiling-clamped device reading (913 → fine grid, off the
+        // 60 MHz arm grid) must land the bandit's notion of "current"
+        // on a real arm, or the greedy fallback silently jumps to
+        // f_max.
+        let mut g = governor(1);
+        let mut snap = MetricsSnapshot::default();
+        snap.time_s = 0.8;
+        snap.clock_mhz = 913;
+        let obs = WindowObservation {
+            snapshot: snap,
+            ttft_mean: None,
+            tpot_mean: None,
+            e2e_mean: None,
+        };
+        let _ = g.observe_window(&obs);
+        assert_eq!(g.cur_mhz, 930);
         assert!(g.arms.contains(&g.cur_mhz));
     }
 

@@ -72,6 +72,16 @@ impl Governor for OndemandGovernor {
         &mut self,
         obs: &WindowObservation,
     ) -> Option<ClockDecision> {
+        // Re-sync to the clock the device actually ran: a thermal
+        // throttle or fault ceiling can clamp the effective clock below
+        // the last request, and stepping relative to the requested
+        // clock would walk the policy off reality (a ceiling-pinned
+        // device would keep "holding" a frequency it never runs). A
+        // zero reading is a snapshot with no device behind it (unit
+        // fixtures), not a clock.
+        if obs.snapshot.clock_mhz != 0 {
+            self.cur_mhz = obs.snapshot.clock_mhz;
+        }
         let prev = self.last_snap.replace(obs.snapshot)?;
         let d = obs.snapshot.delta(&prev);
         let util = Self::utilization(d.idle_time_s, d.dt_s)?;
@@ -201,6 +211,20 @@ mod tests {
         // The governor keeps working on the next real window.
         let d = g.observe_window(&window(&mut snap, 0.5)).unwrap();
         assert_eq!(d.freq_mhz, held);
+    }
+
+    #[test]
+    fn ceiling_clamped_clock_resyncs_the_policy() {
+        // The device reports the *effective* clock. When a ceiling
+        // clamps it to 900 behind the governor's back, the next
+        // step-down must be relative to 900, not the stale request.
+        let mut g = governor();
+        let mut snap = MetricsSnapshot::default();
+        snap.clock_mhz = 1800;
+        let _ = g.observe_window(&window(&mut snap, 0.0));
+        snap.clock_mhz = 900;
+        let d = g.observe_window(&window(&mut snap, 0.0)).unwrap();
+        assert_eq!(d.freq_mhz, 900 - 120);
     }
 
     #[test]

@@ -65,6 +65,15 @@ impl Governor for SloAwareGovernor {
         &mut self,
         obs: &WindowObservation,
     ) -> Option<ClockDecision> {
+        // Re-sync to the effective clock first: under a thermal or
+        // fault ceiling the device runs below the last request, and a
+        // recovery loop stepping up from the *requested* clock would
+        // saturate at a frequency the ceiling never grants while
+        // latency burns. Zero means "no device behind this snapshot"
+        // (unit fixtures), never a real reading.
+        if obs.snapshot.clock_mhz != 0 {
+            self.cur_mhz = obs.snapshot.clock_mhz;
+        }
         let (Some(ttft), Some(tpot)) = (obs.ttft_mean, obs.tpot_mean)
         else {
             // No completions this window — no signal, hold the clock.
@@ -186,6 +195,17 @@ mod tests {
         assert_eq!(d.freq_mhz, 1800 - 15);
         let d = g.observe_window(&obs(Some(0.30), Some(0.005))).unwrap();
         assert_eq!(d.freq_mhz, 1800);
+    }
+
+    #[test]
+    fn ceiling_clamped_clock_resyncs_the_policy() {
+        // Device clamped to 900 MHz by a ceiling: the comfortable
+        // step-down must move from 900, not the stale 1800 request.
+        let mut g = governor();
+        let mut o = obs(Some(0.03), Some(0.005));
+        o.snapshot.clock_mhz = 900;
+        let d = g.observe_window(&o).unwrap();
+        assert_eq!(d.freq_mhz, 900 - 30);
     }
 
     #[test]

@@ -214,6 +214,194 @@ fn chaos_under_a_power_cap_keeps_the_coordinator_sane() {
     }
 }
 
+/// Windows may only run at or below the throttle ceiling the previous
+/// boundary published: if window `k` recorded `throttle_mhz = Some(c)`,
+/// window `k+1` was locked (`clock_mhz`, scraped at its start) under
+/// that ceiling.
+fn check_throttle_clamps(label: &str, r: &RunResult) {
+    for pair in r.windows.windows(2) {
+        if let Some(c) = pair[0].throttle_mhz {
+            assert!(
+                pair[1].clock_mhz <= c,
+                "{label}: window ran at {} above the {} MHz throttle",
+                pair[1].clock_mhz,
+                c
+            );
+        }
+    }
+}
+
+#[test]
+fn thermal_throttling_chaos_never_breaks_any_governor() {
+    // Randomized device profiles with hair-trigger thermals layered on
+    // the chaos fault schedules: every governor must survive, keep
+    // time monotone, balance the fault ledgers, and record a finite
+    // die temperature on every window.
+    let mut rng = Pcg64::new(0xC4A08);
+    let profiles = ["a6000", "a100", "consumer", "jetson"];
+    for (i, governor) in governors().into_iter().enumerate() {
+        let mut cfg = base_cfg(governor);
+        cfg.seed = 100 + i as u64;
+        cfg.arrival_rps = 4.0;
+        agft::gpu::apply_profile(
+            &mut cfg,
+            profiles[rng.index(profiles.len())],
+        )
+        .unwrap();
+        cfg.thermal.enabled = true;
+        // Tiny thermal mass + a trip point barely above ambient so the
+        // 24 s horizon actually exercises the hysteresis loop.
+        cfg.thermal.c_j_per_c = 50.0 + 100.0 * rng.f64();
+        cfg.thermal.trip_c = cfg.thermal.ambient_c + 8.0;
+        cfg.thermal.clear_c = cfg.thermal.ambient_c + 4.0;
+        cfg.faults = chaos_faults(&mut rng, 1);
+        let reqs = realize(&cfg);
+        let r = GovernorDriver::run(&cfg, reqs).unwrap();
+        let label = format!("thermal chaos {governor:?}");
+        check_run(&label, &r);
+        check_throttle_clamps(&label, &r);
+        for w in &r.windows {
+            let t = w.temp_c.expect("thermal run must record temps");
+            assert!(
+                t.is_finite() && t >= cfg.thermal.ambient_c - 1e-9,
+                "{label}: temp {t}"
+            );
+        }
+    }
+}
+
+#[test]
+fn disabled_thermal_params_are_bitwise_inert() {
+    // Aggressive thermal parameters with `enabled = false` must not
+    // perturb a single bit of any governor's run — the thermal-off
+    // contract, held end-to-end (the device never constructs the
+    // model, so no float arithmetic changes).
+    for governor in governors() {
+        let clean = base_cfg(governor);
+        let mut hot = clean.clone();
+        hot.thermal.ambient_c = 90.0;
+        hot.thermal.r_c_per_w = 5.0;
+        hot.thermal.c_j_per_c = 1.0;
+        hot.thermal.trip_c = 95.0;
+        hot.thermal.clear_c = 92.0;
+        hot.thermal.step_down_mhz = 600;
+        assert!(hot.thermal.is_inert());
+        let a = GovernorDriver::run(&clean, realize(&clean)).unwrap();
+        let b = GovernorDriver::run(&hot, realize(&hot)).unwrap();
+        assert_eq!(a.windows.len(), b.windows.len());
+        for (wa, wb) in a.windows.iter().zip(&b.windows) {
+            assert_eq!(wa.t_s.to_bits(), wb.t_s.to_bits());
+            assert_eq!(wa.energy_j.to_bits(), wb.energy_j.to_bits());
+            assert_eq!(wa.clock_mhz, wb.clock_mhz);
+            assert_eq!(wa.tokens, wb.tokens);
+            assert!(wa.temp_c.is_none() && wb.temp_c.is_none());
+            assert!(wa.throttle_mhz.is_none());
+        }
+        assert_eq!(
+            a.total_energy_j.to_bits(),
+            b.total_energy_j.to_bits(),
+            "{governor:?} drifted under disabled thermal params"
+        );
+        assert_eq!(a.clock_changes, b.clock_changes);
+        assert_eq!(a.peak_temp_c(), None);
+        assert_eq!(a.throttle_windows(), 0);
+    }
+}
+
+#[test]
+fn forced_ceiling_governors_step_relative_to_the_effective_clock() {
+    // A `ceiling:903` fault (floor-quantized to 900 — nearest-rounding
+    // would have licensed 915) lands at t = 4 s under heavy load. The
+    // SLO governor's recovery loop then sees violated latencies every
+    // window; pre-fix it ratcheted its *requested* clock to f_max and
+    // kept reasoning from a frequency the device never ran. Post-fix
+    // it re-syncs to the effective clock each window, so no decision
+    // can exceed ceiling + one step-up.
+    let mut cfg = base_cfg(GovernorKind::SloAware);
+    cfg.arrival_rps = 8.0;
+    cfg.faults.events.push(GpuFaultEvent {
+        gpu: 0,
+        t_s: 4.0,
+        kind: GpuFaultKind::ThermalCeiling { mhz: 903 },
+    });
+    let r = GovernorDriver::run(&cfg, realize(&cfg)).unwrap();
+    check_run("effective-clock regression", &r);
+    // Ground truth: every window after the event ran at ≤ 900 MHz.
+    assert!(
+        r.windows.iter().any(|w| w.t_s > 5.6 && w.clock_mhz <= 900),
+        "ceiling never landed"
+    );
+    for w in &r.windows {
+        if w.t_s > 5.6 {
+            assert!(
+                w.clock_mhz <= 900,
+                "window at t={} ran {} above the ceiling",
+                w.t_s,
+                w.clock_mhz
+            );
+        }
+    }
+    // Governor's view: its decision log in the post-event tail stays
+    // pinned near the ceiling instead of walking off to f_max.
+    let tel = r.tuner.as_ref().unwrap();
+    let tail: Vec<u32> = tel
+        .freq_log
+        .iter()
+        .skip(tel.freq_log.len() / 2)
+        .map(|&(_, f)| f)
+        .collect();
+    assert!(!tail.is_empty());
+    let step_up = agft::config::SloAwareConfig::default().step_up_mhz;
+    for f in tail {
+        assert!(
+            f <= 900 + step_up,
+            "requested {f} MHz: stepping from the requested clock, \
+             not the effective one"
+        );
+    }
+}
+
+#[test]
+fn page_hinkley_fires_when_throttling_shifts_the_reward_landscape() {
+    // The paper's non-stationarity payoff, driven by physics instead of
+    // an injected workload switch: AGFT converges on a cool device,
+    // then the RC die temperature crosses the trip point, the throttle
+    // walks the ceiling down, window EDP collapses — and the
+    // Page-Hinkley detector must notice the drift and alarm.
+    let mut cfg = base_cfg(GovernorKind::Agft);
+    cfg.duration_s = 400.0;
+    cfg.arrival_rps = 3.0;
+    cfg.tuner.maturity_rounds = 20;
+    cfg.tuner.converge_stable_rounds = 20;
+    cfg.thermal.enabled = true;
+    cfg.thermal.ambient_c = 25.0;
+    cfg.thermal.r_c_per_w = 0.3;
+    cfg.thermal.c_j_per_c = 300.0; // τ = 90 s: converge first, cook later
+    cfg.thermal.trip_c = 48.0;
+    cfg.thermal.clear_c = 42.0;
+    cfg.thermal.step_down_mhz = 300;
+    cfg.thermal.step_up_mhz = 15;
+    let r = GovernorDriver::run(&cfg, realize(&cfg)).unwrap();
+    let throttled = r.throttle_windows();
+    assert!(
+        throttled > 0,
+        "the device never throttled — thermal parameters too tame"
+    );
+    check_throttle_clamps("ph-under-throttle", &r);
+    assert!(
+        r.peak_temp_c().unwrap() >= cfg.thermal.trip_c,
+        "peak {:?} never reached the {} °C trip",
+        r.peak_temp_c(),
+        cfg.thermal.trip_c
+    );
+    let tel = r.tuner.as_ref().expect("agft telemetry");
+    assert!(
+        tel.ph_alarms >= 1,
+        "throttle shifted the reward landscape ({throttled} throttled \
+         windows) but Page-Hinkley never alarmed: {tel:?}"
+    );
+}
+
 #[test]
 fn silent_fault_config_is_bitwise_identical_to_fault_free() {
     // All probabilities zero, one event far past the horizon: the
