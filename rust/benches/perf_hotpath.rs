@@ -22,6 +22,11 @@
 //!   GPUs: the global next-event heap must replay the identical
 //!   cluster (bitwise per-engine timelines) in strictly fewer engine
 //!   polls than the naive round-robin-tick reference sweep.
+//! * `cluster_par` — the same fleets through the route-then-advance
+//!   parallel epochs at 1/2/4/8 fleet threads: every thread count must
+//!   reproduce the sequential heap bitwise (asserted in-bench), while
+//!   the threads-vs-wall-clock curve lands in the JSON for the
+//!   EXPERIMENTS.md §Cluster speedup table.
 //! * `thermal jetson replay` — the jetson device profile under
 //!   sustained load in both thermal modes: the off leg must record no
 //!   temperatures or throttles, the on leg must trip the RC model and
@@ -41,7 +46,8 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use agft::cluster::{
-    run_cluster, run_cluster_reference, ClusterSpec, RoutePolicy,
+    run_cluster, run_cluster_parallel, run_cluster_reference,
+    ClusterSpec, RoutePolicy,
 };
 use agft::config::{ExperimentConfig, GovernorKind, TunerConfig, WorkloadKind};
 use agft::experiment::executor::Executor;
@@ -124,6 +130,7 @@ fn cluster_hotpath(gpus: usize, n_req: u64) -> Json {
         gpus,
         route: RoutePolicy::RoundRobin,
         power_cap_w: None,
+        fleet_threads: 1,
     };
     let t0 = Instant::now();
     let heap = run_cluster(&cfg, &spec, Arc::clone(&requests)).unwrap();
@@ -172,6 +179,95 @@ fn cluster_hotpath(gpus: usize, n_req: u64) -> Json {
         .set("finished", heap.fleet_finished())
         .set("heap_wall_s", heap_s)
         .set("naive_wall_s", naive_s);
+    row
+}
+
+/// The parallel-epoch fleet at size `gpus`: the identical workload as
+/// [`cluster_hotpath`], run once on the sequential heap and then at
+/// 1/2/4/8 fleet threads through `run_cluster_parallel`. Every thread
+/// count must reproduce the heap bitwise — per-GPU timelines, energy
+/// bits, routed counts, poll totals — which is asserted here so the CI
+/// smoke job enforces the identity at N=256 on every push, while the
+/// threads-vs-wall-clock curve lands in the JSON counter row
+/// (`seq_wall_s`, `wall_t{1,2,4,8}_s`, `speedup_t8`).
+fn cluster_parallel_hotpath(gpus: usize, n_req: u64) -> Json {
+    let cfg = ExperimentConfig {
+        duration_s: 120.0,
+        governor: GovernorKind::Locked(1230),
+        ..ExperimentConfig::default()
+    };
+    let requests: Arc<[Request]> = (0..n_req)
+        .map(|i| {
+            Request::new(
+                i,
+                0.02 * i as f64,
+                128,
+                50 + (i % 7) as u32 * 400,
+                i as u32,
+                0,
+            )
+        })
+        .collect::<Vec<_>>()
+        .into();
+    let seq_spec = ClusterSpec {
+        gpus,
+        route: RoutePolicy::RoundRobin,
+        power_cap_w: None,
+        fleet_threads: 1,
+    };
+    let t0 = Instant::now();
+    let seq = run_cluster(&cfg, &seq_spec, Arc::clone(&requests)).unwrap();
+    let seq_s = t0.elapsed().as_secs_f64();
+
+    let mut row = Json::obj();
+    row.set("gpus", gpus)
+        .set("finished", seq.fleet_finished())
+        .set("seq_wall_s", seq_s);
+    let mut wall_t8 = seq_s;
+    for threads in [1usize, 2, 4, 8] {
+        let spec = ClusterSpec {
+            fleet_threads: threads,
+            ..seq_spec
+        };
+        let t0 = Instant::now();
+        let par =
+            run_cluster_parallel(&cfg, &spec, Arc::clone(&requests))
+                .unwrap();
+        let wall_s = t0.elapsed().as_secs_f64();
+
+        assert_eq!(par.routed, seq.routed);
+        assert_eq!(par.alive, seq.alive);
+        assert_eq!(par.engine_polls, seq.engine_polls);
+        assert_eq!(par.fleet_threads, threads);
+        for (a, b) in par.per_gpu.iter().zip(&seq.per_gpu) {
+            assert_eq!(a.windows.len(), b.windows.len());
+            for (wa, wb) in a.windows.iter().zip(&b.windows) {
+                assert_eq!(wa.t_s.to_bits(), wb.t_s.to_bits());
+                assert_eq!(wa.energy_j.to_bits(), wb.energy_j.to_bits());
+                assert_eq!(wa.clock_mhz, wb.clock_mhz);
+            }
+            assert_eq!(
+                a.total_energy_j.to_bits(),
+                b.total_energy_j.to_bits(),
+                "parallel epochs must be bitwise energy-identical"
+            );
+            assert_eq!(a.finished.len(), b.finished.len());
+            for (fa, fb) in a.finished.iter().zip(&b.finished) {
+                assert_eq!(fa.finish_s.to_bits(), fb.finish_s.to_bits());
+            }
+        }
+        println!(
+            "cluster_par N={gpus:<3} threads={threads}      \
+             {wall_s:7.3} s wall | bitwise == heap | speedup vs seq \
+             {:.2}x",
+            seq_s / wall_s.max(1e-9),
+        );
+        row.set(format!("wall_t{threads}_s").as_str(), wall_s);
+        if threads == 8 {
+            wall_t8 = wall_s;
+        }
+    }
+    row.set("speedup_t8", seq_s / wall_t8.max(1e-9));
     row
 }
 
@@ -442,6 +538,13 @@ fn main() {
     let cluster_n64 = cluster_hotpath(64, 96);
     let cluster_n256 = cluster_hotpath(256, 384);
 
+    // --- parallel window epochs: threads-vs-wall-clock curve ---
+    // Same fleets through route-then-advance epochs; every thread
+    // count is asserted bitwise-identical to the heap in-bench, and
+    // the wall-clock curve fills the EXPERIMENTS.md speedup table.
+    let cluster_par_n64 = cluster_parallel_hotpath(64, 96);
+    let cluster_par_n256 = cluster_parallel_hotpath(256, 384);
+
     // --- device profile + RC thermal throttle replay ---
     // The jetson-class board under sustained load, end to end through
     // the governor driver: the RC die model must cross the trip point,
@@ -618,16 +721,21 @@ fn main() {
     th.set("windows", th_windows)
         .set("throttled_windows", th_throttled)
         .set("peak_temp_c", th_peak_c);
+    let mut cluster_par = Json::obj();
+    cluster_par
+        .set("n64", cluster_par_n64)
+        .set("n256", cluster_par_n256);
     let mut counters = Json::obj();
     counters
         .set("kv_pressure", kv)
         .set("steady_decode", sd)
         .set("cluster_n64", cluster_n64)
         .set("cluster_n256", cluster_n256)
+        .set("cluster_par", cluster_par)
         .set("thermal_jetson", th);
     let mut doc = Json::obj();
     doc.set("bench", "perf_hotpath")
-        .set("schema", 7u64)
+        .set("schema", 8u64)
         .set("ns_per_op", ns_per_op)
         .set("counters", counters);
     emit_bench_json(&doc);

@@ -2,7 +2,7 @@
 //! per-tick reference.
 //!
 //! Both entry points drive the identical per-GPU window step
-//! ([`Fleet::advance_one`]: route the shared stream up to the GPU's
+//! (`Fleet::advance_one`: route the shared stream up to the GPU's
 //! horizon → `run_until` the window boundary →
 //! [`WindowTracker::record_window`] → optional power-cap bookkeeping),
 //! so their per-engine timelines are bitwise-identical **by
@@ -19,6 +19,11 @@
 //!   polling finished engines' [`next_event_time`] oracles just to
 //!   learn they still have nothing to do — the naive cost the heap
 //!   avoids, asserted strictly higher in `benches/perf_hotpath.rs`.
+//! * [`super::parallel::run_cluster_parallel`] (its own module)
+//!   restructures the same dispatch into route-then-advance window
+//!   epochs so every alive engine's window can run on a worker thread
+//!   — bitwise-identical to [`run_cluster`], held by the cluster/chaos
+//!   property suites.
 //!
 //! **Engine polls** counts every touch of an engine made to decide or
 //! advance fleet time: each `run_until` call and each oracle check of
@@ -62,6 +67,11 @@ pub struct ClusterSpec {
     /// [`PowerCapCoordinator`]; `None` leaves every governor
     /// uncoordinated.
     pub power_cap_w: Option<f64>,
+    /// Worker threads for [`super::parallel::run_cluster_parallel`]'s
+    /// phase-B window advance. `0` or `1` select the sequential heap
+    /// loop byte for byte; [`run_cluster`] itself ignores the knob
+    /// entirely (it *is* the sequential path).
+    pub fleet_threads: usize,
 }
 
 /// One cluster run's full output.
@@ -81,6 +91,11 @@ pub struct ClusterResult {
     /// permanent death ([`crate::faults::GpuFaultKind::Death`]); all
     /// `true` on fault-free runs.
     pub alive: Vec<bool>,
+    /// Fleet threads the run actually executed on (1 = the sequential
+    /// heap loop). Execution-shape metadata only — every other field
+    /// is bitwise-independent of it, and the per-GPU CSV deliberately
+    /// omits it so CSVs `cmp` equal across thread counts.
+    pub fleet_threads: usize,
 }
 
 impl ClusterResult {
@@ -175,28 +190,36 @@ impl ClusterResult {
     }
 }
 
-/// Per-GPU loop state alongside its engine.
-struct GpuSlot {
+/// Per-GPU loop state alongside its engine. The boundary/done fields
+/// are `pub(super)` so the parallel loop can sweep alive slots; the
+/// governor/tracker pair stays private — only [`advance_gpu_window`]
+/// (here) drives it.
+pub(super) struct GpuSlot {
     governor: Box<dyn Governor>,
     tracker: WindowTracker,
     /// Next window boundary (the standalone driver's `t_next += w`
     /// recurrence, kept per GPU).
-    t_next: f64,
+    pub(super) t_next: f64,
     /// Window index of `t_next` (the heap key; u64 so ordering is
     /// exact where accumulated f64 boundaries might tie).
-    window: u64,
-    done: bool,
+    pub(super) window: u64,
+    pub(super) done: bool,
     /// End timestamp of the previously recorded window (average-power
     /// measurement baseline for the cap coordinator).
     prev_t_s: f64,
 }
 
-/// Shared co-simulation state both loop shapes drive.
-struct Fleet<'a> {
-    cfg: &'a ExperimentConfig,
-    window_s: f64,
-    engines: Vec<Engine>,
-    slots: Vec<GpuSlot>,
+/// Shared co-simulation state all three loop shapes (heap, per-tick
+/// reference, parallel epochs) drive. The engine-local fields are
+/// `pub(super)` so [`super::parallel`] can split disjoint `&mut`
+/// per-GPU work items out of them; everything routing/cap-shared
+/// (router, coordinator, group, stream cursor) stays private and is
+/// only reachable through the sequential methods below.
+pub(super) struct Fleet<'a> {
+    pub(super) cfg: &'a ExperimentConfig,
+    pub(super) window_s: f64,
+    pub(super) engines: Vec<Engine>,
+    pub(super) slots: Vec<GpuSlot>,
     router: Router,
     coordinator: Option<PowerCapCoordinator>,
     /// Per-GPU fault planes, `None` on fault-free runs so that path
@@ -204,7 +227,7 @@ struct Fleet<'a> {
     /// seeded from `(cfg.seed, gpu)` only, so fault sequences are
     /// identical between the heap and reference loops regardless of
     /// dispatch order — the bitwise A/B survives fault runs too.
-    planes: Option<Vec<FaultPlane>>,
+    pub(super) planes: Option<Vec<FaultPlane>>,
     /// Live GPUs' measurements for the current boundary group.
     group: Vec<CapInput>,
     requests: Arc<[Request]>,
@@ -214,7 +237,7 @@ struct Fleet<'a> {
 }
 
 impl<'a> Fleet<'a> {
-    fn new(
+    pub(super) fn new(
         cfg: &'a ExperimentConfig,
         spec: &ClusterSpec,
         requests: Arc<[Request]>,
@@ -321,7 +344,7 @@ impl<'a> Fleet<'a> {
         Ok(fleet)
     }
 
-    fn gpus(&self) -> usize {
+    pub(super) fn gpus(&self) -> usize {
         self.engines.len()
     }
 
@@ -333,7 +356,10 @@ impl<'a> Fleet<'a> {
     }
 
     /// Route every shared-stream arrival up to `horizon` to its GPU.
-    fn route_until(&mut self, horizon: f64) -> Result<(), String> {
+    pub(super) fn route_until(
+        &mut self,
+        horizon: f64,
+    ) -> Result<(), String> {
         while self.cursor < self.requests.len()
             && self.requests[self.cursor].arrival_s <= horizon
         {
@@ -351,99 +377,68 @@ impl<'a> Fleet<'a> {
     /// Advance GPU `i` one window through the standalone window
     /// machinery. Increments the poll count; flips the slot to done (or
     /// bumps its boundary) and records its cap-coordinator measurement.
-    fn advance_one(&mut self, i: usize) -> Result<(), String> {
+    ///
+    /// Composition of the two halves the parallel loop runs as
+    /// separate phases: [`advance_gpu_window`] (engine-local) followed
+    /// by [`Fleet::apply_shared`] (router/coordinator bookkeeping) —
+    /// plus the routing pre-step both loop shapes sequence before any
+    /// engine work.
+    pub(super) fn advance_one(&mut self, i: usize) -> Result<(), String> {
         debug_assert!(!self.slots[i].done);
         let t_next = self.slots[i].t_next;
         // Cover the run_until overshoot: arrivals inside it must be
         // enqueued now, since a standalone engine would pull them from
         // its own stream at the next window's first step.
         self.route_until(t_next.max(self.engines[i].clock.now()))?;
+        let out = advance_gpu_window(
+            self.cfg,
+            self.window_s,
+            &mut self.engines[i],
+            &mut self.slots[i],
+            self.planes.as_mut().map(|p| &mut p[i]),
+        );
+        self.apply_shared(i, &out);
+        Ok(())
+    }
 
-        let clock_before = self.engines[i].gpu.effective_mhz(true);
-        let alive = self.engines[i].run_until(t_next);
-        self.polls += 1;
-        if self.engines[i].thermal_enabled() {
-            // Same boundary sequencing as the standalone driver:
-            // integrate the open idle span, then let the hysteretic
-            // throttle move before the governor observes the window.
-            self.engines[i].thermal_window_boundary();
-        }
-
-        let slot = &mut self.slots[i];
-        let mut done = match self.planes.as_mut() {
-            None => slot.tracker.record_window(
-                self.cfg,
-                &mut self.engines[i],
-                slot.governor.as_mut(),
-                clock_before,
-                alive,
-            ),
-            Some(planes) => slot.tracker.record_window_faulty(
-                self.cfg,
-                &mut self.engines[i],
-                slot.governor.as_mut(),
-                clock_before,
-                alive,
-                &mut planes[i],
-            ),
-        };
-        let rec = slot
-            .tracker
-            .last_window()
-            .expect("window just recorded");
-        let (t_s, energy_j, clock_mhz) =
-            (rec.t_s, rec.energy_j, rec.clock_mhz);
-        let dt = t_s - slot.prev_t_s;
-        slot.prev_t_s = t_s;
-
-        // Scheduled GPU fault events fire at the boundary the window
-        // closed on (matching the standalone fault driver): a death
-        // retires the GPU for good — drained from the router, dropped
-        // from the power budget; a transient reset drains it until its
-        // warm-up ends, after which the next boundary re-admits it.
-        if let Some(planes) = self.planes.as_mut() {
-            let plane = &mut planes[i];
-            if !done {
-                plane.apply_due_events(&mut self.engines[i].gpu, t_next);
-            }
-            if plane.dead() {
-                done = true;
+    /// Apply one window's shared-state bookkeeping ([`AdvanceOutcome`])
+    /// for GPU `i`: poll accounting, router health, coordinator
+    /// retirement and the boundary group's cap measurement. Phase C of
+    /// the parallel loop calls this in GPU index order — the identical
+    /// order the heap pops within a window — so router masks and the
+    /// cap group are built bit for bit the same.
+    pub(super) fn apply_shared(&mut self, i: usize, out: &AdvanceOutcome) {
+        self.polls += out.polls;
+        if self.planes.is_some() {
+            if out.dead {
                 self.router.set_healthy(i, false);
                 if let Some(c) = self.coordinator.as_mut() {
                     c.note_retired(i);
                 }
             } else {
-                self.router.set_healthy(i, plane.healthy_at(t_next));
+                self.router.set_healthy(i, out.healthy);
             }
         }
-
-        if done {
-            slot.done = true;
-        } else {
-            slot.t_next += self.window_s;
-            slot.window += 1;
-            if self.coordinator.is_some() {
-                self.group.push(CapInput {
-                    gpu: i,
-                    avg_power_w: if dt > 0.0 { energy_j / dt } else { 0.0 },
-                    clock_mhz,
-                });
-            }
+        if !out.done && self.coordinator.is_some() {
+            self.group.push(CapInput {
+                gpu: i,
+                avg_power_w: out.avg_power_w,
+                clock_mhz: out.clock_mhz,
+            });
         }
-        Ok(())
     }
 
     /// End of a boundary group: every live GPU has recorded the current
     /// window and none has run past it — the aligned point where the
     /// power-cap coordinator renegotiates the budget.
-    fn coordinate_boundary(&mut self) {
+    pub(super) fn coordinate_boundary(&mut self) {
         if let Some(c) = self.coordinator.as_mut() {
             c.coordinate(&mut self.engines, &self.group);
         }
         self.group.clear();
     }
 
-    fn finish(self) -> ClusterResult {
+    pub(super) fn finish(self) -> ClusterResult {
         let routed = self.router.routed().to_vec();
         let planes = self.planes;
         let alive: Vec<bool> = match &planes {
@@ -473,7 +468,118 @@ impl<'a> Fleet<'a> {
             engine_polls: self.polls,
             cap: self.coordinator.map(|c| c.telemetry().clone()),
             alive,
+            fleet_threads: 1,
         }
+    }
+}
+
+/// Everything one GPU's window advance hands back for the *shared*
+/// bookkeeping phase ([`Fleet::apply_shared`]). Splitting the step
+/// here is what lets phase B of the parallel loop run every alive
+/// engine concurrently: the engine/slot/plane triple is GPU-local, so
+/// only this summary has to cross back to the sequential barrier.
+pub(super) struct AdvanceOutcome {
+    /// The slot drained (or died) on this window.
+    pub(super) done: bool,
+    /// The fault plane reports permanent death (always `false` on
+    /// fault-free runs).
+    pub(super) dead: bool,
+    /// `plane.healthy_at(t_next)` when a plane exists and the GPU is
+    /// not dead (ignored otherwise).
+    pub(super) healthy: bool,
+    /// Last-window average board power (W) — the cap coordinator's
+    /// measurement input.
+    pub(super) avg_power_w: f64,
+    /// Clock the recorded window ran at (MHz).
+    pub(super) clock_mhz: u32,
+    /// Engine polls this advance consumed (always 1; accumulated
+    /// per-thread and merged in GPU order by [`Fleet::apply_shared`]).
+    pub(super) polls: u64,
+}
+
+/// The engine-local half of [`Fleet::advance_one`]: run GPU's engine
+/// to its window boundary, record the window through the standalone
+/// tracker/governor machinery, fire due GPU fault events, and bump the
+/// slot's boundary. Touches *only* the given engine/slot/plane triple
+/// — no router, coordinator or stream state — which is the property
+/// phase B of [`super::parallel::run_cluster_parallel`] relies on to
+/// run all alive GPUs on worker threads at once.
+pub(super) fn advance_gpu_window(
+    cfg: &ExperimentConfig,
+    window_s: f64,
+    engine: &mut Engine,
+    slot: &mut GpuSlot,
+    mut plane: Option<&mut FaultPlane>,
+) -> AdvanceOutcome {
+    debug_assert!(!slot.done);
+    let t_next = slot.t_next;
+    let clock_before = engine.gpu.effective_mhz(true);
+    let alive = engine.run_until(t_next);
+    if engine.thermal_enabled() {
+        // Same boundary sequencing as the standalone driver:
+        // integrate the open idle span, then let the hysteretic
+        // throttle move before the governor observes the window.
+        engine.thermal_window_boundary();
+    }
+
+    let mut done = match plane.as_deref_mut() {
+        None => slot.tracker.record_window(
+            cfg,
+            engine,
+            slot.governor.as_mut(),
+            clock_before,
+            alive,
+        ),
+        Some(p) => slot.tracker.record_window_faulty(
+            cfg,
+            engine,
+            slot.governor.as_mut(),
+            clock_before,
+            alive,
+            p,
+        ),
+    };
+    let rec = slot
+        .tracker
+        .last_window()
+        .expect("window just recorded");
+    let (t_s, energy_j, clock_mhz) =
+        (rec.t_s, rec.energy_j, rec.clock_mhz);
+    let dt = t_s - slot.prev_t_s;
+    slot.prev_t_s = t_s;
+
+    // Scheduled GPU fault events fire at the boundary the window
+    // closed on (matching the standalone fault driver): a death
+    // retires the GPU for good — drained from the router, dropped
+    // from the power budget; a transient reset drains it until its
+    // warm-up ends, after which the next boundary re-admits it.
+    let mut dead = false;
+    let mut healthy = true;
+    if let Some(p) = plane {
+        if !done {
+            p.apply_due_events(&mut engine.gpu, t_next);
+        }
+        if p.dead() {
+            done = true;
+            dead = true;
+        } else {
+            healthy = p.healthy_at(t_next);
+        }
+    }
+
+    if done {
+        slot.done = true;
+    } else {
+        slot.t_next += window_s;
+        slot.window += 1;
+    }
+    AdvanceOutcome {
+        done,
+        dead,
+        healthy,
+        avg_power_w: if dt > 0.0 { energy_j / dt } else { 0.0 },
+        clock_mhz,
+        polls: 1,
     }
 }
 
@@ -584,6 +690,7 @@ mod tests {
             gpus: 8,
             route: RoutePolicy::RoundRobin,
             power_cap_w: None,
+            fleet_threads: 1,
         };
         let reqs = staggered_stream(24);
         let heap = run_cluster(&cfg, &spec, reqs.clone()).unwrap();
@@ -630,6 +737,7 @@ mod tests {
             gpus: 3,
             route: RoutePolicy::LeastLoaded,
             power_cap_w: None,
+            fleet_threads: 1,
         };
         let empty: Arc<[Request]> = Vec::new().into();
         let r = run_cluster(&cfg, &spec, empty).unwrap();
@@ -653,6 +761,7 @@ mod tests {
                 gpus: 0,
                 route: RoutePolicy::RoundRobin,
                 power_cap_w: None,
+                fleet_threads: 1,
             },
             empty.clone(),
         );
@@ -663,6 +772,7 @@ mod tests {
                 gpus: 2,
                 route: RoutePolicy::RoundRobin,
                 power_cap_w: Some(-5.0),
+                fleet_threads: 1,
             },
             empty.clone(),
         );
@@ -676,6 +786,7 @@ mod tests {
                 gpus: 2,
                 route: RoutePolicy::RoundRobin,
                 power_cap_w: None,
+                fleet_threads: 1,
             },
             bad,
         )
@@ -691,6 +802,7 @@ mod tests {
             gpus: 3,
             route: RoutePolicy::RoundRobin,
             power_cap_w: None,
+            fleet_threads: 1,
         };
         // Steady arrivals across the whole run so post-death traffic
         // exists to re-route.
@@ -736,6 +848,7 @@ mod tests {
             gpus: 4,
             route: RoutePolicy::RoundRobin,
             power_cap_w: None,
+            fleet_threads: 1,
         };
         let reqs = staggered_stream(24);
         let heap = run_cluster(&cfg, &spec, reqs.clone()).unwrap();
@@ -763,6 +876,7 @@ mod tests {
             gpus: 4,
             route: RoutePolicy::RoundRobin,
             power_cap_w: None,
+            fleet_threads: 1,
         };
         let reqs = staggered_stream(24);
         let heap = run_cluster(&cfg, &spec, reqs.clone()).unwrap();
@@ -825,6 +939,7 @@ mod tests {
                     gpus: 4,
                     route: RoutePolicy::RoundRobin,
                     power_cap_w: cap,
+                    fleet_threads: 1,
                 },
                 reqs.clone(),
             )

@@ -26,6 +26,12 @@
 //!   that must produce bitwise-identical per-engine timelines with
 //!   strictly more engine polls (`benches/perf_hotpath.rs` asserts
 //!   both at N=64 and N=256).
+//! * [`parallel`] — the same dispatch restructured into
+//!   route-then-advance window epochs so every alive engine's window
+//!   runs on a worker thread ([`ClusterSpec::fleet_threads`], surfaced
+//!   as `agft cluster --fleet-threads`). Bitwise-identical to
+//!   [`fleet::run_cluster`] at every thread count; see that module's
+//!   docs for the determinism argument.
 //!
 //! Because each GPU's window sequence runs through the same
 //! [`crate::experiment::WindowTracker`] code path as a standalone run,
@@ -36,11 +42,13 @@
 //! [`Engine`]: crate::server::Engine
 
 pub mod fleet;
+pub mod parallel;
 pub mod power_cap;
 pub mod router;
 
 pub use fleet::{
     run_cluster, run_cluster_reference, ClusterResult, ClusterSpec,
 };
+pub use parallel::run_cluster_parallel;
 pub use power_cap::{CapTelemetry, PowerCapCoordinator};
 pub use router::{RoutePolicy, Router, SLO_INTERACTIVE_MAX_OUTPUT};

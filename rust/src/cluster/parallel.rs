@@ -1,0 +1,376 @@
+//! Intra-fleet parallel cluster execution: route-then-advance window
+//! barriers, bitwise-identical to the sequential heap.
+//!
+//! [`run_cluster`]'s global next-event heap looks free-form but is
+//! actually **lockstep**: every slot enters the heap at window 1, each
+//! advance bumps its window index by exactly 1, and drained slots
+//! leave the heap — so at any moment all alive slots share one window
+//! index, and the heap's `(window, gpu)` ordering pops them in GPU
+//! index order within each window. One heap drain is therefore a
+//! sequence of *window epochs*, with the power-cap negotiation firing
+//! between epochs. GPUs only interact at those epoch boundaries:
+//! shared-stream routing as horizons advance, router health masks, and
+//! the cap renegotiation. Inside an epoch each engine touches only its
+//! own state.
+//!
+//! [`run_cluster_parallel`] exploits that: each epoch is restructured
+//! into three phases.
+//!
+//! * **Phase A — sequential routing pre-pass.** Replay the exact heap
+//!   order, advancing each alive GPU's routing horizon
+//!   `max(t_next, engine.now())` through the unchanged [`Router`]
+//!   policy state. When no engine has overshot the boundary every
+//!   horizon equals `t_next`, so the *first* alive GPU's batch routes
+//!   every arrival of the epoch and the rest are no-ops — exactly the
+//!   batches the sequential loop forms, against bit-identical engine
+//!   snapshots (`ll`, the only policy that reads live engine state,
+//!   sees the engines after the previous epoch's windows and the cap
+//!   negotiation, same as sequentially).
+//! * **Phase B — parallel window advance.** Every alive, undrained
+//!   engine runs its window on a worker ([`Executor::map_mut`] — the
+//!   PR-1 work-claiming pool over `std::thread::scope`). The
+//!   engine/`GpuSlot`/[`FaultPlane`] triple is GPU-local
+//!   (`advance_gpu_window` touches nothing else), so threads never
+//!   share mutable state; each returns an `AdvanceOutcome` and poll
+//!   counters accumulate per-thread in those outcomes.
+//! * **Phase C — sequential barrier.** Outcomes are applied in GPU
+//!   index order (`Fleet::apply_shared`): poll merge, router health,
+//!   coordinator retirement, the cap group — then, if any slot
+//!   survives, the boundary negotiation
+//!   (`Fleet::coordinate_boundary`) exactly where the heap loop
+//!   fires it.
+//!
+//! **The one hazard — and its fallback.** If an engine's last window
+//! overshot the boundary by more than a full window
+//! (`engine.now() > t_next`; a single busy iteration carried the clock
+//! past the *next* boundary too), the sequential loop routes part of
+//! the epoch's arrivals *between* engine advances, so a `ll` routing
+//! decision could observe mid-epoch engine state. Any epoch containing
+//! such an overshoot is replayed through the sequential
+//! `Fleet::advance_one` chain instead — bitwise by construction, and
+//! rare: it needs one iteration longer than a whole window
+//! (`window_s`, 0.8 s by default).
+//!
+//! `fleet_threads ≤ 1` delegates to [`run_cluster`] outright, leaving
+//! the sequential path byte-identical. The result is **bitwise
+//! identical** at every thread count — per-GPU window timelines,
+//! energy bits, routed counts, alive masks, poll totals, cap
+//! telemetry — held by `tests/cluster_semantics.rs`,
+//! `tests/chaos_semantics.rs` and the `cluster_par` scenario in
+//! `benches/perf_hotpath.rs` (which also records the
+//! threads-vs-wall-clock speedup curve in `BENCH_6.json`).
+//!
+//! [`Router`]: super::router::Router
+//! [`Executor::map_mut`]: crate::experiment::executor::Executor::map_mut
+
+use std::sync::Arc;
+
+use crate::config::ExperimentConfig;
+use crate::experiment::executor::Executor;
+use crate::faults::FaultPlane;
+use crate::server::{Engine, Request};
+
+use super::fleet::{
+    advance_gpu_window, run_cluster, AdvanceOutcome, ClusterResult,
+    ClusterSpec, Fleet, GpuSlot,
+};
+
+/// One alive GPU's disjoint mutable state for a phase-B worker.
+struct GpuWork<'f> {
+    engine: &'f mut Engine,
+    slot: &'f mut GpuSlot,
+    plane: Option<&'f mut FaultPlane>,
+}
+
+/// Phase B: split disjoint per-GPU `&mut` work items out of the fleet
+/// vectors and advance every alive engine one window on the pool.
+/// Outcomes come back in `alive` (= GPU index) order regardless of
+/// which worker ran which GPU.
+fn advance_epoch_parallel(
+    fleet: &mut Fleet<'_>,
+    alive: &[usize],
+    exec: &Executor,
+) -> Vec<AdvanceOutcome> {
+    let cfg: &ExperimentConfig = fleet.cfg;
+    let window_s = fleet.window_s;
+    let n = fleet.engines.len();
+    let mut engines: Vec<Option<&mut Engine>> =
+        fleet.engines.iter_mut().map(Some).collect();
+    let mut slots: Vec<Option<&mut GpuSlot>> =
+        fleet.slots.iter_mut().map(Some).collect();
+    let mut planes: Vec<Option<&mut FaultPlane>> =
+        match fleet.planes.as_mut() {
+            None => (0..n).map(|_| None).collect(),
+            Some(p) => p.iter_mut().map(Some).collect(),
+        };
+    let mut work: Vec<GpuWork> = alive
+        .iter()
+        .map(|&i| GpuWork {
+            engine: engines[i].take().expect("alive indices are unique"),
+            slot: slots[i].take().expect("alive indices are unique"),
+            plane: planes[i].take(),
+        })
+        .collect();
+    exec.map_mut(&mut work, |_, w| {
+        advance_gpu_window(
+            cfg,
+            window_s,
+            w.engine,
+            w.slot,
+            w.plane.as_deref_mut(),
+        )
+    })
+}
+
+/// Run a cluster co-simulation in route-then-advance window epochs
+/// with phase B on `spec.fleet_threads` worker threads.
+/// Bitwise-identical to [`run_cluster`] on every output field (see the
+/// module docs for the argument); `fleet_threads ≤ 1` *is*
+/// [`run_cluster`].
+pub fn run_cluster_parallel(
+    cfg: &ExperimentConfig,
+    spec: &ClusterSpec,
+    requests: Arc<[Request]>,
+) -> Result<ClusterResult, String> {
+    let threads = spec.fleet_threads.max(1);
+    if threads == 1 {
+        // The sequential path, byte for byte (and no pool spin-up).
+        return run_cluster(cfg, spec, requests);
+    }
+    let mut fleet = Fleet::new(cfg, spec, requests)?;
+    let n = fleet.gpus();
+    let exec = Executor::with_workers(threads);
+
+    loop {
+        // The epoch's roster, in the heap's within-window pop order
+        // (GPU index). Drained slots left the roster for good — the
+        // heap's early-exit behavior, kept.
+        let alive: Vec<usize> =
+            (0..n).filter(|&i| !fleet.slots[i].done).collect();
+        let Some(&first) = alive.first() else { break };
+        let t_next = fleet.slots[first].t_next;
+        debug_assert!(
+            alive.iter().all(|&i| {
+                fleet.slots[i].window == fleet.slots[first].window
+                    && fleet.slots[i].t_next.to_bits() == t_next.to_bits()
+            }),
+            "alive slots drifted out of window lockstep"
+        );
+
+        let overshot = alive
+            .iter()
+            .any(|&i| fleet.engines[i].clock.now() > t_next);
+        if overshot {
+            // A busy iteration ran past this boundary: the sequential
+            // loop would interleave routing slivers between advances,
+            // which `ll` routing can observe. Replay the heap order
+            // exactly (bitwise by construction).
+            for &i in &alive {
+                fleet.advance_one(i)?;
+            }
+        } else {
+            // Phase A: routing pre-pass in exact heap order.
+            for &i in &alive {
+                let horizon =
+                    t_next.max(fleet.engines[i].clock.now());
+                fleet.route_until(horizon)?;
+            }
+            // Phase B: every alive engine advances one window on a
+            // worker; only GPU-local state is touched.
+            let outcomes =
+                advance_epoch_parallel(&mut fleet, &alive, &exec);
+            // Phase C: shared bookkeeping, merged in GPU index order.
+            for (&i, out) in alive.iter().zip(&outcomes) {
+                fleet.apply_shared(i, out);
+            }
+        }
+
+        if (0..n).all(|i| fleet.slots[i].done) {
+            // The heap empties without a trailing negotiation.
+            break;
+        }
+        // Between epochs the heap loop fires the boundary negotiation
+        // (on the first pop of the next window index); eagerly firing
+        // it here is identical — nothing else touches shared state in
+        // between.
+        fleet.coordinate_boundary();
+    }
+    let mut result = fleet.finish();
+    result.fleet_threads = threads;
+    Ok(result)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::RoutePolicy;
+    use crate::config::GovernorKind;
+
+    fn base_cfg() -> ExperimentConfig {
+        ExperimentConfig {
+            governor: GovernorKind::Ondemand,
+            duration_s: 30.0,
+            ..ExperimentConfig::default()
+        }
+    }
+
+    fn staggered_stream(n_req: u64) -> Arc<[Request]> {
+        (0..n_req)
+            .map(|i| {
+                Request::new(
+                    i,
+                    0.05 * i as f64,
+                    128,
+                    24 + (i % 5) as u32 * 120,
+                    i as u32,
+                    0,
+                )
+            })
+            .collect::<Vec<_>>()
+            .into()
+    }
+
+    fn assert_bitwise(
+        ctx: &str,
+        par: &ClusterResult,
+        seq: &ClusterResult,
+    ) {
+        assert_eq!(par.routed, seq.routed, "{ctx}: routed");
+        assert_eq!(par.alive, seq.alive, "{ctx}: alive");
+        assert_eq!(
+            par.engine_polls, seq.engine_polls,
+            "{ctx}: polls"
+        );
+        for (gpu, (a, b)) in
+            par.per_gpu.iter().zip(&seq.per_gpu).enumerate()
+        {
+            assert_eq!(
+                a.windows.len(),
+                b.windows.len(),
+                "{ctx} gpu{gpu}: window count"
+            );
+            for (wa, wb) in a.windows.iter().zip(&b.windows) {
+                assert_eq!(wa.t_s.to_bits(), wb.t_s.to_bits());
+                assert_eq!(
+                    wa.energy_j.to_bits(),
+                    wb.energy_j.to_bits()
+                );
+                assert_eq!(wa.clock_mhz, wb.clock_mhz);
+                assert_eq!(wa.tokens, wb.tokens);
+            }
+            assert_eq!(
+                a.total_energy_j.to_bits(),
+                b.total_energy_j.to_bits(),
+                "{ctx} gpu{gpu}: energy"
+            );
+            assert_eq!(a.finished.len(), b.finished.len());
+            for (fa, fb) in a.finished.iter().zip(&b.finished) {
+                assert_eq!(
+                    fa.finish_s.to_bits(),
+                    fb.finish_s.to_bits()
+                );
+            }
+        }
+        match (&par.cap, &seq.cap) {
+            (None, None) => {}
+            (Some(a), Some(b)) => {
+                assert_eq!(a.rounds, b.rounds, "{ctx}: cap rounds");
+                assert_eq!(a.capped_windows, b.capped_windows);
+                assert_eq!(a.clamps, b.clamps, "{ctx}: cap clamps");
+                assert_eq!(
+                    a.peak_demand_w.to_bits(),
+                    b.peak_demand_w.to_bits()
+                );
+                assert_eq!(a.retired_gpus, b.retired_gpus);
+            }
+            _ => panic!("{ctx}: cap telemetry presence diverged"),
+        }
+    }
+
+    #[test]
+    fn one_thread_delegates_to_the_sequential_heap() {
+        let cfg = base_cfg();
+        let reqs = staggered_stream(24);
+        let mut spec = ClusterSpec {
+            gpus: 4,
+            route: RoutePolicy::LeastLoaded,
+            power_cap_w: None,
+            fleet_threads: 1,
+        };
+        let seq = run_cluster(&cfg, &spec, reqs.clone()).unwrap();
+        let par =
+            run_cluster_parallel(&cfg, &spec, reqs.clone()).unwrap();
+        assert_bitwise("threads=1", &par, &seq);
+        assert_eq!(par.fleet_threads, 1);
+        // 0 is clamped to 1, never a pool of zero workers.
+        spec.fleet_threads = 0;
+        let par0 = run_cluster_parallel(&cfg, &spec, reqs).unwrap();
+        assert_bitwise("threads=0", &par0, &seq);
+        assert_eq!(par0.fleet_threads, 1);
+    }
+
+    #[test]
+    fn parallel_epochs_match_the_heap_under_a_power_cap() {
+        // Same pressure scenario fleet.rs proves actually clamps:
+        // locked-high clocks, enough early arrivals to keep 4 GPUs
+        // busy, a budget well under the uncapped demand.
+        let cfg = ExperimentConfig {
+            governor: GovernorKind::Locked(1800),
+            duration_s: 30.0,
+            ..ExperimentConfig::default()
+        };
+        let reqs: Arc<[Request]> = (0..64u64)
+            .map(|i| {
+                Request::new(i, 0.02 * i as f64, 512, 256, i as u32, 0)
+            })
+            .collect::<Vec<_>>()
+            .into();
+        let seq_spec = ClusterSpec {
+            gpus: 4,
+            route: RoutePolicy::LeastLoaded,
+            power_cap_w: Some(600.0),
+            fleet_threads: 1,
+        };
+        let seq = run_cluster(&cfg, &seq_spec, reqs.clone()).unwrap();
+        assert!(
+            seq.cap.as_ref().unwrap().clamps > 0,
+            "scenario must actually exercise the coordinator"
+        );
+        for threads in [2usize, 3, 8] {
+            let spec =
+                ClusterSpec { fleet_threads: threads, ..seq_spec };
+            let par =
+                run_cluster_parallel(&cfg, &spec, reqs.clone())
+                    .unwrap();
+            assert_bitwise(&format!("threads={threads}"), &par, &seq);
+            assert_eq!(par.fleet_threads, threads);
+        }
+    }
+
+    #[test]
+    fn overshoot_epochs_fall_back_to_the_sequential_replay() {
+        // A window much shorter than a busy iteration: engines overrun
+        // boundaries by several windows at a time, so most epochs take
+        // the sequential-fallback path — under the routing policy that
+        // reads live engine state, where a non-fallback would diverge.
+        let mut cfg = base_cfg();
+        cfg.tuner.window_s = 0.05;
+        cfg.duration_s = 10.0;
+        let reqs: Arc<[Request]> = (0..32u64)
+            .map(|i| {
+                Request::new(i, 0.1 * i as f64, 512, 96, i as u32, 0)
+            })
+            .collect::<Vec<_>>()
+            .into();
+        let seq_spec = ClusterSpec {
+            gpus: 3,
+            route: RoutePolicy::LeastLoaded,
+            power_cap_w: None,
+            fleet_threads: 1,
+        };
+        let seq = run_cluster(&cfg, &seq_spec, reqs.clone()).unwrap();
+        let spec = ClusterSpec { fleet_threads: 4, ..seq_spec };
+        let par = run_cluster_parallel(&cfg, &spec, reqs).unwrap();
+        assert_bitwise("tiny windows", &par, &seq);
+    }
+}

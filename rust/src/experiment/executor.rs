@@ -78,6 +78,29 @@ pub fn default_workers() -> usize {
     }
 }
 
+/// Split one host worker budget between an outer job fan-out and the
+/// inner threads each job would like (`agft cluster --seeds K
+/// --fleet-threads T`, the orchestrator's per-child split): returns
+/// `(outer, inner, clamped)` with `outer · inner ≤ budget`. The outer
+/// level keeps priority — replicas are fully independent, so they
+/// scale better than intra-job threads — and `inner` is cut to the
+/// per-job share `budget / outer` (floored at 1) when the requested
+/// product oversubscribes. `clamped` tells the caller to warn.
+pub fn split_budget(
+    outer_jobs: usize,
+    inner_requested: usize,
+    budget: usize,
+) -> (usize, usize, bool) {
+    let budget = budget.max(1);
+    let outer = outer_jobs.clamp(1, budget);
+    let inner = inner_requested.max(1);
+    if outer * inner <= budget {
+        (outer, inner, false)
+    } else {
+        (outer, (budget / outer).max(1), true)
+    }
+}
+
 /// Per-job outcome inside [`Executor::try_map`] — a dedicated variant
 /// for cancellation keeps it impossible to confuse with a real job
 /// error, whatever the error text.
@@ -158,6 +181,65 @@ impl Executor {
                 s.into_inner()
                     .expect("no worker panicked")
                     .expect("every slot was filled")
+            })
+            .collect()
+    }
+
+    /// [`Executor::map`] over *mutable* jobs: `f(i, &mut jobs[i])` may
+    /// run on any worker, each job is visited exactly once, and the
+    /// returned vector is in input order. Jobs move to the worker that
+    /// claimed them (hence `T: Send`, not `Sync`) and are never
+    /// aliased — the mutable-state analogue the parallel fleet loop
+    /// needs to advance disjoint per-GPU engines concurrently. One
+    /// worker (or one job) runs everything inline on the calling
+    /// thread, bit-identical to the pooled path.
+    pub fn map_mut<T, R, F>(&self, jobs: &mut [T], f: F) -> Vec<R>
+    where
+        T: Send,
+        R: Send,
+        F: Fn(usize, &mut T) -> R + Sync,
+    {
+        let n = jobs.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        if self.workers.min(n) <= 1 {
+            return jobs
+                .iter_mut()
+                .enumerate()
+                .map(|(i, t)| f(i, t))
+                .collect();
+        }
+        let workers = self.workers.min(n);
+        let next = AtomicUsize::new(0);
+        // Each cell pairs a job's exclusive `&mut` with its result
+        // slot; the work index hands every cell to exactly one worker,
+        // and the Mutex carries the references across threads (each is
+        // locked once, uncontended).
+        let cells: Vec<Mutex<(&mut T, Option<R>)>> = jobs
+            .iter_mut()
+            .map(|t| Mutex::new((t, None)))
+            .collect();
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                scope.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let mut guard = cells[i].lock().unwrap();
+                    let (job, out) = &mut *guard;
+                    *out = Some(f(i, &mut **job));
+                });
+            }
+        });
+        cells
+            .into_iter()
+            .map(|c| {
+                c.into_inner()
+                    .expect("no worker panicked")
+                    .1
+                    .expect("every job was visited")
             })
             .collect()
     }
@@ -281,6 +363,61 @@ mod tests {
         let ser = Executor::with_workers(1).map(&jobs, f);
         let par = Executor::with_workers(6).map(&jobs, f);
         assert_eq!(ser, par);
+    }
+
+    #[test]
+    fn map_mut_mutates_each_job_once_in_order() {
+        let exec = Executor::with_workers(4);
+        let mut jobs: Vec<u64> = (0..100).collect();
+        let out = exec.map_mut(&mut jobs, |i, x| {
+            assert_eq!(i as u64, *x);
+            *x += 1;
+            *x * 10
+        });
+        let want_jobs: Vec<u64> = (1..=100).collect();
+        let want_out: Vec<u64> = (1..=100).map(|x| x * 10).collect();
+        assert_eq!(jobs, want_jobs);
+        assert_eq!(out, want_out);
+        // Empty and single-job inputs take the inline path.
+        let mut empty: Vec<u64> = Vec::new();
+        assert!(exec.map_mut(&mut empty, |_, x| *x).is_empty());
+        let mut one = vec![7u64];
+        assert_eq!(exec.map_mut(&mut one, |_, x| *x + 1), vec![8]);
+    }
+
+    #[test]
+    fn map_mut_serial_and_parallel_agree() {
+        let mk = || -> Vec<f64> { (0..64).map(|i| i as f64 * 0.37).collect() };
+        let f = |i: usize, x: &mut f64| {
+            *x = (x.sin() * 1e6).round() + i as f64;
+            *x
+        };
+        let mut a = mk();
+        let mut b = mk();
+        let ser = Executor::with_workers(1).map_mut(&mut a, f);
+        let par = Executor::with_workers(6).map_mut(&mut b, f);
+        assert_eq!(ser, par);
+        assert_eq!(
+            a.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            b.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn split_budget_keeps_outer_priority_and_clamps_inner() {
+        // Fits: requested shape passes through untouched.
+        assert_eq!(split_budget(2, 3, 8), (2, 3, false));
+        assert_eq!(split_budget(1, 8, 8), (1, 8, false));
+        // Oversubscribed: outer keeps its fan-out, inner is cut to the
+        // per-replica share.
+        assert_eq!(split_budget(4, 4, 8), (4, 2, true));
+        assert_eq!(split_budget(3, 8, 8), (3, 2, true));
+        // Inner floors at 1 even when outer alone eats the budget.
+        assert_eq!(split_budget(8, 4, 8), (8, 1, true));
+        // More replicas than budget: outer is the clamped level.
+        assert_eq!(split_budget(16, 2, 4), (4, 1, true));
+        // Degenerate inputs normalize instead of panicking.
+        assert_eq!(split_budget(0, 0, 0), (1, 1, false));
     }
 
     #[test]

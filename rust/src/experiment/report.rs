@@ -345,7 +345,7 @@ pub fn render_cluster(
             ]
         })
         .collect();
-    render_table(
+    let mut text = render_table(
         title,
         &[
             "GPU",
@@ -361,7 +361,15 @@ pub fn render_cluster(
             "throttled w",
         ],
         &rows,
-    )
+    );
+    // Execution shape, so CI artifacts are self-describing: which loop
+    // ran (1 = the sequential heap). Stays out of the CSV — per-GPU
+    // rows `cmp` equal across thread counts by design.
+    text.push_str(&format!(
+        "execution: {} fleet thread(s)\n",
+        r.fleet_threads
+    ));
+    text
 }
 
 /// Ensure `results/` exists and return the CSV path for a bench.
@@ -564,11 +572,16 @@ mod tests {
             engine_polls: 6,
             cap: None,
             alive: vec![true, false],
+            fleet_threads: 4,
         };
         let text = render_cluster("cluster (seed 1)", &cluster);
         assert!(text.contains("== cluster (seed 1) =="));
         assert!(text.contains("300.0"), "{text}");
         assert!(text.contains("450.0"), "{text}");
+        assert!(
+            text.contains("execution: 4 fleet thread(s)"),
+            "{text}"
+        );
         let csv = cluster_gpu_csv(&[(1, &cluster)]);
         let (hdr, rows) = crate::util::csv::parse(&csv).unwrap();
         assert_eq!(hdr, CLUSTER_CSV_HEADER.to_vec());
@@ -607,6 +620,7 @@ mod tests {
             engine_polls: 2,
             cap: None,
             alive: vec![true],
+            fleet_threads: 1,
         };
         let csv = cluster_gpu_csv(&[(7, &cluster)]);
         let (hdr, rows) = crate::util::csv::parse(&csv).unwrap();

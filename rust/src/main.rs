@@ -4,6 +4,7 @@
 //! agft serve       --workload normal --governor agft --duration 600
 //! agft cluster     --gpus 8 --route ll --power-cap 1200 --seeds 3
 //! agft cluster     --gpus 4 --profiles a100,jetson --thermal
+//! agft cluster     --gpus 64 --fleet-threads 8  (parallel window epochs)
 //! agft compare     --governors agft,ondemand,slo,bandit,default --seeds 5
 //! agft compare     --profile jetson --thermal --seeds 3
 //! agft compare     --shard 1/4 --out shard1.csv    (grid partitioning)
@@ -23,7 +24,9 @@
 //! Every sub-command also accepts `--config <file.toml>` to start from a
 //! TOML experiment file instead of the defaults, plus `--seed N`.
 
-use agft::cluster::{run_cluster, ClusterResult, ClusterSpec, RoutePolicy};
+use agft::cluster::{
+    run_cluster_parallel, ClusterResult, ClusterSpec, RoutePolicy,
+};
 use agft::config::{
     self, ExperimentConfig, GovernorKind, WorkloadKind,
 };
@@ -131,7 +134,10 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
 /// next-event heap, with per-GPU governors and an optional
 /// `--power-cap` coordinator. `--seeds N` replicates the whole cluster
 /// across N consecutive seeds on the executor and reports mean ± 95 %
-/// CI fleet aggregates.
+/// CI fleet aggregates. `--fleet-threads T` runs each replica's window
+/// epochs on T worker threads (bitwise-identical output; default 1 =
+/// the sequential heap); the seeds × threads product is split against
+/// one host worker budget, outer replicas first.
 fn cmd_cluster(args: &Args) -> Result<(), String> {
     let cfg = base_config(args)?;
     let gpus = args.get_usize("gpus", 4)?;
@@ -150,15 +156,44 @@ fn cmd_cluster(args: &Args) -> Result<(), String> {
     if seeds == 0 {
         return Err("--seeds 0: need at least one replica".to_string());
     }
-    let spec = ClusterSpec { gpus, route, power_cap_w };
+    let fleet_threads = args.get_usize("fleet-threads", 1)?;
+    if fleet_threads == 0 {
+        return Err(
+            "--fleet-threads 0: need at least one thread".to_string()
+        );
+    }
     let seed_list: Vec<u64> = (0..seeds).map(|k| cfg.seed + k).collect();
-    let exec = executor_from(args)?;
+    // One host worker budget covers both parallelism levels: outer
+    // seed replicas (fully independent, so they keep priority) times
+    // the per-replica fleet threads. An oversubscribed product clamps
+    // the inner level — never silently spawns seeds × threads workers.
+    let budget = executor_from(args)?.workers();
+    let (outer, inner, clamped) = agft::experiment::executor::split_budget(
+        seeds as usize,
+        fleet_threads,
+        budget,
+    );
+    if clamped {
+        eprintln!(
+            "warning: --seeds {seeds} x --fleet-threads {fleet_threads} \
+             oversubscribes the {budget}-worker budget; running {inner} \
+             fleet thread(s) per replica"
+        );
+    }
+    let spec = ClusterSpec {
+        gpus,
+        route,
+        power_cap_w,
+        fleet_threads: inner,
+    };
+    let exec = Executor::with_workers(outer);
     eprintln!(
         "cluster: {gpus} GPUs, route {}, {} seed replica(s) on {} \
-         worker(s) ...",
+         worker(s), {} fleet thread(s) ...",
         route.label(),
         seeds,
         exec.workers(),
+        inner,
     );
     // Each seed replica realizes its own stream and runs the whole
     // fleet; replicas are independent, so they fan out on the executor.
@@ -169,7 +204,7 @@ fn cmd_cluster(args: &Args) -> Result<(), String> {
             let requests = workload::realize(
                 &c.workload, c.arrival_rps, c.duration_s, seed,
             )?;
-            run_cluster(&c, &spec, requests.into())
+            run_cluster_parallel(&c, &spec, requests.into())
         })?;
 
     let first = &results[0];
@@ -977,9 +1012,11 @@ fn usage() -> ! {
          model + hysteretic throttle; see EXPERIMENTS.md §Devices & \
          thermal)\n\
          cluster options: --gpus N --route rr|ll|prefix|slo \
-         [--power-cap W] [--seeds K] [--profiles a,b,... \
-         (heterogeneous fleet, cycled)] [--out per_gpu.csv] (fleet \
-         co-simulation on the global next-event heap)\n\
+         [--power-cap W] [--seeds K] [--fleet-threads T (parallel \
+         window epochs, bitwise-identical; seeds x threads share the \
+         worker budget)] [--profiles a,b,... (heterogeneous fleet, \
+         cycled)] [--out per_gpu.csv] (fleet co-simulation on the \
+         global next-event heap)\n\
          compare options: --governors a,b,c (baseline matrix, e.g. \
          agft,ondemand,slo,bandit,default)\n\
          grid sharding: compare|ablation|sweep accept --shard K/N \

@@ -81,7 +81,12 @@ pub struct TunerTelemetry {
 }
 
 /// One pluggable clock policy driven on the window cadence.
-pub trait Governor {
+///
+/// `Send` because a governor lives inside a per-GPU fleet slot, and
+/// [`crate::cluster::run_cluster_parallel`]'s phase B moves those
+/// slots across worker threads (one window at a time; never shared,
+/// so `Sync` is not required). Every policy here is plain owned data.
+pub trait Governor: Send {
     /// Stable short name (matches [`GovernorKind::label`]).
     fn name(&self) -> &'static str;
 

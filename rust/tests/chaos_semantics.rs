@@ -17,7 +17,9 @@
 use std::sync::Arc;
 
 use agft::config::{ExperimentConfig, GovernorKind, WorkloadKind};
-use agft::cluster::{run_cluster, ClusterSpec, RoutePolicy};
+use agft::cluster::{
+    run_cluster, run_cluster_parallel, ClusterSpec, RoutePolicy,
+};
 use agft::experiment::harness::RunResult;
 use agft::experiment::GovernorDriver;
 use agft::faults::{FaultsConfig, GpuFaultEvent, GpuFaultKind};
@@ -160,6 +162,7 @@ fn chaos_schedules_never_break_any_routing_policy() {
                 gpus,
                 route,
                 power_cap_w: None,
+                fleet_threads: 1,
             };
             let reqs = realize(&cfg);
             let r = run_cluster(&cfg, &spec, reqs).unwrap();
@@ -185,6 +188,90 @@ fn chaos_schedules_never_break_any_routing_policy() {
     }
 }
 
+/// The parallel epochs under chaos: randomized fault schedules × every
+/// routing policy × power cap on/off × thread counts {2, 4, 8} must
+/// reproduce the sequential heap bit for bit — timelines, energy bits,
+/// alive masks, the full tuner telemetry (fault ledgers included) and
+/// the exact injected == observed balance.
+#[test]
+fn parallel_fleet_matches_sequential_under_chaos() {
+    let mut rng = Pcg64::new(0xC4A09);
+    let gpus = 6usize;
+    for (i, route) in RoutePolicy::all().into_iter().enumerate() {
+        for cap in [None, Some(600.0)] {
+            let mut cfg = base_cfg(GovernorKind::Agft);
+            cfg.seed = 60 + i as u64;
+            cfg.arrival_rps = 4.0;
+            cfg.faults = chaos_faults(&mut rng, gpus);
+            let seq_spec = ClusterSpec {
+                gpus,
+                route,
+                power_cap_w: cap,
+                fleet_threads: 1,
+            };
+            let reqs = realize(&cfg);
+            let seq = run_cluster(&cfg, &seq_spec, Arc::clone(&reqs))
+                .unwrap();
+            for threads in [2usize, 4, 8] {
+                let spec = ClusterSpec {
+                    fleet_threads: threads,
+                    ..seq_spec
+                };
+                let par = run_cluster_parallel(
+                    &cfg,
+                    &spec,
+                    Arc::clone(&reqs),
+                )
+                .unwrap();
+                let label = format!(
+                    "chaos {:?}/cap {cap:?}/t{threads}",
+                    route
+                );
+                assert_eq!(par.alive, seq.alive, "{label}: alive");
+                assert_eq!(par.routed, seq.routed, "{label}: routed");
+                assert_eq!(
+                    par.engine_polls, seq.engine_polls,
+                    "{label}: polls"
+                );
+                for (gpu, (a, b)) in
+                    par.per_gpu.iter().zip(&seq.per_gpu).enumerate()
+                {
+                    assert_eq!(
+                        a.windows.len(),
+                        b.windows.len(),
+                        "{label} gpu{gpu}: window count"
+                    );
+                    for (wa, wb) in a.windows.iter().zip(&b.windows) {
+                        assert_eq!(wa.t_s.to_bits(), wb.t_s.to_bits());
+                        assert_eq!(
+                            wa.energy_j.to_bits(),
+                            wb.energy_j.to_bits()
+                        );
+                        assert_eq!(wa.clock_mhz, wb.clock_mhz);
+                        assert_eq!(wa.tokens, wb.tokens);
+                    }
+                    assert_eq!(
+                        a.total_energy_j.to_bits(),
+                        b.total_energy_j.to_bits(),
+                        "{label} gpu{gpu}: energy"
+                    );
+                    // Telemetry carries both fault ledgers — equality
+                    // here pins the parallel path to the identical
+                    // injected *and* observed fault sequences.
+                    assert_eq!(
+                        a.tuner, b.tuner,
+                        "{label} gpu{gpu}: telemetry"
+                    );
+                    check_ledgers(
+                        &format!("{label} gpu{gpu}"),
+                        a.tuner.as_ref().unwrap(),
+                    );
+                }
+            }
+        }
+    }
+}
+
 #[test]
 fn chaos_under_a_power_cap_keeps_the_coordinator_sane() {
     let mut rng = Pcg64::new(0xC4A07);
@@ -202,6 +289,7 @@ fn chaos_under_a_power_cap_keeps_the_coordinator_sane() {
         gpus: 4,
         route: RoutePolicy::LeastLoaded,
         power_cap_w: Some(700.0),
+        fleet_threads: 1,
     };
     let reqs = realize(&cfg);
     let r = run_cluster(&cfg, &spec, reqs).unwrap();

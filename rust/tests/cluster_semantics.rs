@@ -22,7 +22,10 @@
 
 use std::sync::Arc;
 
-use agft::cluster::{run_cluster, ClusterResult, ClusterSpec, RoutePolicy};
+use agft::cluster::{
+    run_cluster, run_cluster_parallel, ClusterResult, ClusterSpec,
+    RoutePolicy,
+};
 use agft::config::{ExperimentConfig, GovernorKind, WorkloadKind};
 use agft::experiment::harness::{run_shared, RunResult};
 use agft::server::Request;
@@ -125,7 +128,12 @@ fn n1_cluster_is_bitwise_identical_to_run_shared() {
         let n_req = requests.len() as u64;
         let standalone =
             run_shared(&cfg, Arc::clone(&requests)).unwrap();
-        let spec = ClusterSpec { gpus: 1, route, power_cap_w: None };
+        let spec = ClusterSpec {
+            gpus: 1,
+            route,
+            power_cap_w: None,
+            fleet_threads: 1,
+        };
         let cluster = run_cluster(&cfg, &spec, requests).unwrap();
         let ctx = format!("{governor:?}/{}", route.label());
         assert_eq!(cluster.per_gpu.len(), 1);
@@ -150,7 +158,12 @@ fn routing_is_deterministic_per_seed() {
         let gpus = 2 + (rng.next_u64() % 3) as usize;
         let cfg = proto_cfg(GovernorKind::Ondemand, seed);
         let requests = realized(&cfg);
-        let spec = ClusterSpec { gpus, route, power_cap_w: None };
+        let spec = ClusterSpec {
+            gpus,
+            route,
+            power_cap_w: None,
+            fleet_threads: 1,
+        };
         let a =
             run_cluster(&cfg, &spec, Arc::clone(&requests)).unwrap();
         let b = run_cluster(&cfg, &spec, requests).unwrap();
@@ -200,7 +213,12 @@ fn policies_route_by_their_documented_shape() {
     let run = |route| {
         run_cluster(
             &cfg,
-            &ClusterSpec { gpus: 4, route, power_cap_w: None },
+            &ClusterSpec {
+                gpus: 4,
+                route,
+                power_cap_w: None,
+                fleet_threads: 1,
+            },
             Arc::clone(&reqs),
         )
         .unwrap()
@@ -244,6 +262,7 @@ fn power_cap_integrates_with_rule_governors() {
                 gpus: 3,
                 route: RoutePolicy::RoundRobin,
                 power_cap_w: cap,
+                fleet_threads: 1,
             },
             Arc::clone(&reqs),
         )
@@ -262,4 +281,77 @@ fn power_cap_integrates_with_rule_governors() {
     // Same stream, same routing — the cap changes clocks, not
     // assignments.
     assert_eq!(capped.routed, free.routed);
+}
+
+/// The parallel-execution identity: `run_cluster_parallel` must be
+/// bitwise-identical to the sequential heap across every routing
+/// policy × power cap on/off × thread count — routed counts, alive
+/// masks, poll totals, per-GPU timelines and cap telemetry included.
+/// This is the contract CI's parallel-fleet smoke `cmp`s at the CSV
+/// level; here it's held at full window-record resolution.
+#[test]
+fn parallel_fleet_is_bitwise_identical_across_policies_caps_threads() {
+    let cfg = proto_cfg(GovernorKind::Ondemand, 17);
+    let requests = realized(&cfg);
+    for route in RoutePolicy::all() {
+        for cap in [None, Some(500.0)] {
+            let seq_spec = ClusterSpec {
+                gpus: 6,
+                route,
+                power_cap_w: cap,
+                fleet_threads: 1,
+            };
+            let seq = run_cluster(&cfg, &seq_spec, Arc::clone(&requests))
+                .unwrap();
+            for threads in [1usize, 2, 4, 8] {
+                let spec = ClusterSpec {
+                    fleet_threads: threads,
+                    ..seq_spec
+                };
+                let par = run_cluster_parallel(
+                    &cfg,
+                    &spec,
+                    Arc::clone(&requests),
+                )
+                .unwrap();
+                let ctx = format!(
+                    "{}/cap {cap:?}/t{threads}",
+                    route.label()
+                );
+                assert_eq!(par.routed, seq.routed, "{ctx}: routing");
+                assert_eq!(par.alive, seq.alive, "{ctx}: alive");
+                assert_eq!(
+                    par.engine_polls, seq.engine_polls,
+                    "{ctx}: polls"
+                );
+                assert_eq!(par.fleet_threads, threads, "{ctx}");
+                for (gpu, (a, b)) in
+                    par.per_gpu.iter().zip(&seq.per_gpu).enumerate()
+                {
+                    assert_gpu_matches(&format!("{ctx}/gpu{gpu}"), a, b);
+                }
+                match (&par.cap, &seq.cap) {
+                    (None, None) => assert!(cap.is_none()),
+                    (Some(a), Some(b)) => {
+                        assert_eq!(a.rounds, b.rounds, "{ctx}: rounds");
+                        assert_eq!(
+                            a.capped_windows, b.capped_windows,
+                            "{ctx}: capped windows"
+                        );
+                        assert_eq!(a.clamps, b.clamps, "{ctx}: clamps");
+                        assert_eq!(
+                            a.peak_demand_w.to_bits(),
+                            b.peak_demand_w.to_bits(),
+                            "{ctx}: peak demand"
+                        );
+                        assert_eq!(
+                            a.retired_gpus, b.retired_gpus,
+                            "{ctx}: retired"
+                        );
+                    }
+                    _ => panic!("{ctx}: cap telemetry presence"),
+                }
+            }
+        }
+    }
 }
