@@ -1,0 +1,153 @@
+//! The lint baseline: committed per-`(rule, file)` finding counts that
+//! grandfather pre-existing findings. `agft lint` exits nonzero only
+//! when a count *exceeds* its baseline entry (a ratchet); counts that
+//! drop below the baseline are reported as stale entries so the file
+//! can be tightened in the same PR that earned the improvement.
+//!
+//! Schema (`rust/lint_baseline.json`):
+//!
+//! ```json
+//! { "schema": 1,
+//!   "counts": { "<rule-id>": { "<file>": <count>, … }, … } }
+//! ```
+
+use std::collections::BTreeMap;
+
+use crate::util::json::{self, Json};
+
+/// Per-rule, per-file finding counts.
+pub type Counts = BTreeMap<String, BTreeMap<String, u64>>;
+
+/// Outcome of holding current counts against the baseline.
+#[derive(Debug, Default)]
+pub struct Delta {
+    /// `(rule, file, current, baseline)` where current > baseline.
+    pub regressions: Vec<(String, String, u64, u64)>,
+    /// `(rule, file, current, baseline)` where current < baseline.
+    pub stale: Vec<(String, String, u64, u64)>,
+}
+
+/// Parse a baseline document.
+pub fn parse(text: &str) -> Result<Counts, String> {
+    let doc = json::parse(text).map_err(|e| format!("baseline: {e}"))?;
+    let schema = doc
+        .get("schema")
+        .and_then(Json::as_f64)
+        .ok_or("baseline: missing schema field")?;
+    if schema as u64 != 1 {
+        return Err(format!("baseline: unsupported schema {schema}"));
+    }
+    let Some(Json::Obj(rules)) = doc.get("counts") else {
+        return Err("baseline: missing counts object".to_string());
+    };
+    let mut out = Counts::new();
+    for (rule, files) in rules {
+        let Json::Obj(files) = files else {
+            return Err(format!("baseline: counts.{rule} is not an object"));
+        };
+        let entry = out.entry(rule.clone()).or_default();
+        for (file, count) in files {
+            let c = count
+                .as_f64()
+                .ok_or_else(|| format!("baseline: {rule}/{file} not a number"))?;
+            entry.insert(file.clone(), c as u64);
+        }
+    }
+    Ok(out)
+}
+
+/// Render counts as a baseline document.
+pub fn render(counts: &Counts) -> String {
+    let mut doc = Json::obj();
+    doc.set("schema", 1.0);
+    let mut rules = Json::obj();
+    for (rule, files) in counts {
+        let mut obj = Json::obj();
+        for (file, count) in files {
+            obj.set(file, *count as f64);
+        }
+        rules.set(rule, obj);
+    }
+    doc.set("counts", rules);
+    let mut text = doc.pretty();
+    text.push('\n');
+    text
+}
+
+/// Hold `current` against `baseline` (missing entries count as 0 on
+/// either side).
+pub fn diff(current: &Counts, baseline: &Counts) -> Delta {
+    let mut delta = Delta::default();
+    let zero = BTreeMap::new();
+    let mut rules: Vec<&String> =
+        current.keys().chain(baseline.keys()).collect();
+    rules.sort();
+    rules.dedup();
+    for rule in rules {
+        let cur = current.get(rule).unwrap_or(&zero);
+        let base = baseline.get(rule).unwrap_or(&zero);
+        let mut files: Vec<&String> =
+            cur.keys().chain(base.keys()).collect();
+        files.sort();
+        files.dedup();
+        for file in files {
+            let c = cur.get(file).copied().unwrap_or(0);
+            let b = base.get(file).copied().unwrap_or(0);
+            if c > b {
+                delta
+                    .regressions
+                    .push((rule.clone(), file.clone(), c, b));
+            } else if c < b {
+                delta.stale.push((rule.clone(), file.clone(), c, b));
+            }
+        }
+    }
+    delta
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn counts(entries: &[(&str, &str, u64)]) -> Counts {
+        let mut out = Counts::new();
+        for &(rule, file, n) in entries {
+            out.entry(rule.to_string())
+                .or_default()
+                .insert(file.to_string(), n);
+        }
+        out
+    }
+
+    #[test]
+    fn round_trip() {
+        let c = counts(&[
+            ("no-new-unwrap", "src/a.rs", 3),
+            ("no-new-unwrap", "src/b.rs", 1),
+            ("float-eq", "src/c.rs", 6),
+        ]);
+        let parsed = parse(&render(&c)).unwrap();
+        assert_eq!(parsed, c);
+    }
+
+    #[test]
+    fn diff_flags_regressions_and_stale() {
+        let base = counts(&[("r", "a.rs", 2), ("r", "b.rs", 1)]);
+        let cur = counts(&[("r", "a.rs", 3), ("r", "c.rs", 1)]);
+        let d = diff(&cur, &base);
+        assert_eq!(
+            d.regressions,
+            vec![
+                ("r".into(), "a.rs".into(), 3, 2),
+                ("r".into(), "c.rs".into(), 1, 0),
+            ]
+        );
+        assert_eq!(d.stale, vec![("r".into(), "b.rs".into(), 0, 1)]);
+    }
+
+    #[test]
+    fn rejects_bad_schema() {
+        assert!(parse("{\"schema\": 2, \"counts\": {}}").is_err());
+        assert!(parse("{\"counts\": {}}").is_err());
+    }
+}

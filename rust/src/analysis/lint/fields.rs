@@ -1,0 +1,106 @@
+//! Struct field extraction over the scrubbed token stream, for the
+//! compare-exhaustiveness and ledger-coverage rules: given `struct
+//! Name { … }` anywhere in a file, recover the declared field names
+//! with their source lines. Works on named-field structs only (the
+//! watched result/telemetry structs are all of that shape).
+
+use super::tokens::Tok;
+
+/// One extracted field: `(name, declaration line)`.
+pub type Field = (String, u32);
+
+/// Find `struct name { … }` in `tokens` and return the declaration
+/// line plus its fields. Returns `None` when the struct is not
+/// declared in this token stream.
+pub fn struct_fields(tokens: &[Tok], name: &str) -> Option<(u32, Vec<Field>)> {
+    let mut idx = 0usize;
+    while idx + 1 < tokens.len() {
+        if tokens[idx].text == "struct" && tokens[idx + 1].text == name {
+            let decl_line = tokens[idx].line;
+            // Skip generics / where clauses up to the body brace.
+            let mut j = idx + 2;
+            while j < tokens.len() && tokens[j].text != "{" {
+                // Tuple struct or unit struct: no named fields.
+                if tokens[j].text == "(" || tokens[j].text == ";" {
+                    return Some((decl_line, Vec::new()));
+                }
+                j += 1;
+            }
+            if j >= tokens.len() {
+                return Some((decl_line, Vec::new()));
+            }
+            let mut depth = 1i64;
+            let mut fields = Vec::new();
+            let mut k = j + 1;
+            while k < tokens.len() && depth > 0 {
+                match tokens[k].text.as_str() {
+                    "{" => depth += 1,
+                    "}" => depth -= 1,
+                    "(" | "<" | "[" => {}
+                    _ => {}
+                }
+                // A field is `ident :` at body depth 1, where `:` is the
+                // single-colon token (path separators lex as `::`).
+                if depth == 1
+                    && is_ident(&tokens[k].text)
+                    && tokens.get(k + 1).is_some_and(|t| t.text == ":")
+                    && !matches!(
+                        tokens[k].text.as_str(),
+                        "pub" | "crate" | "super" | "self"
+                    )
+                {
+                    fields.push((tokens[k].text.clone(), tokens[k].line));
+                }
+                k += 1;
+            }
+            return Some((decl_line, fields));
+        }
+        idx += 1;
+    }
+    None
+}
+
+fn is_ident(t: &str) -> bool {
+    let mut chars = t.chars();
+    chars
+        .next()
+        .is_some_and(|c| c.is_ascii_alphabetic() || c == '_')
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::lint::tokens::lex;
+
+    #[test]
+    fn extracts_named_fields_with_lines() {
+        let src = "/// doc\npub struct WindowRecord {\n    pub t_s: f64,\n    \
+                   pub clock_mhz: u32,\n    pub temp_c: Option<f64>,\n}\n";
+        let toks = lex(src).tokens;
+        let (line, fields) = struct_fields(&toks, "WindowRecord").unwrap();
+        assert_eq!(line, 2);
+        let names: Vec<&str> =
+            fields.iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(names, ["t_s", "clock_mhz", "temp_c"]);
+        assert_eq!(fields[2].1, 5);
+    }
+
+    #[test]
+    fn ignores_nested_braces_and_other_structs() {
+        let src = "struct A { x: u32 }\nstruct B { y: fn(u32) -> u32, \
+                   z: [u8; 4] }";
+        let toks = lex(src).tokens;
+        let (_, fields) = struct_fields(&toks, "B").unwrap();
+        let names: Vec<&str> =
+            fields.iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(names, ["y", "z"]);
+        assert!(struct_fields(&toks, "C").is_none());
+    }
+
+    #[test]
+    fn tuple_struct_yields_no_fields() {
+        let toks = lex("pub struct Wrapper(pub u32);").tokens;
+        let (_, fields) = struct_fields(&toks, "Wrapper").unwrap();
+        assert!(fields.is_empty());
+    }
+}

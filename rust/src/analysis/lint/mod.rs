@@ -1,0 +1,265 @@
+//! `agft lint` — a std-only, token-level static-analysis pass encoding
+//! this repo's determinism and bitwise-invariant contracts as
+//! mechanical rules (see [`rules::RULES`] for the registry).
+//!
+//! The engine is deliberately self-contained: [`LintInput`] is just a
+//! set of `(path, text)` pairs, so the semantics suite can lint
+//! in-memory fixtures, and the committed baseline
+//! (`rust/lint_baseline.json`) can be regenerated without a Rust
+//! toolchain by `scripts/gen_lint_baseline.py`, which mirrors the
+//! lexer and rules exactly.
+//!
+//! Pipeline: lex + scrub each source file ([`tokens`]), drop the
+//! trailing `#[cfg(test)]` module, run the per-file rules, run the
+//! cross-file rules (compare-exhaustiveness / ledger coverage against
+//! the `tests/` reference corpus), apply `lint:allow(rule)`
+//! suppressions, then ratchet per-`(rule, file)` counts against the
+//! baseline ([`baseline`]). Only counts *above* baseline fail the run.
+
+pub mod baseline;
+pub mod fields;
+pub mod rules;
+pub mod tokens;
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+/// One source file handed to the engine; `path` uses forward slashes
+/// relative to the crate root (`src/…` or `tests/…`).
+#[derive(Debug, Clone)]
+pub struct SourceFile {
+    pub path: String,
+    pub text: String,
+}
+
+/// Everything one lint run looks at: the lintable sources and the
+/// `tests/` reference corpus (linted by the cross-file rules only).
+#[derive(Debug, Default)]
+pub struct LintInput {
+    pub src: Vec<SourceFile>,
+    pub tests: Vec<SourceFile>,
+}
+
+/// One diagnostic: `file:line [rule] msg`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub file: String,
+    pub line: u32,
+    pub msg: String,
+}
+
+/// Locate the crate root (the directory holding `src/lib.rs`) from the
+/// current working directory — works from the repo root and from
+/// `rust/`.
+pub fn find_root() -> Result<PathBuf, String> {
+    for cand in ["rust", "."] {
+        let p = PathBuf::from(cand);
+        if p.join("src").join("lib.rs").is_file() {
+            return Ok(p);
+        }
+    }
+    Err("cannot find src/lib.rs (run from the repo root or rust/)".into())
+}
+
+/// Load the source tree under `root`: `src/**/*.rs` (recursive) and
+/// `tests/*.rs` (top level only — fixture corpora in subdirectories
+/// must not pollute the reference corpus). `filters`, when non-empty,
+/// restrict which `src/` files are linted (prefix match on the
+/// root-relative path, with or without the `src/` prefix).
+pub fn load(root: &Path, filters: &[String]) -> Result<LintInput, String> {
+    let mut input = LintInput::default();
+    let src_dir = root.join("src");
+    let mut stack = vec![src_dir.clone()];
+    while let Some(dir) = stack.pop() {
+        let entries = fs::read_dir(&dir)
+            .map_err(|e| format!("read_dir {}: {e}", dir.display()))?;
+        for entry in entries {
+            let entry =
+                entry.map_err(|e| format!("{}: {e}", dir.display()))?;
+            let p = entry.path();
+            if p.is_dir() {
+                stack.push(p);
+            } else if p.extension().is_some_and(|x| x == "rs") {
+                input.src.push(read_source(root, &p)?);
+            }
+        }
+    }
+    let tests_dir = root.join("tests");
+    if tests_dir.is_dir() {
+        let entries = fs::read_dir(&tests_dir)
+            .map_err(|e| format!("read_dir {}: {e}", tests_dir.display()))?;
+        for entry in entries {
+            let entry =
+                entry.map_err(|e| format!("{}: {e}", tests_dir.display()))?;
+            let p = entry.path();
+            if p.is_file() && p.extension().is_some_and(|x| x == "rs") {
+                input.tests.push(read_source(root, &p)?);
+            }
+        }
+    }
+    input.src.sort_by(|a, b| a.path.cmp(&b.path));
+    input.tests.sort_by(|a, b| a.path.cmp(&b.path));
+    if !filters.is_empty() {
+        input.src.retain(|f| {
+            filters.iter().any(|flt| {
+                let flt = flt.trim_start_matches("./");
+                f.path.starts_with(flt)
+                    || f.path
+                        .strip_prefix("src/")
+                        .is_some_and(|rest| rest.starts_with(flt))
+            })
+        });
+    }
+    Ok(input)
+}
+
+fn read_source(root: &Path, p: &Path) -> Result<SourceFile, String> {
+    let text = fs::read_to_string(p)
+        .map_err(|e| format!("read {}: {e}", p.display()))?;
+    let rel = p.strip_prefix(root).unwrap_or(p);
+    let path = rel
+        .components()
+        .map(|c| c.as_os_str().to_string_lossy())
+        .collect::<Vec<_>>()
+        .join("/");
+    Ok(SourceFile { path, text })
+}
+
+/// Run every rule over the input and return suppression-filtered,
+/// deduplicated findings sorted by `(file, line, rule)`.
+pub fn run(input: &LintInput) -> Vec<Finding> {
+    // Lex src files once; strip the trailing in-file test module so
+    // rules judge shipping code only.
+    let mut lexed: Vec<(SourceFile, Vec<tokens::Tok>)> = Vec::new();
+    let mut allows: BTreeMap<String, Vec<(u32, String)>> = BTreeMap::new();
+    for f in &input.src {
+        let lx = tokens::lex(&f.text);
+        allows.insert(f.path.clone(), lx.allows);
+        let toks = tokens::strip_trailing_test_module(lx.tokens);
+        lexed.push((f.clone(), toks));
+    }
+    // Reference corpora: identifier sets over the full (unstripped)
+    // test files.
+    let mut suite_idents: BTreeSet<String> = BTreeSet::new();
+    let mut test_idents: BTreeSet<String> = BTreeSet::new();
+    let mut suites_present = false;
+    for f in &input.tests {
+        let lx = tokens::lex(&f.text);
+        let is_suite = rules::COMPARE_SUITES
+            .iter()
+            .any(|s| f.path.ends_with(s));
+        suites_present |= is_suite;
+        for t in &lx.tokens {
+            if t.text
+                .chars()
+                .next()
+                .is_some_and(|c| c.is_ascii_alphabetic() || c == '_')
+            {
+                if is_suite {
+                    suite_idents.insert(t.text.clone());
+                }
+                test_idents.insert(t.text.clone());
+            }
+        }
+    }
+
+    let mut findings = Vec::new();
+    for (file, toks) in &lexed {
+        rules::nondet_wallclock(file, toks, &mut findings);
+        rules::nondet_thread_spawn(file, toks, &mut findings);
+        rules::nondet_map_iter(file, toks, &mut findings);
+        rules::float_eq(file, toks, &mut findings);
+        rules::no_new_unwrap(file, toks, &mut findings);
+    }
+    rules::compare_exhaustive(
+        &lexed,
+        &suite_idents,
+        suites_present,
+        &mut findings,
+    );
+    rules::ledger_coverage(
+        &lexed,
+        &test_idents,
+        !input.tests.is_empty(),
+        &mut findings,
+    );
+
+    // Suppressions: an allow on line L covers findings on L and L + 1.
+    findings.retain(|f| {
+        let Some(file_allows) = allows.get(&f.file) else {
+            return true;
+        };
+        !file_allows.iter().any(|(l, rule)| {
+            (*l == f.line || l + 1 == f.line)
+                && (rule == f.rule || rule == "all")
+        })
+    });
+
+    findings.sort_by(|a, b| {
+        (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule))
+    });
+    findings.dedup_by(|a, b| {
+        a.rule == b.rule && a.file == b.file && a.line == b.line
+    });
+    findings
+}
+
+/// Aggregate findings into per-`(rule, file)` counts.
+pub fn count(findings: &[Finding]) -> baseline::Counts {
+    let mut counts = baseline::Counts::new();
+    for f in findings {
+        *counts
+            .entry(f.rule.to_string())
+            .or_default()
+            .entry(f.file.clone())
+            .or_insert(0) += 1;
+    }
+    counts
+}
+
+/// Machine-readable findings document (the CI artifact).
+pub fn findings_json(
+    findings: &[Finding],
+    counts: &baseline::Counts,
+    delta: &baseline::Delta,
+) -> Json {
+    let mut doc = Json::obj();
+    doc.set("schema", 1.0);
+    let items: Vec<Json> = findings
+        .iter()
+        .map(|f| {
+            let mut o = Json::obj();
+            o.set("rule", f.rule);
+            o.set("file", f.file.as_str());
+            o.set("line", f.line as f64);
+            o.set("msg", f.msg.as_str());
+            o
+        })
+        .collect();
+    doc.set("findings", Json::Arr(items));
+    let mut rule_counts = Json::obj();
+    for (rule, files) in counts {
+        let total: u64 = files.values().sum();
+        rule_counts.set(rule, total as f64);
+    }
+    doc.set("totals", rule_counts);
+    doc.set("total", findings.len() as f64);
+    let regs: Vec<Json> = delta
+        .regressions
+        .iter()
+        .map(|(rule, file, cur, base)| {
+            let mut o = Json::obj();
+            o.set("rule", rule.as_str());
+            o.set("file", file.as_str());
+            o.set("count", *cur as f64);
+            o.set("baseline", *base as f64);
+            o
+        })
+        .collect();
+    doc.set("new", Json::Arr(regs));
+    doc
+}

@@ -1,0 +1,384 @@
+//! The repo-specific lint rules. Each rule walks the scrubbed token
+//! stream(s) from [`super::tokens`] and emits [`Finding`]s; the engine
+//! in [`super`] applies suppressions and the baseline ratchet on top.
+//!
+//! Rule ids (stable — they key the baseline file and suppressions):
+//!
+//! | id                    | guards against |
+//! |-----------------------|----------------|
+//! | `nondet-wallclock`    | `Instant`/`SystemTime` in sim paths |
+//! | `nondet-thread-spawn` | ad-hoc threading outside the executor |
+//! | `nondet-map-iter`     | order-exposing `HashMap`/`HashSet` iteration |
+//! | `float-eq`            | `==`/`!=` against float literals |
+//! | `no-new-unwrap`       | `.unwrap()`/`.expect(` growth (ratchet) |
+//! | `compare-exhaustive`  | result-struct fields missing from the semantics suites |
+//! | `ledger-coverage`     | fault counters never asserted by any test |
+
+use std::collections::BTreeSet;
+
+use super::tokens::{is_float_lit, Tok};
+use super::{fields, Finding, SourceFile};
+
+/// Registry of `(rule id, one-line description)` — drives `--list` and
+/// the EXPERIMENTS.md rule table.
+pub const RULES: &[(&str, &str)] = &[
+    (
+        "nondet-wallclock",
+        "Instant/SystemTime in simulation code (host wall-clock breaks \
+         bitwise replay)",
+    ),
+    (
+        "nondet-thread-spawn",
+        "thread spawning outside the work-claiming executor",
+    ),
+    (
+        "nondet-map-iter",
+        "order-exposing iteration over HashMap/HashSet-backed values",
+    ),
+    (
+        "float-eq",
+        "==/!= against a float literal (use to_bits() or an epsilon)",
+    ),
+    (
+        "no-new-unwrap",
+        ".unwrap()/.expect( count ratchet against the baseline",
+    ),
+    (
+        "compare-exhaustive",
+        "watched result-struct field not referenced by any bitwise \
+         semantics suite",
+    ),
+    (
+        "ledger-coverage",
+        "TunerTelemetry fault counter not referenced by any test",
+    ),
+];
+
+/// Files where host wall-clock reads are *by design*: the shard
+/// supervisor kills and retries wedged worker processes on real time.
+const WALLCLOCK_ALLOW: &[&str] = &["src/experiment/orchestrator.rs"];
+
+/// Files where spawning is *by design*: the executor is the one
+/// parallelism boundary, and the orchestrator spawns worker processes.
+const SPAWN_ALLOW: &[&str] =
+    &["src/experiment/executor.rs", "src/experiment/orchestrator.rs"];
+
+/// The result/telemetry structs whose every field must be referenced
+/// by at least one of the bitwise semantics suites.
+const COMPARE_STRUCTS: &[&str] = &[
+    "WindowRecord",
+    "TunerTelemetry",
+    "MetricsSnapshot",
+    "RunResult",
+    "ClusterResult",
+];
+
+/// The bitwise semantics suites forming the reference corpus for
+/// [`COMPARE_STRUCTS`] (matched by path suffix inside `tests/`).
+pub const COMPARE_SUITES: &[&str] = &[
+    "perf_semantics.rs",
+    "governor_semantics.rs",
+    "cluster_semantics.rs",
+    "chaos_semantics.rs",
+    "decode_span_semantics.rs",
+];
+
+/// `TunerTelemetry` fields counting as fault-ledger counters: name
+/// fragments covering the PR 7 injected==observed ledger family.
+const LEDGER_FRAGMENTS: &[&str] =
+    &["fault", "retries", "sanitized", "watchdog", "failures"];
+
+/// Methods that expose `HashMap`/`HashSet` iteration order.
+const ORDER_OPS: &[&str] = &[
+    "iter",
+    "iter_mut",
+    "keys",
+    "values",
+    "values_mut",
+    "into_iter",
+    "drain",
+    "retain",
+];
+
+fn allowed(path: &str, list: &[&str]) -> bool {
+    list.iter().any(|suffix| path.ends_with(suffix))
+}
+
+fn push(
+    out: &mut Vec<Finding>,
+    rule: &'static str,
+    file: &str,
+    line: u32,
+    msg: String,
+) {
+    out.push(Finding {
+        rule,
+        file: file.to_string(),
+        line,
+        msg,
+    });
+}
+
+/// R1 — `nondet-wallclock`.
+pub fn nondet_wallclock(file: &SourceFile, toks: &[Tok], out: &mut Vec<Finding>) {
+    if allowed(&file.path, WALLCLOCK_ALLOW) {
+        return;
+    }
+    for t in toks {
+        if t.text == "Instant" || t.text == "SystemTime" {
+            push(
+                out,
+                "nondet-wallclock",
+                &file.path,
+                t.line,
+                format!(
+                    "`{}` reads host wall-clock; simulation paths must \
+                     stay on the virtual clock for bitwise replay",
+                    t.text
+                ),
+            );
+        }
+    }
+}
+
+/// R2 — `nondet-thread-spawn`: `thread::spawn` or any `.spawn(` call.
+pub fn nondet_thread_spawn(
+    file: &SourceFile,
+    toks: &[Tok],
+    out: &mut Vec<Finding>,
+) {
+    if allowed(&file.path, SPAWN_ALLOW) {
+        return;
+    }
+    for idx in 0..toks.len() {
+        if toks[idx].text != "spawn" {
+            continue;
+        }
+        let path_form = idx >= 2
+            && toks[idx - 1].text == "::"
+            && toks[idx - 2].text == "thread";
+        let method_form = idx >= 1
+            && toks[idx - 1].text == "."
+            && toks.get(idx + 1).is_some_and(|t| t.text == "(");
+        if path_form || method_form {
+            push(
+                out,
+                "nondet-thread-spawn",
+                &file.path,
+                toks[idx].line,
+                "ad-hoc spawn; route parallelism through \
+                 experiment::executor (the one audited boundary)"
+                    .to_string(),
+            );
+        }
+    }
+}
+
+/// R3 — `nondet-map-iter`: collect names bound to `HashMap`/`HashSet`
+/// (field decls, lets, params), then flag order-exposing operations on
+/// them.
+pub fn nondet_map_iter(file: &SourceFile, toks: &[Tok], out: &mut Vec<Finding>) {
+    // Pass 1: names typed/assigned as HashMap/HashSet. Anchor at the
+    // type token and look back over `std :: collections ::`, `&`,
+    // `mut`, `<` to the binding `name :` or `name =`.
+    let skip: BTreeSet<&str> =
+        ["std", "collections", "::", "&", "mut", "<"].into();
+    let mut names: BTreeSet<String> = BTreeSet::new();
+    for idx in 0..toks.len() {
+        if toks[idx].text != "HashMap" && toks[idx].text != "HashSet" {
+            continue;
+        }
+        let mut j = idx;
+        while j > 0 && skip.contains(toks[j - 1].text.as_str()) {
+            j -= 1;
+        }
+        if j >= 2 {
+            let sep = toks[j - 1].text.as_str();
+            let name = toks[j - 2].text.as_str();
+            if (sep == ":" || sep == "=") && is_plain_ident(name) {
+                names.insert(name.to_string());
+            }
+        }
+    }
+    if names.is_empty() {
+        return;
+    }
+    // Pass 2: order-exposing uses of those names.
+    for idx in 0..toks.len() {
+        if !names.contains(&toks[idx].text) {
+            continue;
+        }
+        // name . op (
+        if toks.get(idx + 1).is_some_and(|t| t.text == ".")
+            && toks
+                .get(idx + 2)
+                .is_some_and(|t| ORDER_OPS.contains(&t.text.as_str()))
+            && toks.get(idx + 3).is_some_and(|t| t.text == "(")
+        {
+            push(
+                out,
+                "nondet-map-iter",
+                &file.path,
+                toks[idx + 2].line,
+                format!(
+                    "`.{}()` on hash-backed `{}` exposes nondeterministic \
+                     iteration order; sort first or use a BTree collection",
+                    toks[idx + 2].text, toks[idx].text
+                ),
+            );
+        }
+        // for _ in [&[mut]] name
+        let p1 = idx.checked_sub(1).map(|k| toks[k].text.as_str());
+        let p2 = idx.checked_sub(2).map(|k| toks[k].text.as_str());
+        let p3 = idx.checked_sub(3).map(|k| toks[k].text.as_str());
+        let for_loop = p1 == Some("in")
+            || (p1 == Some("&") && p2 == Some("in"))
+            || (p1 == Some("mut") && p2 == Some("&") && p3 == Some("in"));
+        if for_loop {
+            push(
+                out,
+                "nondet-map-iter",
+                &file.path,
+                toks[idx].line,
+                format!(
+                    "`for … in` over hash-backed `{}` exposes \
+                     nondeterministic iteration order",
+                    toks[idx].text
+                ),
+            );
+        }
+    }
+}
+
+/// R4 — `float-eq`: `==`/`!=` with a float literal on either side.
+pub fn float_eq(file: &SourceFile, toks: &[Tok], out: &mut Vec<Finding>) {
+    for idx in 0..toks.len() {
+        let op = toks[idx].text.as_str();
+        if op != "==" && op != "!=" {
+            continue;
+        }
+        let prev_float =
+            idx >= 1 && is_float_lit(&toks[idx - 1].text);
+        let next_float =
+            toks.get(idx + 1).is_some_and(|t| is_float_lit(&t.text));
+        if prev_float || next_float {
+            push(
+                out,
+                "float-eq",
+                &file.path,
+                toks[idx].line,
+                format!(
+                    "`{op}` against a float literal; bitwise invariants \
+                     compare via to_bits(), thresholds via inequalities"
+                ),
+            );
+        }
+    }
+}
+
+/// R5 — `no-new-unwrap`: one finding per `.unwrap()` / `.expect(`
+/// call site; the engine ratchets per-file counts against the
+/// baseline instead of grandfathering individual lines.
+pub fn no_new_unwrap(file: &SourceFile, toks: &[Tok], out: &mut Vec<Finding>) {
+    for idx in 1..toks.len() {
+        let t = toks[idx].text.as_str();
+        if (t == "unwrap" || t == "expect")
+            && toks[idx - 1].text == "."
+            && toks.get(idx + 1).is_some_and(|t| t.text == "(")
+        {
+            push(
+                out,
+                "no-new-unwrap",
+                &file.path,
+                toks[idx].line,
+                format!(
+                    "`.{t}(…)` on a library path; prefer contextful \
+                     expect()/Result (count is ratcheted per file)"
+                ),
+            );
+        }
+    }
+}
+
+/// R6 — `compare-exhaustive`: every field of each watched struct must
+/// appear as an identifier in at least one semantics suite.
+pub fn compare_exhaustive(
+    src: &[(SourceFile, Vec<Tok>)],
+    suite_idents: &BTreeSet<String>,
+    suites_present: bool,
+    out: &mut Vec<Finding>,
+) {
+    if !suites_present {
+        return; // partial scan (explicit paths): nothing to hold against
+    }
+    for name in COMPARE_STRUCTS {
+        for (file, toks) in src {
+            let Some((_, flds)) = fields::struct_fields(toks, name) else {
+                continue;
+            };
+            for (field, line) in &flds {
+                if !suite_idents.contains(field) {
+                    push(
+                        out,
+                        "compare-exhaustive",
+                        &file.path,
+                        *line,
+                        format!(
+                            "{name}::{field} is never referenced by \
+                             tests/{{perf,governor,cluster,chaos,\
+                             decode_span}}_semantics.rs — the bitwise \
+                             compare helpers cannot be exhaustive"
+                        ),
+                    );
+                }
+            }
+            break; // first definition wins
+        }
+    }
+}
+
+/// R7 — `ledger-coverage`: every `TunerTelemetry` fault counter must
+/// appear as an identifier somewhere in `tests/`.
+pub fn ledger_coverage(
+    src: &[(SourceFile, Vec<Tok>)],
+    test_idents: &BTreeSet<String>,
+    tests_present: bool,
+    out: &mut Vec<Finding>,
+) {
+    if !tests_present {
+        return;
+    }
+    for (file, toks) in src {
+        let Some((_, flds)) = fields::struct_fields(toks, "TunerTelemetry")
+        else {
+            continue;
+        };
+        for (field, line) in &flds {
+            let is_counter = LEDGER_FRAGMENTS
+                .iter()
+                .any(|frag| field.contains(frag));
+            if is_counter && !test_idents.contains(field) {
+                push(
+                    out,
+                    "ledger-coverage",
+                    &file.path,
+                    *line,
+                    format!(
+                        "fault counter TunerTelemetry::{field} is never \
+                         asserted by any test — the injected==observed \
+                         ledger has a blind spot"
+                    ),
+                );
+            }
+        }
+        break;
+    }
+}
+
+fn is_plain_ident(t: &str) -> bool {
+    let mut chars = t.chars();
+    chars
+        .next()
+        .is_some_and(|c| c.is_ascii_alphabetic() || c == '_')
+        && !matches!(t, "in" | "if" | "let" | "fn" | "return" | "match")
+}

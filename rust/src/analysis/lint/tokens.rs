@@ -1,0 +1,447 @@
+//! A minimal Rust lexer for the lint pass: comments, strings (plain,
+//! raw, byte), char literals and lifetimes are *scrubbed* so the rules
+//! in [`super::rules`] only ever see code tokens. The lexer also
+//! harvests `lint:allow(rule-id)` suppression markers out of comment
+//! text before discarding it, and can drop the trailing `#[cfg(test)]`
+//! module (the repo-wide convention for in-file unit tests) so rules
+//! judge shipping code only.
+//!
+//! This is deliberately not a full Rust lexer — it only needs to be
+//! exact about what *hides* code (comment/string/char boundaries) and
+//! about the handful of multi-character operators the rules match on
+//! (`::`, `==`, `!=`, `=>`, …). `scripts/gen_lint_baseline.py` mirrors
+//! this logic line-for-line so the committed baseline can be
+//! regenerated without a Rust toolchain; keep the two in sync.
+
+/// One scrubbed token: the 1-based source line and its text.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Tok {
+    pub line: u32,
+    pub text: String,
+}
+
+/// Lexer output: the scrubbed token stream plus every
+/// `lint:allow(rule)` marker found in comment text, as
+/// `(comment start line, rule id)` pairs. An `allow` on line `L`
+/// suppresses findings on lines `L` and `L + 1`, so both trailing
+/// (`code // lint:allow(x)`) and preceding-line comments work.
+#[derive(Debug, Default)]
+pub struct Lexed {
+    pub tokens: Vec<Tok>,
+    pub allows: Vec<(u32, String)>,
+}
+
+/// Multi-character operators emitted as single tokens (longest match
+/// first). Everything else punctuation-like is emitted per character.
+const OPS: &[&str] = &[
+    "..=", "<<=", ">>=", "::", "==", "!=", "<=", ">=", "=>", "->", "&&",
+    "||", "+=", "-=", "*=", "/=", "%=", "^=", "&=", "|=", "<<", ">>",
+    "..",
+];
+
+fn is_ident_start(c: char) -> bool {
+    c.is_ascii_alphabetic() || c == '_'
+}
+
+fn is_ident_char(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// True for number-literal tokens that denote floats (`1.5`, `1e6`,
+/// `2f64`); hex/binary/octal literals are excluded so `0x1E` stays an
+/// integer.
+pub fn is_float_lit(t: &str) -> bool {
+    let mut chars = t.chars();
+    if !chars.next().is_some_and(|c| c.is_ascii_digit()) {
+        return false;
+    }
+    if t.starts_with("0x") || t.starts_with("0b") || t.starts_with("0o") {
+        return false;
+    }
+    t.contains('.')
+        || t.contains('e')
+        || t.contains('E')
+        || t.ends_with("f32")
+        || t.ends_with("f64")
+}
+
+/// Harvest `lint:allow(a, b)` markers from one comment's text.
+fn scan_allows(text: &str, line: u32, allows: &mut Vec<(u32, String)>) {
+    let mut rest = text;
+    while let Some(pos) = rest.find("lint:allow(") {
+        rest = &rest[pos + "lint:allow(".len()..];
+        let Some(end) = rest.find(')') else {
+            return;
+        };
+        for id in rest[..end].split(',') {
+            let id = id.trim();
+            if !id.is_empty() {
+                allows.push((line, id.to_string()));
+            }
+        }
+        rest = &rest[end..];
+    }
+}
+
+/// Lex one source file into scrubbed tokens + suppression markers.
+pub fn lex(src: &str) -> Lexed {
+    let cs: Vec<char> = src.chars().collect();
+    let n = cs.len();
+    let mut out = Lexed::default();
+    let mut i = 0usize;
+    let mut line = 1u32;
+    while i < n {
+        let c = cs[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // Line comment (also doc `///` and `//!`).
+        if c == '/' && cs.get(i + 1) == Some(&'/') {
+            let start = i;
+            while i < n && cs[i] != '\n' {
+                i += 1;
+            }
+            let text: String = cs[start..i].iter().collect();
+            scan_allows(&text, line, &mut out.allows);
+            continue;
+        }
+        // Block comment, nested per Rust rules.
+        if c == '/' && cs.get(i + 1) == Some(&'*') {
+            let start_line = line;
+            let mut depth = 1u32;
+            let mut text = String::from("/*");
+            i += 2;
+            while i < n && depth > 0 {
+                if cs[i] == '/' && cs.get(i + 1) == Some(&'*') {
+                    depth += 1;
+                    text.push_str("/*");
+                    i += 2;
+                } else if cs[i] == '*' && cs.get(i + 1) == Some(&'/') {
+                    depth -= 1;
+                    text.push_str("*/");
+                    i += 2;
+                } else {
+                    if cs[i] == '\n' {
+                        line += 1;
+                    }
+                    text.push(cs[i]);
+                    i += 1;
+                }
+            }
+            scan_allows(&text, start_line, &mut out.allows);
+            continue;
+        }
+        // Raw / byte string prefixes: r"…", r#"…"#, b"…", br#"…"#, b'…'.
+        if c == 'r' || c == 'b' {
+            let mut j = i + 1;
+            let mut prefix_br = false;
+            if c == 'b' && cs.get(j) == Some(&'r') {
+                j += 1;
+                prefix_br = true;
+            }
+            let mut hashes = 0usize;
+            while cs.get(j) == Some(&'#') {
+                hashes += 1;
+                j += 1;
+            }
+            if cs.get(j) == Some(&'"') {
+                let raw = c == 'r' || prefix_br; // b"…" is not raw
+                i = j + 1;
+                if raw {
+                    // Raw: close is `"` followed by `hashes` hashes.
+                    while i < n {
+                        if cs[i] == '\n' {
+                            line += 1;
+                        }
+                        if cs[i] == '"'
+                            && cs[i + 1..]
+                                .iter()
+                                .take(hashes)
+                                .filter(|&&h| h == '#')
+                                .count()
+                                == hashes
+                        {
+                            i += 1 + hashes;
+                            break;
+                        }
+                        i += 1;
+                    }
+                } else {
+                    // b"…": plain string rules (escapes active).
+                    i = skip_plain_string(&cs, i, &mut line);
+                }
+                continue;
+            }
+            if c == 'b' && cs.get(i + 1) == Some(&'\'') {
+                // Byte char literal b'…' (escaped or single-char form).
+                if cs.get(i + 2) == Some(&'\\') {
+                    i = skip_char_literal(&cs, i + 1);
+                } else {
+                    i = (i + 4).min(n); // b, ', x, '
+                }
+                continue;
+            }
+            // Fall through: plain identifier starting with r/b.
+        }
+        // Plain string.
+        if c == '"' {
+            i = skip_plain_string(&cs, i + 1, &mut line);
+            continue;
+        }
+        // Char literal vs lifetime.
+        if c == '\'' {
+            if cs.get(i + 1) == Some(&'\\') {
+                i = skip_char_literal(&cs, i);
+                continue;
+            }
+            if cs.get(i + 2) == Some(&'\'') {
+                i += 3; // 'x'
+                continue;
+            }
+            i += 1; // lifetime quote; the ident lexes next round
+            continue;
+        }
+        // Identifier / keyword.
+        if is_ident_start(c) {
+            let start = i;
+            while i < n && is_ident_char(cs[i]) {
+                i += 1;
+            }
+            out.tokens.push(Tok {
+                line,
+                text: cs[start..i].iter().collect(),
+            });
+            continue;
+        }
+        // Number literal.
+        if c.is_ascii_digit() {
+            let start = i;
+            if c == '0'
+                && matches!(cs.get(i + 1), Some('x') | Some('b') | Some('o'))
+            {
+                i += 2;
+                while i < n && (is_ident_char(cs[i]) || cs[i] == '_') {
+                    i += 1;
+                }
+            } else {
+                while i < n && (cs[i].is_ascii_digit() || cs[i] == '_') {
+                    i += 1;
+                }
+                let after_dot = out
+                    .tokens
+                    .last()
+                    .is_some_and(|t| t.text == ".");
+                if !after_dot
+                    && cs.get(i) == Some(&'.')
+                    && cs.get(i + 1).is_some_and(|d| d.is_ascii_digit())
+                {
+                    i += 1;
+                    while i < n && (cs[i].is_ascii_digit() || cs[i] == '_') {
+                        i += 1;
+                    }
+                }
+                if matches!(cs.get(i), Some('e') | Some('E')) {
+                    let sign = matches!(cs.get(i + 1), Some('+') | Some('-'));
+                    let d = if sign { i + 2 } else { i + 1 };
+                    if cs.get(d).is_some_and(|x| x.is_ascii_digit()) {
+                        i = d + 1;
+                        while i < n
+                            && (cs[i].is_ascii_digit() || cs[i] == '_')
+                        {
+                            i += 1;
+                        }
+                    }
+                }
+                // Type suffix (u32, f64, …).
+                while i < n && is_ident_char(cs[i]) {
+                    i += 1;
+                }
+            }
+            out.tokens.push(Tok {
+                line,
+                text: cs[start..i].iter().collect(),
+            });
+            continue;
+        }
+        // Multi-char operator, longest match first.
+        let mut matched = false;
+        for op in OPS {
+            let olen = op.len();
+            if i + olen <= n
+                && cs[i..i + olen].iter().collect::<String>() == *op
+            {
+                out.tokens.push(Tok {
+                    line,
+                    text: (*op).to_string(),
+                });
+                i += olen;
+                matched = true;
+                break;
+            }
+        }
+        if matched {
+            continue;
+        }
+        out.tokens.push(Tok {
+            line,
+            text: c.to_string(),
+        });
+        i += 1;
+    }
+    out
+}
+
+/// Skip a plain (escaped) string body starting just past the opening
+/// quote; returns the index just past the closing quote.
+fn skip_plain_string(cs: &[char], mut i: usize, line: &mut u32) -> usize {
+    let n = cs.len();
+    while i < n {
+        match cs[i] {
+            '\\' => i += 2,
+            '"' => return i + 1,
+            c => {
+                if c == '\n' {
+                    *line += 1;
+                }
+                i += 1;
+            }
+        }
+    }
+    i
+}
+
+/// Skip a char literal starting at its opening quote (escaped form);
+/// returns the index just past the closing quote.
+fn skip_char_literal(cs: &[char], start: usize) -> usize {
+    let n = cs.len();
+    // start -> '\'' ; start+1 -> '\\' ; start+2 -> escaped char.
+    let mut i = (start + 3).min(n); // consume quote, backslash, one char
+    while i < n && cs[i] != '\'' {
+        i += 1;
+    }
+    (i + 1).min(n + 1)
+}
+
+/// Drop everything from the file's trailing top-level `#[cfg(test)]`
+/// attribute on (the repo convention keeps in-file unit tests in one
+/// trailing module), so rules only judge shipping code.
+pub fn strip_trailing_test_module(mut tokens: Vec<Tok>) -> Vec<Tok> {
+    let pat = ["#", "[", "cfg", "(", "test", ")", "]"];
+    let mut depth = 0i64;
+    for idx in 0..tokens.len() {
+        match tokens[idx].text.as_str() {
+            "{" => depth += 1,
+            "}" => depth -= 1,
+            "#" if depth == 0 => {
+                let hit = pat.iter().enumerate().all(|(k, want)| {
+                    tokens
+                        .get(idx + k)
+                        .is_some_and(|t| t.text == *want)
+                });
+                if hit {
+                    tokens.truncate(idx);
+                    return tokens;
+                }
+            }
+            _ => {}
+        }
+    }
+    tokens
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn texts(src: &str) -> Vec<String> {
+        lex(src).tokens.into_iter().map(|t| t.text).collect()
+    }
+
+    #[test]
+    fn comments_and_strings_are_scrubbed() {
+        let src = r##"
+            // Instant in a comment
+            /* block /* nested */ HashMap */
+            let s = "Instant::now()"; // string scrubbed
+            let r = r#"SystemTime "quoted" inside"#;
+            let b = b"spawn";
+        "##;
+        let toks = texts(src);
+        assert!(!toks.iter().any(|t| t == "Instant"));
+        assert!(!toks.iter().any(|t| t == "HashMap"));
+        assert!(!toks.iter().any(|t| t == "SystemTime"));
+        assert!(!toks.iter().any(|t| t == "spawn"));
+        assert!(toks.contains(&"let".to_string()));
+    }
+
+    #[test]
+    fn char_literals_and_lifetimes() {
+        let src = "fn f<'a>(x: &'a str) -> char { if x == \"y\" { '\\'' } else { '\"' } }";
+        let toks = texts(src);
+        // Lifetimes survive as plain idents; char contents do not.
+        assert!(toks.contains(&"a".to_string()));
+        assert!(!toks.iter().any(|t| t == "\""));
+        let src2 = "let c = '\\u{1F600}'; let d = 'x'; let e = b' ';";
+        let toks2 = texts(src2);
+        assert_eq!(
+            toks2,
+            ["let", "c", "=", ";", "let", "d", "=", ";", "let", "e", "=", ";"]
+        );
+    }
+
+    #[test]
+    fn floats_vs_ints_vs_tuple_index() {
+        let toks = texts("a.0.to_bits() == 1.5e3; b == 0; c == 2f64; 0x1E");
+        assert!(toks.contains(&"1.5e3".to_string()));
+        assert!(is_float_lit("1.5e3"));
+        assert!(is_float_lit("2f64"));
+        assert!(is_float_lit("1e6"));
+        assert!(!is_float_lit("0"));
+        assert!(!is_float_lit("0x1E"));
+        // `.0` stays a tuple index, not a float.
+        assert!(toks.contains(&"0".to_string()));
+        assert!(!toks.contains(&"0.".to_string()));
+    }
+
+    #[test]
+    fn operators_lex_as_units() {
+        let toks = texts("a != b; c == d; e => f; g ..= h; i :: j");
+        for op in ["!=", "==", "=>", "..=", "::"] {
+            assert!(toks.contains(&op.to_string()), "missing {op}");
+        }
+    }
+
+    #[test]
+    fn allows_are_harvested_with_lines() {
+        let src = "let x = 1; // lint:allow(float-eq, no-new-unwrap)\n\
+                   // lint:allow(nondet-map-iter)\nlet y = 2;";
+        let lexed = lex(src);
+        assert_eq!(
+            lexed.allows,
+            vec![
+                (1, "float-eq".to_string()),
+                (1, "no-new-unwrap".to_string()),
+                (2, "nondet-map-iter".to_string()),
+            ]
+        );
+    }
+
+    #[test]
+    fn trailing_test_module_is_stripped() {
+        let src = "fn a() { if x { } }\n#[cfg(test)]\nmod tests { fn b() {} }";
+        let toks = strip_trailing_test_module(lex(src).tokens);
+        let texts: Vec<&str> = toks.iter().map(|t| t.text.as_str()).collect();
+        assert!(texts.contains(&"a"));
+        assert!(!texts.contains(&"tests"));
+        // A cfg(test) nested inside a body is not a cutoff.
+        let src2 = "fn a() { #[cfg(test)] let x = 1; } fn c() {}";
+        let toks2 = strip_trailing_test_module(lex(src2).tokens);
+        assert!(toks2.iter().any(|t| t.text == "c"));
+    }
+}

@@ -4,8 +4,12 @@
 //!   statistics (Fig 14), uniform re-binning (Fig 4 hourly stats).
 //! * [`fingerprint`] — per-workload mean 7-dim feature vectors and their
 //!   cross-workload normalisation (Fig 7 radar data).
+//! * [`lint`] — the `agft lint` static-analysis pass: token-level
+//!   determinism/bitwise-invariant rules over this source tree, with a
+//!   committed baseline ratchet (see EXPERIMENTS.md §Static analysis).
 
 pub mod fingerprint;
+pub mod lint;
 pub mod series;
 
 pub use fingerprint::{normalize_fingerprints, run_fingerprint, Fingerprint};

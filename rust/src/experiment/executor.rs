@@ -171,7 +171,10 @@ impl Executor {
                         break;
                     }
                     let r = f(i, &jobs[i]);
-                    *slots[i].lock().unwrap() = Some(r);
+                    *slots[i]
+                        .lock()
+                        .expect("slot mutex poisoned (a worker panicked)") =
+                        Some(r);
                 });
             }
         });
@@ -227,7 +230,9 @@ impl Executor {
                     if i >= n {
                         break;
                     }
-                    let mut guard = cells[i].lock().unwrap();
+                    let mut guard = cells[i]
+                        .lock()
+                        .expect("cell mutex poisoned (a worker panicked)");
                     let (job, out) = &mut *guard;
                     *out = Some(f(i, &mut **job));
                 });

@@ -133,7 +133,11 @@ pub fn edp_sweep_with(
         .try_map(&freqs, |_, &f| sweep_leg(cfg, f, cfg.seed, &requests))?;
     let optimum = *points
         .iter()
-        .min_by(|a, b| a.edp.partial_cmp(&b.edp).unwrap())
+        .min_by(|a, b| {
+            a.edp
+                .partial_cmp(&b.edp)
+                .expect("sweep-leg EDP is finite")
+        })
         .ok_or("empty sweep")?;
     Ok(SweepResult { points, optimum })
 }
@@ -214,7 +218,12 @@ pub fn edp_sweep_seeded(
         .collect();
     let optimum = points
         .iter()
-        .min_by(|a, b| a.edp.mean.partial_cmp(&b.edp.mean).unwrap())
+        .min_by(|a, b| {
+            a.edp
+                .mean
+                .partial_cmp(&b.edp.mean)
+                .expect("seed-mean EDP is finite")
+        })
         .cloned()
         .ok_or("empty sweep")?;
     Ok(SeededSweepResult {

@@ -70,7 +70,7 @@ impl FreqTable {
         }
         // Always include the top clock so the bootstrap grid spans the
         // whole range.
-        if *out.last().unwrap() != self.max_mhz {
+        if out.last() != Some(&self.max_mhz) {
             out.push(self.max_mhz);
         }
         out

@@ -22,6 +22,9 @@
 // paper's matrix index notation (`for i in 0..D`), and the HLO scorer
 // trait mirrors the Pallas kernel's flat argument signature.
 #![allow(clippy::needless_range_loop, clippy::too_many_arguments)]
+// The crate is unsafe-free by construction (std-only simulator +
+// tuner); forbidding makes that a compiler-enforced guarantee.
+#![forbid(unsafe_code)]
 
 pub mod analysis;
 pub mod cluster;

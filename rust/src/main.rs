@@ -18,6 +18,7 @@
 //! agft ablation    --which grain|pruning
 //! agft trace-gen   --year 2024 --duration 3600 --out trace.csv
 //! agft metrics     --workload normal --duration 30      (Prometheus dump)
+//! agft lint        --baseline lint_baseline.json --json findings.json
 //! agft bench-all   (points at the cargo bench targets)
 //! ```
 //!
@@ -996,10 +997,113 @@ fn cmd_metrics(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
+fn cmd_lint(args: &Args) -> Result<(), String> {
+    use agft::analysis::lint;
+    if args.has("list") {
+        for (id, desc) in lint::rules::RULES {
+            println!("{id:<20} {desc}");
+        }
+        return Ok(());
+    }
+    let root = lint::find_root()?;
+    // The argument parser promotes the first bare argument to the
+    // subcommand slot, so the path filters are subcommand + positional.
+    let filters: Vec<String> = args
+        .subcommand
+        .iter()
+        .cloned()
+        .chain(args.positional.iter().cloned())
+        .collect();
+    let input = lint::load(&root, &filters)?;
+    if input.src.is_empty() {
+        return Err("lint: no source files matched".to_string());
+    }
+    let findings = lint::run(&input);
+    let counts = lint::count(&findings);
+
+    if let Some(path) = args.get("write-baseline") {
+        let text = lint::baseline::render(&counts);
+        std::fs::write(path, text).map_err(|e| format!("{path}: {e}"))?;
+        println!(
+            "lint: wrote baseline ({} findings over {} files) to {path}",
+            findings.len(),
+            input.src.len()
+        );
+        return Ok(());
+    }
+
+    // Baseline: --baseline <path>, else the committed default when the
+    // full tree is scanned (path filters would understate counts and
+    // make every baseline entry look stale).
+    let default_baseline = root.join("lint_baseline.json");
+    let base_counts = match args.get("baseline") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)
+                .map_err(|e| format!("--baseline {path}: {e}"))?;
+            lint::baseline::parse(&text)?
+        }
+        None if filters.is_empty() && default_baseline.is_file() => {
+            let text = std::fs::read_to_string(&default_baseline)
+                .map_err(|e| {
+                    format!("{}: {e}", default_baseline.display())
+                })?;
+            lint::baseline::parse(&text)?
+        }
+        None => lint::baseline::Counts::new(),
+    };
+    let delta = lint::baseline::diff(&counts, &base_counts);
+
+    if let Some(path) = args.get("json") {
+        let doc = lint::findings_json(&findings, &counts, &delta);
+        std::fs::write(path, doc.pretty())
+            .map_err(|e| format!("--json {path}: {e}"))?;
+    }
+
+    // Console report: per-rule totals, then every finding in a
+    // regressed (rule, file) bucket — the new finding is among them.
+    println!(
+        "lint: {} file(s), {} finding(s) across {} rule(s)",
+        input.src.len(),
+        findings.len(),
+        counts.len()
+    );
+    for (rule, files) in &counts {
+        let total: u64 = files.values().sum();
+        println!("  {rule:<20} {total}");
+    }
+    for (rule, file, cur, base) in &delta.regressions {
+        println!(
+            "NEW {rule} in {file}: {cur} finding(s) vs baseline {base}:"
+        );
+        for f in &findings {
+            if f.rule == rule && &f.file == file {
+                println!("  {}:{} [{}] {}", f.file, f.line, f.rule, f.msg);
+            }
+        }
+    }
+    for (rule, file, cur, base) in &delta.stale {
+        println!(
+            "stale baseline: {rule} in {file}: {cur} vs baseline {base} \
+             — tighten lint_baseline.json (agft lint --write-baseline)"
+        );
+    }
+    if !delta.regressions.is_empty() {
+        return Err(format!(
+            "lint: {} (rule, file) bucket(s) regressed past the \
+             baseline; fix the new finding(s) above, add a trailing \
+             `// lint:allow(<rule-id>)` with justification, or (last \
+             resort) regenerate the baseline",
+            delta.regressions.len()
+        ));
+    }
+    println!("lint: clean against baseline");
+    Ok(())
+}
+
 fn usage() -> ! {
     eprintln!(
         "usage: agft <serve|cluster|compare|sweep|merge-csv|orchestrate|\
-         ablation|fingerprint|trace-gen|metrics|bench-all> [options]\n\
+         ablation|fingerprint|trace-gen|metrics|lint|bench-all> [options]\n\
          common options: --config <toml> --workload <name> --governor \
          <default|agft|ondemand|slo|bandit|locked:MHZ> --duration S \
          --rps R --seed N --workers N\n\
@@ -1027,6 +1131,11 @@ fn usage() -> ! {
          \"ssh worker{{k}}\"] [--agft-bin path] + the sharded command's \
          own flags (spawns the shard processes, retries a failed shard \
          once, merges on completion)\n\
+         lint options: [paths…] [--baseline lint_baseline.json] \
+         [--json findings.json] [--write-baseline out.json] [--list] \
+         (token-level determinism/bitwise-invariant rules with a \
+         committed baseline ratchet; see EXPERIMENTS.md §Static \
+         analysis)\n\
          ablation options: --which grain|pruning\n\
          multi-seed: compare|sweep|ablation accept --seeds N (mean ± \
          95 % CI over N seed replicas)\n\
@@ -1059,6 +1168,7 @@ fn main() {
         "fingerprint" => cmd_fingerprint(&args),
         "trace-gen" => cmd_trace_gen(&args),
         "metrics" => cmd_metrics(&args),
+        "lint" => cmd_lint(&args),
         "bench-all" => {
             println!(
                 "every table/figure is a cargo bench target:\n  \

@@ -65,7 +65,10 @@ impl KvCache {
         }
         let mut out = Vec::with_capacity(n);
         for _ in 0..n {
-            let b = self.free.pop().unwrap();
+            let b = self
+                .free
+                .pop()
+                .expect("free-list length checked above");
             debug_assert_eq!(self.refcount[b as usize], 0);
             self.refcount[b as usize] = 1;
             out.push(b);

@@ -17,10 +17,12 @@ pub struct MetricsSnapshot {
     /// batched decode span counts once however many virtual iterations
     /// it covers) — excluded from cross-mode bitwise comparisons and,
     /// like `decode_spans_total`, banned from the feature context.
+    // lint:allow(compare-exhaustive) — mode-dependent by design (see doc)
     pub iterations_total: u64,
     /// Batched decode spans executed (0 in per-step mode). Telemetry
     /// only — mode-dependent by design, same rules as
     /// `iterations_total`.
+    // lint:allow(compare-exhaustive) — mode-dependent by design (see doc)
     pub decode_spans_total: u64,
     pub busy_iterations_total: u64,
     pub prefill_tokens_total: u64,

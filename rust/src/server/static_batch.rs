@@ -28,7 +28,11 @@ pub fn run_static(
     mut requests: Vec<Request>,
     trace_every_s: f64,
 ) -> StaticRunReport {
-    requests.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
+    requests.sort_by(|a, b| {
+        a.arrival_s
+            .partial_cmp(&b.arrival_s)
+            .expect("generated arrival times are finite")
+    });
     let perf = PerfModel::new(&cfg.gpu, &cfg.model);
     let mut gpu = SimGpu::new(&cfg.gpu, cfg.governor);
     let mut clock = Clock::new();

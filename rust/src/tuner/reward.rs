@@ -106,10 +106,14 @@ impl RewardCalculator {
                 self.warmup.push(edp);
                 if self.warmup.len() as u64 >= self.warmup_target {
                     let mut xs = self.warmup.clone();
-                    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                    xs.sort_by(|a, b| {
+                        a.partial_cmp(b)
+                            .expect("warm-up EDPs are finite")
+                    });
                     let median = xs[xs.len() / 2];
-                    self.edp_ref = Some(median.max(1e-12));
-                    self.edp_ref.unwrap()
+                    let pinned = median.max(1e-12);
+                    self.edp_ref = Some(pinned);
+                    pinned
                 } else {
                     // Use the running mean until the median is pinned.
                     let sum: f64 = self.warmup.iter().sum();

@@ -24,12 +24,9 @@ impl Args {
                 }
                 if let Some((k, v)) = name.split_once('=') {
                     out.flags.insert(k.to_string(), v.to_string());
-                } else if iter
-                    .peek()
-                    .map(|next| !next.starts_with("--"))
-                    .unwrap_or(false)
+                } else if let Some(v) =
+                    iter.next_if(|next| !next.starts_with("--"))
                 {
-                    let v = iter.next().unwrap();
                     out.flags.insert(name.to_string(), v);
                 } else {
                     out.switches.push(name.to_string());

@@ -161,6 +161,9 @@ pub fn merge_keyed(texts: &[String], ctx: &str) -> Result<String, String> {
     }
     let mut header: Option<Vec<String>> = None;
     let mut rows: Vec<(u64, Vec<String>)> = Vec::new();
+    // Probe-only duplicate detector (insert/contains — no iteration),
+    // the reviewed exception clippy.toml's disallowed-types describes.
+    #[allow(clippy::disallowed_types)]
     let mut seen: std::collections::HashSet<u64> =
         std::collections::HashSet::new();
     for (i, text) in texts.iter().enumerate() {
@@ -227,13 +230,20 @@ pub struct SharedBuf(std::sync::Arc<std::sync::Mutex<Vec<u8>>>);
 
 impl SharedBuf {
     pub fn contents(&self) -> String {
-        String::from_utf8_lossy(&self.0.lock().unwrap()).to_string()
+        let buf = self
+            .0
+            .lock()
+            .expect("CSV buffer mutex poisoned (a writer panicked)");
+        String::from_utf8_lossy(&buf).to_string()
     }
 }
 
 impl Write for SharedBuf {
     fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
-        self.0.lock().unwrap().extend_from_slice(buf);
+        self.0
+            .lock()
+            .expect("CSV buffer mutex poisoned (a writer panicked)")
+            .extend_from_slice(buf);
         Ok(buf.len())
     }
     fn flush(&mut self) -> std::io::Result<()> {

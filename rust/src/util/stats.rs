@@ -200,7 +200,9 @@ impl Percentiles {
             return Percentiles::default();
         }
         let mut xs: Vec<f64> = samples.to_vec();
-        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        xs.sort_by(|a, b| {
+            a.partial_cmp(b).expect("percentile samples are finite")
+        });
         Percentiles {
             p50: percentile_sorted(&xs, 0.50),
             p90: percentile_sorted(&xs, 0.90),

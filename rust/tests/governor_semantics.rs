@@ -79,7 +79,9 @@ fn assert_runs_bitwise_equal(
             && a.requests_waiting == b.requests_waiting
             && a.requests_running == b.requests_running
             && a.kv_usage.to_bits() == b.kv_usage.to_bits()
-            && a.power_w.to_bits() == b.power_w.to_bits();
+            && a.power_w.to_bits() == b.power_w.to_bits()
+            && opt_bits(a.temp_c) == opt_bits(b.temp_c)
+            && a.throttle_mhz == b.throttle_mhz;
         if !same {
             return Err(format!("{ctx}: window {i} diverged"));
         }
@@ -119,12 +121,26 @@ fn assert_runs_bitwise_equal(
             if bits(&tn.reward_log) != bits(&to.reward_log) {
                 return Err(format!("{ctx}: tuner reward_log diverged"));
             }
+            // Every remaining TunerTelemetry field, so new telemetry
+            // can never silently weaken the bitwise guarantee (the
+            // lint's compare-exhaustive rule holds this list against
+            // the struct definition).
             if tn.converged_round != to.converged_round
                 || tn.pruned_extreme != to.pruned_extreme
                 || tn.pruned_historical != to.pruned_historical
                 || tn.pruned_cascade != to.pruned_cascade
                 || tn.refinements != to.refinements
                 || tn.ph_alarms != to.ph_alarms
+                || tn.ph_resets != to.ph_resets
+                || tn.nonfinite_skipped != to.nonfinite_skipped
+                || tn.faults_injected != to.faults_injected
+                || tn.telemetry_faults != to.telemetry_faults
+                || tn.sanitized_windows != to.sanitized_windows
+                || tn.clock_faults != to.clock_faults
+                || tn.clock_retries != to.clock_retries
+                || tn.clock_write_failures != to.clock_write_failures
+                || tn.watchdog_fallbacks != to.watchdog_fallbacks
+                || tn.gpu_faults != to.gpu_faults
             {
                 return Err(format!("{ctx}: tuner telemetry diverged"));
             }

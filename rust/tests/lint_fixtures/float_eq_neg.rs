@@ -1,0 +1,13 @@
+// Negative fixture: bitwise comparison, integer equality and
+// threshold inequalities are the approved forms.
+pub fn bitwise_same(a: f64, b: f64) -> bool {
+    a.to_bits() == b.to_bits()
+}
+
+pub fn none_left(n: u64) -> bool {
+    n == 0
+}
+
+pub fn within(x: f64) -> bool {
+    x < 1.0 && x >= 0.5
+}

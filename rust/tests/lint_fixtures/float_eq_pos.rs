@@ -1,0 +1,8 @@
+// Positive fixture: equality against float literals.
+pub fn is_inert(p: f64) -> bool {
+    p == 0.0
+}
+
+pub fn is_hot(x: f32) -> bool {
+    x != 1.5
+}

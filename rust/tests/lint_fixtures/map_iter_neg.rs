@@ -1,0 +1,22 @@
+// Negative fixture: keyed probes on hash collections are fine, and
+// BTreeMap iteration is deterministic.
+use std::collections::{BTreeMap, HashMap};
+
+pub struct Stats {
+    by_freq: BTreeMap<u32, f64>,
+    cache: HashMap<u32, f64>,
+}
+
+impl Stats {
+    pub fn get(&self, f: u32) -> Option<f64> {
+        self.cache.get(&f).copied()
+    }
+
+    pub fn put(&mut self, f: u32, v: f64) {
+        self.cache.insert(f, v);
+    }
+
+    pub fn ordered(&self) -> impl Iterator<Item = (&u32, &f64)> {
+        self.by_freq.iter()
+    }
+}

@@ -1,0 +1,22 @@
+// Positive fixture: the pre-PR-10 `ActionSpace::all_stats` shape —
+// raw HashMap iteration order leaking out of an API (the first real
+// finding the lint caught; `stats` is BTreeMap-backed since).
+use std::collections::{HashMap, HashSet};
+
+pub struct ActionSpace {
+    stats: HashMap<u32, f64>,
+}
+
+impl ActionSpace {
+    pub fn all_stats(&self) -> impl Iterator<Item = (&u32, &f64)> {
+        self.stats.iter()
+    }
+}
+
+pub fn sum_banned(banned: &HashSet<u32>) -> u32 {
+    let mut n = 0;
+    for f in banned {
+        n += *f;
+    }
+    n
+}

@@ -1,0 +1,9 @@
+// Negative fixture: `spawn` as an ordinary identifier is not a call
+// through std::thread or a `.spawn(` method.
+pub struct Rates {
+    pub spawn: f64,
+}
+
+pub fn spawn_rate(r: &Rates) -> f64 {
+    r.spawn
+}

@@ -1,0 +1,10 @@
+// Positive fixture: ad-hoc threading in both spellings.
+use std::thread;
+
+pub fn fire_and_forget() {
+    thread::spawn(|| {});
+}
+
+pub fn via_builder(cmd: &mut std::process::Command) {
+    let _ = cmd.spawn();
+}

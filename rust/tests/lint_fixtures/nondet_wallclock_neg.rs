@@ -1,0 +1,12 @@
+// Negative fixture: `Instant` and `SystemTime` appear only in comment
+// and string positions, which the scrubber removes.
+// An Instant in a comment is fine; so is SystemTime.
+
+pub fn describe() -> &'static str {
+    "Instant::now() and SystemTime::now() are banned in sim code"
+}
+
+/// Doc comments mentioning Instant are fine too.
+pub fn virtual_now(t_s: f64) -> f64 {
+    t_s
+}

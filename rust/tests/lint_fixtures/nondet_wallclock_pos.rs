@@ -1,0 +1,10 @@
+// Positive fixture: host wall-clock reads in simulation code.
+use std::time::{Instant, SystemTime};
+
+pub fn elapsed_ms(start: Instant) -> u128 {
+    start.elapsed().as_millis()
+}
+
+pub fn stamp() -> SystemTime {
+    SystemTime::now()
+}

@@ -1,0 +1,14 @@
+// Suppression fixture: both trailing and preceding-line allows, plus
+// one unsuppressed finding that must survive.
+pub fn trailing(p: f64) -> bool {
+    p == 0.0 // lint:allow(float-eq) — inertness probe on an exact zero
+}
+
+pub fn preceding(p: f64) -> bool {
+    // lint:allow(float-eq) — preceding-line form
+    p == 1.0
+}
+
+pub fn survives(p: f64) -> bool {
+    p == 2.0
+}

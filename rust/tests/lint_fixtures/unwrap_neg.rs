@@ -1,0 +1,18 @@
+// Negative fixture: the non-panicking unwrap_* family, `expect`-like
+// names, and unwrap mentioned in comments/strings don't count.
+pub fn total(x: Option<u32>) -> u32 {
+    // .unwrap() in a comment is not a call site.
+    x.unwrap_or(0)
+}
+
+pub fn lazy(x: Option<u32>) -> u32 {
+    x.unwrap_or_else(|| 7)
+}
+
+pub fn doc() -> &'static str {
+    "prefer expect(\"context\") over unwrap()"
+}
+
+pub fn err_side(x: Result<u32, u32>) -> u32 {
+    x.expect_err("fixture")
+}

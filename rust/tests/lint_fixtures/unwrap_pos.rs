@@ -1,0 +1,12 @@
+// Positive fixture: three ratcheted call sites.
+pub fn first(xs: &[u32]) -> u32 {
+    *xs.first().unwrap()
+}
+
+pub fn last(xs: &[u32]) -> u32 {
+    *xs.last().unwrap()
+}
+
+pub fn named(x: Option<u32>) -> u32 {
+    x.expect("caller guaranteed Some")
+}

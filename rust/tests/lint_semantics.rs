@@ -1,0 +1,368 @@
+//! Semantics of `agft lint` (PR 10): every rule must fire on a known-bad
+//! fixture and stay quiet on the approved idiom, suppressions and the
+//! baseline ratchet must behave as documented, the JSON artifact must
+//! keep its schema, and a mutation check proves the compare-exhaustive
+//! rule actually notices a deleted field reference.
+//!
+//! Fixtures live in `tests/lint_fixtures/` (a subdirectory, so the
+//! engine's non-recursive `tests/` walk never confuses them with the
+//! reference corpus) and are linted in memory via [`LintInput`].
+
+use agft::analysis::lint::{
+    self, baseline, rules, Finding, LintInput, SourceFile,
+};
+use agft::util::json;
+
+const WALLCLOCK_POS: &str =
+    include_str!("lint_fixtures/nondet_wallclock_pos.rs");
+const WALLCLOCK_NEG: &str =
+    include_str!("lint_fixtures/nondet_wallclock_neg.rs");
+const SPAWN_POS: &str = include_str!("lint_fixtures/nondet_spawn_pos.rs");
+const SPAWN_NEG: &str = include_str!("lint_fixtures/nondet_spawn_neg.rs");
+const MAP_ITER_POS: &str = include_str!("lint_fixtures/map_iter_pos.rs");
+const MAP_ITER_NEG: &str = include_str!("lint_fixtures/map_iter_neg.rs");
+const FLOAT_EQ_POS: &str = include_str!("lint_fixtures/float_eq_pos.rs");
+const FLOAT_EQ_NEG: &str = include_str!("lint_fixtures/float_eq_neg.rs");
+const UNWRAP_POS: &str = include_str!("lint_fixtures/unwrap_pos.rs");
+const UNWRAP_NEG: &str = include_str!("lint_fixtures/unwrap_neg.rs");
+const SUPPRESSION: &str = include_str!("lint_fixtures/suppression.rs");
+
+/// Lint a single in-memory fixture with no reference corpus. The path
+/// is chosen so it never suffix-matches a rule allowlist entry.
+fn lint_fixture(name: &str, text: &str) -> Vec<Finding> {
+    let input = LintInput {
+        src: vec![SourceFile {
+            path: format!("src/fixture/{name}"),
+            text: text.to_string(),
+        }],
+        tests: Vec::new(),
+    };
+    lint::run(&input)
+}
+
+fn rule_count(findings: &[Finding], rule: &str) -> usize {
+    findings.iter().filter(|f| f.rule == rule).count()
+}
+
+fn lines_of(findings: &[Finding], rule: &str) -> Vec<u32> {
+    findings
+        .iter()
+        .filter(|f| f.rule == rule)
+        .map(|f| f.line)
+        .collect()
+}
+
+// ---------------------------------------------------------------------
+// Rule registry
+// ---------------------------------------------------------------------
+
+#[test]
+fn rule_registry_ids_are_unique_and_complete() {
+    let mut ids: Vec<&str> = rules::RULES.iter().map(|(id, _)| *id).collect();
+    assert_eq!(ids.len(), 7, "7 rules registered");
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), 7, "rule ids are unique");
+    for (id, desc) in rules::RULES {
+        assert!(!desc.is_empty(), "rule {id} has a description");
+    }
+}
+
+// ---------------------------------------------------------------------
+// R1 nondet-wallclock
+// ---------------------------------------------------------------------
+
+#[test]
+fn wallclock_fires_on_instant_and_systemtime() {
+    let findings = lint_fixture("wallclock_pos.rs", WALLCLOCK_POS);
+    assert!(findings.iter().all(|f| f.rule == "nondet-wallclock"));
+    // Lines 2 (use — two hits deduped to one), 4, 8, 9.
+    assert_eq!(lines_of(&findings, "nondet-wallclock"), vec![2, 4, 8, 9]);
+}
+
+#[test]
+fn wallclock_ignores_comments_and_strings() {
+    assert!(lint_fixture("wallclock_neg.rs", WALLCLOCK_NEG).is_empty());
+}
+
+// ---------------------------------------------------------------------
+// R2 nondet-thread-spawn
+// ---------------------------------------------------------------------
+
+#[test]
+fn spawn_fires_on_path_and_method_forms() {
+    let findings = lint_fixture("spawn_pos.rs", SPAWN_POS);
+    assert_eq!(lines_of(&findings, "nondet-thread-spawn"), vec![5, 9]);
+    assert_eq!(findings.len(), 2);
+}
+
+#[test]
+fn spawn_ignores_field_and_ident_uses() {
+    assert!(lint_fixture("spawn_neg.rs", SPAWN_NEG).is_empty());
+}
+
+// ---------------------------------------------------------------------
+// R3 nondet-map-iter
+// ---------------------------------------------------------------------
+
+#[test]
+fn map_iter_fires_on_pre_fix_action_space_shape() {
+    // The positive fixture is the pre-PR-10 `ActionSpace::all_stats`
+    // (HashMap-backed `.iter()` leaking order out of an API) plus a
+    // `for … in` over a HashSet parameter.
+    let findings = lint_fixture("map_iter_pos.rs", MAP_ITER_POS);
+    assert_eq!(lines_of(&findings, "nondet-map-iter"), vec![12, 18]);
+    assert_eq!(findings.len(), 2);
+}
+
+#[test]
+fn map_iter_ignores_keyed_probes_and_btree_iteration() {
+    assert!(lint_fixture("map_iter_neg.rs", MAP_ITER_NEG).is_empty());
+}
+
+// ---------------------------------------------------------------------
+// R4 float-eq
+// ---------------------------------------------------------------------
+
+#[test]
+fn float_eq_fires_on_literal_comparisons() {
+    let findings = lint_fixture("float_eq_pos.rs", FLOAT_EQ_POS);
+    assert_eq!(lines_of(&findings, "float-eq"), vec![3, 7]);
+    assert_eq!(findings.len(), 2);
+}
+
+#[test]
+fn float_eq_ignores_to_bits_ints_and_thresholds() {
+    assert!(lint_fixture("float_eq_neg.rs", FLOAT_EQ_NEG).is_empty());
+}
+
+// ---------------------------------------------------------------------
+// R5 no-new-unwrap
+// ---------------------------------------------------------------------
+
+#[test]
+fn unwrap_counts_unwrap_and_expect_call_sites() {
+    let findings = lint_fixture("unwrap_pos.rs", UNWRAP_POS);
+    assert_eq!(lines_of(&findings, "no-new-unwrap"), vec![3, 7, 11]);
+    assert_eq!(findings.len(), 3);
+}
+
+#[test]
+fn unwrap_ignores_unwrap_or_family_and_comments() {
+    assert!(lint_fixture("unwrap_neg.rs", UNWRAP_NEG).is_empty());
+}
+
+// ---------------------------------------------------------------------
+// Suppressions
+// ---------------------------------------------------------------------
+
+#[test]
+fn lint_allow_covers_its_line_and_the_next() {
+    let findings = lint_fixture("suppression.rs", SUPPRESSION);
+    // Trailing allow kills line 4; preceding-line allow kills line 9;
+    // the unannotated comparison on line 13 survives.
+    assert_eq!(findings.len(), 1);
+    assert_eq!(findings[0].rule, "float-eq");
+    assert_eq!(findings[0].line, 13);
+}
+
+// ---------------------------------------------------------------------
+// R6 compare-exhaustive (mutation check)
+// ---------------------------------------------------------------------
+
+const RECORD_SRC: &str =
+    "pub struct WindowRecord { pub edp: f64, pub energy_j: f64 }\n";
+
+fn record_input(suite_text: &str, suite_path: &str) -> LintInput {
+    LintInput {
+        src: vec![SourceFile {
+            path: "src/fixture/record.rs".to_string(),
+            text: RECORD_SRC.to_string(),
+        }],
+        tests: vec![SourceFile {
+            path: suite_path.to_string(),
+            text: suite_text.to_string(),
+        }],
+    }
+}
+
+#[test]
+fn compare_exhaustive_quiet_when_every_field_is_referenced() {
+    let suite = "fn cmp(a: &WindowRecord, b: &WindowRecord) {\n\
+                 assert!(a.edp.to_bits() == b.edp.to_bits());\n\
+                 assert!(a.energy_j.to_bits() == b.energy_j.to_bits());\n}\n";
+    let input = record_input(suite, "tests/governor_semantics.rs");
+    assert!(lint::run(&input).is_empty());
+}
+
+#[test]
+fn compare_exhaustive_fires_when_a_field_reference_is_deleted() {
+    // Mutation check: drop the `energy_j` references from the compare
+    // helper — the rule must notice the hole.
+    let suite = "fn cmp(a: &WindowRecord, b: &WindowRecord) {\n\
+                 assert!(a.edp.to_bits() == b.edp.to_bits());\n}\n";
+    let input = record_input(suite, "tests/governor_semantics.rs");
+    let findings = lint::run(&input);
+    assert_eq!(findings.len(), 1);
+    assert_eq!(findings[0].rule, "compare-exhaustive");
+    assert!(findings[0].msg.contains("energy_j"));
+}
+
+#[test]
+fn compare_exhaustive_skips_partial_scans_without_a_suite() {
+    // Same deleted reference, but the only test file is not one of the
+    // semantics suites — a partial scan has nothing to hold against.
+    let suite = "fn unrelated() {}\n";
+    let input = record_input(suite, "tests/ledger_check.rs");
+    assert!(lint::run(&input).is_empty());
+}
+
+// ---------------------------------------------------------------------
+// R7 ledger-coverage
+// ---------------------------------------------------------------------
+
+#[test]
+fn ledger_coverage_flags_unasserted_fault_counters() {
+    let src = "pub struct TunerTelemetry {\n\
+               pub windows: u64,\n\
+               pub clock_faults: u64,\n\
+               pub clock_retries: u64,\n}\n";
+    let tests_text =
+        "fn check(t: &TunerTelemetry) { assert!(t.clock_faults == 0); }\n";
+    let input = LintInput {
+        src: vec![SourceFile {
+            path: "src/fixture/telemetry.rs".to_string(),
+            text: src.to_string(),
+        }],
+        tests: vec![SourceFile {
+            path: "tests/ledger_check.rs".to_string(),
+            text: tests_text.to_string(),
+        }],
+    };
+    let findings = lint::run(&input);
+    // `clock_retries` is a fault counter nobody asserts; `windows` is
+    // not a counter; `clock_faults` is covered.
+    assert_eq!(findings.len(), 1);
+    assert_eq!(findings[0].rule, "ledger-coverage");
+    assert!(findings[0].msg.contains("clock_retries"));
+}
+
+// ---------------------------------------------------------------------
+// Baseline ratchet
+// ---------------------------------------------------------------------
+
+#[test]
+fn baseline_round_trips_and_ratchets() {
+    let findings = lint_fixture("float_eq_pos.rs", FLOAT_EQ_POS);
+    let counts = lint::count(&findings);
+    let parsed = baseline::parse(&baseline::render(&counts))
+        .expect("rendered baseline parses");
+    assert_eq!(parsed, counts);
+
+    // At baseline: clean. Above: regression. Below: stale advisory.
+    let at = baseline::diff(&counts, &counts);
+    assert!(at.regressions.is_empty() && at.stale.is_empty());
+
+    let delta = baseline::diff(&counts, &baseline::Counts::new());
+    assert_eq!(delta.regressions.len(), 1);
+    let (rule, file, cur, base) = &delta.regressions[0];
+    assert_eq!(rule, "float-eq");
+    assert_eq!(file, "src/fixture/float_eq_pos.rs");
+    assert_eq!((*cur, *base), (2, 0));
+
+    let delta = baseline::diff(&baseline::Counts::new(), &counts);
+    assert!(delta.regressions.is_empty());
+    assert_eq!(delta.stale.len(), 1);
+}
+
+// ---------------------------------------------------------------------
+// JSON artifact schema
+// ---------------------------------------------------------------------
+
+#[test]
+fn findings_json_keeps_its_schema() {
+    let findings = lint_fixture("float_eq_pos.rs", FLOAT_EQ_POS);
+    let counts = lint::count(&findings);
+    let delta = baseline::diff(&counts, &baseline::Counts::new());
+    let doc = lint::findings_json(&findings, &counts, &delta);
+
+    // Round-trip through the serializer to prove the artifact is
+    // parseable JSON, then check every contract key.
+    let doc = json::parse(&doc.pretty()).expect("artifact parses");
+    assert_eq!(doc.get("schema").and_then(|j| j.as_f64()), Some(1.0));
+    assert_eq!(doc.get("total").and_then(|j| j.as_f64()), Some(2.0));
+    assert_eq!(
+        doc.get_path(&["totals", "float-eq"]).and_then(|j| j.as_f64()),
+        Some(2.0)
+    );
+    let items = doc.get("findings").and_then(|j| j.as_arr()).unwrap();
+    assert_eq!(items.len(), 2);
+    for item in items {
+        assert_eq!(
+            item.get("rule").and_then(|j| j.as_str()),
+            Some("float-eq")
+        );
+        assert_eq!(
+            item.get("file").and_then(|j| j.as_str()),
+            Some("src/fixture/float_eq_pos.rs")
+        );
+        assert!(item.get("line").and_then(|j| j.as_f64()).is_some());
+        assert!(item.get("msg").and_then(|j| j.as_str()).is_some());
+    }
+    let new = doc.get("new").and_then(|j| j.as_arr()).unwrap();
+    assert_eq!(new.len(), 1);
+    assert_eq!(
+        new[0].get("count").and_then(|j| j.as_f64()),
+        Some(2.0)
+    );
+    assert_eq!(
+        new[0].get("baseline").and_then(|j| j.as_f64()),
+        Some(0.0)
+    );
+}
+
+// ---------------------------------------------------------------------
+// Real-tree scan
+// ---------------------------------------------------------------------
+
+#[test]
+fn real_tree_scan_runs_and_matches_known_facts() {
+    let root = lint::find_root().expect("crate root locatable from test cwd");
+    let input = lint::load(&root, &[]).expect("tree loads");
+    assert!(input.src.iter().any(|f| f.path == "src/lib.rs"));
+    assert!(input
+        .tests
+        .iter()
+        .any(|f| f.path == "tests/lint_semantics.rs"));
+    // The fixture corpus lives in a subdirectory precisely so the
+    // non-recursive tests/ walk never treats it as reference corpus.
+    assert!(input.tests.iter().all(|f| !f.path.contains("lint_fixtures")));
+
+    let findings = lint::run(&input);
+    // The one grandfathered order-exposing iteration: the prefix-cache
+    // LRU victim scan (baselined, not fixed, in PR 10).
+    assert!(findings
+        .iter()
+        .any(|f| f.rule == "nondet-map-iter"
+            && f.file == "src/server/prefix_cache.rs"));
+    // Satellite fix: ActionSpace is BTreeMap-backed now — the lint
+    // must see no order exposure in the tuner's action space.
+    assert!(findings
+        .iter()
+        .all(|f| !(f.rule == "nondet-map-iter"
+            && f.file.contains("action_space"))));
+    // The lint engine itself ships unwrap/expect-free.
+    assert!(findings
+        .iter()
+        .all(|f| !(f.rule == "no-new-unwrap"
+            && f.file.starts_with("src/analysis/lint"))));
+    // Cross-file invariants hold on the real tree: every watched field
+    // is referenced by the suites, every fault counter is asserted.
+    assert_eq!(rule_count(&findings, "compare-exhaustive"), 0);
+    assert_eq!(rule_count(&findings, "ledger-coverage"), 0);
+
+    // count() totals agree with the findings list.
+    let counts = lint::count(&findings);
+    let total: u64 = counts.values().flat_map(|m| m.values()).sum();
+    assert_eq!(total as usize, findings.len());
+}

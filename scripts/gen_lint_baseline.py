@@ -1,0 +1,533 @@
+#!/usr/bin/env python3
+"""Regenerate rust/lint_baseline.json without a Rust toolchain.
+
+This is a line-for-line mirror of the `agft lint` engine
+(rust/src/analysis/lint/): the scrubbing lexer (tokens.rs), struct
+field extraction (fields.rs), the seven rules (rules.rs) and the
+engine's suppression/sort/dedup pipeline (mod.rs).  Only the parts
+that affect *counts* are mirrored — diagnostic message text is not.
+Keep the two implementations in sync; the lint semantics suite
+(rust/tests/lint_semantics.rs) and CI's lint gate will catch drift,
+because a baseline generated here must make `agft lint` exit clean.
+
+Usage:
+  scripts/gen_lint_baseline.py              # rewrite rust/lint_baseline.json
+  scripts/gen_lint_baseline.py --check      # exit 1 if the committed file is stale
+  scripts/gen_lint_baseline.py --print-findings
+"""
+
+import json
+import sys
+from pathlib import Path
+
+# --------------------------------------------------------------------
+# tokens.rs mirror
+# --------------------------------------------------------------------
+
+OPS = [
+    "..=", "<<=", ">>=", "::", "==", "!=", "<=", ">=", "=>", "->", "&&",
+    "||", "+=", "-=", "*=", "/=", "%=", "^=", "&=", "|=", "<<", ">>",
+    "..",
+]
+
+
+def is_digit(c):
+    return "0" <= c <= "9"
+
+
+def is_ident_start(c):
+    return c == "_" or (c.isascii() and c.isalpha())
+
+
+def is_ident_char(c):
+    return c == "_" or (c.isascii() and c.isalnum())
+
+
+def is_float_lit(t):
+    if not t or not is_digit(t[0]):
+        return False
+    if t.startswith(("0x", "0b", "0o")):
+        return False
+    return ("." in t or "e" in t or "E" in t
+            or t.endswith("f32") or t.endswith("f64"))
+
+
+def scan_allows(text, line, allows):
+    rest = text
+    while True:
+        pos = rest.find("lint:allow(")
+        if pos < 0:
+            return
+        rest = rest[pos + len("lint:allow("):]
+        end = rest.find(")")
+        if end < 0:
+            return
+        for rid in rest[:end].split(","):
+            rid = rid.strip()
+            if rid:
+                allows.append((line, rid))
+        rest = rest[end:]
+
+
+def skip_plain_string(cs, i, line):
+    n = len(cs)
+    while i < n:
+        ch = cs[i]
+        if ch == "\\":
+            i += 2
+        elif ch == '"':
+            return i + 1, line
+        else:
+            if ch == "\n":
+                line += 1
+            i += 1
+    return i, line
+
+
+def skip_char_literal(cs, start):
+    n = len(cs)
+    i = min(start + 3, n)  # consume quote, backslash, one char
+    while i < n and cs[i] != "'":
+        i += 1
+    return min(i + 1, n + 1)
+
+
+def lex(src):
+    """Return (tokens, allows): tokens as (line, text) pairs."""
+    cs = src
+    n = len(cs)
+    toks = []
+    allows = []
+    i = 0
+    line = 1
+    while i < n:
+        c = cs[i]
+        if c == "\n":
+            line += 1
+            i += 1
+            continue
+        if c.isspace():
+            i += 1
+            continue
+        # Line comment (also doc /// and //!).
+        if c == "/" and cs.startswith("//", i):
+            start = i
+            while i < n and cs[i] != "\n":
+                i += 1
+            scan_allows(cs[start:i], line, allows)
+            continue
+        # Block comment, nested per Rust rules.
+        if c == "/" and cs.startswith("/*", i):
+            start_line = line
+            depth = 1
+            text = "/*"
+            i += 2
+            while i < n and depth > 0:
+                if cs.startswith("/*", i):
+                    depth += 1
+                    text += "/*"
+                    i += 2
+                elif cs.startswith("*/", i):
+                    depth -= 1
+                    text += "*/"
+                    i += 2
+                else:
+                    if cs[i] == "\n":
+                        line += 1
+                    text += cs[i]
+                    i += 1
+            scan_allows(text, start_line, allows)
+            continue
+        # Raw / byte string prefixes: r"…", r#"…"#, b"…", br#"…"#, b'…'.
+        if c in ("r", "b"):
+            j = i + 1
+            prefix_br = False
+            if c == "b" and j < n and cs[j] == "r":
+                j += 1
+                prefix_br = True
+            hashes = 0
+            while j < n and cs[j] == "#":
+                hashes += 1
+                j += 1
+            if j < n and cs[j] == '"':
+                raw = c == "r" or prefix_br  # b"…" is not raw
+                i = j + 1
+                if raw:
+                    while i < n:
+                        if cs[i] == "\n":
+                            line += 1
+                        if cs[i] == '"' and cs[i + 1:i + 1 + hashes] == "#" * hashes:
+                            i += 1 + hashes
+                            break
+                        i += 1
+                else:
+                    i, line = skip_plain_string(cs, i, line)
+                continue
+            if c == "b" and i + 1 < n and cs[i + 1] == "'":
+                if i + 2 < n and cs[i + 2] == "\\":
+                    i = skip_char_literal(cs, i + 1)
+                else:
+                    i = min(i + 4, n)  # b, ', x, '
+                continue
+            # Fall through: plain identifier starting with r/b.
+        # Plain string.
+        if c == '"':
+            i, line = skip_plain_string(cs, i + 1, line)
+            continue
+        # Char literal vs lifetime.
+        if c == "'":
+            if i + 1 < n and cs[i + 1] == "\\":
+                i = skip_char_literal(cs, i)
+                continue
+            if i + 2 < n and cs[i + 2] == "'":
+                i += 3  # 'x'
+                continue
+            i += 1  # lifetime quote; the ident lexes next round
+            continue
+        # Identifier / keyword.
+        if is_ident_start(c):
+            start = i
+            while i < n and is_ident_char(cs[i]):
+                i += 1
+            toks.append((line, cs[start:i]))
+            continue
+        # Number literal.
+        if is_digit(c):
+            start = i
+            if c == "0" and i + 1 < n and cs[i + 1] in "xbo":
+                i += 2
+                while i < n and (is_ident_char(cs[i]) or cs[i] == "_"):
+                    i += 1
+            else:
+                while i < n and (is_digit(cs[i]) or cs[i] == "_"):
+                    i += 1
+                after_dot = bool(toks) and toks[-1][1] == "."
+                if (not after_dot and i < n and cs[i] == "."
+                        and i + 1 < n and is_digit(cs[i + 1])):
+                    i += 1
+                    while i < n and (is_digit(cs[i]) or cs[i] == "_"):
+                        i += 1
+                if i < n and cs[i] in "eE":
+                    sign = i + 1 < n and cs[i + 1] in "+-"
+                    d = i + 2 if sign else i + 1
+                    if d < n and is_digit(cs[d]):
+                        i = d + 1
+                        while i < n and (is_digit(cs[i]) or cs[i] == "_"):
+                            i += 1
+                # Type suffix (u32, f64, …).
+                while i < n and is_ident_char(cs[i]):
+                    i += 1
+            toks.append((line, cs[start:i]))
+            continue
+        # Multi-char operator, longest match first.
+        matched = False
+        for op in OPS:
+            if cs.startswith(op, i):
+                toks.append((line, op))
+                i += len(op)
+                matched = True
+                break
+        if matched:
+            continue
+        toks.append((line, c))
+        i += 1
+    return toks, allows
+
+
+TEST_MOD_PAT = ["#", "[", "cfg", "(", "test", ")", "]"]
+
+
+def strip_trailing_test_module(toks):
+    depth = 0
+    for idx, (_, t) in enumerate(toks):
+        if t == "{":
+            depth += 1
+        elif t == "}":
+            depth -= 1
+        elif t == "#" and depth == 0:
+            if [x[1] for x in toks[idx:idx + 7]] == TEST_MOD_PAT:
+                return toks[:idx]
+    return toks
+
+
+# --------------------------------------------------------------------
+# fields.rs mirror
+# --------------------------------------------------------------------
+
+def _is_ident(t):
+    return bool(t) and (t[0] == "_" or (t[0].isascii() and t[0].isalpha()))
+
+
+def struct_fields(toks, name):
+    idx = 0
+    while idx + 1 < len(toks):
+        if toks[idx][1] == "struct" and toks[idx + 1][1] == name:
+            decl_line = toks[idx][0]
+            j = idx + 2
+            while j < len(toks) and toks[j][1] != "{":
+                if toks[j][1] in ("(", ";"):
+                    return decl_line, []
+                j += 1
+            if j >= len(toks):
+                return decl_line, []
+            depth = 1
+            fields = []
+            k = j + 1
+            while k < len(toks) and depth > 0:
+                t = toks[k][1]
+                if t == "{":
+                    depth += 1
+                elif t == "}":
+                    depth -= 1
+                if (depth == 1 and _is_ident(t)
+                        and k + 1 < len(toks) and toks[k + 1][1] == ":"
+                        and t not in ("pub", "crate", "super", "self")):
+                    fields.append((t, toks[k][0]))
+                k += 1
+            return decl_line, fields
+        idx += 1
+    return None
+
+
+# --------------------------------------------------------------------
+# rules.rs mirror (findings are (rule, file, line) — no messages)
+# --------------------------------------------------------------------
+
+WALLCLOCK_ALLOW = ["src/experiment/orchestrator.rs"]
+SPAWN_ALLOW = ["src/experiment/executor.rs", "src/experiment/orchestrator.rs"]
+COMPARE_STRUCTS = [
+    "WindowRecord", "TunerTelemetry", "MetricsSnapshot", "RunResult",
+    "ClusterResult",
+]
+COMPARE_SUITES = [
+    "perf_semantics.rs", "governor_semantics.rs", "cluster_semantics.rs",
+    "chaos_semantics.rs", "decode_span_semantics.rs",
+]
+LEDGER_FRAGMENTS = ["fault", "retries", "sanitized", "watchdog", "failures"]
+ORDER_OPS = {
+    "iter", "iter_mut", "keys", "values", "values_mut", "into_iter",
+    "drain", "retain",
+}
+MAP_ITER_SKIP = {"std", "collections", "::", "&", "mut", "<"}
+IDENT_KEYWORDS = {"in", "if", "let", "fn", "return", "match"}
+
+
+def _allowed(path, allow_list):
+    return any(path.endswith(suffix) for suffix in allow_list)
+
+
+def _is_plain_ident(t):
+    return _is_ident(t) and t not in IDENT_KEYWORDS
+
+
+def r_nondet_wallclock(path, toks, out):
+    if _allowed(path, WALLCLOCK_ALLOW):
+        return
+    for ln, t in toks:
+        if t in ("Instant", "SystemTime"):
+            out.append(("nondet-wallclock", path, ln))
+
+
+def r_nondet_thread_spawn(path, toks, out):
+    if _allowed(path, SPAWN_ALLOW):
+        return
+    for idx, (ln, t) in enumerate(toks):
+        if t != "spawn":
+            continue
+        path_form = (idx >= 2 and toks[idx - 1][1] == "::"
+                     and toks[idx - 2][1] == "thread")
+        method_form = (idx >= 1 and toks[idx - 1][1] == "."
+                       and idx + 1 < len(toks) and toks[idx + 1][1] == "(")
+        if path_form or method_form:
+            out.append(("nondet-thread-spawn", path, ln))
+
+
+def r_nondet_map_iter(path, toks, out):
+    names = set()
+    for idx, (_, t) in enumerate(toks):
+        if t not in ("HashMap", "HashSet"):
+            continue
+        j = idx
+        while j > 0 and toks[j - 1][1] in MAP_ITER_SKIP:
+            j -= 1
+        if j >= 2:
+            sep = toks[j - 1][1]
+            name = toks[j - 2][1]
+            if sep in (":", "=") and _is_plain_ident(name):
+                names.add(name)
+    if not names:
+        return
+    for idx, (ln, t) in enumerate(toks):
+        if t not in names:
+            continue
+        if (idx + 3 < len(toks) and toks[idx + 1][1] == "."
+                and toks[idx + 2][1] in ORDER_OPS
+                and toks[idx + 3][1] == "("):
+            out.append(("nondet-map-iter", path, toks[idx + 2][0]))
+        p1 = toks[idx - 1][1] if idx >= 1 else None
+        p2 = toks[idx - 2][1] if idx >= 2 else None
+        p3 = toks[idx - 3][1] if idx >= 3 else None
+        for_loop = (p1 == "in"
+                    or (p1 == "&" and p2 == "in")
+                    or (p1 == "mut" and p2 == "&" and p3 == "in"))
+        if for_loop:
+            out.append(("nondet-map-iter", path, ln))
+
+
+def r_float_eq(path, toks, out):
+    for idx, (ln, t) in enumerate(toks):
+        if t not in ("==", "!="):
+            continue
+        prev_f = idx >= 1 and is_float_lit(toks[idx - 1][1])
+        next_f = idx + 1 < len(toks) and is_float_lit(toks[idx + 1][1])
+        if prev_f or next_f:
+            out.append(("float-eq", path, ln))
+
+
+def r_no_new_unwrap(path, toks, out):
+    for idx in range(1, len(toks)):
+        t = toks[idx][1]
+        if (t in ("unwrap", "expect") and toks[idx - 1][1] == "."
+                and idx + 1 < len(toks) and toks[idx + 1][1] == "("):
+            out.append(("no-new-unwrap", path, toks[idx][0]))
+
+
+def r_compare_exhaustive(lexed, suite_idents, suites_present, out):
+    if not suites_present:
+        return
+    for name in COMPARE_STRUCTS:
+        for path, toks in lexed:
+            hit = struct_fields(toks, name)
+            if hit is None:
+                continue
+            _, flds = hit
+            for field, line in flds:
+                if field not in suite_idents:
+                    out.append(("compare-exhaustive", path, line))
+            break  # first definition wins
+
+
+def r_ledger_coverage(lexed, test_idents, tests_present, out):
+    if not tests_present:
+        return
+    for path, toks in lexed:
+        hit = struct_fields(toks, "TunerTelemetry")
+        if hit is None:
+            continue
+        _, flds = hit
+        for field, line in flds:
+            is_counter = any(frag in field for frag in LEDGER_FRAGMENTS)
+            if is_counter and field not in test_idents:
+                out.append(("ledger-coverage", path, line))
+        break
+
+
+# --------------------------------------------------------------------
+# mod.rs mirror: the engine pipeline
+# --------------------------------------------------------------------
+
+def run(src_files, test_files):
+    """src_files/test_files: sorted lists of (path, text)."""
+    lexed = []
+    allows = {}
+    for path, text in src_files:
+        toks, al = lex(text)
+        allows[path] = al
+        lexed.append((path, strip_trailing_test_module(toks)))
+    suite_idents = set()
+    test_idents = set()
+    suites_present = False
+    for path, text in test_files:
+        toks, _ = lex(text)
+        is_suite = any(path.endswith(s) for s in COMPARE_SUITES)
+        suites_present = suites_present or is_suite
+        for _, t in toks:
+            if _is_ident(t):
+                if is_suite:
+                    suite_idents.add(t)
+                test_idents.add(t)
+
+    findings = []
+    for path, toks in lexed:
+        r_nondet_wallclock(path, toks, findings)
+        r_nondet_thread_spawn(path, toks, findings)
+        r_nondet_map_iter(path, toks, findings)
+        r_float_eq(path, toks, findings)
+        r_no_new_unwrap(path, toks, findings)
+    r_compare_exhaustive(lexed, suite_idents, suites_present, findings)
+    r_ledger_coverage(lexed, test_idents, bool(test_files), findings)
+
+    # Suppressions: an allow on line L covers findings on L and L + 1.
+    def suppressed(f):
+        rule, path, ln = f
+        return any(
+            (al == ln or al + 1 == ln) and (rid == rule or rid == "all")
+            for al, rid in allows.get(path, [])
+        )
+
+    findings = [f for f in findings if not suppressed(f)]
+    findings.sort(key=lambda f: (f[1], f[2], f[0]))
+    deduped = []
+    for f in findings:
+        if deduped and deduped[-1] == f:
+            continue
+        deduped.append(f)
+    return deduped
+
+
+def load_tree(root):
+    src = []
+    for p in sorted((root / "src").rglob("*.rs")):
+        rel = p.relative_to(root).as_posix()
+        src.append((rel, p.read_text(encoding="utf-8")))
+    tests = []
+    tests_dir = root / "tests"
+    if tests_dir.is_dir():
+        for p in sorted(tests_dir.glob("*.rs")):  # top level only
+            if p.is_file():
+                rel = p.relative_to(root).as_posix()
+                tests.append((rel, p.read_text(encoding="utf-8")))
+    return src, tests
+
+
+def counts_of(findings):
+    counts = {}
+    for rule, path, _ in findings:
+        counts.setdefault(rule, {}).setdefault(path, 0)
+        counts[rule][path] += 1
+    return counts
+
+
+def main(argv):
+    root = Path(__file__).resolve().parent.parent / "rust"
+    out_path = root / "lint_baseline.json"
+    check = "--check" in argv
+    show = "--print-findings" in argv
+
+    src, tests = load_tree(root)
+    findings = run(src, tests)
+    if show:
+        for rule, path, line in findings:
+            print(f"{path}:{line} [{rule}]")
+        print(f"{len(findings)} finding(s)")
+
+    doc = {"schema": 1, "counts": counts_of(findings)}
+    text = json.dumps(doc, indent=2, sort_keys=True) + "\n"
+    if check:
+        if not out_path.is_file():
+            print(f"{out_path} is missing", file=sys.stderr)
+            return 1
+        committed = json.loads(out_path.read_text(encoding="utf-8"))
+        if committed != doc:
+            print("lint baseline is stale; regenerate with "
+                  "scripts/gen_lint_baseline.py", file=sys.stderr)
+            return 1
+        print("lint baseline is up to date")
+        return 0
+    out_path.write_text(text, encoding="utf-8")
+    print(f"wrote {out_path} ({len(findings)} finding(s))")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
